@@ -1,0 +1,56 @@
+"""Shared benchmark utilities: the paper's MLP, timing, CSV output."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def paper_mlp(D: int = 50, key=None, sizes=(768, 768, 512, 512, 1)):
+    """The section-4 MLP: D -> 768 -> 768 -> 512 -> 512 -> 1, tanh."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    dims = (D,) + tuple(sizes)
+    ks = jax.random.split(key, len(dims) - 1)
+    params = [
+        (jax.random.normal(k, (a, b)) / jnp.sqrt(a), jnp.zeros((b,)))
+        for k, a, b in zip(ks, dims[:-1], dims[1:])
+    ]
+
+    def f(x):
+        h = x
+        for W, b in params[:-1]:
+            h = jnp.tanh(h @ W + b)
+        W, b = params[-1]
+        return (h @ W + b)[..., 0]
+
+    return f, params
+
+
+def best_time(fn: Callable, *args, repeats: int = 5, warmup: int = 2) -> float:
+    """Best wall-time in seconds of a jitted callable (paper: min of 50;
+    scaled down for CPU)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def linfit_slope(xs: List[float], ys: List[float]) -> float:
+    """Least-squares slope (the paper's per-datum/per-sample cost)."""
+    A = np.stack([np.asarray(xs, float), np.ones(len(xs))], 1)
+    coef, *_ = np.linalg.lstsq(A, np.asarray(ys, float), rcond=None)
+    return float(coef[0])
+
+
+def emit(rows: List[Dict], header: List[str]):
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(r.get(h, "")) for h in header))

@@ -1,0 +1,53 @@
+"""Figure 1: Laplacian of the paper's tanh MLP — nested 1st-order AD vs
+standard Taylor mode vs collapsed Taylor mode (jit-compiled, CPU wall time).
+
+The paper's headline numbers (GPU): nested 0.57 ms/datum, standard Taylor
+0.84 (1.5x slower!), collapsed 0.29 (0.50x). The *ratios* are the claim being
+reproduced; absolute times differ on CPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import best_time, emit, linfit_slope, paper_mlp
+from repro.core import operators as ops
+
+
+def run(D: int = 50, batches=(1, 2, 4, 8), repeats: int = 5):
+    f, _ = paper_mlp(D)
+    methods = {
+        "nested": lambda x: ops.laplacian(f, x, method="nested"),
+        "standard_taylor": lambda x: ops.laplacian(f, x, method="standard"),
+        "collapsed_taylor": lambda x: ops.laplacian(f, x, method="collapsed"),
+        "rewrite_taylor": lambda x: ops.laplacian(f, x, method="rewrite"),
+    }
+    rows = []
+    slopes = {}
+    for name, fn in methods.items():
+        jfn = jax.jit(fn)
+        times = []
+        for B in batches:
+            x = jax.random.normal(jax.random.PRNGKey(B), (B, D))
+            t = best_time(jfn, x, repeats=repeats)
+            times.append(t)
+            rows.append({"name": f"fig1/{name}/B{B}", "us_per_call": f"{t*1e6:.1f}",
+                         "derived": ""})
+        slopes[name] = linfit_slope(list(batches), times)
+    base = slopes["nested"]
+    for name, s in slopes.items():
+        rows.append({
+            "name": f"fig1/{name}/slope",
+            "us_per_call": f"{s*1e6:.1f}",
+            "derived": f"per-datum_vs_nested={s/base:.2f}x",
+        })
+    return rows
+
+
+def main():
+    emit(run(), ["name", "us_per_call", "derived"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Deliverable (g): roofline table from the dry-run artifacts.
+
+Reads results/dryrun/*.json and emits, per (arch x shape x mesh):
+the three roofline terms (seconds/step/chip), the dominant bottleneck, the
+MODEL_FLOPS / traced-FLOPs usefulness ratio, and the roofline fraction
+(t_dominant vs the sum — how far from balanced). Also writes
+results/roofline.md for EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+
+def load(dirname="results/dryrun"):
+    cells = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        d = json.load(open(f))
+        cells.append(d)
+    return cells
+
+
+def run(dirname="results/dryrun"):
+    rows = []
+    md = ["| arch | shape | mesh | t_compute | t_memory | t_collective | "
+          "bottleneck | useful FLOPs | HBM/dev |",
+          "|---|---|---|---|---|---|---|---|---|"]
+    for d in load(dirname):
+        name = f"roofline/{d['arch']}/{d['shape']}/{d.get('mesh','?')}"
+        if "skipped" in d:
+            rows.append({"name": name, "us_per_call": "", "derived": "SKIP:" + d["skipped"][:40]})
+            md.append(f"| {d['arch']} | {d['shape']} | — | — | — | — | skipped (full attn @524k) | — | — |")
+            continue
+        if "error" in d:
+            rows.append({"name": name, "us_per_call": "", "derived": "ERROR"})
+            continue
+        tc, tm, tx = d.get("t_compute", 0), d.get("t_memory", 0), d.get("t_collective", 0)
+        hbm = (d.get("temp_size_in_bytes", 0) + d.get("argument_size_in_bytes", 0)) / 1e9
+        dom = d.get("bottleneck", "?")
+        total = tc + tm + tx
+        frac = (max(tc, tm, tx) / total) if total else 0.0
+        rows.append({
+            "name": name,
+            "us_per_call": f"{total*1e6:.1f}",
+            "derived": (f"tc={tc:.4g},tm={tm:.4g},tx={tx:.4g},dom={dom},"
+                        f"useful={d.get('useful_flops_frac', 0):.2f},hbm={hbm:.1f}GB"),
+        })
+        md.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} | {tc:.4g} | {tm:.4g} "
+            f"| {tx:.4g} | {dom.replace('t_','')} "
+            f"| {d.get('useful_flops_frac', 0):.2f} | {hbm:.1f} GB |"
+        )
+    os.makedirs("results", exist_ok=True)
+    with open("results/roofline.md", "w") as f:
+        f.write("\n".join(md) + "\n")
+    return rows
+
+
+def main():
+    emit(run(), ["name", "us_per_call", "derived"])
+
+
+if __name__ == "__main__":
+    main()

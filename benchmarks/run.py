@@ -1,0 +1,45 @@
+"""Benchmark orchestrator: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Sub-benchmarks:
+  fig1_laplacian   — fig. 1 (Laplacian scaling, nested vs Taylor modes)
+  table1_operators — table 1 (per-datum/-sample slopes, 3 ops x 3 methods)
+  tableF2_theory   — table F2 (vector-count theory vs measured FLOP ratios)
+  tableG3_jax      — table G3 (jit comparison + nested-Laplacian biharmonic)
+  rewrite_flops    — appendix C/G9 (jit does not collapse; our rewrite does)
+  roofline         — deliverable (g), from results/dryrun
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import (fig1_laplacian, rewrite_flops, roofline,
+                        table1_operators, tableF2_theory, tableG3_jax)
+from benchmarks.common import emit
+
+ALL = {
+    "fig1_laplacian": fig1_laplacian.run,
+    "table1_operators": table1_operators.run,
+    "tableF2_theory": tableF2_theory.run,
+    "tableG3_jax": tableG3_jax.run,
+    "rewrite_flops": rewrite_flops.run,
+    "roofline": roofline.run,
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(ALL)
+    rows = []
+    for n in names:
+        try:
+            rows.extend(ALL[n]())
+        except Exception as e:  # a failing benchmark must not hide the others
+            traceback.print_exc()
+            rows.append({"name": n, "us_per_call": "",
+                         "derived": f"ERROR:{type(e).__name__}"})
+    emit(rows, ["name", "us_per_call", "derived"])
+
+
+if __name__ == "__main__":
+    main()

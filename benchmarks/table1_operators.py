@@ -1,0 +1,103 @@
+"""Table 1: per-datum (exact) / per-sample (stochastic) runtime slopes for
+{Laplacian, weighted Laplacian, biharmonic} x {nested, standard, collapsed}.
+
+Exact operators sweep the batch size at fixed D; stochastic ones fix the
+batch and sweep the Monte-Carlo sample count (S < D for Laplacians, as in the
+paper). Biharmonic uses D = 5 (the paper's setting) with the appendix-E.1
+interpolation for Taylor modes and nested Laplacian-of-Laplacian for the
+baseline (its footnote-2 structural advantage).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import best_time, emit, linfit_slope, paper_mlp
+from repro.core import operators as ops
+
+METHODS = ("nested", "standard", "collapsed")
+
+
+def _time_sweep(make_fn, sweep, repeats=3):
+    times = []
+    for v in sweep:
+        fn, args = make_fn(v)
+        times.append(best_time(jax.jit(fn), *args, repeats=repeats))
+    return linfit_slope(list(sweep), times), times
+
+
+def run(D_lap=50, D_bih=5, batches=(1, 2, 4), samples=(4, 8, 16), repeats=3):
+    f_lap, _ = paper_mlp(D_lap)
+    f_bih, _ = paper_mlp(D_bih)
+    sigma = jax.random.normal(jax.random.PRNGKey(42), (D_lap, D_lap)) / jnp.sqrt(D_lap)
+    key = jax.random.PRNGKey(7)
+    rows = []
+    slopes = {}
+
+    def record(op, mode, method, slope):
+        slopes[(op, mode, method)] = slope
+        base = slopes.get((op, mode, "nested"), slope)
+        rows.append({
+            "name": f"table1/{op}/{mode}/{method}",
+            "us_per_call": f"{slope*1e6:.1f}",
+            "derived": f"slope_vs_nested={slope/base:.2f}x",
+        })
+
+    # --- exact: sweep batch ---
+    for method in METHODS:
+        s, _ = _time_sweep(
+            lambda B: (lambda x: ops.laplacian(f_lap, x, method=method),
+                       (jax.random.normal(key, (B, D_lap)),)),
+            batches, repeats)
+        record("laplacian", "exact", method, s)
+    for method in METHODS:
+        s, _ = _time_sweep(
+            lambda B: (lambda x: ops.weighted_laplacian(f_lap, x, sigma, method=method),
+                       (jax.random.normal(key, (B, D_lap)),)),
+            batches, repeats)
+        record("weighted_laplacian", "exact", method, s)
+    for method in METHODS:
+        s, _ = _time_sweep(
+            lambda B: (lambda x: ops.biharmonic(f_bih, x, method=method),
+                       (jax.random.normal(key, (B, D_bih)),)),
+            batches, repeats)
+        record("biharmonic", "exact", method, s)
+
+    # --- stochastic: fixed batch, sweep samples ---
+    B = 4
+    x_lap = jax.random.normal(key, (B, D_lap))
+    x_bih = jax.random.normal(key, (B, D_bih))
+    for method in METHODS:
+        s, _ = _time_sweep(
+            lambda S: (functools.partial(
+                lambda x, k: ops.laplacian_stochastic(f_lap, x, k, S, method=method)),
+                (x_lap, key)),
+            samples, repeats)
+        record("laplacian", "stochastic", method, s)
+    for method in METHODS:
+        s, _ = _time_sweep(
+            lambda S: (functools.partial(
+                lambda x, k: ops.weighted_laplacian_stochastic(
+                    f_lap, x, sigma, k, S, method=method)),
+                (x_lap, key)),
+            samples, repeats)
+        record("weighted_laplacian", "stochastic", method, s)
+    for method in METHODS:
+        s, _ = _time_sweep(
+            lambda S: (functools.partial(
+                lambda x, k: ops.biharmonic_stochastic(f_bih, x, k, S, method=method)),
+                (x_bih, key)),
+            samples, repeats)
+        record("biharmonic", "stochastic", method, s)
+    return rows
+
+
+def main():
+    emit(run(), ["name", "us_per_call", "derived"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Table F2: theoretical vector-count ratios (standard vs collapsed Taylor
+mode) and the corresponding measured compiled-FLOP ratios.
+
+The theory column is the paper's counting argument (eqs. 7b/8b and the
+biharmonic reduction of appendix E.1); the measured column compares XLA
+compiled-HLO FLOPs of the two modes on the paper's MLP — a machine-checked
+version of the paper's 'ratio of added vectors predicts the performance
+ratio' claim (time ratios land close; see table1).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, paper_mlp
+from repro.core import operators as ops
+from repro.core.rewrite import hlo_flops
+
+
+def run(D_lap=50, D_bih=5, S=8):
+    rows = []
+    for op, D, samples in (
+        ("laplacian", D_lap, None),
+        ("weighted_laplacian", D_lap, None),
+        ("biharmonic", D_bih, None),
+        ("laplacian", D_lap, S),
+        ("weighted_laplacian", D_lap, S),
+        ("biharmonic", D_bih, S),
+    ):
+        counts = ops.vector_counts(op, D, samples)
+        mode = "stochastic" if samples else "exact"
+        ratio = counts["collapsed"] / counts["standard"]
+        rows.append({
+            "name": f"tableF2/{op}/{mode}/theory",
+            "us_per_call": "",
+            "derived": (f"vectors_std={counts['standard']:.0f},"
+                        f"vectors_col={counts['collapsed']:.0f},"
+                        f"ratio={ratio:.3f}"),
+        })
+
+    # measured compiled-FLOP ratio on the exact Laplacian (B = 4)
+    f, _ = paper_mlp(D_lap)
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, D_lap))
+    fl = {
+        m: hlo_flops(lambda x_: ops.laplacian(f, x_, method=m), x)
+        for m in ("standard", "collapsed")
+    }
+    rows.append({
+        "name": "tableF2/laplacian/exact/measured_hlo_flops",
+        "us_per_call": "",
+        "derived": (f"std={fl['standard']:.3e},col={fl['collapsed']:.3e},"
+                    f"ratio={fl['collapsed']/fl['standard']:.3f}"),
+    })
+    return rows
+
+
+def main():
+    emit(run(), ["name", "us_per_call", "derived"])
+
+
+if __name__ == "__main__":
+    main()

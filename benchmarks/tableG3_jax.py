@@ -1,0 +1,57 @@
+"""Table G3: the JAX(+jit) comparison — nested vs standard vs collapsed
+Laplacian, and the biharmonic computed by nesting Laplacians (the paper's
+appendix-G conclusion that nesting (collapsed) Taylor-mode Laplacians is the
+most efficient biharmonic scheme).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import best_time, emit, linfit_slope, paper_mlp
+from repro.core import operators as ops
+
+
+def run(D=50, D_bih=5, batches=(1, 2, 4), repeats=3):
+    f, _ = paper_mlp(D)
+    f_b, _ = paper_mlp(D_bih)
+    rows = []
+    slopes = {}
+
+    jobs = {
+        ("laplacian", "nested"): lambda x: ops.laplacian(f, x, method="nested"),
+        ("laplacian", "standard"): lambda x: ops.laplacian(f, x, method="standard"),
+        ("laplacian", "collapsed"): lambda x: ops.laplacian(f, x, method="collapsed"),
+        ("biharmonic_nested_lap", "nested"):
+            lambda x: ops.biharmonic(f_b, x, method="nested"),
+        ("biharmonic_nested_lap", "standard"):
+            lambda x: ops.biharmonic_nested_taylor(f_b, x, method="standard"),
+        ("biharmonic_nested_lap", "collapsed"):
+            lambda x: ops.biharmonic_nested_taylor(f_b, x, method="collapsed"),
+    }
+    for (op, method), fn in jobs.items():
+        Dd = D if op == "laplacian" else D_bih
+        jfn = jax.jit(fn)
+        times = [
+            best_time(jfn, jax.random.normal(jax.random.PRNGKey(B), (B, Dd)),
+                      repeats=repeats)
+            for B in batches
+        ]
+        s = linfit_slope(list(batches), times)
+        slopes[(op, method)] = s
+        base = slopes.get((op, "nested"), s)
+        rows.append({
+            "name": f"tableG3/{op}/{method}",
+            "us_per_call": f"{s*1e6:.1f}",
+            "derived": f"slope_vs_nested={s/base:.2f}x",
+        })
+    return rows
+
+
+def main():
+    emit(run(), ["name", "us_per_call", "derived"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Biharmonic PINN (plate bending): Delta^2 u = q on (0,1)^2.
+
+Exercises the paper's section-3.3 machinery end-to-end: the exact biharmonic
+operator in the loss, computed either through the Griewank interpolation
+family (collapsed per direction group) or — the appendix-G optimum — by
+nesting two collapsed Laplacians.
+
+Manufactured solution u*(x,y) = sin(pi x) sin(pi y):  Delta^2 u* = 4 pi^4 u*.
+
+Run:  PYTHONPATH=src python examples/pinn_biharmonic.py [--steps 300]
+"""
+
+import argparse
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import operators as ops
+from repro.data import collocation_batch
+from repro.models import mlp as M
+from repro.train.trainer import Trainer, TrainConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--scheme", default="nested-laplacian",
+                    choices=["nested-laplacian", "interpolation"])
+    args = ap.parse_args()
+    D = 2
+
+    cfg = get_config("mlp-pinn").replace(mlp_sizes=(D, 256, 256, 1))
+    params = M.init(jax.random.PRNGKey(0), cfg)
+
+    u_star = lambda x: jnp.prod(jnp.sin(math.pi * x), axis=-1)
+    rhs = lambda x: 4.0 * math.pi**4 * u_star(x)
+
+    def loss(p, batch):
+        f = lambda y: M.apply(p, y, cfg)
+        if args.scheme == "nested-laplacian":
+            bih = ops.biharmonic_nested_taylor(f, batch["x"], method="collapsed")
+        else:
+            bih = ops.biharmonic(f, batch["x"], method="collapsed")
+        pde = 0.5 * jnp.mean((bih - rhs(batch["x"])) ** 2) / (4 * math.pi**4) ** 2
+        xb = batch["x_boundary"]
+        bc = 0.5 * jnp.mean((M.apply(p, xb, cfg) - u_star(xb)) ** 2)
+        # clamped-plate second condition: normal derivative ~ full gradient here
+        gb = jax.vmap(jax.grad(lambda y: M.apply(p, y[None], cfg)[0]))(xb)
+        bc2 = 0.5 * jnp.mean(gb**2) * 1e-2
+        total = pde + 20.0 * bc + bc2
+        return total, {"pde": pde, "bc": bc}
+
+    trainer = Trainer(loss, params,
+                      TrainConfig(peak_lr=1e-3, warmup_steps=30,
+                                  total_steps=args.steps, weight_decay=0.0),
+                      batch_fn=lambda s: collocation_batch(1, s, args.batch, D))
+    print(f"biharmonic PINN (scheme={args.scheme})")
+    trainer.run(args.steps, log_every=max(args.steps // 6, 1))
+
+    xe = jax.random.uniform(jax.random.PRNGKey(5), (2048, D))
+    u = M.apply(trainer.params, xe, cfg)
+    rel = float(jnp.linalg.norm(u - u_star(xe)) / jnp.linalg.norm(u_star(xe)))
+    print(f"relative L2 error vs u*: {rel:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""End-to-end driver (the paper's kind): train a Poisson PINN with the
+collapsed-Taylor-mode Laplacian in the loss.
+
+    -Delta u = D pi^2 prod_d sin(pi x_d)   on (0,1)^D,   u = u* on the boundary
+
+with the manufactured solution u*(x) = prod_d sin(pi x_d). Uses the paper's
+MLP (D -> 768 -> 768 -> 512 -> 512 -> 1, tanh), the fault-tolerant Trainer
+(checkpointing + deterministic restart), and reports the relative L2 error of
+the learned solution against u*.
+
+Run:  PYTHONPATH=src python examples/pinn_poisson.py [--steps 400] [--dim 5]
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data import collocation_batch
+from repro.models import mlp as M
+from repro.train.trainer import Trainer, TrainConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--dim", type=int, default=5)
+    ap.add_argument("--batch", type=int, default=512)
+    ap.add_argument("--method", default="collapsed",
+                    choices=["nested", "standard", "collapsed", "rewrite"])
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config("mlp-pinn")
+    cfg = cfg.replace(mlp_sizes=(args.dim,) + cfg.mlp_sizes[1:])
+    model = M
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    n_params = sum(p.size for p in jax.tree.leaves(params))
+    print(f"Poisson PINN in {args.dim}D; {n_params/1e6:.2f}M params; "
+          f"Laplacian method = {args.method}")
+
+    tcfg = TrainConfig(peak_lr=2e-3, warmup_steps=50, total_steps=args.steps,
+                       weight_decay=0.0, ckpt_dir=args.ckpt_dir, ckpt_every=200)
+    trainer = Trainer(
+        lambda p, b: model.loss(p, b, cfg, method=args.method),
+        params, tcfg,
+        batch_fn=lambda s: collocation_batch(0, s, args.batch, args.dim),
+    )
+    if args.ckpt_dir and trainer.maybe_restore():
+        print(f"resumed from step {trainer.step}")
+    trainer.run(args.steps, log_every=max(args.steps // 8, 1))
+
+    # evaluate against the manufactured solution
+    xe = jax.random.uniform(jax.random.PRNGKey(123), (4096, args.dim))
+    u = model.apply(trainer.params, xe, cfg)
+    u_star = M.manufactured_solution(xe)
+    rel = float(jnp.linalg.norm(u - u_star) / jnp.linalg.norm(u_star))
+    print(f"relative L2 error vs manufactured solution: {rel:.4f}")
+    if trainer.straggler_events:
+        print(f"straggler events: {trainer.straggler_events}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+from .checkpoint import (  # noqa: F401
+    latest_step,
+    restore,
+    save,
+    save_async,
+    wait_for_saves,
+)

@@ -1,0 +1,31 @@
+"""Assigned-architecture configs. ``get_config(name)`` returns the full
+config; ``get_smoke_config(name)`` a reduced same-family config for CPU
+smoke tests. ``ARCHS`` lists all selectable ``--arch`` ids."""
+
+from importlib import import_module
+
+from .base import SHAPES, ModelConfig, ShapeConfig  # noqa: F401
+
+ARCHS = [
+    "recurrentgemma-9b",
+    "xlstm-350m",
+    "mistral-large-123b",
+    "yi-6b",
+    "qwen2-1.5b",
+    "llama3.2-3b",
+    "deepseek-moe-16b",
+    "arctic-480b",
+    "whisper-base",
+    "llama3.2-vision-90b",
+    "mlp-pinn",  # the paper's own model (11th config)
+]
+
+_MODULES = {a: a.replace("-", "_").replace(".", "_") for a in ARCHS}
+
+
+def get_config(name: str) -> ModelConfig:
+    return import_module(f"repro.configs.{_MODULES[name]}").CONFIG
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    return import_module(f"repro.configs.{_MODULES[name]}").SMOKE

@@ -1,0 +1,22 @@
+"""arctic-480b [moe]: 128-expert top-2 MoE + dense residual branch
+(hf:Snowflake/snowflake-arctic-base).
+
+35L d_model=7168 56H (GQA kv=8) expert d_ff=4864 vocab=32000; the dense
+residual runs in parallel with the MoE FFN (dense-MoE hybrid).
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b", family="moe",
+    num_layers=35, d_model=7168, num_heads=56, num_kv_heads=8,
+    d_ff=4864, vocab_size=32_000,
+    num_experts=128, experts_per_token=2, moe_d_ff=4864,
+    dense_residual_d_ff=14_336,
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=2, d_model=32, num_heads=4, num_kv_heads=2, head_dim=8,
+    d_ff=64, vocab_size=199, num_experts=8, experts_per_token=2,
+    moe_d_ff=16, dense_residual_d_ff=32, capacity_factor=4.0,
+    dtype="float32", attn_chunk=8,
+)

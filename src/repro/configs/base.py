@@ -1,0 +1,109 @@
+"""Model configuration schema shared by all assigned architectures."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | audio | vlm | mlp
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+
+    head_dim: Optional[int] = None
+    qkv_bias: bool = False
+    tied_embeddings: bool = False
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-6
+    act: str = "silu"  # mlp activation: silu (swiglu) | gelu
+    sliding_window: Optional[int] = None  # local attention window, None = full
+
+    # --- MoE ---
+    num_experts: int = 0
+    experts_per_token: int = 0
+    num_shared_experts: int = 0
+    moe_d_ff: int = 0  # expert hidden dim (fine-grained experts)
+    dense_residual_d_ff: int = 0  # arctic: parallel dense FFN
+    first_dense_layers: int = 0  # deepseek-moe: first k layers dense
+    capacity_factor: float = 1.25
+    moe_seq_chunk: int = 8192  # dispatch long sequences in scanned chunks
+
+    # --- hybrid / recurrent ---
+    block_pattern: Tuple[str, ...] = ()  # e.g. ('R','R','A') griffin, ('m','m','m','s') xlstm
+    rglru_conv_width: int = 4
+    lru_width: Optional[int] = None
+
+    # --- enc-dec (whisper) ---
+    encoder_layers: int = 0
+    decoder_layers: int = 0
+    encoder_seq: int = 1500  # stubbed frame-embedding length
+
+    # --- vlm ---
+    cross_attn_every: int = 0  # insert a gated cross-attn layer every N layers
+    vision_tokens: int = 6404  # stubbed patch-embedding count (4 tiles x 1601)
+    vision_dim: int = 1280
+
+    # --- mlp (the paper's model) ---
+    mlp_sizes: Tuple[int, ...] = ()
+
+    # --- numerics / execution ---
+    dtype: str = "bfloat16"  # activation/compute dtype
+    param_dtype: str = "float32"
+    attn_chunk: int = 512  # kv-block size of the streaming-softmax attention
+    remat: bool = True
+    remat_policy: str = "nothing"  # nothing | dots (see distributed notes)
+    use_pallas: bool = False  # TPU runtime: use Pallas kernels where available
+    max_target_positions: int = 8192  # decoder position-embedding capacity
+
+    vocab_pad_multiple: int = 128  # pad embeddings so vocab shards evenly
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return -(-self.vocab_size // m) * m if self.vocab_size else 0
+
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def params_dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One input-shape cell of the assignment."""
+
+    name: str  # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}

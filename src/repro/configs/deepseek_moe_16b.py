@@ -1,0 +1,22 @@
+"""deepseek-moe-16b [moe]: 2 shared + 64 routed top-6 fine-grained experts,
+first layer dense (arXiv:2401.06066).
+
+28L d_model=2048 16H (kv=16, MHA) expert d_ff=1408 vocab=102400; dense
+layer d_ff = 4 * 2048 * 1.34 ~ 10944 (deepseek uses 10944).
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-moe-16b", family="moe",
+    num_layers=28, d_model=2048, num_heads=16, num_kv_heads=16,
+    d_ff=10944, vocab_size=102_400,
+    num_experts=64, experts_per_token=6, num_shared_experts=2,
+    moe_d_ff=1408, first_dense_layers=1,
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=3, d_model=32, num_heads=4, num_kv_heads=4, head_dim=8,
+    d_ff=64, vocab_size=199, num_experts=8, experts_per_token=2,
+    num_shared_experts=1, moe_d_ff=16, capacity_factor=4.0,
+    dtype="float32", attn_chunk=8,
+)

@@ -1,0 +1,17 @@
+"""llama3.2-3b [dense] (hf:meta-llama/Llama-3.2-3B).
+
+28L d_model=3072 24H (GQA kv=8) d_ff=8192 vocab=128256.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3.2-3b", family="dense",
+    num_layers=28, d_model=3072, num_heads=24, num_kv_heads=8,
+    d_ff=8192, vocab_size=128_256, tied_embeddings=True,
+    rope_theta=500_000.0,
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=3, d_model=32, num_heads=4, num_kv_heads=2, head_dim=8,
+    d_ff=64, vocab_size=199, dtype="float32", attn_chunk=8,
+)

@@ -1,0 +1,20 @@
+"""llama-3.2-vision-90b [vlm]: cross-attn image layers every 5th layer
+(hf:meta-llama/Llama-3.2-90B-Vision). Vision tower STUBBED: input_specs
+provides patch embeddings (B, 6404, 1280).
+
+100L d_model=8192 64H (GQA kv=8) d_ff=28672 vocab=128256.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3.2-vision-90b", family="vlm",
+    num_layers=100, d_model=8192, num_heads=64, num_kv_heads=8,
+    d_ff=28672, vocab_size=128_256, rope_theta=500_000.0,
+    cross_attn_every=5, vision_tokens=6404, vision_dim=1280,
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=4, d_model=32, num_heads=4, num_kv_heads=2, head_dim=8,
+    d_ff=64, vocab_size=199, cross_attn_every=2, vision_tokens=9,
+    vision_dim=16, dtype="float32", attn_chunk=8,
+)

@@ -1,0 +1,15 @@
+"""The paper's own model: tanh MLP 50 -> 768 -> 768 -> 512 -> 512 -> 1
+(section 4 experimental setup), trained as a Poisson PINN with the
+collapsed-Taylor Laplacian in the loss.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mlp-pinn", family="mlp",
+    num_layers=5, d_model=768, num_heads=1, num_kv_heads=1,
+    d_ff=0, vocab_size=0,
+    mlp_sizes=(50, 768, 768, 512, 512, 1),
+    dtype="float32", param_dtype="float32",
+)
+
+SMOKE = CONFIG.replace(mlp_sizes=(5, 32, 32, 1))

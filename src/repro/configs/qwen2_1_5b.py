@@ -1,0 +1,17 @@
+"""qwen2-1.5b [dense]: GQA + QKV bias (arXiv:2407.10671).
+
+28L d_model=1536 12H (GQA kv=2) d_ff=8960 vocab=151936.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-1.5b", family="dense",
+    num_layers=28, d_model=1536, num_heads=12, num_kv_heads=2,
+    d_ff=8960, vocab_size=151_936, qkv_bias=True, tied_embeddings=True,
+    rope_theta=1_000_000.0,
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=3, d_model=24, num_heads=4, num_kv_heads=2, head_dim=6,
+    d_ff=48, vocab_size=199, dtype="float32", attn_chunk=8,
+)

@@ -1,0 +1,20 @@
+"""recurrentgemma-9b [hybrid]: RG-LRU + local attn 1:2 (arXiv:2402.19427).
+
+38L d_model=4096 16H (MQA kv=1) d_ff=12288 vocab=256000, window 2048.
+38 = 12 x (R,R,A) superblocks + trailing (R,R).
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b", family="hybrid",
+    num_layers=38, d_model=4096, num_heads=16, num_kv_heads=1,
+    d_ff=12288, vocab_size=256_000, head_dim=256,
+    block_pattern=("R", "R", "A"), sliding_window=2048, lru_width=4096,
+    tied_embeddings=True,
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=5, d_model=32, num_heads=4, num_kv_heads=1, head_dim=8,
+    d_ff=64, vocab_size=199, sliding_window=8, lru_width=32,
+    dtype="float32", attn_chunk=8,
+)

@@ -1,0 +1,20 @@
+"""whisper-base [audio]: enc-dec, conv frontend STUB (arXiv:2212.04356).
+
+6L (encoder) + 6L (decoder) d_model=512 8H d_ff=2048 vocab=51865.
+input_specs feeds precomputed frame embeddings (B, 1500, 512).
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base", family="audio",
+    num_layers=6, d_model=512, num_heads=8, num_kv_heads=8,
+    d_ff=2048, vocab_size=51_865,
+    encoder_layers=6, decoder_layers=6, encoder_seq=1500, act="gelu",
+    max_target_positions=40_960,
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=2, d_model=32, num_heads=4, num_kv_heads=4, head_dim=8,
+    d_ff=64, vocab_size=199, encoder_layers=2, decoder_layers=2,
+    encoder_seq=12, dtype="float32", attn_chunk=8, max_target_positions=64,
+)

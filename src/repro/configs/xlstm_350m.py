@@ -1,0 +1,18 @@
+"""xlstm-350m [ssm]: sLSTM + mLSTM blocks (arXiv:2405.04517).
+
+24L d_model=1024 4H (kv=4) d_ff=0 (cells carry their own projections)
+vocab=50304. Pattern (m,m,m,s) x 6.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-350m", family="ssm",
+    num_layers=24, d_model=1024, num_heads=4, num_kv_heads=4,
+    d_ff=0, vocab_size=50_304,
+    block_pattern=("m", "m", "m", "s"),
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=4, d_model=16, num_heads=2, num_kv_heads=2, vocab_size=199,
+    block_pattern=("m", "s"), dtype="float32",
+)

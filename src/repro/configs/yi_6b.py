@@ -1,0 +1,16 @@
+"""yi-6b [dense]: llama-arch GQA (arXiv:2403.04652).
+
+32L d_model=4096 32H (GQA kv=4) d_ff=11008 vocab=64000.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-6b", family="dense",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=4,
+    d_ff=11008, vocab_size=64_000, rope_theta=5_000_000.0,
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=3, d_model=32, num_heads=4, num_kv_heads=2, head_dim=8,
+    d_ff=64, vocab_size=199, dtype="float32", attn_chunk=8,
+)

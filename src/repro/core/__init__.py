@@ -1,0 +1,14 @@
+"""Core Taylor-mode engine: the paper's contribution.
+
+Public API:
+  jet, jet_fan                 -- standard Taylor mode (section 2)
+  collapsed_fan                -- collapsed Taylor mode interpreter (section 3.1, eq. 6)
+  collapse_sum_by_rewrite      -- the paper's graph rewrite on jaxprs (appendix C)
+  laplacian, weighted_laplacian, biharmonic, linear_operator
+                               -- PDE operators (sections 3.2/3.3), each with
+                                  method = nested | standard | collapsed | rewrite
+                                  and exact | stochastic variants
+"""
+
+from .jets import ZERO, CollapsedJet, Jet  # noqa: F401
+from .taylor import jet, jet_fan  # noqa: F401

@@ -1,0 +1,149 @@
+"""Griewank/Utke/Walther interpolation for mixed partial derivatives
+(paper section 3.3, eqs. 10-12, appendix E).
+
+A K-jet can only produce pure directional derivatives <d^K f, v^(x)K>. Mixed
+terms <d^K f, v_1^(x)i_1 (x) ... (x) v_I^(x)i_I> are reconstructed by linearly
+combining K-jets along *interpolated* directions sum_i [j]_i v_i over the
+family {j in N^I : |j|_1 = K} with coefficients gamma_{i,j} (eq. E17):
+
+    gamma_{i,j} = sum_{0 < m <= i} (-1)^{|i-m|_1} C(i, m)
+                  C(|i|_1 * m/|m|_1, j) (|m|_1/|i|_1)^{|i|_1}
+
+using generalized (real-argument) binomial coefficients taken componentwise.
+Because gamma depends only on (K, I, i) — not on f or the directions — the
+direction sums of eq. (10) can be pulled inside and *collapsed* (eq. 12).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import lru_cache
+from itertools import product
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+MultiIndex = Tuple[int, ...]
+
+
+def gen_binom(a: float, b: int) -> float:
+    """Generalized binomial coefficient prod_{l=0}^{b-1} (a-l)/(b-l); 1 if b=0."""
+    out = 1.0
+    for l in range(b):
+        out *= (a - l) / (b - l)
+    return out
+
+
+def gen_binom_vec(a: Tuple[float, ...], b: MultiIndex) -> float:
+    return math.prod(gen_binom(ai, bi) for ai, bi in zip(a, b))
+
+
+@lru_cache(maxsize=None)
+def compositions(K: int, I: int) -> Tuple[MultiIndex, ...]:
+    """All j in N^I with |j|_1 = K (including zeros)."""
+    if I == 1:
+        return ((K,),)
+    out = []
+    for first in range(K, -1, -1):
+        for rest in compositions(K - first, I - 1):
+            out.append((first,) + rest)
+    return tuple(out)
+
+
+@lru_cache(maxsize=None)
+def gamma(i: MultiIndex, j: MultiIndex) -> float:
+    """gamma_{i,j} of eq. (E17)."""
+    I = len(i)
+    K = sum(i)
+    assert sum(j) == K
+    total = 0.0
+    for m in product(*[range(0, ii + 1) for ii in i]):
+        norm_m = sum(m)
+        if norm_m == 0:
+            continue
+        sign = (-1.0) ** (sum(ii - mi for ii, mi in zip(i, m)))
+        c1 = gen_binom_vec(tuple(float(x) for x in i), m)
+        a = tuple(K * mi / norm_m for mi in m)
+        c2 = gen_binom_vec(a, j)
+        total += sign * c1 * c2 * (norm_m / K) ** K
+    return total
+
+
+@lru_cache(maxsize=None)
+def interpolation_family(i: MultiIndex) -> Tuple[Tuple[MultiIndex, float], ...]:
+    """All (j, gamma_{i,j} / K!) with nonzero coefficient for the target i."""
+    K = sum(i)
+    fam = []
+    for j in compositions(K, len(i)):
+        g = gamma(i, j)
+        if abs(g) > 1e-12:
+            fam.append((j, g / math.factorial(K)))
+    return tuple(fam)
+
+
+def biharmonic_gammas() -> Dict[MultiIndex, float]:
+    """The 5 coefficients of fig. 4 (i = (2,2), K = 4)."""
+    return {j: gamma((2, 2), j) for j in compositions(4, 2)}
+
+
+def biharmonic_plan(D: int):
+    """Symmetry-reduced exact-biharmonic plan (appendix E.1, eq. E22).
+
+    Returns a list of (scale, weights) direction groups; within each group the
+    directions are `w1 * e_{d1} + w2 * e_{d2}` over the stated index set, all
+    4-jets of a group are *collapsed into one sum* (eq. 12), and group sums
+    are combined with `scale`:
+
+      group "diag":  4 e_d,            d = 1..D          scale = (2 D g40 + 2 g31 + g22) / 24
+      group "31":    3 e_d1 + e_d2,    d1 != d2          scale = 2 g31 / 24
+      group "22":    2 e_d1 + 2 e_d2,  d1 < d2           scale = 2 g22 / 24
+
+    Direction counts: D + D(D-1) + D(D-1)/2 (vs 5 D^2 unreduced).
+    """
+    g = biharmonic_gammas()
+    g40, g31, g22 = g[(4, 0)], g[(3, 1)], g[(2, 2)]
+    assert abs(g[(4, 0)] - g[(0, 4)]) < 1e-9 and abs(g[(3, 1)] - g[(1, 3)]) < 1e-9
+
+    def dirs_diag():
+        return np.eye(D) * 4.0
+
+    def dirs_31():
+        out = []
+        for d1 in range(D):
+            for d2 in range(D):
+                if d1 == d2:
+                    continue
+                v = np.zeros(D)
+                v[d1] += 3.0
+                v[d2] += 1.0
+                out.append(v)
+        return np.stack(out)
+
+    def dirs_22():
+        out = []
+        for d1 in range(D):
+            for d2 in range(d1 + 1, D):
+                v = np.zeros(D)
+                v[d1] = 2.0
+                v[d2] = 2.0
+                out.append(v)
+        return np.stack(out)
+
+    return [
+        ((2 * D * g40 + 2 * g31 + g22) / 24.0, dirs_diag()),
+        (2 * g31 / 24.0, dirs_31()),
+        (2 * g22 / 24.0, dirs_22()),
+    ]
+
+
+def mixed_partial_directions(
+    vectors: List[np.ndarray], powers: MultiIndex
+) -> List[Tuple[float, np.ndarray]]:
+    """(scale, direction) pairs computing <d^K f, v_1^(x)i_1 (x) ... >
+    from pure K-jets (eq. 11). General, unreduced."""
+    fam = interpolation_family(tuple(powers))
+    out = []
+    for j, coeff in fam:
+        direction = sum(jc * v for jc, v in zip(j, vectors))
+        out.append((coeff, np.asarray(direction)))
+    return out

@@ -1,0 +1,152 @@
+"""Jet containers and symbolic-zero coefficient algebra.
+
+A *K-jet* of a value ``x`` is the tuple of Taylor coefficients
+``(x_0, x_1, ..., x_K)`` of a path ``x(t)`` (paper section 2). Inside the
+interpreters we carry, per jaxpr value:
+
+* ``Jet``           — standard Taylor mode: primal + K coefficients, each with the
+                      same shape as the primal. Multiple directions are handled by
+                      an (optional) leading ``R`` axis on every coefficient.
+* ``CollapsedJet``  — collapsed Taylor mode (paper eq. 6): primal + K-1
+                      direction-stacked coefficients (leading ``R`` axis) + a single
+                      *summed* top coefficient (no ``R`` axis).
+
+Coefficients may be the symbolic :data:`ZERO` — constants and weights have
+identically-zero Taylor coefficients, and materializing those would destroy the
+complexity advantage the paper is about (a zero top coefficient must stay free).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+
+class _SymbolicZero:
+    """Identically-zero Taylor coefficient (of any shape)."""
+
+    _instance = None
+
+    def __new__(cls):
+        if cls._instance is None:
+            cls._instance = super().__new__(cls)
+        return cls._instance
+
+    def __repr__(self):
+        return "ZERO"
+
+    def __bool__(self):
+        return False
+
+
+ZERO = _SymbolicZero()
+Coeff = Union[jax.Array, _SymbolicZero]
+
+
+def is_zero(c: Any) -> bool:
+    return c is ZERO
+
+
+def instantiate(c: Coeff, like: jax.Array, r_axis: int | None = None) -> jax.Array:
+    """Materialize a coefficient; ZERO becomes zeros shaped like ``like``.
+
+    If ``r_axis`` is given, a leading direction axis of that size is added.
+    """
+    if not is_zero(c):
+        return c
+    shape = like.shape if r_axis is None else (r_axis,) + like.shape
+    return jnp.zeros(shape, dtype=like.dtype)
+
+
+def add_coeff(a: Coeff, b: Coeff) -> Coeff:
+    if is_zero(a):
+        return b
+    if is_zero(b):
+        return a
+    return a + b
+
+
+def sum_coeffs(cs: Sequence[Coeff]) -> Coeff:
+    acc: Coeff = ZERO
+    for c in cs:
+        acc = add_coeff(acc, c)
+    return acc
+
+
+def scale_coeff(s: float | int, c: Coeff) -> Coeff:
+    if is_zero(c) or s == 1:
+        return c
+    return s * c
+
+
+def mul_coeff(a: Coeff, b: Coeff) -> Coeff:
+    if is_zero(a) or is_zero(b):
+        return ZERO
+    return a * b
+
+
+def map_coeff(fn, c: Coeff) -> Coeff:
+    """Apply a *linear* function to a coefficient (ZERO maps to ZERO)."""
+    return ZERO if is_zero(c) else fn(c)
+
+
+@dataclasses.dataclass
+class Jet:
+    """Standard Taylor mode value: primal + K coefficients.
+
+    ``coeffs[k-1]`` is the k-th Taylor coefficient. When propagating R
+    directions at once, every non-ZERO coefficient carries a leading R axis
+    (the primal never does — it is shared across directions, paper fig. 2).
+    """
+
+    primal: jax.Array
+    coeffs: List[Coeff]
+
+    @property
+    def order(self) -> int:
+        return len(self.coeffs)
+
+    def coeff(self, k: int) -> Coeff:
+        """k-th coefficient, k in [0, K]; k=0 returns the primal."""
+        if k == 0:
+            return self.primal
+        return self.coeffs[k - 1]
+
+    @staticmethod
+    def constant(x: jax.Array, order: int) -> "Jet":
+        return Jet(x, [ZERO] * order)
+
+    def is_constant(self) -> bool:
+        return all(is_zero(c) for c in self.coeffs)
+
+
+@dataclasses.dataclass
+class CollapsedJet:
+    """Collapsed Taylor mode value (paper eq. 6 / D14).
+
+    ``lower[k-1]`` (k = 1..K-1) are direction-stacked coefficients with a
+    leading R axis; ``top`` is the *sum over directions* of the K-th
+    coefficient — a single vector, which is the whole point.
+    """
+
+    primal: jax.Array
+    lower: List[Coeff]  # K-1 entries, each (R, *primal.shape) or ZERO
+    top: Coeff  # (*primal.shape,) or ZERO
+
+    @property
+    def order(self) -> int:
+        return len(self.lower) + 1
+
+    @staticmethod
+    def constant(x: jax.Array, order: int) -> "CollapsedJet":
+        return CollapsedJet(x, [ZERO] * (order - 1), ZERO)
+
+    def is_constant(self) -> bool:
+        return is_zero(self.top) and all(is_zero(c) for c in self.lower)
+
+
+def ravel_series(series: Sequence[Coeff]) -> List[Coeff]:
+    return list(series)

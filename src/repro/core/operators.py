@@ -1,0 +1,286 @@
+"""PDE operators (paper sections 3.2/3.3) in every mode the paper compares.
+
+Each operator comes in methods:
+
+  'nested'     — nested first-order AD (forward-over-reverse VHVPs), the
+                 paper's baseline;
+  'standard'   — standard Taylor mode: R K-jets via vmap, summed at the output
+                 (1 + K*R propagated vectors);
+  'collapsed'  — collapsed Taylor mode via the eq.-6 interpreter
+                 (1 + (K-1)*R + 1 vectors); contains the forward Laplacian
+                 (K=2, basis directions) as special case;
+  'rewrite'    — standard Taylor mode graph + the paper's appendix-C jaxpr
+                 rewrite (push sum up / replicate handled by vmap); numerically
+                 identical to 'standard', FLOP-count equal to 'collapsed'.
+
+and exact / stochastic variants. ``f`` maps ``(D,) -> ()``/``(C,)`` or a batch
+``(B, D) -> (B,)`` (rows independent — the PINN/VMC convention).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import nested as _nested
+from .collapse import collapsed_fan
+from .interpolation import biharmonic_plan
+from .jets import ZERO, Jet, instantiate
+from .rewrite import collapse_sum_by_rewrite
+from .taylor import interpret_jaxpr, jet_fan
+
+METHODS = ("nested", "standard", "collapsed", "rewrite")
+
+
+def _broadcast_directions(dirs: jax.Array, x: jax.Array) -> jax.Array:
+    """(R, D) directions -> (R, *x.shape) broadcast over batch axes."""
+    dirs = jnp.asarray(dirs, dtype=x.dtype)
+    R = dirs.shape[0]
+    dirs = dirs.reshape((R,) + (1,) * (x.ndim - 1) + (x.shape[-1],))
+    return jnp.broadcast_to(dirs, (R,) + x.shape)
+
+
+def _sum_top_standard(f, x, dirs, K):
+    _, coeffs = jet_fan(f, x, dirs, K)
+    return coeffs[K - 1].sum(axis=0)
+
+
+def _sum_top_collapsed(f, x, dirs, K):
+    _, _, top = collapsed_fan(f, x, dirs, K)
+    return top
+
+
+def _sum_top_rewrite(f, x, dirs, K):
+    closed = jax.make_jaxpr(f)(x)
+
+    def fan(x_, V_):
+        def one(v):
+            (out,) = interpret_jaxpr(closed, K, [Jet(x_, [v] + [ZERO] * (K - 1))])
+            return instantiate(out.coeffs[K - 1], out.primal)
+
+        return (), jax.vmap(one)(V_)
+
+    rewritten = collapse_sum_by_rewrite(fan, x, dirs)
+    return rewritten(x, dirs)[1]
+
+
+_TOP = {
+    "standard": _sum_top_standard,
+    "collapsed": _sum_top_collapsed,
+    "rewrite": _sum_top_rewrite,
+}
+
+
+# ---------------------------------------------------------------------------
+# Laplacian (section 3.2, eq. 7)
+# ---------------------------------------------------------------------------
+
+
+def laplacian(f: Callable, x: jax.Array, method: str = "collapsed") -> jax.Array:
+    """Exact Laplacian. method='collapsed' is the forward Laplacian."""
+    if method == "nested":
+        return _nested.laplacian_nested(f, x)
+    dirs = _broadcast_directions(jnp.eye(x.shape[-1]), x)
+    return _TOP[method](f, x, dirs, 2)
+
+
+def laplacian_stochastic(
+    f: Callable,
+    x: jax.Array,
+    key: jax.Array,
+    samples: int,
+    method: str = "collapsed",
+    dist: str = "rademacher",
+) -> jax.Array:
+    """Hutchinson estimate (1/S) sum_s <d^2 f, v_s^(x)2> (eq. 7a, stochastic).
+
+    Collapsing the sampled directions is the paper's 'currently not done'
+    optimization of the Hutchinson estimator.
+    """
+    if method == "nested":
+        return _nested.laplacian_nested_stochastic(f, x, key, samples, dist)
+    dirs = _nested.sample_directions(key, samples, x, dist)
+    return _TOP[method](f, x, dirs, 2) / samples
+
+
+def value_grad_laplacian(f: Callable, x: jax.Array):
+    """(f(x), grad f(x), Delta f(x)) from ONE collapsed 2-jet pass.
+
+    The forward Laplacian's lower coefficients along basis directions ARE the
+    gradient — PINN/VMC losses that need u, grad u and Delta u get all three
+    for the price of the collapsed Laplacian (beyond-paper convenience API;
+    folx exposes the same triple).
+    """
+    dirs = _broadcast_directions(jnp.eye(x.shape[-1]), x)
+    primal, lower, top = collapsed_fan(f, x, dirs, 2)
+    grad = jnp.moveaxis(lower[0], 0, -1)  # (R, *batch) -> (*batch, D)
+    return primal, grad, top
+
+
+# ---------------------------------------------------------------------------
+# Weighted Laplacian (section 3.2, eq. 8): Tr(sigma sigma^T d^2 f)
+# ---------------------------------------------------------------------------
+
+
+def weighted_laplacian(
+    f: Callable, x: jax.Array, sigma: jax.Array, method: str = "collapsed"
+) -> jax.Array:
+    """Tr(sigma sigma^T d^2 f) per example.
+
+    sigma: (D, R) factor of the PSD coefficient matrix — or (B, D, R) for a
+    state-dependent diffusion sigma(x) (Kolmogorov-type PDEs: Fokker-Planck,
+    Black-Scholes; the paper's section 3.2 'sigma can depend on x_0' case):
+    each batch row gets its own direction set, which collapsing handles
+    unchanged since the direction axis R is collapsed per example.
+    """
+    if sigma.ndim == 3:  # (B, D, R): per-example directions
+        dirs = jnp.moveaxis(sigma, -1, 0).astype(x.dtype)  # (R, B, D)
+        if method == "nested":
+            return jax.vmap(lambda v: _nested.vhvp(f, x, v))(dirs).sum(axis=0)
+        return _TOP[method](f, x, dirs, 2)
+    if method == "nested":
+        return _nested.weighted_laplacian_nested(f, x, sigma)
+    dirs = _broadcast_directions(jnp.moveaxis(sigma, -1, 0), x)
+    return _TOP[method](f, x, dirs, 2)
+
+
+def weighted_laplacian_stochastic(
+    f: Callable,
+    x: jax.Array,
+    sigma: jax.Array,
+    key: jax.Array,
+    samples: int,
+    method: str = "collapsed",
+    dist: str = "rademacher",
+) -> jax.Array:
+    """(1/S) sum_s <d^2 f, (sigma v_s)^(x)2> — Hu et al.'s estimator, collapsed."""
+    if method == "nested":
+        v = _nested.sample_directions(key, samples, jnp.zeros(sigma.shape[-1]), dist)
+        dirs = v @ sigma.T  # (S, D)
+        dirs = _broadcast_directions(dirs, x)
+        return jax.vmap(lambda d: _nested.vhvp(f, x, d))(dirs).mean(axis=0)
+    v = _nested.sample_directions(key, samples, jnp.zeros(sigma.shape[-1]), dist)
+    dirs = _broadcast_directions(v @ sigma.T, x)
+    return _TOP[method](f, x, dirs, 2) / samples
+
+
+# ---------------------------------------------------------------------------
+# Biharmonic (section 3.3 / appendix E)
+# ---------------------------------------------------------------------------
+
+
+def biharmonic(f: Callable, x: jax.Array, method: str = "collapsed") -> jax.Array:
+    """Exact biharmonic Delta^2 f.
+
+    'nested' nests two HVP-trace Laplacians (the paper's footnote-2 baseline).
+    'standard'/'collapsed'/'rewrite' use the Griewank interpolation family
+    with the appendix-E.1 symmetry reduction: three direction groups
+    (D + D(D-1) + D(D-1)/2 4-jets), each group's sum collapsed.
+    """
+    if method == "nested":
+        return _nested.biharmonic_nested(f, x)
+    D = x.shape[-1]
+    out = None
+    for scale, dirs in biharmonic_plan(D):
+        dirs_b = _broadcast_directions(jnp.asarray(dirs), x)
+        group = _TOP[method](f, x, dirs_b, 4)
+        out = scale * group if out is None else out + scale * group
+    return out
+
+
+def biharmonic_nested_taylor(
+    f: Callable, x: jax.Array, method: str = "collapsed"
+) -> jax.Array:
+    """Delta(Delta f) with each Laplacian computed in (collapsed) Taylor mode —
+    the most efficient scheme per the paper's appendix G."""
+    inner = lambda y: laplacian(f, y, method=method)
+    return laplacian(inner, x, method=method)
+
+
+def biharmonic_stochastic(
+    f: Callable,
+    x: jax.Array,
+    key: jax.Array,
+    samples: int,
+    method: str = "collapsed",
+) -> jax.Array:
+    """(1/(3S)) sum_s <d^4 f, v_s^(x)4>, v ~ N(0,I) (Gaussian-unbiased
+    normalization of eq. 9; see nested.biharmonic_nested_stochastic)."""
+    if method == "nested":
+        return _nested.biharmonic_nested_stochastic(f, x, key, samples)
+    dirs = _nested.sample_directions(key, samples, x, "normal")
+    return _TOP[method](f, x, dirs, 4) / (3.0 * samples)
+
+
+# ---------------------------------------------------------------------------
+# General linear differential operators (eq. 10-12)
+# ---------------------------------------------------------------------------
+
+
+def linear_operator(
+    f: Callable,
+    x: jax.Array,
+    terms,
+    method: str = "collapsed",
+) -> jax.Array:
+    """Compute sum over ``terms`` of  c * <d^K f(x), v_1^(x)p_1 (x) ... (x) v_I^(x)p_I>.
+
+    ``terms``: iterable of (c, [(v_i, p_i), ...]) with sum(p_i) = K shared
+    across terms. Every mixed term is expanded through the Griewank
+    interpolation family (eq. 11); all resulting pure directions are stacked
+    and their jets *collapsed in one pass* (eq. 12) — weighting is folded into
+    the direction vectors where the power K allows, otherwise applied per
+    family member group.
+    """
+    from .interpolation import interpolation_family
+
+    groups = {}  # coefficient -> list of direction vectors
+    K = None
+    for c, factors in terms:
+        powers = tuple(p for _, p in factors)
+        vecs = [jnp.asarray(v, dtype=x.dtype) for v, _ in factors]
+        Kt = sum(powers)
+        if K is None:
+            K = Kt
+        elif K != Kt:
+            raise ValueError("all terms must share the same derivative order K")
+        for j, coeff in interpolation_family(powers):
+            direction = sum(jc * v for jc, v in zip(j, vecs))
+            groups.setdefault(float(c * coeff), []).append(direction)
+
+    out = None
+    for scale, dirs in groups.items():
+        dirs_b = _broadcast_directions(jnp.stack(dirs), x)
+        if method == "nested":
+            vals = jax.vmap(
+                lambda v: _nested.directional_derivative_nested(f, x, v, K)
+            )(dirs_b).sum(axis=0)
+        else:
+            vals = _TOP[method](f, x, dirs_b, K)
+        out = scale * vals if out is None else out + scale * vals
+    return out
+
+
+# ---------------------------------------------------------------------------
+# vector-count accounting (paper table F2): per-datum propagated vectors
+# ---------------------------------------------------------------------------
+
+
+def vector_counts(operator: str, D: int, samples: Optional[int] = None):
+    """Number of propagated vectors per datum, standard vs collapsed
+    (paper eqs. 7b/8b and section 3.3). Used by benchmarks/tableF2."""
+    if operator in ("laplacian", "weighted_laplacian"):
+        R = D if samples is None else samples
+        return {"standard": 1 + 2 * R, "collapsed": 2 + R}
+    if operator == "biharmonic":
+        if samples is not None:
+            return {"standard": 1 + 4 * samples, "collapsed": 2 + 3 * samples}
+        return {
+            "standard": 6 * D * D - 2 * D + 1,
+            "collapsed": 9 * D * D / 2 - 3 * D / 2 + 4,
+        }
+    raise ValueError(operator)

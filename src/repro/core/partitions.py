@@ -1,0 +1,94 @@
+"""Integer partitions and Faa di Bruno multiplicities.
+
+The propagation rule for the k-th Taylor coefficient of ``g(h(t))`` is (paper eq. 3)
+
+    g_k = sum_{sigma in part(k)} nu(sigma) * < d^{|sigma|} g, (x) _{s in sigma} h_s >
+
+where ``part(k)`` is the set of integer partitions of ``k`` (multisets of positive
+integers summing to k) and
+
+    nu(sigma) = k! / ( prod_s n_s(sigma)!  *  prod_{s in sigma} s! )
+
+with ``n_s`` the multiplicity of part-size ``s`` inside ``sigma``.
+
+These are tiny combinatorial objects (|part(8)| = 22); everything here is computed
+eagerly at trace time and cached.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import lru_cache
+from typing import Tuple
+
+Partition = Tuple[int, ...]  # sorted descending, e.g. (2, 1, 1)
+
+
+@lru_cache(maxsize=None)
+def partitions(k: int) -> Tuple[Partition, ...]:
+    """All integer partitions of ``k`` as descending tuples.
+
+    >>> partitions(4)
+    ((4,), (3, 1), (2, 2), (2, 1, 1), (1, 1, 1, 1))
+    """
+    if k < 0:
+        raise ValueError(f"k must be >= 0, got {k}")
+    if k == 0:
+        return ((),)
+
+    out = []
+
+    def _gen(remaining: int, max_part: int, acc: Tuple[int, ...]):
+        if remaining == 0:
+            out.append(acc)
+            return
+        for part in range(min(remaining, max_part), 0, -1):
+            _gen(remaining - part, part, acc + (part,))
+
+    _gen(k, k, ())
+    return tuple(out)
+
+
+@lru_cache(maxsize=None)
+def multiplicity(sigma: Partition) -> int:
+    """Faa di Bruno multiplicity nu(sigma) for a partition of k = sum(sigma).
+
+    Cross-checked against the paper's cheat sheet (section A), e.g. for k = 4:
+      nu((1,1,2)) = 6,  nu((2,2)) = 3,  nu((1,3)) = 4,  nu((4,)) = 1.
+    """
+    k = sum(sigma)
+    counts: dict[int, int] = {}
+    for s in sigma:
+        counts[s] = counts.get(s, 0) + 1
+    denom = 1
+    for s, n in counts.items():
+        denom *= math.factorial(n) * math.factorial(s) ** n
+    val = math.factorial(k) // denom
+    assert math.factorial(k) % denom == 0
+    return val
+
+
+@lru_cache(maxsize=None)
+def faa_di_bruno_terms(k: int) -> Tuple[Tuple[int, Partition], ...]:
+    """All (nu(sigma), sigma) pairs for order k, trivial partition (k,) first."""
+    sig = partitions(k)
+    ordered = sorted(sig, key=lambda s: (len(s), s))  # (k,) first
+    return tuple((multiplicity(s), s) for s in ordered)
+
+
+TRIVIAL = "trivial"
+
+
+def nontrivial_terms(k: int) -> Tuple[Tuple[int, Partition], ...]:
+    """Faa di Bruno terms excluding the trivial partition {k}.
+
+    The trivial term ``< dg, h_k >`` is the unique term that is *linear* in the
+    highest input coefficient — the basis of the paper's collapsing rewrite
+    (eq. 6): the sum over directions commutes with it.
+    """
+    return tuple((nu, s) for nu, s in faa_di_bruno_terms(k) if s != (k,))
+
+
+@lru_cache(maxsize=None)
+def binomial(n: int, k: int) -> int:
+    return math.comb(n, k)

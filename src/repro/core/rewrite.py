@@ -1,0 +1,534 @@
+"""The paper's graph rewrite (appendix C), implemented on jaxprs.
+
+The paper realizes collapsing as two computational-graph transformations:
+
+1. *push replicate down* — computation that does not depend on the direction
+   axis is done once and broadcast at the point of first mixed use. In JAX this
+   pass is performed by ``vmap`` itself: values that do not depend on the
+   mapped axis stay unbatched in the vmapped jaxpr, so the standard-Taylor
+   graphs we produce (``jet_fan`` = vmap over directions) arrive pre-sunk.
+   The :func:`replication_analysis` below is the corresponding *analysis*: it
+   proves, per value and axis, replication along the direction axis — which is
+   what licenses the second pass.
+
+2. *push sum up* (:func:`collapse_sum_by_rewrite`) — the terminal
+   ``reduce_sum`` over the direction axis is hoisted backwards through every
+   equation that is linear in the summed operand (add, sub, neg, scaling by a
+   replicated factor, dot_general with the direction axis on one side,
+   transpose/reshape/slice/broadcast bookkeeping, nested reductions, selects
+   with replicated predicates) until it reaches the first nonlinear use — at
+   which point the sum is materialized. Equations that only fed the pre-sum
+   chain become dead and are never executed (demand-driven evaluation = DCE).
+
+This is exactly the rewrite an ML compiler could apply (the paper's pitch);
+``benchmarks/rewrite_flops.py`` shows XLA does *not* do it on its own by
+comparing HLO FLOP counts before/after.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, FrozenSet, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+AxisSet = FrozenSet[int]
+_ALL = lambda ndim: frozenset(range(ndim))
+_NONE: AxisSet = frozenset()
+
+
+def _aval_ndim(v) -> int:
+    return len(v.aval.shape)
+
+
+def _is_literal(v) -> bool:
+    return type(v).__name__ == "Literal"
+
+
+# ---------------------------------------------------------------------------
+# forward replication analysis
+# ---------------------------------------------------------------------------
+
+_ELEMENTWISE = {
+    "add", "sub", "mul", "div", "max", "min", "pow", "atan2", "nextafter",
+    "neg", "exp", "log", "log1p", "expm1", "tanh", "logistic", "sin", "cos",
+    "sqrt", "rsqrt", "abs", "sign", "floor", "ceil", "round", "erf",
+    "integer_pow", "convert_element_type", "square", "copy", "stop_gradient",
+    "eq", "ne", "lt", "le", "gt", "ge", "and", "or", "xor", "not",
+    "is_finite", "clamp", "select_n",
+}
+
+
+def replication_analysis(jaxpr, n_consts: int) -> Dict[Any, AxisSet]:
+    """For each var: the set of axes along which the value is replicated
+    (constant along that axis). Conservative (under-approximates)."""
+    repl: Dict[Any, AxisSet] = {}
+
+    def get(v) -> AxisSet:
+        if _is_literal(v):
+            return _ALL(len(np.shape(v.val)))
+        return repl.get(v, _NONE)
+
+    for cv in jaxpr.constvars:
+        repl[cv] = _ALL(_aval_ndim(cv))
+    # invars: unknown -> not replicated anywhere (conservative)
+    for iv in jaxpr.invars:
+        repl[iv] = _NONE
+
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        out = eqn.outvars[0]
+        nd_out = _aval_ndim(out) if out.aval.shape is not None else 0
+
+        if name in _ELEMENTWISE:
+            # axis replicated iff replicated in every same-rank operand;
+            # lower-rank (scalar) operands are replicated everywhere.
+            axes = _ALL(nd_out)
+            for v in eqn.invars:
+                nd = len(np.shape(v.val)) if _is_literal(v) else _aval_ndim(v)
+                if nd == nd_out:
+                    axes &= get(v)
+                elif nd != 0:
+                    axes = _NONE  # rank-mismatch non-scalar: give up
+            for ov in eqn.outvars:
+                repl[ov] = axes & _ALL(_aval_ndim(ov))
+
+        elif name == "broadcast_in_dim":
+            bdims = eqn.params["broadcast_dimensions"]
+            (v,) = eqn.invars
+            in_shape = np.shape(v.val) if _is_literal(v) else v.aval.shape
+            src = get(v)
+            axes = set()
+            for j in range(nd_out):
+                if j not in bdims:
+                    axes.add(j)
+                else:
+                    i = bdims.index(j)
+                    if in_shape[i] == 1 and out.aval.shape[j] != 1:
+                        axes.add(j)
+                    elif i in src:
+                        axes.add(j)
+            repl[out] = frozenset(axes)
+
+        elif name == "transpose":
+            perm = eqn.params["permutation"]
+            src = get(eqn.invars[0])
+            repl[out] = frozenset(j for j in range(nd_out) if perm[j] in src)
+
+        elif name == "reshape":
+            (v,) = eqn.invars
+            if tuple(v.aval.shape) == tuple(out.aval.shape):
+                repl[out] = get(v)
+            else:
+                mapping = _reshape_axis_map(tuple(v.aval.shape), tuple(out.aval.shape))
+                src = get(v)
+                repl[out] = frozenset(
+                    j for j, i in mapping.items() if i is not None and i in src
+                )
+
+        elif name == "squeeze":
+            dims = eqn.params["dimensions"]
+            src = get(eqn.invars[0])
+            keep = [i for i in range(_aval_ndim(eqn.invars[0])) if i not in dims]
+            repl[out] = frozenset(j for j, i in enumerate(keep) if i in src)
+
+        elif name == "dot_general":
+            (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+            a, b = eqn.invars
+            sa, sb = get(a), get(b)
+            nla = _aval_ndim(a)
+            lhs_free = [i for i in range(nla) if i not in lc and i not in lb]
+            rhs_free = [i for i in range(_aval_ndim(b)) if i not in rc and i not in rb]
+            axes = set()
+            pos = 0
+            for i, (la_, rb_) in enumerate(zip(lb, rb)):
+                if la_ in sa and rb_ in sb:
+                    axes.add(pos)
+                pos += 1
+            for i in lhs_free:
+                if i in sa:
+                    axes.add(pos)
+                pos += 1
+            for i in rhs_free:
+                if i in sb:
+                    axes.add(pos)
+                pos += 1
+            repl[out] = frozenset(axes)
+
+        elif name in ("reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+                      "argmax", "argmin"):
+            raxes = eqn.params["axes"]
+            src = get(eqn.invars[0])
+            keep = [i for i in range(_aval_ndim(eqn.invars[0])) if i not in raxes]
+            repl[out] = frozenset(j for j, i in enumerate(keep) if i in src)
+
+        elif name in ("slice", "rev", "dynamic_slice", "cumsum", "gather"):
+            repl[out] = get(eqn.invars[0]) & _ALL(nd_out) if nd_out == _aval_ndim(
+                eqn.invars[0]
+            ) else _NONE
+
+        else:
+            for ov in eqn.outvars:
+                repl[ov] = _NONE
+    return repl
+
+
+def _reshape_axis_map(old: Tuple[int, ...], new: Tuple[int, ...]):
+    """Map each output axis to the unique input axis it mirrors, where the
+    reshape factors cleanly (same prefix products and equal sizes); else None."""
+    mapping: Dict[int, Any] = {}
+    # greedy simultaneous walk
+    oi = ni = 0
+    oprod = nprod = 1
+    while ni < len(new):
+        if oi < len(old) and old[oi] == new[ni] and oprod == nprod:
+            mapping[ni] = oi
+            oprod *= old[oi]
+            nprod *= new[ni]
+            oi += 1
+            ni += 1
+        else:
+            mapping[ni] = None
+            nprod *= new[ni]
+            ni += 1
+            while oi < len(old) and oprod < nprod:
+                oprod *= old[oi]
+                oi += 1
+    return mapping
+
+
+# ---------------------------------------------------------------------------
+# sum-push-up rewriting (demand-driven evaluator)
+# ---------------------------------------------------------------------------
+
+
+class SumPushStats:
+    def __init__(self):
+        self.pushed: List[str] = []
+        self.materialized: List[str] = []
+
+
+def collapse_sum_by_rewrite(fn: Callable, *example_args) -> Callable:
+    """Rewrite ``sum(fn(*args)[-1], axis=0)`` by hoisting the sum up the graph.
+
+    ``fn`` must return ``(aux, stacked)`` where ``stacked`` carries the
+    direction axis 0 to be collapsed (``aux`` may be any pytree, computed
+    as-is — shared subexpressions are evaluated once). Returns a function
+    ``rewritten(*args) -> (aux, summed)`` whose jaxpr contains the collapsed
+    graph; attach ``.stats`` after first call for push/materialize counts.
+    """
+    closed = jax.make_jaxpr(lambda *a: fn(*a))(*example_args)
+    out_tree = jax.tree_util.tree_structure(jax.eval_shape(fn, *example_args))
+    jaxpr = closed.jaxpr
+    consts = closed.consts
+    repl = replication_analysis(jaxpr, len(consts))
+    producer = {}
+    for eqn in jaxpr.eqns:
+        for v in eqn.outvars:
+            producer[v] = eqn
+
+    stats = SumPushStats()
+
+    def rewritten(*args):
+        env: Dict[Any, Any] = {}
+        for cv, c in zip(jaxpr.constvars, consts):
+            env[cv] = c
+        flat_args = list(args)
+        for iv, a in zip(jaxpr.invars, flat_args):
+            env[iv] = a
+
+        def value(v):
+            if _is_literal(v):
+                return v.val
+            if v in env:
+                return env[v]
+            eqn = producer[v]
+            ins = [value(iv) for iv in eqn.invars]
+            out = eqn.primitive.bind(*ins, **eqn.params)
+            outs = out if eqn.primitive.multiple_results else [out]
+            for ov, o in zip(eqn.outvars, outs):
+                env[ov] = o
+            return env[v]
+
+        sums: Dict[Tuple[Any, int], Any] = {}
+
+        def materialize(v, d):
+            stats.materialized.append(producer[v].primitive.name if v in producer else "input")
+            return jnp.sum(value(v), axis=d)
+
+        def ssum(v, d):
+            """Value of sum(v, axis=d), pushing the sum up where linear."""
+            key = (v, d)
+            if key in sums:
+                return sums[key]
+            if _is_literal(v):
+                out = v.val * producer_shape(v, d)
+                sums[key] = out
+                return out
+            if v not in producer:  # jaxpr input or const
+                out = jnp.sum(value(v), axis=d)
+                sums[key] = out
+                return out
+            eqn = producer[v]
+            name = eqn.primitive.name
+            out = _push(eqn, v, d)
+            sums[key] = out
+            return out
+
+        def producer_shape(v, d):
+            return np.shape(v.val)[d] if _is_literal(v) else v.aval.shape[d]
+
+        def slice0(val, d):
+            return lax.index_in_dim(val, 0, axis=d, keepdims=False)
+
+        def _operand_sum_or_scale(v_op, d, out_shape):
+            """sum over axis d of an operand that may be a lower-rank literal."""
+            nd_out = len(out_shape)
+            nd = len(np.shape(v_op.val)) if _is_literal(v_op) else _aval_ndim(v_op)
+            if nd == nd_out:
+                return ssum(v_op, d)
+            # scalar / lower-rank operand broadcast along d: sum = size * value
+            return value(v_op) * out_shape[d]
+
+        def _push(eqn, v, d):
+            name = eqn.primitive.name
+            out_shape = v.aval.shape
+
+            if name in ("add", "sub"):
+                a, b = eqn.invars
+                sa = _operand_sum_or_scale(a, d, out_shape)
+                sb = _operand_sum_or_scale(b, d, out_shape)
+                stats.pushed.append(name)
+                return sa + sb if name == "add" else sa - sb
+
+            if name == "neg":
+                stats.pushed.append(name)
+                return -ssum(eqn.invars[0], d)
+
+            if name == "convert_element_type":
+                if not jnp.issubdtype(eqn.params["new_dtype"], jnp.inexact):
+                    return materialize(v, d)
+                stats.pushed.append(name)
+                return lax.convert_element_type(
+                    ssum(eqn.invars[0], d), eqn.params["new_dtype"]
+                )
+
+            if name == "mul":
+                a, b = eqn.invars
+                ra = d in (repl.get(a, _NONE) if not _is_literal(a) else _ALL(len(np.shape(a.val))))
+                rb = d in (repl.get(b, _NONE) if not _is_literal(b) else _ALL(len(np.shape(b.val))))
+                nd_out = len(out_shape)
+
+                def factor(v_op):
+                    val = value(v_op)
+                    if np.ndim(val) == nd_out:
+                        return slice0(val, d)
+                    return val  # scalar broadcast
+
+                if ra:
+                    stats.pushed.append("mul")
+                    return factor(a) * _operand_sum_or_scale(b, d, out_shape)
+                if rb:
+                    stats.pushed.append("mul")
+                    return _operand_sum_or_scale(a, d, out_shape) * factor(b)
+                return materialize(v, d)
+
+            if name == "div":
+                a, b = eqn.invars
+                rb = d in (repl.get(b, _NONE) if not _is_literal(b) else _ALL(len(np.shape(b.val))))
+                if rb:
+                    stats.pushed.append("div")
+                    den = value(b)
+                    if np.ndim(den) == len(out_shape):
+                        den = slice0(den, d)
+                    return _operand_sum_or_scale(a, d, out_shape) / den
+                return materialize(v, d)
+
+            if name == "broadcast_in_dim":
+                bdims = eqn.params["broadcast_dimensions"]
+                (op,) = eqn.invars
+                in_shape = np.shape(op.val) if _is_literal(op) else op.aval.shape
+                new_shape = tuple(s for j, s in enumerate(out_shape) if j != d)
+                if d not in bdims:
+                    # replicate node: sum == size * broadcast-without-axis
+                    stats.pushed.append("broadcast(replicate)")
+                    nb = tuple(j - (1 if j > d else 0) for j in bdims)
+                    scaled = value(op) * out_shape[d]
+                    return lax.broadcast_in_dim(scaled, new_shape, nb)
+                i = bdims.index(d)
+                if in_shape[i] == 1 and out_shape[d] != 1:
+                    stats.pushed.append("broadcast(expand)")
+                    sq = lax.squeeze(value(op), dimensions=(i,))
+                    nb = tuple(
+                        (j - (1 if j > d else 0))
+                        for k, j in enumerate(bdims)
+                        if k != i
+                    )
+                    return lax.broadcast_in_dim(sq * out_shape[d], new_shape, nb)
+                stats.pushed.append("broadcast(pass)")
+                nb = tuple(
+                    (j - (1 if j > d else 0)) for k, j in enumerate(bdims) if k != i
+                )
+                return lax.broadcast_in_dim(ssum(op, i), new_shape, nb)
+
+            if name == "transpose":
+                perm = eqn.params["permutation"]
+                din = perm[d]
+                stats.pushed.append(name)
+                new_perm = [p - (1 if p > din else 0) for j, p in enumerate(perm) if j != d]
+                return lax.transpose(ssum(eqn.invars[0], din), tuple(new_perm))
+
+            if name == "reshape":
+                (op,) = eqn.invars
+                mapping = _reshape_axis_map(tuple(op.aval.shape), tuple(out_shape))
+                din = mapping.get(d)
+                if din is None:
+                    return materialize(v, d)
+                stats.pushed.append(name)
+                new_sizes = tuple(s for j, s in enumerate(out_shape) if j != d)
+                return lax.reshape(ssum(op, din), new_sizes)
+
+            if name == "squeeze":
+                dims = eqn.params["dimensions"]
+                keep = [i for i in range(_aval_ndim(eqn.invars[0])) if i not in dims]
+                din = keep[d]
+                stats.pushed.append(name)
+                new_dims = tuple(i - (1 if i > din else 0) for i in dims)
+                return lax.squeeze(ssum(eqn.invars[0], din), dimensions=new_dims)
+
+            if name == "reduce_sum":
+                raxes = eqn.params["axes"]
+                (op,) = eqn.invars
+                keep = [i for i in range(_aval_ndim(op)) if i not in raxes]
+                din = keep[d]
+                stats.pushed.append(name)
+                new_axes = tuple(i - (1 if i > din else 0) for i in raxes)
+                return lax.reduce_sum_p.bind(
+                    ssum(op, din), axes=new_axes, out_sharding=eqn.params.get("out_sharding")
+                )
+
+            if name == "select_n":
+                pred = eqn.invars[0]
+                pr = d in repl.get(pred, _NONE) or _is_literal(pred)
+                if not pr:
+                    return materialize(v, d)
+                stats.pushed.append(name)
+                pval = value(pred)
+                if np.ndim(pval) == len(out_shape):
+                    pval = slice0(pval, d)
+                cases = [
+                    _operand_sum_or_scale(c, d, out_shape) for c in eqn.invars[1:]
+                ]
+                return lax.select_n(pval, *cases)
+
+            if name == "slice":
+                starts = eqn.params["start_indices"]
+                limits = eqn.params["limit_indices"]
+                strides = eqn.params["strides"] or (1,) * len(starts)
+                op = eqn.invars[0]
+                full = (
+                    starts[d] == 0
+                    and limits[d] == op.aval.shape[d]
+                    and strides[d] == 1
+                )
+                if not full:
+                    return materialize(v, d)
+                stats.pushed.append(name)
+                rm = lambda t: tuple(x for j, x in enumerate(t) if j != d)
+                return lax.slice(ssum(op, d), rm(starts), rm(limits), rm(strides))
+
+            if name == "dot_general":
+                return _push_dot(eqn, v, d)
+
+            return materialize(v, d)
+
+        def _push_dot(eqn, v, d):
+            (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+            a, b = eqn.invars
+            nla, nlb = _aval_ndim(a), _aval_ndim(b)
+            lhs_free = [i for i in range(nla) if i not in lc and i not in lb]
+            rhs_free = [i for i in range(nlb) if i not in rc and i not in rb]
+            nbatch = len(lb)
+
+            def adj(dims, removed):
+                return tuple(x - (1 if x > removed else 0) for x in dims)
+
+            if d < nbatch:
+                la_, rb_ = lb[d], rb[d]
+                ra = la_ in repl.get(a, _NONE)
+                rbp = rb_ in repl.get(b, _NONE)
+                if rbp:
+                    stats.pushed.append("dot_general(batch)")
+                    new_lhs = ssum(a, la_)
+                    new_rhs = lax.index_in_dim(value(b), 0, axis=rb_, keepdims=False)
+                    dn = (
+                        (adj(lc, la_), adj(rc, rb_)),
+                        (
+                            adj(tuple(x for x in lb if x != la_), la_),
+                            adj(tuple(x for x in rb if x != rb_), rb_),
+                        ),
+                    )
+                    return lax.dot_general(
+                        new_lhs, new_rhs, dn,
+                        precision=eqn.params.get("precision"),
+                        preferred_element_type=eqn.params.get("preferred_element_type"),
+                    )
+                if ra:
+                    stats.pushed.append("dot_general(batch)")
+                    new_lhs = lax.index_in_dim(value(a), 0, axis=la_, keepdims=False)
+                    new_rhs = ssum(b, rb_)
+                    dn = (
+                        (adj(lc, la_), adj(rc, rb_)),
+                        (
+                            adj(tuple(x for x in lb if x != la_), la_),
+                            adj(tuple(x for x in rb if x != rb_), rb_),
+                        ),
+                    )
+                    return lax.dot_general(
+                        new_lhs, new_rhs, dn,
+                        precision=eqn.params.get("precision"),
+                        preferred_element_type=eqn.params.get("preferred_element_type"),
+                    )
+                return materialize(v, d)
+
+            pos = d - nbatch
+            if pos < len(lhs_free):
+                din = lhs_free[pos]
+                stats.pushed.append("dot_general(lhs-free)")
+                new_lhs = ssum(a, din)
+                dn = ((adj(lc, din), rc), (adj(lb, din), rb))
+                return lax.dot_general(
+                    new_lhs, value(b), dn,
+                    precision=eqn.params.get("precision"),
+                    preferred_element_type=eqn.params.get("preferred_element_type"),
+                )
+            din = rhs_free[pos - len(lhs_free)]
+            stats.pushed.append("dot_general(rhs-free)")
+            new_rhs = ssum(b, din)
+            dn = ((lc, adj(rc, din)), (lb, adj(rb, din)))
+            return lax.dot_general(
+                value(a), new_rhs, dn,
+                precision=eqn.params.get("precision"),
+                preferred_element_type=eqn.params.get("preferred_element_type"),
+            )
+
+        # outputs: all but last as-is, last collapsed
+        flat_outs = []
+        for ov in jaxpr.outvars[:-1]:
+            flat_outs.append(value(ov))
+        flat_outs.append(ssum(jaxpr.outvars[-1], 0))
+        return jax.tree_util.tree_unflatten(out_tree, flat_outs)
+
+    rewritten.stats = stats
+    return rewritten
+
+
+def hlo_flops(fn: Callable, *args) -> float:
+    """Compiled-HLO FLOP estimate (XLA cost analysis) of ``fn``."""
+    compiled = jax.jit(fn).lower(*args).compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return float(ca.get("flops", 0.0))

@@ -1,0 +1,1 @@
+from .synthetic import collocation_batch, token_batch  # noqa: F401

@@ -1,0 +1,246 @@
+"""Logical-axis sharding rules (t5x-style) for the (pod, data, model) mesh.
+
+Models annotate activations with *logical* axis names via :func:`lshard`;
+parameters get specs from :func:`param_spec` by path. The mapping from logical
+names to physical mesh axes lives here, so switching the parallelism layout is
+a one-table change (used by the perf hillclimb in EXPERIMENTS.md section Perf).
+
+Conventions (single-pod mesh ('data','model') = (16,16); multi-pod adds 'pod'):
+
+  batch            -> ('pod', 'data')   data parallel over pods x data axis
+  heads/mlp/vocab/experts -> 'model'    tensor / expert parallel
+  fsdp             -> ('pod', 'data')   parameter sharding axis (FSDP)
+  seq              -> None by default; 'data' for sequence-parallel recurrent
+                      archs on long_500k (they are batch=1)
+
+No-ops when no mesh has been activated (single-device tests/benches).
+"""
+
+from __future__ import annotations
+
+import re
+import threading
+from contextlib import contextmanager
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    # residual-stream sequence axis at scan-block boundaries: mapping this to
+    # 'model' enables Megatron-style sequence parallelism — saved activation
+    # carries shrink by the TP degree at the cost of an all-gather/reduce-
+    # scatter pair per layer (used for the 100B+ train cells; see section Perf)
+    "residual_seq": None,
+    "kv_seq": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": None,
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_capacity": None,
+    "expert_mlp": None,
+    "fsdp": ("pod", "data"),
+    "state": "model",
+}
+
+
+def _rules():
+    return getattr(_state, "rules", None)
+
+
+def _mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextmanager
+def activate(mesh: Mesh, rules: Optional[dict] = None):
+    """Enable sharding annotations for code run inside this context."""
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    # drop mesh axes that don't exist on this mesh (e.g. 'pod' on single-pod)
+    axes = set(mesh.axis_names)
+
+    def filt(v):
+        if v is None:
+            return None
+        if isinstance(v, str):
+            return v if v in axes else None
+        got = tuple(a for a in v if a in axes)
+        return got if got else None
+
+    merged = {k: filt(v) for k, v in merged.items()}
+    prev_rules, prev_mesh = _rules(), _mesh()
+    _state.rules, _state.mesh = merged, mesh
+    try:
+        yield
+    finally:
+        _state.rules, _state.mesh = prev_rules, prev_mesh
+
+
+def logical_spec(names: Tuple[Optional[str], ...]) -> P:
+    rules = _rules() or DEFAULT_RULES
+    return P(*[rules.get(n) if n else None for n in names])
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def divisible_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop mesh axes from dims they don't divide (uneven shards unsupported)."""
+    out = []
+    for dim, axes in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if axes is None:
+            out.append(None)
+        elif dim % _axis_size(mesh, axes) == 0:
+            out.append(axes)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def lshard(x, names: Tuple[Optional[str], ...]):
+    """Constrain activation sharding by logical axis names (no-op w/o mesh)."""
+    mesh = _mesh()
+    if mesh is None:
+        return x
+    spec = divisible_spec(logical_spec(names), x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# parameter sharding by path
+# ---------------------------------------------------------------------------
+
+# (regex on '/'-joined param path, logical axes per dim). First match wins.
+# FSDP shards the non-TP dimension of every matmul weight over (pod, data);
+# TP shards heads/mlp/experts over 'model'.
+PARAM_RULES = [
+    (r"embed/embedding", ("vocab", "fsdp")),
+    (r"(lm_head|output)/kernel", ("fsdp", "vocab")),
+    (r"(wq|wk|wv|q_proj|k_proj|v_proj)/kernel", ("fsdp", "heads", "head_dim")),
+    (r"(wq|wk|wv|q_proj|k_proj|v_proj)/bias", ("heads", "head_dim")),
+    (r"(wo|o_proj)/kernel", ("heads", "head_dim", "fsdp")),
+    (r"(wo|o_proj)/bias", ("embed",)),
+    (r"(w_in|w_gate|wi|up_proj|gate_proj)/kernel", ("fsdp", "mlp")),
+    (r"(w_out|wo_mlp|down_proj)/kernel", ("mlp", "fsdp")),
+    (r"experts/(w_in|w_gate)", ("experts", "fsdp", "expert_mlp")),
+    (r"experts/w_out", ("experts", "expert_mlp", "fsdp")),
+    (r"router/kernel", ("fsdp", "experts")),
+    # recurrent (RG-LRU) blocks: width dim is TP-sharded end to end
+    (r"(x_branch|gate_branch|a_gate|i_gate)/kernel", ("fsdp", "mlp")),
+    (r"(a_gate|i_gate)/bias", ("mlp",)),
+    (r"rec/out/kernel", ("mlp", "fsdp")),
+    (r"a_param", ("mlp",)),
+    (r"conv_w", (None, "mlp")),
+    (r"conv_b", ("mlp",)),
+    (r"(norm|scale|ln|layernorm)", None),  # small vectors: replicated
+    (r"(gate_w|gate_b)", None),
+    (r"bias", None),
+]
+
+
+def param_logical_axes(path: str, ndim: int):
+    for pat, axes in PARAM_RULES:
+        if re.search(pat, path):
+            if axes is None:
+                return (None,) * ndim
+            if len(axes) == ndim:
+                return axes
+            if len(axes) == ndim - 1:  # stacked-over-layers leading axis
+                return (None,) + tuple(axes)
+            if len(axes) < ndim:
+                return (None,) * (ndim - len(axes)) + tuple(axes)
+            return tuple(axes)[-ndim:] if ndim else ()
+    return (None,) * ndim
+
+
+def param_spec(path: str, ndim: int) -> P:
+    return logical_spec(param_logical_axes(path, ndim))
+
+
+def param_shardings(mesh: Mesh, params, rules: Optional[dict] = None):
+    """NamedSharding pytree for a parameter pytree (paths joined with '/')."""
+    flat, tree = jax.tree_util.tree_flatten_with_path(params)
+
+    def path_str(kp):
+        out = []
+        for k in kp:
+            if hasattr(k, "key"):
+                out.append(str(k.key))
+            elif hasattr(k, "idx"):
+                out.append(str(k.idx))
+            else:
+                out.append(str(k))
+        return "/".join(out)
+
+    with activate(mesh, rules):
+        specs = [
+            NamedSharding(
+                mesh,
+                divisible_spec(
+                    param_spec(path_str(kp), getattr(v, "ndim", 0)),
+                    getattr(v, "shape", ()),
+                    mesh,
+                ),
+            )
+            for kp, v in flat
+        ]
+    return jax.tree_util.tree_unflatten(tree, specs)
+
+
+def auto_spec(shape, mesh: Mesh, batch_dim: Optional[int] = 1,
+              batch_axes=("pod", "data"), model_axis="model") -> P:
+    """Heuristic sharding for state pytrees (KV caches, recurrent states):
+    shard `batch_dim` over the data axes if divisible, then the largest
+    remaining dim over the model axis."""
+    axes = set(mesh.axis_names)
+    batch_axes = tuple(a for a in batch_axes if a in axes)
+    spec: list = [None] * len(shape)
+    if (
+        batch_dim is not None
+        and batch_dim < len(shape)
+        and batch_axes
+        and shape[batch_dim] % _axis_size(mesh, batch_axes) == 0
+        and shape[batch_dim] >= _axis_size(mesh, batch_axes)
+    ):
+        spec[batch_dim] = batch_axes
+    if model_axis in axes:
+        m = mesh.shape[model_axis]
+        cands = [
+            (shape[i], i)
+            for i in range(len(shape))
+            if spec[i] is None and shape[i] % m == 0 and shape[i] >= m
+        ]
+        if cands:
+            _, i = max(cands)
+            spec[i] = model_axis
+    return P(*spec)
+
+
+def state_shardings(mesh: Mesh, state, batch_shardable: bool = True):
+    def one(leaf):
+        shape = getattr(leaf, "shape", ())
+        if len(shape) <= 1:
+            return NamedSharding(mesh, P())
+        return NamedSharding(
+            mesh, auto_spec(shape, mesh, batch_dim=1 if batch_shardable else None)
+        )
+
+    return jax.tree.map(one, state)

@@ -1,0 +1,122 @@
+"""Pallas TPU kernel: FlashAttention-2-style streaming-softmax attention
+(forward) with GQA and causal/sliding-window masking.
+
+Grid: (B, Hq, Sq/bQ, Skv/bK) — the KV axis innermost. Online-softmax state
+(m, l, acc) lives in VMEM scratch and survives across KV blocks; only the
+(bQ, dh) output tile is written to HBM. Q tiles are revisited per KV block
+from VMEM. Fully-masked KV blocks (beyond the causal frontier or outside the
+sliding window) skip their MXU work via ``pl.when``.
+
+The backward pass reuses the pure-JAX chunked implementation
+(models/layers.py) through a custom VJP in ops.py — same O(S) memory.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+except Exception:  # pragma: no cover
+    pltpu = None
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
+            nk: int, block_q: int, block_k: int, causal: bool, window, scale,
+            kv_len: int):
+    i = pl.program_id(2)  # q block
+    j = pl.program_id(3)  # kv block
+
+    @pl.when(j == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q_start = i * block_q
+    k_start = j * block_k
+    # block-level skip: does any (q, k) pair in this tile pass the mask?
+    live = k_start < kv_len
+    if causal:
+        live = live & (k_start <= q_start + block_q - 1)
+    if window is not None:
+        live = live & (q_start - (k_start + block_k - 1) < window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, :, 0, :]
+        k = k_ref[0, :, 0, :]
+        v = v_ref[0, :, 0, :]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = k_pos < kv_len
+        if causal:
+            mask = mask & (k_pos <= q_pos)
+        if window is not None:
+            mask = mask & (q_pos - k_pos < window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev, l_prev = m_s[...], l_s[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_s[...] = l_prev * corr + p.sum(axis=-1)
+        acc_s[...] = acc_s[...] * corr[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_s[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_s[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_s[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal=True, window=None,
+                        block_q=128, block_k=128, interpret=False,
+                        kv_len=None):
+    """q: (B, Sq, Hq, dh); k, v: (B, Skv, Hkv, dh). Hq = G * Hkv."""
+    B, Sq, Hq, dh = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    assert Sq % block_q == 0 and Skv % block_k == 0
+    grid = (B, Hq, Sq // block_q, Skv // block_k)
+    scale = 1.0 / math.sqrt(dh)
+
+    kernel = functools.partial(
+        _kernel, nk=grid[3], block_q=block_q, block_k=block_k,
+        causal=causal, window=window, scale=scale,
+        kv_len=kv_len if kv_len is not None else Skv,
+    )
+
+    def scratch(shape):
+        if pltpu is not None:
+            return pltpu.VMEM(shape, jnp.float32)
+        return pl.MemorySpace.ANY(shape, jnp.float32)  # pragma: no cover
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, dh), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, block_k, 1, dh), lambda b, h, i, j: (b, j, h // G, 0)),
+            pl.BlockSpec((1, block_k, 1, dh), lambda b, h, i, j: (b, j, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, dh), lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            scratch((block_q,)),
+            scratch((block_q,)),
+            scratch((block_q, dh)),
+        ],
+        interpret=interpret,
+    )(q, k, v)

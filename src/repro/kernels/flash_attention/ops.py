@@ -1,0 +1,61 @@
+"""Jit'd wrapper for the flash-attention Pallas kernel: padding, interpret
+switch, and a custom VJP whose backward is the O(S)-memory pure-JAX chunked
+implementation (models/layers.py) — the kernel accelerates the forward."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_fwd
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_seq(x, mult):
+    pad = (-x.shape[1]) % mult
+    if pad == 0:
+        return x
+    return jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _fa(q, k, v, causal, window, block_q, block_k):
+    interpret = _on_cpu()
+    Sq, Skv = q.shape[1], k.shape[1]
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    qp, kp, vp = _pad_seq(q, bq), _pad_seq(k, bk), _pad_seq(v, bk)
+    out = flash_attention_fwd(qp, kp, vp, causal=causal, window=window,
+                              block_q=bq, block_k=bk, interpret=interpret,
+                              kv_len=Skv)
+    return out[:, :Sq]
+
+
+def _fa_fwd(q, k, v, causal, window, block_q, block_k):
+    return _fa(q, k, v, causal, window, block_q, block_k), (q, k, v)
+
+
+def _fa_bwd(causal, window, block_q, block_k, res, dout):
+    from repro.models.layers import flash_attention as fa_jax
+
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: fa_jax(q_, k_, v_, causal=causal, window=window,
+                                  chunk=block_k),
+        q, k, v,
+    )
+    return vjp(dout)
+
+
+_fa.defvjp(_fa_fwd, _fa_bwd)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None,
+                    block_q=128, block_k=128):
+    """Drop-in for models.layers.flash_attention with a Pallas forward."""
+    return _fa(q, k, v, causal, window, block_q, block_k)

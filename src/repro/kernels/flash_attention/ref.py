@@ -1,0 +1,3 @@
+"""Oracle for the flash-attention kernel: naive softmax attention."""
+
+from repro.models.layers import attention_reference  # noqa: F401

@@ -1,0 +1,126 @@
+"""Pallas TPU kernel: fused collapsed-2-jet MLP layer (the forward-Laplacian
+hot loop, paper sections 3.1/3.2).
+
+One layer of collapsed Taylor mode for `tanh(x @ W + b)` propagates
+
+    z0 = h0 W + b          t0  = tanh(z0)
+    Z1 = H1 W  (R dirs)    T1  = phi'(z0) * Z1
+    z2 = h2s W             t2s = phi'(z0) * z2 + phi''(z0) * sum_r Z1_r^2
+
+Unfused, XLA materializes Z1 and Z1^2 (both (R, B, D)) in HBM — the dominant
+traffic of the whole operator. This kernel keeps the direction reduction in
+VMEM: the grid is (B/bB, D/bD, R/bR) with the R axis innermost; the running
+sum of Z1^2 lives in a VMEM scratch accumulator, phi'(z0)/phi''(z0) are
+computed once at r-block 0 and reused from scratch, and only t0, T1, t2s ever
+reach HBM. Three MXU matmuls (h0 W, H1 W, h2s W) share the same W tile.
+
+MXU alignment: all block dims are multiples of (8, 128) for f32; callers pad
+via ops.py. Validated against ref.py in interpret mode for shape/dtype sweeps
+(tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU-specific memory spaces; interpret mode works without them
+    from jax.experimental.pallas import tpu as pltpu
+
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    pltpu = None
+    _VMEM = None
+
+
+def _kernel(h0_ref, h1_ref, h2_ref, w_ref, b_ref,
+            t0_ref, t1_ref, t2_ref,
+            d1_s, d2_s, acc_s, *, nk: int, activation: str):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _first():
+        z0 = jnp.dot(h0_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+        z0 = z0 + b_ref[...]
+        z2 = jnp.dot(h2_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+        if activation == "tanh":
+            t0 = jnp.tanh(z0)
+            d1 = 1.0 - t0 * t0
+            d2 = -2.0 * t0 * d1
+        else:  # linear output layer
+            t0 = z0
+            d1 = jnp.ones_like(z0)
+            d2 = jnp.zeros_like(z0)
+        t0_ref[...] = t0.astype(t0_ref.dtype)
+        d1_s[...] = d1
+        d2_s[...] = d2
+        acc_s[...] = d1 * z2
+
+    d1 = d1_s[...]
+    # (bR, bB, Din) @ (Din, bD) -> (bR, bB, bD)
+    z1 = jax.lax.dot_general(
+        h1_ref[...], w_ref[...], (((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    t1_ref[...] = (d1[None] * z1).astype(t1_ref.dtype)
+    acc_s[...] += d2_s[...] * jnp.sum(z1 * z1, axis=0)
+
+    @pl.when(k == nk - 1)
+    def _last():
+        t2_ref[...] = acc_s[...].astype(t2_ref.dtype)
+
+
+def jet_mlp_layer(h0, h1, h2s, w, b, *, activation: str = "tanh",
+                  block_b: int = 128, block_d: int = 128, block_r: int = 8,
+                  interpret: bool = False):
+    """One fused collapsed-jet layer.
+
+    h0: (B, Din); h1: (R, B, Din); h2s: (B, Din); w: (Din, Dout); b: (Dout,).
+    Returns (t0 (B, Dout), t1 (R, B, Dout), t2s (B, Dout)).
+    Shapes must be pre-padded to the block sizes (ops.py handles padding).
+    """
+    B, Din = h0.shape
+    R = h1.shape[0]
+    Dout = w.shape[1]
+    assert B % block_b == 0 and Dout % block_d == 0 and R % block_r == 0
+    grid = (B // block_b, Dout // block_d, R // block_r)
+    nk = grid[2]
+
+    kernel = functools.partial(_kernel, nk=nk, activation=activation)
+    out_shapes = (
+        jax.ShapeDtypeStruct((B, Dout), h0.dtype),
+        jax.ShapeDtypeStruct((R, B, Dout), h0.dtype),
+        jax.ShapeDtypeStruct((B, Dout), h0.dtype),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, Din), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((block_r, block_b, Din), lambda i, j, k: (k, i, 0)),
+            pl.BlockSpec((block_b, Din), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((Din, block_d), lambda i, j, k: (0, j)),
+            pl.BlockSpec((block_d,), lambda i, j, k: (j,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block_b, block_d), lambda i, j, k: (i, j)),
+            pl.BlockSpec((block_r, block_b, block_d), lambda i, j, k: (k, i, j)),
+            pl.BlockSpec((block_b, block_d), lambda i, j, k: (i, j)),
+        ),
+        out_shape=out_shapes,
+        scratch_shapes=[
+            _scratch((block_b, block_d)),
+            _scratch((block_b, block_d)),
+            _scratch((block_b, block_d)),
+        ],
+        interpret=interpret,
+    )(h0, h1, h2s, w, b)
+
+
+def _scratch(shape):
+    if pltpu is not None:
+        return pltpu.VMEM(shape, jnp.float32)
+    return pl.MemorySpace.ANY(shape, jnp.float32)  # pragma: no cover

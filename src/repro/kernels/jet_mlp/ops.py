@@ -1,0 +1,73 @@
+"""Jit'd wrappers for the fused collapsed-jet MLP kernel: padding to MXU
+block shapes, layer chaining (the full forward-Laplacian network), and the
+interpret-mode switch for CPU validation."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .jet_mlp import jet_mlp_layer
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_to(x, axis, mult):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def jet_mlp_layer_op(h0, h1, h2s, w, b, *, activation="tanh",
+                     block_b=128, block_d=128, block_r=8, interpret=None):
+    """Padding-safe fused layer. Shapes: h0 (B, Din), h1 (R, B, Din),
+    h2s (B, Din), w (Din, Dout), b (Dout,)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    B, Din = h0.shape
+    R = h1.shape[0]
+    Dout = w.shape[1]
+    block_b = min(block_b, max(8, B))
+    block_d = min(block_d, max(128, 128))
+    block_r = min(block_r, R)
+
+    h0p = _pad_to(h0, 0, block_b)
+    h1p = _pad_to(_pad_to(h1, 1, block_b), 0, block_r)
+    h2p = _pad_to(h2s, 0, block_b)
+    wp = _pad_to(w, 1, block_d)
+    bp = _pad_to(b, 0, block_d)
+
+    t0, t1, t2 = jet_mlp_layer(
+        h0p, h1p, h2p, wp, bp, activation=activation,
+        block_b=block_b, block_d=block_d, block_r=block_r, interpret=interpret,
+    )
+    return t0[:B, :Dout], t1[:R, :B, :Dout], t2[:B, :Dout]
+
+
+@partial(jax.jit, static_argnames=("sizes", "interpret"))
+def forward_laplacian_mlp(params, x, sizes, interpret=None):
+    """u(x) and Delta u(x) for the paper's tanh MLP, every layer fused.
+
+    This is the collapsed Taylor mode (K=2, basis directions) of section 3.2
+    executed as a chain of Pallas kernels. x: (B, D) -> ((B,), (B,)).
+    """
+    B, D = x.shape
+    h0 = x
+    h1 = jnp.broadcast_to(jnp.eye(D, dtype=x.dtype)[:, None, :], (D, B, D))
+    h2 = jnp.zeros_like(x)
+    n = len(sizes) - 1
+    for i in range(n):
+        act = "tanh" if i < n - 1 else "linear"
+        w = params[f"dense_{i}"]["kernel"]
+        b = params[f"dense_{i}"]["bias"]
+        h0, h1, h2 = jet_mlp_layer_op(h0, h1, h2, w, b, activation=act,
+                                      interpret=interpret)
+    return h0[..., 0], h2[..., 0]

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the fused collapsed-jet MLP layer kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def jet_mlp_layer_ref(h0, h1, h2s, w, b, activation: str = "tanh"):
+    """Reference semantics of kernels.jet_mlp.jet_mlp_layer (unfused)."""
+    z0 = h0 @ w + b
+    z1 = jnp.einsum("rbi,io->rbo", h1, w)
+    z2 = h2s @ w
+    if activation == "tanh":
+        t0 = jnp.tanh(z0)
+        d1 = 1.0 - t0 * t0
+        d2 = -2.0 * t0 * d1
+    elif activation == "linear":
+        t0, d1, d2 = z0, jnp.ones_like(z0), jnp.zeros_like(z0)
+    else:
+        raise ValueError(activation)
+    t1 = d1[None] * z1
+    t2s = d1 * z2 + d2 * jnp.sum(z1 * z1, axis=0)
+    return t0, t1, t2s
+
+
+def collapsed_laplacian_mlp_ref(params, x, sizes):
+    """Forward Laplacian of the paper's tanh MLP via per-layer reference
+    collapsed jets: returns (u(x), Delta u(x))."""
+    B, D = x.shape
+    h0 = x
+    h1 = jnp.broadcast_to(jnp.eye(D, dtype=x.dtype)[:, None, :], (D, B, D))
+    h2 = jnp.zeros_like(x)
+    n = len(sizes) - 1
+    for i in range(n):
+        act = "tanh" if i < n - 1 else "linear"
+        w = params[f"dense_{i}"]["kernel"]
+        b = params[f"dense_{i}"]["bias"]
+        h0, h1, h2 = jet_mlp_layer_ref(h0, h1, h2, w, b, act)
+    return h0[..., 0], h2[..., 0]

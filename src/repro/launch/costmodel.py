@@ -1,0 +1,252 @@
+"""Jaxpr-level cost model: scan-exact FLOP/byte counting.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop (scan) bodies ONCE, which
+under-reports scan-over-layers models by orders of magnitude (verified in
+EXPERIMENTS.md section Dry-run). This walker counts the *traced* jaxpr with
+correct scan multipliers. Conventions:
+
+* flops: dot_general = 2 * |out| * K_contract; cheap elementwise = |out|;
+  transcendentals = 10 * |out|; reductions/cumulatives = |in|.
+* bytes (perfect-fusion HBM-traffic floor): traffic is counted ONLY at
+  fusion boundaries — matmul operands/results and data-movement ops
+  (gather/scatter/sort/concat); elementwise, transcendental and reduction ops
+  are assumed fused into their producers (on TPU the softmax chain of a
+  flash-attention chunk lives entirely in VMEM). Layout ops are free.
+  Weights used inside a scan body count once per iteration (HBM re-read).
+  This makes t_memory a lower bound and t_compute exact per jaxpr semantics.
+* scan multiplies its body by ``length``; cond takes the max branch; grad-of-
+  remat recompute appears explicitly in the jaxpr, so remat costs are exact.
+
+Counts are GLOBAL (pre-partitioning); divide by device count for per-chip.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+TRANSCENDENTAL = {
+    "exp", "log", "log1p", "expm1", "tanh", "logistic", "sin", "cos", "tan",
+    "erf", "erfc", "erf_inv", "rsqrt", "sqrt", "cbrt", "pow", "exp2",
+    "atan2", "digamma", "lgamma",
+}
+CHEAP = {
+    "add", "sub", "mul", "neg", "max", "min", "abs", "sign", "floor", "ceil",
+    "round", "is_finite", "and", "or", "not", "xor", "eq", "ne", "lt", "le",
+    "gt", "ge", "select_n", "clamp", "convert_element_type", "copy",
+    "integer_pow", "square", "shift_left", "shift_right_logical",
+    "shift_right_arithmetic", "rem", "nextafter", "real", "imag", "stop_gradient",
+}
+DIV = {"div"}
+FREE = {
+    "reshape", "broadcast_in_dim", "transpose", "squeeze", "expand_dims",
+    "slice", "rev", "iota", "create_token", "constant", "sharding_constraint",
+    "copy_p", "bitcast_convert_type", "split",
+}
+DATA = {
+    "gather", "dynamic_slice", "dynamic_update_slice", "scatter",
+    "scatter-add", "scatter_add", "concatenate", "pad", "top_k", "cumsum",
+    "cummax", "cummin", "cumprod", "cumlogsumexp", "argmax", "argmin",
+}
+REDUCE = {"reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+          "reduce_and", "reduce_or"}
+
+
+def _size(aval) -> int:
+    return math.prod(aval.shape) if aval.shape else 1
+
+
+def _bytes(aval) -> int:
+    return _size(aval) * np.dtype(aval.dtype).itemsize
+
+
+class Cost:
+    __slots__ = ("flops", "bytes", "transcendentals")
+
+    def __init__(self, flops=0.0, byts=0.0, transcendentals=0.0):
+        self.flops, self.bytes, self.transcendentals = flops, byts, transcendentals
+
+    def __iadd__(self, o):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.transcendentals += o.transcendentals
+        return self
+
+    def scaled(self, k):
+        return Cost(self.flops * k, self.bytes * k, self.transcendentals * k)
+
+    def as_dict(self):
+        return {"flops": self.flops, "bytes": self.bytes,
+                "transcendentals": self.transcendentals}
+
+
+def _eqn_cost(eqn) -> Cost:
+    name = eqn.primitive.name
+    outs = [v.aval for v in eqn.outvars]
+    ins = [v.aval for v in eqn.invars]
+    out_b = sum(_bytes(a) for a in outs)
+    out_n = sum(_size(a) for a in outs)
+
+    if name == "dot_general":
+        (lc, rc), _ = eqn.params["dimension_numbers"]
+        k = math.prod(ins[0].shape[d] for d in lc) if lc else 1
+        flops = 2.0 * _size(outs[0]) * k
+        return Cost(flops, sum(_bytes(a) for a in ins) + out_b)
+    if name in TRANSCENDENTAL:
+        return Cost(10.0 * out_n, 0.0, out_n)
+    if name in DIV:
+        return Cost(4.0 * out_n, 0.0)
+    if name in CHEAP:
+        return Cost(1.0 * out_n, 0.0)
+    if name in FREE:
+        return Cost(0.0, 0.0)
+    if name in REDUCE:
+        in_n = sum(_size(a) for a in ins)
+        return Cost(float(in_n), out_b)  # input assumed fused w/ producer
+    if name in DATA or name == "sort":
+        return Cost(float(out_n), sum(_bytes(a) for a in ins) + out_b)
+    # conservative default: elementwise-ish, fused
+    return Cost(float(out_n), 0.0)
+
+
+def jaxpr_cost(jaxpr) -> Cost:
+    total = Cost()
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "scan":
+            body = jaxpr_cost(eqn.params["jaxpr"].jaxpr)
+            total += body.scaled(eqn.params["length"])
+        elif name == "cond":
+            branches = [jaxpr_cost(b.jaxpr) for b in eqn.params["branches"]]
+            total += max(branches, key=lambda c: c.flops)
+        elif name == "while":
+            total += jaxpr_cost(eqn.params["body_jaxpr"].jaxpr)  # 1 trip (unknown)
+        elif name in ("jit", "pjit", "closed_call", "custom_jvp_call",
+                      "custom_vjp_call", "custom_vjp_call_jaxpr"):
+            inner = (eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+                     or eqn.params.get("fun_jaxpr"))
+            total += jaxpr_cost(inner.jaxpr)
+        elif name in ("remat", "checkpoint", "remat2"):
+            inner = eqn.params["jaxpr"]
+            total += jaxpr_cost(inner.jaxpr if hasattr(inner, "jaxpr") else inner)
+        else:
+            total += _eqn_cost(eqn)
+    return total
+
+
+def traced_cost(fn, *abstract_args) -> Dict[str, float]:
+    closed = jax.make_jaxpr(fn)(*abstract_args)
+    return jaxpr_cost(closed.jaxpr).as_dict()
+
+
+# ---------------------------------------------------------------------------
+# while-loop trip-count scaling for collective bytes parsed from HLO text
+# ---------------------------------------------------------------------------
+
+
+def computation_multipliers(hlo_text: str) -> Dict[str, int]:
+    """Map computation name -> execution multiplier (product of enclosing
+    while trip counts), using the loop-bound constant in each while condition.
+    Heuristic but effective on XLA:CPU/SPMD output."""
+    import re
+
+    comps: Dict[str, list] = {}
+    current = None
+    for line in hlo_text.splitlines():
+        m = re.match(r"^\s*(?:ENTRY\s+)?(%?[\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$",
+                     line)
+        if m:
+            current = m.group(1).lstrip("%")
+            comps[current] = []
+            continue
+        if current is not None:
+            comps[current].append(line)
+
+    # find while instructions: condition=%c, body=%b
+    whiles = []  # (parent_comp, cond, body)
+    wre = re.compile(r"while\(.*?\).*condition=(%?[\w\.\-]+).*body=(%?[\w\.\-]+)")
+    for comp, lines in comps.items():
+        for line in lines:
+            m = wre.search(line)
+            if m:
+                whiles.append((comp, m.group(1).lstrip("%"), m.group(2).lstrip("%")))
+
+    def trip_count(cond_name):
+        best = None
+        for line in comps.get(cond_name, []):
+            for c in re.findall(r"constant\((\d+)\)", line):
+                v = int(c)
+                if best is None or v > best:
+                    best = v
+        return best if best and best > 0 else 1
+
+    mult = {name: 1 for name in comps}
+
+    # iterate to fix point (nested whiles)
+    for _ in range(8):
+        changed = False
+        for parent, cond, body in whiles:
+            m = mult.get(parent, 1) * trip_count(cond)
+            for target in (body, cond):
+                if mult.get(target, 1) != m:
+                    mult[target] = m
+                    changed = True
+        # propagate to computations *called* from scaled computations
+        callre = re.compile(
+            r"(?:calls=|to_apply=|condition=|body=|branch_computations=\{)"
+            r"(%?[\w\.\-]+)"
+        )
+        for comp, lines in comps.items():
+            for line in lines:
+                for callee in callre.findall(line):
+                    callee = callee.lstrip("%")
+                    if callee in mult and mult[callee] < mult[comp]:
+                        mult[callee] = mult[comp]
+                        changed = True
+        if not changed:
+            break
+    return mult
+
+
+def collective_bytes_scaled(hlo_text: str):
+    """Collective bytes with while-trip-count scaling; returns per-kind dict."""
+    import re
+
+    kinds = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+    dtype_bytes = {
+        "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+        "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    }
+    shape_re = re.compile(r"(\w+)\[([\d,]*)\]")
+    mult = computation_multipliers(hlo_text)
+
+    per_kind = {k: 0 for k in kinds}
+    counts = {k: 0 for k in kinds}
+    current = None
+    for line in hlo_text.splitlines():
+        m = re.match(r"^\s*(?:ENTRY\s+)?(%?[\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$",
+                     line)
+        if m:
+            current = m.group(1).lstrip("%")
+            continue
+        m = re.search(r"=\s+(\(.*?\)|\S+)\s+(" + "|".join(kinds) + r")[\.\s(]", line)
+        if not m:
+            continue
+        shapes_str, kind = m.group(1), m.group(2)
+        total = 0
+        for dt, dims in shape_re.findall(shapes_str):
+            if dt not in dtype_bytes:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * dtype_bytes[dt]
+        k = mult.get(current, 1)
+        per_kind[kind] += total * k
+        counts[kind] += 1
+    return per_kind, counts

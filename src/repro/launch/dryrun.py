@@ -1,0 +1,377 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh ((16,16) single-pod / (2,16,16) multi-pod),
+  2. abstractly initializes params/opt-state/decode-state (ShapeDtypeStruct,
+     zero allocation),
+  3. lowers + compiles the full train_step (fwd + bwd + AdamW update) or
+     serve_step (one cached decode token) under FSDP+TP shardings,
+  4. records memory_analysis(), cost_analysis(), and the collective bytes
+     parsed from the partitioned HLO,
+  5. writes results/dryrun/<arch>__<shape>__<mesh>.json, consumed by
+     benchmarks/roofline.py and EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results/dryrun]
+"""
+
+import argparse
+import json
+import math
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.distributed import sharding as shd
+from repro.launch import costmodel
+from repro.launch.mesh import make_production_mesh
+from repro.models import get_model
+from repro.train.trainer import TrainConfig, build_train_step, init_opt_state
+
+# long_500k requires sub-quadratic sequence mixing (see DESIGN.md section 5)
+LONG_OK = {"recurrentgemma-9b", "xlstm-350m"}
+# the paper's own model: training cells only (no decode path)
+TRAIN_ONLY = {"mlp-pinn"}
+
+# gradient-accumulation per arch for train_4k: keeps full-remat activation
+# HBM (per-layer carries x layers) within a v5e chip. microbatch B must stay
+# >= the data-axis extent (16 single-pod).
+# tuned to the memory-constrained minimum: FSDP re-gathers weights once per
+# microbatch (x remat recompute), so collective traffic scales linearly with
+# accumulation — see EXPERIMENTS.md section Perf, final iteration.
+GRAD_ACCUM = {
+    "mistral-large-123b": 16,
+    "llama3.2-vision-90b": 16,
+    "arctic-480b": 16,
+    "yi-6b": 4,
+    "recurrentgemma-9b": 4,
+    "llama3.2-3b": 4,
+    "deepseek-moe-16b": 4,
+    "xlstm-350m": 2,
+    "qwen2-1.5b": 2,
+}
+# bf16 Adam moments where fp32 m,v would not fit a single pod
+MOMENT_DTYPE = {"arctic-480b": "bfloat16", "mistral-large-123b": "bfloat16",
+                "llama3.2-vision-90b": "bfloat16"}
+# bf16 gradient-accumulation buffers for the largest models
+ACCUM_DTYPE = {"arctic-480b": "bfloat16"}
+# sequence-parallel residual boundaries (activation carries sharded over the
+# TP axis; costs an AG/RS pair per layer — see EXPERIMENTS.md section Perf)
+SEQ_SHARD = {"mistral-large-123b", "llama3.2-vision-90b", "arctic-480b"}
+
+HW = {  # TPU v5e
+    "peak_flops": 197e12,  # bf16 FLOP/s per chip
+    "hbm_bw": 819e9,  # bytes/s per chip
+    "ici_bw": 50e9,  # bytes/s per link (approx, per the assignment)
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def cells(include_multi=True):
+    for arch in ARCHS:
+        shapes = ["train_4k"] if arch in TRAIN_ONLY else list(SHAPES)
+        for shape in shapes:
+            if shape == "long_500k" and arch not in LONG_OK and arch not in TRAIN_ONLY:
+                yield arch, shape, None  # recorded as a documented skip
+                continue
+            yield arch, shape, False
+            if include_multi:
+                yield arch, shape, True
+
+
+def parse_collective_bytes(hlo_text: str):
+    """Sum result-shape bytes of every collective op in the partitioned HLO."""
+    per_kind = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s+(\(.*?\)|\S+)\s+(" + "|".join(_COLLECTIVES) + r")[\.\s(]",
+                      line)
+        if not m:
+            continue
+        shapes_str, kind = m.group(1), m.group(2)
+        total = 0
+        for dt, dims in _SHAPE_RE.findall(shapes_str):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * _DTYPE_BYTES[dt]
+        per_kind[kind] += total
+        counts[kind] += 1
+    return per_kind, counts
+
+
+def model_flops(cfg, shape_cfg, params_shapes):
+    flat, _ = jax.tree_util.tree_flatten_with_path(params_shapes)
+    n_active = 0
+    for kp, leaf in flat:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        n = math.prod(leaf.shape) if leaf.shape else 1
+        if "embed" in path and "kernel" not in path:
+            continue  # lookup table: no matmul flops (tied lm_head counted below)
+        if "experts/" in path:
+            n = n * cfg.experts_per_token / max(cfg.num_experts, 1)
+        n_active += n
+    if cfg.tied_embeddings or cfg.family in ("audio",):
+        # unembedding matmul reuses the embedding table
+        n_active += cfg.vocab_size * cfg.d_model
+    tokens = shape_cfg.global_batch * shape_cfg.seq_len
+    if shape_cfg.kind == "train":
+        return 6.0 * n_active * tokens, n_active
+    if shape_cfg.kind == "prefill":
+        return 2.0 * n_active * tokens, n_active
+    return 2.0 * n_active * shape_cfg.global_batch, n_active  # decode: 1 tok/seq
+
+
+def total_param_count(params_shapes):
+    return sum(math.prod(l.shape) if l.shape else 1
+               for l in jax.tree_util.tree_leaves(params_shapes))
+
+
+def _loss_fn(model, cfg):
+    if cfg.family == "mlp":
+        return lambda p, b: model.loss(p, b, cfg, method="collapsed")
+    return lambda p, b: model.loss(p, b, cfg)
+
+
+def batch_shardings(specs, mesh, batch_shardable=True):
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def one(leaf):
+        if not leaf.shape or not batch_shardable:
+            return NamedSharding(mesh, P())
+        n = 1
+        for a in data_axes:
+            n *= mesh.shape[a]
+        if leaf.shape[0] % n == 0 and leaf.shape[0] >= n:
+            return NamedSharding(mesh, P(data_axes))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(one, specs)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, compile_=True):
+    cfg = get_config(arch)
+    if cfg.family != "mlp":
+        cfg = cfg.replace(param_dtype="bfloat16")  # deployable numerics
+    shape_cfg = SHAPES[shape_name]
+    if arch == "whisper-base":
+        cfg = cfg.replace(max_target_positions=max(shape_cfg.seq_len + 1, 4096))
+    model = get_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    key = jax.random.PRNGKey(0)
+
+    params_shapes = jax.eval_shape(lambda: model.init(key, cfg))
+    p_shard = shd.param_shardings(mesh, params_shapes)
+    n_params = total_param_count(params_shapes)
+    mflops, n_active = model_flops(cfg, shape_cfg, params_shapes)
+
+    specs = model.input_specs(cfg, shape_cfg)
+    batch_ok = shape_cfg.global_batch > 1
+    b_shard = batch_shardings(specs, mesh, batch_ok)
+
+    rules = None
+    if arch in SEQ_SHARD and shape_cfg.kind == "train":
+        rules = {"residual_seq": "model"}
+    # cap accumulation so each microbatch still covers the batch-sharding
+    # extent (a microbatch smaller than pod*data replicates activations)
+    data_extent = math.prod(
+        mesh.shape[a] for a in ("pod", "data") if a in mesh.axis_names
+    )
+    accum = min(GRAD_ACCUM.get(arch, 1),
+                max(shape_cfg.global_batch // data_extent, 1))
+    t0 = time.time()
+    with shd.activate(mesh, rules):
+        if shape_cfg.kind in ("train",):
+            tcfg = TrainConfig(
+                grad_accum=accum,
+                moment_dtype=MOMENT_DTYPE.get(arch, "float32"),
+                accum_dtype=ACCUM_DTYPE.get(arch, "float32"),
+            )
+            loss_fn = _loss_fn(model, cfg)
+            step_fn = build_train_step(loss_fn, tcfg, grad_shardings=p_shard)
+            opt_shapes = jax.eval_shape(lambda: init_opt_state(params_shapes, tcfg))
+            o_shard = shd.param_shardings(mesh, opt_shapes)
+            fn = jax.jit(
+                step_fn,
+                in_shardings=(p_shard, o_shard, b_shard, NamedSharding(mesh, P())),
+                donate_argnums=(0, 1),
+            )
+            abstract_args = (params_shapes, opt_shapes, specs,
+                             jax.ShapeDtypeStruct((), jnp.int32))
+            traced = costmodel.traced_cost(step_fn, *abstract_args)
+            lowered = fn.lower(*abstract_args)
+        elif shape_cfg.kind == "prefill":
+            def prefill_fn(params, batch):
+                return model.forward(params, batch, cfg)[0]
+
+            fn = jax.jit(prefill_fn, in_shardings=(p_shard, b_shard))
+            traced = costmodel.traced_cost(prefill_fn, params_shapes, specs)
+            lowered = fn.lower(params_shapes, specs)
+        else:  # decode
+            state_shapes = jax.eval_shape(
+                lambda: model.init_decode_state(
+                    cfg, shape_cfg.global_batch, shape_cfg.seq_len,
+                    cfg.compute_dtype)
+            )
+            s_shard = shd.state_shardings(mesh, state_shapes, batch_ok)
+
+            def serve_fn(params, state, tokens):
+                logits, state = model.decode_step(params, state, tokens, cfg)
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32), state
+
+            fn = jax.jit(
+                serve_fn,
+                in_shardings=(p_shard, s_shard, b_shard["tokens"]),
+                donate_argnums=(1,),
+            )
+            traced = costmodel.traced_cost(serve_fn, params_shapes, state_shapes,
+                                           specs["tokens"])
+            lowered = fn.lower(params_shapes, state_shapes, specs["tokens"])
+    t_lower = time.time() - t0
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "pod2x16x16" if multi_pod else "16x16",
+        "n_devices": math.prod(mesh.devices.shape),
+        "kind": shape_cfg.kind,
+        "n_params": n_params,
+        "n_active_params": n_active,
+        "model_flops": mflops,
+        "lower_s": round(t_lower, 2),
+        # scan-exact jaxpr cost model (GLOBAL); per-device = / n_devices
+        "traced_flops": traced["flops"],
+        "traced_bytes": traced["bytes"],
+        "traced_transcendentals": traced["transcendentals"],
+    }
+    if not compile_:
+        return result
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    result["compile_s"] = round(time.time() - t0, 2)
+
+    mem = compiled.memory_analysis()
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            result[attr] = int(v)
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    if ca:
+        result["hlo_flops"] = float(ca.get("flops", 0.0))
+        result["hlo_bytes"] = float(ca.get("bytes accessed", 0.0))
+        result["hlo_transcendentals"] = float(ca.get("transcendentals", 0.0))
+
+    hlo_text = compiled.as_text()
+    per_kind_raw, counts = parse_collective_bytes(hlo_text)
+    per_kind, _ = costmodel.collective_bytes_scaled(hlo_text)
+    result["collective_bytes"] = per_kind
+    result["collective_bytes_unscaled"] = per_kind_raw
+    result["collective_counts"] = counts
+    result["collective_bytes_total"] = int(sum(per_kind.values()))
+    return result
+
+
+def roofline_terms(result):
+    """The three terms in seconds per chip.
+
+    flops/bytes come from the scan-exact jaxpr cost model (GLOBAL -> divide
+    by chip count); collective bytes come from the partitioned HLO (already
+    per-participant) with while-trip-count scaling.
+    """
+    n = result.get("n_devices", 1)
+    flops = result.get("traced_flops", 0.0) / n
+    byts = result.get("traced_bytes", 0.0) / n
+    coll = result.get("collective_bytes_total", 0)
+    terms = {
+        "t_compute": flops / HW["peak_flops"],
+        "t_memory": byts / HW["hbm_bw"],
+        "t_collective": coll / HW["ici_bw"],
+    }
+    terms["bottleneck"] = max(terms, key=terms.get)
+    mf = result.get("model_flops", 0.0)
+    tf = result.get("traced_flops", 0.0)
+    terms["useful_flops_frac"] = (mf / tf) if tf else 0.0
+    return terms
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--no-compile", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    todo = []
+    if args.all:
+        for arch, shape, multi in cells(include_multi=not args.single_pod_only):
+            todo.append((arch, shape, multi))
+    else:
+        todo.append((args.arch, args.shape, args.multi_pod))
+
+    failures = 0
+    for arch, shape, multi in todo:
+        if multi is None:
+            out = {
+                "arch": arch, "shape": shape, "mesh": "skip",
+                "skipped": "full-attention arch at 524k context (see DESIGN.md)",
+            }
+            tag = f"{arch}__{shape}__skip"
+        else:
+            tag = f"{arch}__{shape}__{'pod2x16x16' if multi else '16x16'}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path):
+                print(f"[cached] {tag}")
+                continue
+            print(f"[lower+compile] {tag} ...", flush=True)
+            try:
+                out = lower_cell(arch, shape, multi, compile_=not args.no_compile)
+                out.update(roofline_terms(out))
+                print(f"   ok: lower {out.get('lower_s')}s compile "
+                      f"{out.get('compile_s')}s flops/dev {out.get('hlo_flops', 0):.3e} "
+                      f"coll {out.get('collective_bytes_total', 0):.3e}B",
+                      flush=True)
+            except Exception as e:
+                failures += 1
+                out = {"arch": arch, "shape": shape,
+                       "mesh": "pod2x16x16" if multi else "16x16",
+                       "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-3000:]}
+                print(f"   FAILED: {type(e).__name__}: {str(e)[:300]}", flush=True)
+        with open(os.path.join(args.out, tag + ".json"), "w") as f:
+            json.dump(out, f, indent=1)
+    print(f"done; {failures} failures")
+    return failures
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,56 @@
+"""Production serving launcher: continuous-batching engine over the
+production mesh (or host devices with --smoke).
+
+    python -m repro.launch.serve --arch qwen2-1.5b --smoke --requests 16
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import get_model
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b",
+                    choices=[a for a in ARCHS if a != "mlp-pinn"])
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = get_model(cfg)
+    mesh = (make_production_mesh(multi_pod=args.multi_pod)
+            if args.production_mesh else make_host_mesh())
+
+    with shd.activate(mesh):
+        params = model.init(jax.random.PRNGKey(0), cfg)
+        params = jax.device_put(params, shd.param_shardings(mesh, params))
+        engine = ServeEngine(model, params, cfg, max_batch=args.slots,
+                             max_len=args.max_len)
+        key = jax.random.PRNGKey(3)
+        for i in range(args.requests):
+            k = jax.random.fold_in(key, i)
+            plen = int(jax.random.randint(k, (), 1, 12))
+            prompt = [int(t) for t in jax.random.randint(
+                k, (plen,), 0, cfg.vocab_size)]
+            engine.submit(Request(rid=i, prompt=prompt,
+                                  max_new_tokens=args.max_new))
+        engine.run_until_done()
+        print(engine.stats())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Production training launcher.
+
+On a real TPU fleet each host runs:
+
+    python -m repro.launch.train --arch <id> --coordinator <addr> \
+        --num-processes <N> --process-id <i> [--multi-pod]
+
+which initializes jax.distributed, builds the production mesh over the global
+device set, shards params/optimizer with the FSDP+TP rules, and runs the
+fault-tolerant Trainer (checkpoint/restart + straggler monitor + preemption
+save). On this CPU container it runs the same code path single-process with
+whatever devices exist (use --smoke for the reduced config).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.data import collocation_batch, token_batch
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import get_model
+from repro.train.trainer import Trainer, TrainConfig, init_opt_state
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b", choices=ARCHS)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="use the (16,16)/(2,16,16) v5e mesh (needs 256/512 chips)")
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--coordinator", default=None)
+    ap.add_argument("--num-processes", type=int, default=1)
+    ap.add_argument("--process-id", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.coordinator:
+        jax.distributed.initialize(args.coordinator, args.num_processes,
+                                   args.process_id)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = get_model(cfg)
+    mesh = (make_production_mesh(multi_pod=args.multi_pod)
+            if args.production_mesh else make_host_mesh())
+
+    with shd.activate(mesh):
+        params = model.init(jax.random.PRNGKey(0), cfg)
+        p_shard = shd.param_shardings(mesh, params)
+        params = jax.device_put(params, p_shard)
+
+        def batch_fn(step):
+            if cfg.family == "mlp":
+                return collocation_batch(0, step, args.batch, cfg.mlp_sizes[0])
+            b = {"tokens": token_batch(0, step, args.batch, args.seq,
+                                       cfg.vocab_size)}
+            data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+            return jax.device_put(b, {"tokens": NamedSharding(mesh, P(data_axes))})
+
+        tcfg = TrainConfig(peak_lr=1e-3, warmup_steps=20, total_steps=args.steps,
+                           grad_accum=args.grad_accum,
+                           compress_grads=args.compress_grads,
+                           ckpt_dir=args.ckpt_dir)
+        trainer = Trainer(lambda p, b: model.loss(p, b, cfg), params, tcfg,
+                          mesh=mesh, param_shardings=p_shard, batch_fn=batch_fn)
+        if args.ckpt_dir and trainer.maybe_restore():
+            print(f"resumed from step {trainer.step}")
+        trainer.run(args.steps, log_every=max(args.steps // 10, 1))
+
+
+if __name__ == "__main__":
+    main()

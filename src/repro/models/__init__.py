@@ -1,0 +1,3 @@
+"""Architecture zoo: pure-JAX model definitions for the assigned pool."""
+
+from .registry import get_model  # noqa: F401

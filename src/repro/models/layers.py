@@ -1,0 +1,527 @@
+"""Shared layers: norms, dense, RoPE, streaming-softmax attention (flash-style
+with a custom VJP so both directions are O(seq) memory in pure JAX), SwiGLU
+MLP, and capacity-based sort-dispatch MoE.
+
+Everything is functional: params are nested dicts, layers are plain functions.
+Activation sharding uses logical-axis annotations (distributed.sharding).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import lshard
+
+
+def remat_block(body, cfg):
+    """Wrap a scan body with the configured activation-checkpoint policy.
+
+    'nothing' = full remat (only layer-boundary carries survive — the memory
+    floor; backward recompute cost is visible in the jaxpr cost model);
+    'dots' = save matmul outputs (less recompute, ~10x more activation HBM).
+    The choice is a section-Perf hillclimb lever.
+    """
+    if not cfg.remat:
+        return body
+    pol = {
+        "nothing": jax.checkpoint_policies.nothing_saveable,
+        "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+    }[cfg.remat_policy]
+    return jax.checkpoint(body, policy=pol)
+
+
+def he_normal(key, shape, dtype, fan_in=None):
+    fan_in = fan_in or shape[0]
+    return (jax.random.normal(key, shape) * (1.0 / math.sqrt(fan_in))).astype(dtype)
+
+
+def trunc_normal(key, shape, dtype, std=0.02):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms / dense
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d, dtype):
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return out.astype(dt) * params["scale"].astype(dt)
+
+
+def layernorm_init(d, dtype):
+    return {"scale": jnp.ones((d,), dtype=dtype), "bias": jnp.zeros((d,), dtype=dtype)}
+
+
+def layernorm(params, x, eps=1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return out.astype(dt) * params["scale"].astype(dt) + params["bias"].astype(dt)
+
+
+def dense_init(key, d_in, d_out, dtype, bias=False, std=None):
+    p = {"kernel": trunc_normal(key, (d_in, d_out), dtype, std or 0.02)}
+    if bias:
+        p["bias"] = jnp.zeros((d_out,), dtype=dtype)
+    return p
+
+
+def dense(params, x, dtype=None):
+    k = params["kernel"]
+    if dtype is not None:
+        k = k.astype(dtype)
+        x = x.astype(dtype)
+    y = x @ k
+    if "bias" in params:
+        y = y + params["bias"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope(x, positions, theta=10_000.0):
+    """x: (..., S, H, dh), positions: (S,) or (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.arange(half, dtype=jnp.float32)
+    inv = theta ** (-freqs / half)
+    ang = positions.astype(jnp.float32)[..., :, None] * inv  # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., :, None, :].astype(x.dtype)  # broadcast over heads
+    sin = sin[..., :, None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# streaming-softmax attention (flash-style) with custom VJP
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _chunk_mask(q_pos, k_pos, causal, window, kv_len):
+    """(Sq, Cb) boolean allowed-mask."""
+    m = k_pos[None, :] < kv_len
+    if causal:
+        m = m & (k_pos[None, :] <= q_pos[:, None])
+    if window is not None:
+        m = m & (q_pos[:, None] - k_pos[None, :] < window)
+    return m
+
+
+def _flash_fwd_impl(q, k, v, causal, window, q_offset, chunk, kv_len):
+    """q: (B, Sq, Hkv, G, dh); k, v: (B, Skv, Hkv, dh).
+
+    Returns out (B, Sq, Hkv, G, dh) and logsumexp L (B, Hkv, G, Sq).
+    """
+    B, Sq, Hkv, G, dh = q.shape
+    Skv = k.shape[1]
+    nchunk = max(Skv // chunk, 1)
+    chunk = Skv // nchunk
+    scale = 1.0 / math.sqrt(dh)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    kc = k.reshape(B, nchunk, chunk, Hkv, dh)
+    vc = v.reshape(B, nchunk, chunk, Hkv, dh)
+    kc = jnp.moveaxis(kc, 1, 0)  # (n, B, chunk, Hkv, dh)
+    vc = jnp.moveaxis(vc, 1, 0)
+
+    def step(carry, inp):
+        acc, m, l = carry
+        kch, vch, c0 = inp
+        k_pos = c0 + jnp.arange(chunk)
+        s = jnp.einsum("bqhgd,bchd->bhgqc", q, kch,
+                       preferred_element_type=jnp.float32) * scale
+        mask = _chunk_mask(q_pos, k_pos, causal, window, kv_len)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bhgqc,bchd->bhgqd", p.astype(vch.dtype), vch,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, Hkv, G, Sq, dh), jnp.float32)
+    m0 = jnp.full((B, Hkv, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    c0s = jnp.arange(nchunk) * chunk
+    (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0), (kc, vc, c0s))
+    l = jnp.maximum(l, 1e-30)
+    out = (acc / l[..., None]).astype(q.dtype)
+    L = m + jnp.log(l)
+    return jnp.moveaxis(out, 3, 1), L  # (B, Sq, Hkv, G, dh), (B,Hkv,G,Sq)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash(q, k, v, causal, window, q_offset, chunk, kv_len):
+    out, _ = _flash_fwd_impl(q, k, v, causal, window, q_offset, chunk, kv_len)
+    return out
+
+
+def _flash_fwd(q, k, v, causal, window, q_offset, chunk, kv_len):
+    out, L = _flash_fwd_impl(q, k, v, causal, window, q_offset, chunk, kv_len)
+    return out, (q, k, v, out, L)
+
+
+def _flash_bwd(causal, window, q_offset, chunk, kv_len, res, dout):
+    q, k, v, out, L = res
+    B, Sq, Hkv, G, dh = q.shape
+    Skv = k.shape[1]
+    nchunk = max(Skv // chunk, 1)
+    chunk_ = Skv // nchunk
+    scale = 1.0 / math.sqrt(dh)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    do = jnp.moveaxis(dout, 1, 3)  # (B, Hkv, G, Sq, dh)
+    o = jnp.moveaxis(out, 1, 3)
+    D = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)  # (B,Hkv,G,Sq)
+
+    kc = jnp.moveaxis(k.reshape(B, nchunk, chunk_, Hkv, dh), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nchunk, chunk_, Hkv, dh), 1, 0)
+    c0s = jnp.arange(nchunk) * chunk_
+
+    def step(dq_acc, inp):
+        kch, vch, c0 = inp
+        k_pos = c0 + jnp.arange(chunk_)
+        s = jnp.einsum("bqhgd,bchd->bhgqc", q, kch,
+                       preferred_element_type=jnp.float32) * scale
+        mask = _chunk_mask(q_pos, k_pos, causal, window, kv_len)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jnp.exp(s - L[..., None])  # (B,Hkv,G,Sq,c)
+        dv = jnp.einsum("bhgqc,bhgqd->bchd", p, do.astype(jnp.float32))
+        dp = jnp.einsum("bhgqd,bchd->bhgqc", do.astype(jnp.float32),
+                        vch.astype(jnp.float32))
+        ds = p * (dp - D[..., None]) * scale
+        dq_c = jnp.einsum("bhgqc,bchd->bqhgd", ds, kch.astype(jnp.float32))
+        dk = jnp.einsum("bhgqc,bqhgd->bchd", ds, q.astype(jnp.float32))
+        return dq_acc + dq_c, (dk, dv)
+
+    dq0 = jnp.zeros(q.shape, jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(step, dq0, (kc, vc, c0s))
+    dk = jnp.moveaxis(dks, 0, 1).reshape(B, Skv, Hkv, dh)
+    dv = jnp.moveaxis(dvs, 0, 1).reshape(B, Skv, Hkv, dh)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(
+    q, k, v, *, causal=True, window=None, q_offset=0, chunk=512, kv_len=None
+):
+    """Grouped-query streaming attention.
+
+    q: (B, Sq, Hq, dh); k, v: (B, Skv, Hkv, dh); Hq = Hkv * G.
+    O(Skv/chunk) working set in fwd and bwd; numerically = softmax attention.
+    """
+    B, Sq, Hq, dh = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, dh)
+    if kv_len is None:
+        kv_len = k.shape[1]
+    chunk = min(chunk, k.shape[1])
+    pad = (-k.shape[1]) % chunk
+    if pad:  # pad KV to a chunk multiple; padded columns masked via kv_len
+        widths = ((0, 0), (0, pad), (0, 0), (0, 0))
+        k = jnp.pad(k, widths)
+        v = jnp.pad(v, widths)
+    out = _flash(qg, k, v, causal, window, q_offset, chunk, kv_len)
+    return out.reshape(B, Sq, Hq, dh)
+
+
+def attention_reference(q, k, v, *, causal=True, window=None, q_offset=0, kv_len=None):
+    """Naive softmax attention (oracle for flash & the Pallas kernel)."""
+    B, Sq, Hq, dh = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k, preferred_element_type=jnp.float32)
+    s = s / math.sqrt(dh)
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(k.shape[1])
+    mask = _chunk_mask(q_pos, k_pos, causal, window, kv_len if kv_len is not None else k.shape[1])
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Sq, Hq, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention layer (projections + cache handling)
+# ---------------------------------------------------------------------------
+
+
+def attention_init(key, cfg, d_model=None, dtype=None):
+    d = d_model or cfg.d_model
+    dh = cfg.head_dim_
+    dt = dtype or cfg.params_dtype
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": {"kernel": trunc_normal(ks[0], (d, cfg.num_heads, dh), dt)},
+        "wk": {"kernel": trunc_normal(ks[1], (d, cfg.num_kv_heads, dh), dt)},
+        "wv": {"kernel": trunc_normal(ks[2], (d, cfg.num_kv_heads, dh), dt)},
+        "wo": {"kernel": trunc_normal(ks[3], (cfg.num_heads, dh, d), dt)},
+    }
+    if cfg.qkv_bias:
+        p["wq"]["bias"] = jnp.zeros((cfg.num_heads, dh), dt)
+        p["wk"]["bias"] = jnp.zeros((cfg.num_kv_heads, dh), dt)
+        p["wv"]["bias"] = jnp.zeros((cfg.num_kv_heads, dh), dt)
+    return p
+
+
+def _proj_qkv(params, x, cfg):
+    dt = x.dtype
+
+    def pj(p, name):
+        y = jnp.einsum("bsd,dhk->bshk", x, p["kernel"].astype(dt))
+        if "bias" in p:
+            y = y + p["bias"].astype(dt)
+        return y
+
+    q = pj(params["wq"], "q")
+    k = pj(params["wk"], "k")
+    v = pj(params["wv"], "v")
+    q = lshard(q, ("batch", "seq", "heads", None))
+    k = lshard(k, ("batch", "seq", "kv_heads", None))
+    v = lshard(v, ("batch", "seq", "kv_heads", None))
+    return q, k, v
+
+
+def attention_layer(params, x, cfg, *, positions, causal=True, window=None):
+    """Training/prefill path: full-sequence streaming attention."""
+    q, k, v = _proj_qkv(params, x, cfg)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    if cfg.use_pallas:
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        out = fa_ops.flash_attention(q, k, v, causal=causal, window=window)
+    else:
+        out = flash_attention(q, k, v, causal=causal, window=window, chunk=cfg.attn_chunk)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"]["kernel"].astype(x.dtype))
+    return lshard(out, ("batch", "seq", "embed"))
+
+
+def cache_insert(cache_kv, kv, pos):
+    """Per-slot cache write: cache (B, Smax, H, dh), kv (B, 1, H, dh),
+    pos (B,) int32 — slot b writes at its own position (continuous batching)."""
+    return jax.vmap(
+        lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (p, 0, 0))
+    )(cache_kv, kv.astype(cache_kv.dtype), pos)
+
+
+def attention_decode(params, x, cache, pos, cfg, *, window=None, use_rope=True):
+    """Single-token decode with a static-size KV cache.
+
+    x: (B, 1, D); cache: {'k','v': (B, Smax, Hkv, dh)}; pos: (B,) int32
+    (per-slot positions). Returns (out, new_cache).
+    """
+    q, k, v = _proj_qkv(params, x, cfg)
+    if use_rope:
+        q = rope(q, pos[:, None], cfg.rope_theta)
+        k = rope(k, pos[:, None], cfg.rope_theta)
+    ck = cache_insert(cache["k"], k, pos)
+    cv = cache_insert(cache["v"], v, pos)
+    out = cached_attention(params, q, ck, cv, pos, window=window)
+    return out, {"k": ck, "v": cv}
+
+
+def cached_attention(params, q, ck, cv, pos, *, window=None, mask_by_pos=True):
+    """Attention of a 1-token query against a (possibly padded) cache.
+    pos: (B,) per-slot positions (ignored when mask_by_pos=False)."""
+    B, _, Hq, dh = q.shape
+    Hkv = ck.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, 1, Hkv, G, dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, ck, preferred_element_type=jnp.float32)
+    s = s / math.sqrt(dh)
+    k_pos = jnp.arange(ck.shape[1])
+    if mask_by_pos:
+        ok = k_pos[None] <= pos[:, None]  # (B, S)
+        if window is not None:
+            ok = ok & (pos[:, None] - k_pos[None] < window)
+    else:
+        ok = jnp.ones((B, ck.shape[1]), bool)
+    s = jnp.where(ok[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(cv.dtype), cv)
+    o = o.reshape(B, 1, Hq, dh)
+    return jnp.einsum("bshk,hkd->bsd", o, params["wo"]["kernel"].astype(q.dtype))
+
+
+def attention_cache_init(cfg, batch, max_len, dtype):
+    dh = cfg.head_dim_
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.num_kv_heads, dh), dtype),
+        "v": jnp.zeros((batch, max_len, cfg.num_kv_heads, dh), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d, d_ff, dtype, act="silu"):
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_in": dense_init(ks[0], d, d_ff, dtype),
+        "w_out": dense_init(ks[1], d_ff, d, dtype),
+    }
+    if act == "silu":  # gated (SwiGLU)
+        p["w_gate"] = dense_init(ks[2], d, d_ff, dtype)
+    return p
+
+
+def mlp(params, x, act="silu"):
+    h = dense(params["w_in"], x)
+    if act == "silu":
+        h = jax.nn.silu(dense(params["w_gate"], x)) * h
+    elif act == "gelu":
+        h = jax.nn.gelu(h)
+    elif act == "tanh":
+        h = jnp.tanh(h)
+    else:
+        raise ValueError(act)
+    h = lshard(h, ("batch", "seq", "mlp"))
+    return dense(params["w_out"], h)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts: top-k routing, sort-based capacity dispatch
+# ---------------------------------------------------------------------------
+
+
+def moe_init(key, cfg, dtype):
+    E, d, f = cfg.num_experts, cfg.d_model, cfg.moe_d_ff or cfg.d_ff
+    ks = jax.random.split(key, 6)
+    p = {
+        "router": dense_init(ks[0], d, E, dtype),
+        "experts": {
+            "w_in": trunc_normal(ks[1], (E, d, f), dtype),
+            "w_gate": trunc_normal(ks[2], (E, d, f), dtype),
+            "w_out": trunc_normal(ks[3], (E, f, d), dtype),
+        },
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = mlp_init(ks[4], d, f * cfg.num_shared_experts, dtype)
+    if cfg.dense_residual_d_ff:
+        p["dense_residual"] = mlp_init(ks[5], d, cfg.dense_residual_d_ff, dtype)
+    return p
+
+
+def moe(params, x, cfg):
+    """x: (B, S, D) -> (out, aux_loss).
+
+    Sort-based dispatch with static capacity (MegaBlocks-style grouping
+    adapted to static TPU shapes). Routing/sorting/scatter are performed
+    *per sequence* (independently along the batch axis) so the whole dispatch
+    pipeline shards over the data axes with zero cross-shard traffic; only the
+    expert einsums touch the expert-parallel axis. Capacity is per-sequence
+    (Switch-style per-shard capacity).
+    """
+    B, S, D = x.shape
+    chunk = cfg.moe_seq_chunk
+    if chunk and S > chunk and S % chunk == 0:
+        # long sequences: scan over sequence chunks so dispatch intermediates
+        # (gathered tokens, expert buffers) are transient per chunk. Capacity
+        # becomes per-chunk (Switch-style local capacity).
+        nc = S // chunk
+        xc = jnp.moveaxis(x.reshape(B, nc, chunk, D), 1, 0)
+
+        def body(aux_acc, xi):
+            out_i, aux_i = moe(params, xi, cfg)
+            return aux_acc + aux_i, out_i
+
+        aux, outs = jax.lax.scan(body, jnp.zeros(()), xc)
+        return jnp.moveaxis(outs, 0, 1).reshape(B, S, D), aux / nc
+
+    E, k = cfg.num_experts, cfg.experts_per_token
+    Nk = S * k
+    C = int(math.ceil(S * k / E * cfg.capacity_factor))
+    C = max(8, -(-C // 8) * 8)  # round up to a multiple of 8
+
+    logits = dense(params["router"], x.astype(jnp.float32))  # (B, S, E) fp32
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (B, S, k)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # --- load-balance auxiliary loss (Switch) ---
+    me = probs.mean(axis=(0, 1))  # (E,)
+    onehot_e = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)  # (B,S,k,E)
+    ce = onehot_e.mean(axis=(0, 1, 2))
+    aux = E * jnp.sum(me * ce)
+
+    # --- per-sequence sort-based dispatch (vectorized over B) ---
+    flat_e = expert_idx.reshape(B, Nk)
+    order = jnp.argsort(flat_e, axis=1)  # (B, Nk) stable group-by-expert
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    idx = jnp.arange(Nk)[None]
+    is_start = jnp.concatenate(
+        [jnp.ones((B, 1), bool), sorted_e[:, 1:] != sorted_e[:, :-1]], axis=1
+    )
+    seg_start = jax.lax.cummax(jnp.where(is_start, idx, 0), axis=1)
+    pos_in_e = idx - seg_start
+    valid = pos_in_e < C
+    dest = jnp.where(valid, sorted_e * C + pos_in_e, E * C)  # (B, Nk)
+    tok = order // k  # source token within the sequence
+
+    xin = jnp.take_along_axis(
+        x, tok[..., None], axis=1
+    )  # (B, Nk, D) gather within sequence
+    xin = lshard(xin, ("batch", None, "embed"))
+    scatter_row = lambda xi, de, va: jnp.zeros((E * C + 1, D), x.dtype).at[de].add(
+        jnp.where(va[:, None], xi, 0)
+    )[: E * C]
+    buf = jax.vmap(scatter_row)(xin, dest, valid)  # (B, E*C, D)
+    buf = buf.reshape(B, E, C, D)
+    buf = lshard(buf, ("batch", "experts", "expert_capacity", "embed"))
+
+    we = params["experts"]
+    h = jnp.einsum("becd,edf->becf", buf, we["w_in"].astype(x.dtype))
+    g = jnp.einsum("becd,edf->becf", buf, we["w_gate"].astype(x.dtype))
+    h = jax.nn.silu(g) * h
+    h = lshard(h, ("batch", "experts", "expert_capacity", "expert_mlp"))
+    eo = jnp.einsum("becf,efd->becd", h, we["w_out"].astype(x.dtype))
+
+    eo_flat = jnp.concatenate(
+        [eo.reshape(B, E * C, D), jnp.zeros((B, 1, D), eo.dtype)], axis=1
+    )
+    back = jnp.take_along_axis(eo_flat, dest[..., None], axis=1)  # (B, Nk, D)
+    back = lshard(back, ("batch", None, "embed"))
+    gate_sorted = jnp.take_along_axis(gate_vals.reshape(B, Nk), order, axis=1)
+    contrib = back * (gate_sorted * valid)[..., None].astype(back.dtype)
+    out = jax.vmap(
+        lambda co, to: jnp.zeros((S, D), x.dtype).at[to].add(co)
+    )(contrib, tok)
+    out = lshard(out, ("batch", None, "embed"))
+
+    if "shared" in params:
+        out = out + mlp(params["shared"], x, act="silu")
+    if "dense_residual" in params:
+        out = out + mlp(params["dense_residual"], x, act="silu")
+    return out, aux

@@ -1,0 +1,88 @@
+"""The paper's model: a tanh MLP (D -> 768 -> 768 -> 512 -> 512 -> 1) used in
+every experiment of section 4, plus the PINN training head.
+
+``loss`` is a Poisson PINN residual  (1/2)|Delta u_theta - rhs|^2 + boundary
+term, with the Laplacian computed by the configured operator method (collapsed
+Taylor mode by default — the paper's contribution in the training loop).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def init(key, cfg) -> Dict[str, Any]:
+    sizes = cfg.mlp_sizes
+    ks = jax.random.split(key, len(sizes) - 1)
+    return {
+        f"dense_{i}": {
+            "kernel": L.he_normal(k, (a, b), cfg.params_dtype),
+            "bias": jnp.zeros((b,), cfg.params_dtype),
+        }
+        for i, (k, a, b) in enumerate(zip(ks, sizes[:-1], sizes[1:]))
+    }
+
+
+def apply(params, x, cfg):
+    """x: (B, D) -> (B,). tanh hidden activations, linear head."""
+    n = len(cfg.mlp_sizes) - 1
+    h = x
+    for i in range(n):
+        h = L.dense(params[f"dense_{i}"], h)
+        if i < n - 1:
+            h = jnp.tanh(h)
+    return h[..., 0]
+
+
+def forward(params, batch, cfg):
+    return apply(params, batch["x"], cfg), jnp.zeros(())
+
+
+# --- PINN objective: -Delta u = rhs on [0,1]^D, u = g on boundary ----------
+
+
+def manufactured_solution(x):
+    """u*(x) = prod_d sin(pi x_d); -Delta u* = D pi^2 u*."""
+    return jnp.prod(jnp.sin(math.pi * x), axis=-1)
+
+
+def rhs(x):
+    D = x.shape[-1]
+    return D * math.pi**2 * manufactured_solution(x)
+
+
+def loss(params, batch, cfg, method: str = "collapsed"):
+    from repro.core.operators import laplacian
+
+    x_int, x_bdy = batch["x"], batch.get("x_boundary")
+    f = lambda y: apply(params, y, cfg)
+    lap = laplacian(f, x_int, method=method)
+    residual = -lap - rhs(x_int)
+    pde = 0.5 * jnp.mean(residual**2)
+    bc = jnp.zeros(())
+    if x_bdy is not None:
+        bc = 0.5 * jnp.mean((apply(params, x_bdy, cfg) - manufactured_solution(x_bdy)) ** 2)
+    total = pde + 10.0 * bc
+    return total, {"pde": pde, "bc": bc}
+
+
+def input_specs(cfg, shape_cfg):
+    D = cfg.mlp_sizes[0]
+    B = shape_cfg.global_batch * 16  # collocation batches are cheap; widen
+    return {
+        "x": jax.ShapeDtypeStruct((B, D), jnp.float32),
+        "x_boundary": jax.ShapeDtypeStruct((B // 4, D), jnp.float32),
+    }
+
+
+def init_decode_state(cfg, batch, max_len, dtype):  # pragma: no cover - n/a
+    raise NotImplementedError("the PINN MLP has no decode path")
+
+
+decode_step = init_decode_state

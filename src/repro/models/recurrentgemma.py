@@ -1,0 +1,381 @@
+"""RecurrentGemma / Griffin: RG-LRU recurrent blocks + local attention, 1:2.
+
+Block pattern (R, R, A): two residual recurrent blocks per local-attention
+block (window = 2048). The RG-LRU linear recurrence
+
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),
+    a_t = exp(-c * softplus(Lambda) * sigma(W_a x_t))
+
+is evaluated with ``jax.lax.associative_scan`` for train/prefill (log-depth,
+shardable over the sequence axis — this is the sub-quadratic arch that runs
+the ``long_500k`` cell) and with a single fused step for decode (state =
+(h, conv window): no KV cache growth).
+
+38 layers = 12 stacked (R,R,A) superblocks (scanned) + a trailing (R,R).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import lshard
+from repro.models import layers as L
+
+_C = 8.0  # RG-LRU decay sharpness constant (Griffin)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU + recurrent block
+# ---------------------------------------------------------------------------
+
+
+def rglru_init(key, width, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    # Lambda init so that a in [0.9, 0.999] at sigma(.)=0.5 (Griffin appendix)
+    u = jax.random.uniform(k1, (width,), minval=0.9**2, maxval=0.999**2)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # softplus^-1(-log u / c)
+    return {
+        "a_param": lam.astype(jnp.float32),
+        "a_gate": L.dense_init(k2, width, width, dtype, bias=True),
+        "i_gate": L.dense_init(k3, width, width, dtype, bias=True),
+    }
+
+
+def _rglru_coeffs(params, x):
+    """Per-step decay a_t and input b_t for the linear recurrence."""
+    r = jax.nn.sigmoid(L.dense(params["a_gate"], x).astype(jnp.float32))
+    i = jax.nn.sigmoid(L.dense(params["i_gate"], x).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["a_param"]) * r  # (B, S, W) fp32
+    a = jnp.exp(log_a)
+    gated = i * x.astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+    return a, b
+
+
+def _combine(lhs, rhs):
+    a1, b1 = lhs
+    a2, b2 = rhs
+    return a1 * a2, a2 * b1 + b2
+
+
+@jax.custom_vjp
+def _linrec(a, b):
+    """h_t = a_t h_{t-1} + b_t over axis 1, h_0 = 0 (log-depth assoc. scan)."""
+    _, h = jax.lax.associative_scan(_combine, (a, b), axis=1)
+    return h
+
+
+def _linrec_fwd(a, b):
+    h = _linrec(a, b)
+    # bf16 residuals: halves the dominant HBM term of recurrent train cells
+    # (decay factors/states are magnitude-bounded; grads recomputed in f32)
+    return h, (a.astype(jnp.bfloat16), h.astype(jnp.bfloat16))
+
+
+def _linrec_bwd(res, gh):
+    """Adjoint of a linear recurrence is the reversed linear recurrence:
+        lam_t = gh_t + a_{t+1} lam_{t+1};  db_t = lam_t;  da_t = lam_t h_{t-1}.
+    Saving only (a, h) and running one reverse scan keeps the backward O(S)
+    memory — differentiating *through* the associative-scan tree materializes
+    every tree level and dominated the recurrentgemma train-cell HBM."""
+    a = res[0].astype(jnp.float32)
+    h = res[1].astype(jnp.float32)
+    gh = gh.astype(jnp.float32)
+    a_next = jnp.concatenate([a[:, 1:], jnp.zeros_like(a[:, :1])], axis=1)
+    ar = jnp.flip(a_next, axis=1)
+    gr = jnp.flip(gh, axis=1)
+    _, lam_r = jax.lax.associative_scan(_combine, (ar, gr), axis=1)
+    lam = jnp.flip(lam_r, axis=1)
+    h_prev = jnp.concatenate([jnp.zeros_like(h[:, :1]), h[:, :-1]], axis=1)
+    return lam * h_prev, lam
+
+
+_linrec.defvjp(_linrec_fwd, _linrec_bwd)
+
+
+def rglru(params, x, h0=None):
+    """x: (B, S, W) -> (y, h_last). Associative scan over time."""
+    a, b = _rglru_coeffs(params, x)
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+    h = _linrec(a, b)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_step(params, x, h):
+    """Single decode step. x: (B, 1, W), h: (B, W) -> (y, h_new)."""
+    a, b = _rglru_coeffs(params, x)
+    h_new = a[:, 0] * h.astype(jnp.float32) + b[:, 0]
+    return h_new[:, None].astype(x.dtype), h_new
+
+
+def conv1d_init(key, width, kernel, dtype):
+    return {
+        "conv_w": L.trunc_normal(key, (kernel, width), dtype, std=1.0 / math.sqrt(kernel)),
+        "conv_b": jnp.zeros((width,), dtype),
+    }
+
+
+def causal_conv1d(params, x):
+    """Depthwise causal conv via shifted adds (keeps jet rules trivial)."""
+    w = params["conv_w"].astype(x.dtype)
+    K = w.shape[0]
+    out = x * w[K - 1]
+    for i in range(1, K):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * w[K - 1 - i]
+    return out + params["conv_b"].astype(x.dtype)
+
+
+def causal_conv1d_step(params, x, window):
+    """x: (B, 1, W); window: (B, K-1, W) previous inputs -> (y, new_window)."""
+    w = params["conv_w"].astype(x.dtype)
+    K = w.shape[0]
+    buf = jnp.concatenate([window, x], axis=1)  # (B, K, W)
+    y = jnp.einsum("bkw,kw->bw", buf, w)[:, None] + params["conv_b"].astype(x.dtype)
+    return y, buf[:, 1:]
+
+
+def recurrent_block_init(key, cfg, dtype):
+    W = cfg.lru_width or cfg.d_model
+    ks = jax.random.split(key, 5)
+    return {
+        "gate_branch": L.dense_init(ks[0], cfg.d_model, W, dtype),
+        "x_branch": L.dense_init(ks[1], cfg.d_model, W, dtype),
+        "conv": conv1d_init(ks[2], W, cfg.rglru_conv_width, dtype),
+        "rglru": rglru_init(ks[3], W, dtype),
+        "out": L.dense_init(ks[4], W, cfg.d_model, dtype),
+    }
+
+
+def recurrent_block(params, x, cfg):
+    # the whole recurrent pipeline is elementwise in the width dim: shard it
+    # over the TP axis so every (B, S, W) gate/state tensor is W/16 per chip
+    gate = jax.nn.gelu(L.dense(params["gate_branch"], x))
+    gate = lshard(gate, ("batch", "seq", "mlp"))
+    u = L.dense(params["x_branch"], x)
+    u = lshard(u, ("batch", "seq", "mlp"))
+    u = causal_conv1d(params["conv"], u)
+    u = lshard(u, ("batch", "seq", "mlp"))
+    u, _ = rglru(params["rglru"], u)
+    u = lshard(u, ("batch", "seq", "mlp"))
+    return L.dense(params["out"], u * gate)
+
+
+def recurrent_block_step(params, x, state, cfg):
+    gate = jax.nn.gelu(L.dense(params["gate_branch"], x))
+    u = L.dense(params["x_branch"], x)
+    u, conv_win = causal_conv1d_step(params["conv"], u, state["conv"])
+    u, h = rglru_step(params["rglru"], u, state["h"])
+    y = L.dense(params["out"], u * gate)
+    return y, {"conv": conv_win, "h": h}
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(key, cfg, kind):
+    ka, km = jax.random.split(key)
+    p = {
+        "pre_norm": L.rmsnorm_init(cfg.d_model, cfg.params_dtype),
+        "mlp_norm": L.rmsnorm_init(cfg.d_model, cfg.params_dtype),
+        "mlp": L.mlp_init(km, cfg.d_model, cfg.d_ff, cfg.params_dtype, "gelu"),
+    }
+    if kind == "A":
+        p["attn"] = L.attention_init(ka, cfg)
+    else:
+        p["rec"] = recurrent_block_init(ka, cfg, cfg.params_dtype)
+    return p
+
+
+def _superblock_init(key, cfg):
+    ks = jax.random.split(key, len(cfg.block_pattern))
+    return [_layer_init(k, cfg, kind) for k, kind in zip(ks, cfg.block_pattern)]
+
+
+def init(key, cfg) -> Dict[str, Any]:
+    pat = cfg.block_pattern or ("R", "R", "A")
+    n_super, n_rem = divmod(cfg.num_layers, len(pat))
+    keys = jax.random.split(key, 4)
+    sk = jax.random.split(keys[0], n_super)
+    supers = jax.vmap(lambda k: _as_dict(_superblock_init(k, cfg)))(sk)
+    params = {
+        "embed": {
+            "embedding": L.trunc_normal(keys[1], (cfg.padded_vocab, cfg.d_model),
+                                        cfg.params_dtype)
+        },
+        "supers": supers,
+        "final_norm": L.rmsnorm_init(cfg.d_model, cfg.params_dtype),
+    }
+    if n_rem:
+        rk = jax.random.split(keys[2], n_rem)
+        params["tail"] = [_layer_init(k, cfg, pat[i]) for i, k in enumerate(rk)]
+    return params
+
+
+def _as_dict(layer_list):
+    return {str(i): p for i, p in enumerate(layer_list)}
+
+
+def _apply_layer(layer, x, cfg, positions, kind):
+    h = L.rmsnorm(layer["pre_norm"], x, cfg.norm_eps)
+    if kind == "A":
+        h = L.attention_layer(layer["attn"], h, cfg, positions=positions,
+                              causal=True, window=cfg.sliding_window or 2048)
+    else:
+        h = recurrent_block(layer["rec"], h, cfg)
+    x = x + h
+    h = L.rmsnorm(layer["mlp_norm"], x, cfg.norm_eps)
+    x = x + L.mlp(layer["mlp"], h, "gelu")
+    return lshard(x, ("batch", "seq", "embed"))
+
+
+def backbone(params, x, cfg, positions):
+    pat = cfg.block_pattern or ("R", "R", "A")
+
+    def body(carry, superblock):
+        y = carry
+        for i, kind in enumerate(pat):
+            y = _apply_layer(superblock[str(i)], y, cfg, positions, kind)
+        return y, ()
+
+    body = L.remat_block(body, cfg)
+    x, _ = jax.lax.scan(body, x, params["supers"])
+    for i, layer in enumerate(params.get("tail", [])):
+        x = _apply_layer(layer, x, cfg, positions, pat[i])
+    return L.rmsnorm(params["final_norm"], x, cfg.norm_eps), jnp.zeros(())
+
+
+def embed_tokens(params, tokens, cfg):
+    emb = params["embed"]["embedding"]
+    x = jnp.take(emb, tokens, axis=0).astype(cfg.compute_dtype)
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)  # gemma-style scaling
+    return lshard(x, ("batch", "seq", "embed"))
+
+
+def forward(params, batch, cfg):
+    tokens = batch["tokens"]
+    positions = jnp.arange(tokens.shape[1])
+    x = embed_tokens(params, tokens, cfg)
+    x, aux = backbone(params, x, cfg, positions)
+    kern = params["embed"]["embedding"].T  # tied (gemma)
+    logits = jnp.einsum("bsd,dv->bsv", x, kern.astype(cfg.compute_dtype))
+    return lshard(logits, ("batch", "seq", "vocab")), aux
+
+
+def loss(params, batch, cfg):
+    from repro.models.transformer import lm_loss
+
+    logits, aux = forward(params, batch, cfg)
+    return lm_loss(logits, batch["tokens"], aux, real_vocab=cfg.vocab_size)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def _layer_state(cfg, kind, batch, max_len, dtype):
+    W = cfg.lru_width or cfg.d_model
+    if kind == "A":
+        window = min(cfg.sliding_window or 2048, max_len)
+        return L.attention_cache_init(cfg, batch, window, dtype)
+    return {
+        "conv": jnp.zeros((batch, cfg.rglru_conv_width - 1, W), dtype),
+        "h": jnp.zeros((batch, W), jnp.float32),
+    }
+
+
+def init_decode_state(cfg, batch, max_len, dtype):
+    pat = cfg.block_pattern or ("R", "R", "A")
+    n_super, n_rem = divmod(cfg.num_layers, len(pat))
+    per_super = {
+        str(i): _layer_state(cfg, kind, batch, max_len, dtype)
+        for i, kind in enumerate(pat)
+    }
+    supers = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n_super,) + a.shape), per_super
+    )
+    state = {"supers": supers, "pos": jnp.zeros((batch,), jnp.int32)}
+    if n_rem:
+        state["tail"] = [
+            _layer_state(cfg, pat[i], batch, max_len, dtype) for i in range(n_rem)
+        ]
+    return state
+
+
+def _decode_layer(layer, x, st, pos, cfg, kind):
+    h = L.rmsnorm(layer["pre_norm"], x, cfg.norm_eps)
+    if kind == "A":
+        window = cfg.sliding_window or 2048
+        cache_len = st["k"].shape[1]
+        # rotating per-slot write position for the windowed cache
+        wpos = jnp.mod(pos, cache_len)  # (B,)
+        q, k, v = L._proj_qkv(layer["attn"], h, cfg)
+        q = L.rope(q, pos[:, None], cfg.rope_theta)
+        k = L.rope(k, pos[:, None], cfg.rope_theta)
+        ck = L.cache_insert(st["k"], k, wpos)
+        cv = L.cache_insert(st["v"], v, wpos)
+        slot_pos = jnp.arange(cache_len)
+        slot_age = jnp.mod(wpos[:, None] - slot_pos[None], cache_len)  # (B, L)
+        valid = slot_age <= jnp.minimum(pos, window - 1)[:, None]
+        h = _windowed_cached(layer["attn"], q, ck, cv, valid)
+        new_st = {"k": ck, "v": cv}
+    else:
+        h, new_st = recurrent_block_step(layer["rec"], h, st, cfg)
+    x = x + h
+    hm = L.rmsnorm(layer["mlp_norm"], x, cfg.norm_eps)
+    x = x + L.mlp(layer["mlp"], hm, "gelu")
+    return x, new_st
+
+
+def _windowed_cached(attn_params, q, ck, cv, valid):
+    B, _, Hq, dh = q.shape
+    Hkv = ck.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, 1, Hkv, G, dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, ck, preferred_element_type=jnp.float32)
+    s = s / math.sqrt(dh)
+    s = jnp.where(valid[:, None, None, None, :], s, L.NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(cv.dtype), cv).reshape(B, 1, Hq, dh)
+    return jnp.einsum("bshk,hkd->bsd", o, attn_params["wo"]["kernel"].astype(q.dtype))
+
+
+def decode_step(params, state, tokens, cfg):
+    pat = cfg.block_pattern or ("R", "R", "A")
+    pos = state["pos"]
+    x = embed_tokens(params, tokens[:, None], cfg)
+
+    def body(carry, layer_and_state):
+        y = carry
+        layer, st = layer_and_state
+        new_st = {}
+        for i, kind in enumerate(pat):
+            y, new_st[str(i)] = _decode_layer(layer[str(i)], y, st[str(i)], pos, cfg, kind)
+        return y, new_st
+
+    x, new_supers = jax.lax.scan(body, x, (params["supers"], state["supers"]))
+    new_state = {"supers": new_supers, "pos": pos + 1}
+    if "tail" in params:
+        new_state["tail"] = []
+        for i, layer in enumerate(params["tail"]):
+            x, st = _decode_layer(layer, x, state["tail"][i], pos, cfg, pat[i])
+            new_state["tail"].append(st)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    kern = params["embed"]["embedding"].T
+    logits = jnp.einsum("bsd,dv->bsv", x, kern.astype(cfg.compute_dtype))[:, 0]
+    return logits, new_state
+
+
+def input_specs(cfg, shape_cfg):
+    B, S = shape_cfg.global_batch, shape_cfg.seq_len
+    if shape_cfg.kind in ("train", "prefill"):
+        return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    return {"tokens": jax.ShapeDtypeStruct((B,), jnp.int32)}

@@ -1,0 +1,28 @@
+"""Model registry: family name -> module implementing the model protocol.
+
+Every model module exposes:
+  init(key, cfg) -> params
+  forward(params, batch, cfg) -> logits        (training / prefill)
+  loss(params, batch, cfg) -> (scalar, metrics)
+  init_decode_state(cfg, batch, max_len, dtype) -> state
+  decode_step(params, state, tokens, cfg) -> (logits, state)
+  input_specs(cfg, shape_cfg) -> dict of ShapeDtypeStruct  (for the dry-run)
+"""
+
+from __future__ import annotations
+
+from importlib import import_module
+
+_FAMILY_TO_MODULE = {
+    "dense": "repro.models.transformer",
+    "moe": "repro.models.transformer",
+    "hybrid": "repro.models.recurrentgemma",
+    "ssm": "repro.models.xlstm",
+    "audio": "repro.models.whisper",
+    "vlm": "repro.models.vlm",
+    "mlp": "repro.models.mlp",
+}
+
+
+def get_model(cfg):
+    return import_module(_FAMILY_TO_MODULE[cfg.family])

@@ -1,0 +1,239 @@
+"""Whisper-base: encoder-decoder transformer, conv frontend STUBBED.
+
+Per the assignment, ``input_specs()`` provides precomputed frame embeddings
+(B, encoder_seq, d_model) — the mel+conv frontend is out of scope. The
+encoder is bidirectional (LayerNorm, GELU); the decoder has causal self-attn
++ cross-attn to the encoder output. Decode shapes run the decoder with a
+static KV cache and precomputed cross-attention K/V held in the state.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import lshard
+from repro.models import layers as L
+
+
+def _sinusoids(length, channels):
+    half = channels // 2
+    t = jnp.arange(length)[:, None]
+    inv = jnp.exp(-math.log(10_000.0) * jnp.arange(half) / (half - 1))
+    ang = t * inv[None]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _xattn_init(key, cfg):
+    ks = jax.random.split(key, 4)
+    dh = cfg.head_dim_
+    return {
+        "wq": {"kernel": L.trunc_normal(ks[0], (cfg.d_model, cfg.num_heads, dh),
+                                        cfg.params_dtype)},
+        "wk": {"kernel": L.trunc_normal(ks[1], (cfg.d_model, cfg.num_kv_heads, dh),
+                                        cfg.params_dtype)},
+        "wv": {"kernel": L.trunc_normal(ks[2], (cfg.d_model, cfg.num_kv_heads, dh),
+                                        cfg.params_dtype)},
+        "wo": {"kernel": L.trunc_normal(ks[3], (cfg.num_heads, dh, cfg.d_model),
+                                        cfg.params_dtype)},
+    }
+
+
+def cross_kv(params, ctx):
+    k = jnp.einsum("btd,dhk->bthk", ctx, params["wk"]["kernel"].astype(ctx.dtype))
+    v = jnp.einsum("btd,dhk->bthk", ctx, params["wv"]["kernel"].astype(ctx.dtype))
+    return k, v
+
+
+def cross_attention(params, x, k, v):
+    """q from x (B,S,D); k/v precomputed from context (B,T,Hkv,dh)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"]["kernel"].astype(x.dtype))
+    out = L.flash_attention(q, k, v, causal=False, chunk=min(512, k.shape[1]))
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"]["kernel"].astype(x.dtype))
+
+
+def _enc_layer_init(key, cfg):
+    ka, km = jax.random.split(key)
+    return {
+        "attn_norm": L.layernorm_init(cfg.d_model, cfg.params_dtype),
+        "attn": L.attention_init(ka, cfg),
+        "mlp_norm": L.layernorm_init(cfg.d_model, cfg.params_dtype),
+        "mlp": L.mlp_init(km, cfg.d_model, cfg.d_ff, cfg.params_dtype, "gelu"),
+    }
+
+
+def _dec_layer_init(key, cfg):
+    ka, kx, km = jax.random.split(key, 3)
+    return {
+        "attn_norm": L.layernorm_init(cfg.d_model, cfg.params_dtype),
+        "attn": L.attention_init(ka, cfg),
+        "xattn_norm": L.layernorm_init(cfg.d_model, cfg.params_dtype),
+        "xattn": _xattn_init(kx, cfg),
+        "mlp_norm": L.layernorm_init(cfg.d_model, cfg.params_dtype),
+        "mlp": L.mlp_init(km, cfg.d_model, cfg.d_ff, cfg.params_dtype, "gelu"),
+    }
+
+
+def init(key, cfg) -> Dict[str, Any]:
+    ks = jax.random.split(key, 5)
+    n_enc = cfg.encoder_layers or cfg.num_layers
+    n_dec = cfg.decoder_layers or cfg.num_layers
+    enc = jax.vmap(lambda k: _enc_layer_init(k, cfg))(jax.random.split(ks[0], n_enc))
+    dec = jax.vmap(lambda k: _dec_layer_init(k, cfg))(jax.random.split(ks[1], n_dec))
+    return {
+        "enc_layers": enc,
+        "enc_norm": L.layernorm_init(cfg.d_model, cfg.params_dtype),
+        "dec_layers": dec,
+        "dec_norm": L.layernorm_init(cfg.d_model, cfg.params_dtype),
+        "embed": {
+            "embedding": L.trunc_normal(ks[2], (cfg.padded_vocab, cfg.d_model),
+                                        cfg.params_dtype)
+        },
+        "pos_embed": L.trunc_normal(ks[3], (cfg.max_target_positions, cfg.d_model),
+                                    cfg.params_dtype, std=0.01),
+    }
+
+
+def _mask_padded_vocab(logits, cfg):
+    if cfg.padded_vocab > cfg.vocab_size:
+        ids = jax.lax.broadcasted_iota(jnp.int32, (1, 1, cfg.padded_vocab), 2)
+        logits = jnp.where(ids < cfg.vocab_size, logits, -1e30)
+    return logits
+
+
+def encode(params, frames, cfg):
+    """frames: (B, T, D) stubbed embeddings -> encoder states."""
+    x = frames.astype(cfg.compute_dtype)
+    x = x + _sinusoids(x.shape[1], cfg.d_model).astype(x.dtype)
+    x = lshard(x, ("batch", "seq", "embed"))
+    positions = jnp.arange(x.shape[1])
+
+    def body(carry, layer):
+        y = carry
+        h = L.layernorm(layer["attn_norm"], y)
+        h = L.attention_layer(layer["attn"], h, cfg, positions=positions, causal=False)
+        y = y + h
+        h = L.layernorm(layer["mlp_norm"], y)
+        return y + L.mlp(layer["mlp"], h, "gelu"), ()
+
+    body = L.remat_block(body, cfg)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return L.layernorm(params["enc_norm"], x)
+
+
+def decode_train(params, tokens, enc_out, cfg):
+    x = jnp.take(params["embed"]["embedding"], tokens, axis=0).astype(cfg.compute_dtype)
+    S = tokens.shape[1]
+    pos = jnp.arange(S)
+    pe = jnp.take(params["pos_embed"], jnp.minimum(pos, params["pos_embed"].shape[0] - 1),
+                  axis=0)
+    x = x + pe.astype(x.dtype)
+    x = lshard(x, ("batch", "seq", "embed"))
+
+    def body(carry, layer):
+        y = carry
+        h = L.layernorm(layer["attn_norm"], y)
+        h = L.attention_layer(layer["attn"], h, cfg, positions=pos, causal=True)
+        y = y + h
+        h = L.layernorm(layer["xattn_norm"], y)
+        k, v = cross_kv(layer["xattn"], enc_out)
+        y = y + cross_attention(layer["xattn"], h, k, v)
+        h = L.layernorm(layer["mlp_norm"], y)
+        return y + L.mlp(layer["mlp"], h, "gelu"), ()
+
+    body = L.remat_block(body, cfg)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = L.layernorm(params["dec_norm"], x)
+    logits = jnp.einsum("bsd,vd->bsv", x,
+                        params["embed"]["embedding"].astype(cfg.compute_dtype))
+    logits = _mask_padded_vocab(logits, cfg)
+    return lshard(logits, ("batch", "seq", "vocab"))
+
+
+def forward(params, batch, cfg):
+    enc_out = encode(params, batch["frames"], cfg)
+    return decode_train(params, batch["tokens"], enc_out, cfg), jnp.zeros(())
+
+
+def loss(params, batch, cfg):
+    from repro.models.transformer import lm_loss
+
+    logits, aux = forward(params, batch, cfg)
+    return lm_loss(logits, batch["tokens"], aux, real_vocab=cfg.vocab_size)
+
+
+# --- serving ----------------------------------------------------------------
+
+
+def init_decode_state(cfg, batch, max_len, dtype):
+    n_dec = cfg.decoder_layers or cfg.num_layers
+    dh = cfg.head_dim_
+    self_cache = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n_dec,) + a.shape),
+        L.attention_cache_init(cfg, batch, max_len, dtype),
+    )
+    T = cfg.encoder_seq
+    cross = {
+        "k": jnp.zeros((n_dec, batch, T, cfg.num_kv_heads, dh), dtype),
+        "v": jnp.zeros((n_dec, batch, T, cfg.num_kv_heads, dh), dtype),
+    }
+    return {"self": self_cache, "cross": cross, "pos": jnp.zeros((batch,), jnp.int32)}
+
+
+def prefill_cross(params, state, frames, cfg):
+    """Run the encoder once and fill the cross-attention K/V."""
+    enc_out = encode(params, frames, cfg)
+
+    def body(_, layer):
+        k, v = cross_kv(layer["xattn"], enc_out)
+        return (), (k, v)
+
+    _, (ks, vs) = jax.lax.scan(body, (), params["dec_layers"])
+    state = dict(state)
+    state["cross"] = {"k": ks, "v": vs}
+    return state
+
+
+def decode_step(params, state, tokens, cfg):
+    pos = state["pos"]
+    x = jnp.take(params["embed"]["embedding"], tokens[:, None], axis=0).astype(cfg.compute_dtype)
+    pe = jnp.take(params["pos_embed"],
+                  jnp.minimum(pos, params["pos_embed"].shape[0] - 1), axis=0)
+    x = x + pe[:, None].astype(x.dtype)
+
+    def body(carry, layer_and_cache):
+        y = carry
+        layer, sc, ck, cv = layer_and_cache
+        h = L.layernorm(layer["attn_norm"], y)
+        h, new_sc = L.attention_decode(layer["attn"], h, sc, pos, cfg, use_rope=False)
+        y = y + h
+        h = L.layernorm(layer["xattn_norm"], y)
+        q = jnp.einsum("bsd,dhk->bshk", h, layer["xattn"]["wq"]["kernel"].astype(h.dtype))
+        o = L.cached_attention(layer["xattn"], q, ck, cv, pos, mask_by_pos=False)
+        y = y + o
+        h = L.layernorm(layer["mlp_norm"], y)
+        return y + L.mlp(layer["mlp"], h, "gelu"), new_sc
+
+    x, new_self = jax.lax.scan(
+        body, x, (params["dec_layers"], state["self"],
+                  state["cross"]["k"], state["cross"]["v"])
+    )
+    x = L.layernorm(params["dec_norm"], x)
+    logits = jnp.einsum("bsd,vd->bsv", x,
+                        params["embed"]["embedding"].astype(cfg.compute_dtype))
+    logits = _mask_padded_vocab(logits, cfg)[:, 0]
+    return logits, {"self": new_self, "cross": state["cross"], "pos": pos + 1}
+
+
+def input_specs(cfg, shape_cfg):
+    B, S = shape_cfg.global_batch, shape_cfg.seq_len
+    if shape_cfg.kind in ("train", "prefill"):
+        return {
+            "frames": jax.ShapeDtypeStruct((B, cfg.encoder_seq, cfg.d_model),
+                                           cfg.compute_dtype),
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+    return {"tokens": jax.ShapeDtypeStruct((B,), jnp.int32)}

@@ -1,0 +1,384 @@
+"""xLSTM: mLSTM (matrix memory, chunkwise-parallel) + sLSTM (scalar memory,
+scanned) blocks (Beck et al., arXiv:2405.04517).
+
+The 24 blocks of xlstm-350m follow the (m, m, m, s) pattern. ``d_ff = 0``:
+there is no separate FFN — the cells carry their own up/down projections.
+
+mLSTM runs in a *chunkwise* form (chunk = 128): intra-chunk attention-like
+quadratic over the chunk + inter-chunk recurrent state ``(C, n, m)`` per head,
+with running exp-gating stabilizer ``m``. O(S) time/memory: this arch runs the
+``long_500k`` cell. Decode carries the same (C, n, m) — no KV cache growth.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import lshard
+from repro.models import layers as L
+
+NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell — chunkwise parallel
+# ---------------------------------------------------------------------------
+
+
+def mlstm_cell_init(key, d_in, num_heads, dtype):
+    dh = d_in // num_heads
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": {"kernel": L.trunc_normal(ks[0], (d_in, num_heads, dh), dtype)},
+        "wk": {"kernel": L.trunc_normal(ks[1], (d_in, num_heads, dh), dtype)},
+        "wv": {"kernel": L.trunc_normal(ks[2], (d_in, num_heads, dh), dtype)},
+        "w_igate": L.dense_init(ks[3], d_in, num_heads, dtype, bias=True),
+        "w_fgate": L.dense_init(ks[4], d_in, num_heads, dtype, bias=True),
+        "out_norm": {"scale": jnp.ones((num_heads, dh), dtype)},
+    }
+
+
+def _mlstm_qkvif(params, x, num_heads):
+    dt = jnp.float32
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"]["kernel"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"]["kernel"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"]["kernel"].astype(x.dtype))
+    i_log = L.dense(params["w_igate"], x).astype(dt)  # (B,S,H) input gate (log-space)
+    f_logsig = jax.nn.log_sigmoid(L.dense(params["w_fgate"], x).astype(dt) + 3.0)
+    dh = q.shape[-1]
+    q = q / math.sqrt(dh)
+    return q, k, v, i_log, f_logsig
+
+
+def mlstm_chunked(params, x, num_heads, chunk=128):
+    """x: (B, S, D) -> (B, S, D). S must be a multiple of chunk (pad if not)."""
+    B, S, D = x.shape
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    Sp = x.shape[1]
+    n = Sp // chunk
+    q, k, v, i_log, f_log = _mlstm_qkvif(params, x, num_heads)
+    H, dh = q.shape[2], q.shape[3]
+
+    # reshape to chunks: (n, B, T, H, ...)
+    def toc(a):
+        return jnp.moveaxis(a.reshape(B, n, chunk, *a.shape[2:]), 1, 0)
+
+    qc, kc, vc, ic, fc = map(toc, (q, k, v, i_log, f_log))
+
+    def step(carry, inp):
+        C, nrm, m = carry  # (B,H,dk,dv), (B,H,dk), (B,H)
+        qt, kt, vt, it, ft = inp  # (B,T,H,*)
+        qt32 = qt.astype(jnp.float32)
+        kt32 = kt.astype(jnp.float32)
+        b = jnp.cumsum(ft, axis=1)  # (B,T,H) cumulative log-forget within chunk
+        btot = b[:, -1]  # (B,H)
+        # log weight of step s's kv contribution at end of chunk
+        w_end = btot[:, None] - b + it  # (B,T,H)
+        m_chunk = jnp.maximum(btot + m, w_end.max(axis=1))  # (B,H)
+        # state update
+        scale_prev = jnp.exp(btot + m - m_chunk)  # (B,H)
+        wk = jnp.exp(w_end - m_chunk[:, None])  # (B,T,H)
+        C_new = scale_prev[:, :, None, None] * C + jnp.einsum(
+            "bth,bthk,bthv->bhkv", wk, kt32, vt.astype(jnp.float32)
+        )
+        n_new = scale_prev[:, :, None] * nrm + jnp.einsum("bth,bthk->bhk", wk, kt32)
+        # outputs within chunk: inter (from C) + intra (masked quadratic)
+        w_q = b + m[:, None, :]  # (B,T,H) log weight of C_prev contribution
+        s_intra = b[:, :, None, :] - b[:, None, :, :] + it[:, None, :, :]  # (B,T,S,H)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        s_intra = jnp.where(tri[None, :, :, None], s_intra, NEG)
+        m_row = jnp.maximum(w_q, s_intra.max(axis=2))  # (B,T,H)
+        d_intra = jnp.exp(s_intra - m_row[:, :, None, :])  # (B,T,S,H)
+        qk = jnp.einsum("bthk,bshk->btsh", qt32, kt32)
+        h_intra = jnp.einsum("btsh,btsh,bshv->bthv", qk, d_intra, vt.astype(jnp.float32))
+        h_inter = jnp.exp(w_q - m_row)[..., None] * jnp.einsum(
+            "bthk,bhkv->bthv", qt32, C
+        )
+        qn_intra = jnp.einsum("btsh,btsh->bth", qk, d_intra)
+        qn_inter = jnp.exp(w_q - m_row) * jnp.einsum("bthk,bhk->bth", qt32, nrm)
+        denom = jnp.maximum(jnp.abs(qn_intra + qn_inter), jnp.exp(-m_row))
+        h = (h_intra + h_inter) / denom[..., None]
+        return (C_new, n_new, m_chunk), h.astype(x.dtype)
+
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.zeros((B, H), jnp.float32)
+    (_, _, _), hs = jax.lax.scan(step, (C0, n0, m0), (qc, kc, vc, ic, fc))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, Sp, H, dh)
+    h = h * _headnorm(params["out_norm"], h)
+    h = h.reshape(B, Sp, D)
+    return h[:, :S] if pad else h
+
+
+def _headnorm(p, h):
+    # per-head RMS normalization of outputs (xLSTM GroupNorm analogue)
+    var = jnp.mean(h.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
+    return (jax.lax.rsqrt(var + 1e-6) * p["scale"].astype(jnp.float32)).astype(h.dtype)
+
+
+def mlstm_step(params, x, state, num_heads):
+    """Decode step. x: (B, 1, D); state: (C, n, m)."""
+    q, k, v, i_log, f_log = _mlstm_qkvif(params, x, num_heads)
+    C, nrm, m = state
+    qt = q[:, 0].astype(jnp.float32)  # (B,H,dk)
+    kt = k[:, 0].astype(jnp.float32)
+    vt = v[:, 0].astype(jnp.float32)
+    it, ft = i_log[:, 0], f_log[:, 0]  # (B,H)
+    m_new = jnp.maximum(ft + m, it)
+    fs = jnp.exp(ft + m - m_new)
+    is_ = jnp.exp(it - m_new)
+    C_new = fs[:, :, None, None] * C + is_[:, :, None, None] * (
+        kt[:, :, :, None] * vt[:, :, None, :]
+    )
+    n_new = fs[:, :, None] * nrm + is_[:, :, None] * kt
+    num = jnp.einsum("bhk,bhkv->bhv", qt, C_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qt, n_new)), jnp.exp(-m_new))
+    h = (num / den[..., None])[:, None]  # (B,1,H,dv)
+    h = h * _headnorm(params["out_norm"], h)
+    B, _, H, dh = h.shape
+    return h.reshape(B, 1, H * dh).astype(x.dtype), (C_new, n_new, m_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM cell — scanned scalar memory with block-diagonal recurrence
+# ---------------------------------------------------------------------------
+
+
+def slstm_cell_init(key, d, num_heads, dtype):
+    dh = d // num_heads
+    ks = jax.random.split(key, 8)
+    gates = {}
+    for name, kk in zip(("z", "i", "f", "o"), ks[:4]):
+        gates[f"w_{name}"] = L.dense_init(kk, d, d, dtype, bias=True)
+    for name, kk in zip(("z", "i", "f", "o"), ks[4:]):
+        gates[f"r_{name}"] = L.trunc_normal(kk, (num_heads, dh, dh), dtype,
+                                            std=1.0 / math.sqrt(dh))
+    gates["out_norm"] = {"scale": jnp.ones((num_heads, dh), dtype)}
+    return gates
+
+
+def slstm(params, x, num_heads, state=None):
+    """x: (B, S, D) -> (B, S, D); lax.scan over time."""
+    B, S, D = x.shape
+    dh = D // num_heads
+    wx = {
+        g: L.dense(params[f"w_{g}"], x).astype(jnp.float32)
+        for g in ("z", "i", "f", "o")
+    }  # each (B,S,D)
+
+    def rmat(g, h):  # block-diagonal recurrent matmul
+        hh = h.reshape(B, num_heads, dh)
+        return jnp.einsum("bhk,hkj->bhj", hh, params[f"r_{g}"].astype(jnp.float32)).reshape(B, D)
+
+    def step(carry, inp):
+        c, n, m, h = carry
+        xz, xi, xf, xo = inp
+        z = jnp.tanh(xz + rmat("z", h))
+        it = xi + rmat("i", h)
+        ft = jax.nn.log_sigmoid(xf + rmat("f", h) + 3.0)
+        o = jax.nn.sigmoid(xo + rmat("o", h))
+        m_new = jnp.maximum(ft + m, it)
+        i_ = jnp.exp(it - m_new)
+        f_ = jnp.exp(ft + m - m_new)
+        c_new = f_ * c + i_ * z
+        n_new = jnp.maximum(f_ * n + i_, 1.0)
+        h_new = o * (c_new / n_new)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    if state is None:
+        z0 = jnp.zeros((B, D), jnp.float32)
+        state = (z0, jnp.ones((B, D), jnp.float32), z0, z0)
+    xs = tuple(jnp.moveaxis(wx[g], 1, 0) for g in ("z", "i", "f", "o"))
+    state_out, hs = jax.lax.scan(step, state, xs)
+    h = jnp.moveaxis(hs, 0, 1)  # (B,S,D)
+    hh = h.reshape(B, S, num_heads, dh)
+    hh = hh * _headnorm(params["out_norm"], hh)
+    return hh.reshape(B, S, D).astype(x.dtype), state_out
+
+
+# ---------------------------------------------------------------------------
+# blocks & model
+# ---------------------------------------------------------------------------
+
+
+def _mblock_init(key, cfg):
+    from repro.models.recurrentgemma import conv1d_init
+
+    d = cfg.d_model
+    up = 2 * d
+    ks = jax.random.split(key, 5)
+    return {
+        "norm": L.rmsnorm_init(d, cfg.params_dtype),
+        "up": L.dense_init(ks[0], d, 2 * up, cfg.params_dtype),
+        "conv": conv1d_init(ks[1], up, 4, cfg.params_dtype),
+        "cell": mlstm_cell_init(ks[2], up, cfg.num_heads, cfg.params_dtype),
+        "down": L.dense_init(ks[3], up, d, cfg.params_dtype),
+    }
+
+
+def _sblock_init(key, cfg):
+    d = cfg.d_model
+    ks = jax.random.split(key, 2)
+    return {
+        "norm": L.rmsnorm_init(d, cfg.params_dtype),
+        "cell": slstm_cell_init(ks[0], d, cfg.num_heads, cfg.params_dtype),
+        "proj": L.dense_init(ks[1], d, d, cfg.params_dtype),
+    }
+
+
+def _mblock(params, x, cfg, chunk=128):
+    from repro.models.recurrentgemma import causal_conv1d
+
+    h = L.rmsnorm(params["norm"], x, cfg.norm_eps)
+    u = L.dense(params["up"], h)
+    a, gate = jnp.split(u, 2, axis=-1)
+    a = jax.nn.silu(causal_conv1d(params["conv"], a))
+    a = mlstm_chunked(params["cell"], a, cfg.num_heads, chunk=chunk)
+    a = a * jax.nn.silu(gate)
+    return x + L.dense(params["down"], a)
+
+
+def _sblock(params, x, cfg):
+    h = L.rmsnorm(params["norm"], x, cfg.norm_eps)
+    h, _ = slstm(params["cell"], h, cfg.num_heads)
+    return x + L.dense(params["proj"], h)
+
+
+def init(key, cfg) -> Dict[str, Any]:
+    pat = cfg.block_pattern or ("m", "m", "m", "s")
+    n_super, n_rem = divmod(cfg.num_layers, len(pat))
+    assert n_rem == 0, "xlstm layer count must tile the block pattern"
+    keys = jax.random.split(key, 3)
+
+    def one_super(k):
+        ks = jax.random.split(k, len(pat))
+        return {
+            str(i): (_mblock_init(kk, cfg) if kind == "m" else _sblock_init(kk, cfg))
+            for i, (kk, kind) in enumerate(zip(ks, pat))
+        }
+
+    supers = jax.vmap(one_super)(jax.random.split(keys[0], n_super))
+    return {
+        "embed": {
+            "embedding": L.trunc_normal(keys[1], (cfg.padded_vocab, cfg.d_model),
+                                        cfg.params_dtype)
+        },
+        "supers": supers,
+        "final_norm": L.rmsnorm_init(cfg.d_model, cfg.params_dtype),
+        "lm_head": {
+            "kernel": L.trunc_normal(keys[2], (cfg.d_model, cfg.padded_vocab),
+                                     cfg.params_dtype)
+        },
+    }
+
+
+def backbone(params, x, cfg, positions=None):
+    pat = cfg.block_pattern or ("m", "m", "m", "s")
+
+    def body(carry, superblock):
+        y = carry
+        for i, kind in enumerate(pat):
+            y = _mblock(superblock[str(i)], y, cfg) if kind == "m" else _sblock(
+                superblock[str(i)], y, cfg
+            )
+            y = lshard(y, ("batch", "seq", "embed"))
+        return y, ()
+
+    body = L.remat_block(body, cfg)
+    x, _ = jax.lax.scan(body, x, params["supers"])
+    return L.rmsnorm(params["final_norm"], x, cfg.norm_eps), jnp.zeros(())
+
+
+def forward(params, batch, cfg):
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"]["embedding"], tokens, axis=0).astype(cfg.compute_dtype)
+    x = lshard(x, ("batch", "seq", "embed"))
+    x, aux = backbone(params, x, cfg, None)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"]["kernel"].astype(cfg.compute_dtype))
+    return lshard(logits, ("batch", "seq", "vocab")), aux
+
+
+def loss(params, batch, cfg):
+    from repro.models.transformer import lm_loss
+
+    logits, aux = forward(params, batch, cfg)
+    return lm_loss(logits, batch["tokens"], aux, real_vocab=cfg.vocab_size)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg, batch, max_len, dtype):
+    pat = cfg.block_pattern or ("m", "m", "m", "s")
+    n_super = cfg.num_layers // len(pat)
+    d = cfg.d_model
+    H = cfg.num_heads
+    per = {}
+    for i, kind in enumerate(pat):
+        if kind == "m":
+            up = 2 * d
+            dh = up // H
+            per[str(i)] = {
+                "conv": jnp.zeros((batch, 3, up), dtype),
+                "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+                "n": jnp.zeros((batch, H, dh), jnp.float32),
+                "m": jnp.zeros((batch, H), jnp.float32),
+            }
+        else:
+            z = jnp.zeros((batch, d), jnp.float32)
+            per[str(i)] = {"c": z, "n": jnp.ones_like(z), "m": z, "h": z}
+    supers = jax.tree.map(lambda a: jnp.broadcast_to(a, (n_super,) + a.shape), per)
+    return {"supers": supers, "pos": jnp.zeros((batch,), jnp.int32)}
+
+
+def decode_step(params, state, tokens, cfg):
+    from repro.models.recurrentgemma import causal_conv1d_step
+
+    pat = cfg.block_pattern or ("m", "m", "m", "s")
+    x = jnp.take(params["embed"]["embedding"], tokens[:, None], axis=0).astype(cfg.compute_dtype)
+
+    def body(carry, layer_and_state):
+        y = carry
+        layer, st = layer_and_state
+        new_st = {}
+        for i, kind in enumerate(pat):
+            li, si = layer[str(i)], st[str(i)]
+            if kind == "m":
+                h = L.rmsnorm(li["norm"], y, cfg.norm_eps)
+                u = L.dense(li["up"], h)
+                a, gate = jnp.split(u, 2, axis=-1)
+                a, conv_w = causal_conv1d_step(li["conv"], a, si["conv"])
+                a = jax.nn.silu(a)
+                a, (C, n, m) = mlstm_step(li["cell"], a, (si["C"], si["n"], si["m"]),
+                                          cfg.num_heads)
+                a = a * jax.nn.silu(gate)
+                y = y + L.dense(li["down"], a)
+                new_st[str(i)] = {"conv": conv_w, "C": C, "n": n, "m": m}
+            else:
+                h = L.rmsnorm(li["norm"], y, cfg.norm_eps)
+                hseq, st_out = slstm(li["cell"], h, cfg.num_heads,
+                                     state=(si["c"], si["n"], si["m"], si["h"]))
+                y = y + L.dense(li["proj"], hseq)
+                c, n, m, hh = st_out
+                new_st[str(i)] = {"c": c, "n": n, "m": m, "h": hh}
+        return y, new_st
+
+    x, new_supers = jax.lax.scan(body, x, (params["supers"], state["supers"]))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"]["kernel"].astype(cfg.compute_dtype))[:, 0]
+    return logits, {"supers": new_supers, "pos": state["pos"] + 1}
+
+
+def input_specs(cfg, shape_cfg):
+    B, S = shape_cfg.global_batch, shape_cfg.seq_len
+    if shape_cfg.kind in ("train", "prefill"):
+        return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    return {"tokens": jax.ShapeDtypeStruct((B,), jnp.int32)}

@@ -1,0 +1,51 @@
+"""Int8 gradient compression with error feedback.
+
+Two entry points:
+
+* :func:`compress_decompress` — the optimizer-level transform: quantize each
+  gradient leaf to int8 (per-tensor absmax scale), keep the quantization
+  residual in an error-feedback buffer that is added back next step. This is
+  the numerical effect of transmitting int8 gradients; unbiased over time
+  thanks to error feedback (1-bit-Adam family).
+* ``distributed.collectives.compressed_psum`` — the matching shard_map
+  collective that actually moves int8 across the 'pod' axis (4x fewer bytes
+  than bf16, 8x fewer than fp32 on the slow inter-pod links).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def quantize_int8(x):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_decompress(grads, ef_state):
+    """Apply int8 quantize->dequantize with error feedback.
+
+    Returns (grads_out, new_ef_state). grads_out is what the optimizer sees
+    (== what the receiving pods would reconstruct).
+    """
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, s = quantize_int8(g32)
+        deq = dequantize_int8(q, s)
+        return deq.astype(g.dtype), g32 - deq
+
+    out = jax.tree.map(one, grads, ef_state)
+    g_out = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    e_out = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    return g_out, e_out

@@ -1,0 +1,154 @@
+"""Continuous-batching serving engine.
+
+Every model keeps *per-slot* positions in its decode state, so requests join
+and leave the batch at any step (vLLM-style continuous batching at token
+granularity, without paging):
+
+* a free slot admits the next queued request by resetting that slot's state
+  slice (position -> 0, recurrent states -> 0; stale KV entries are masked by
+  ``k_pos <= pos`` so they never need zeroing);
+* prefill is piggybacked on the decode step: a prefilling slot feeds its next
+  prompt token while generating slots feed their last sampled token;
+* a slot finishes on EOS or ``max_new_tokens`` and frees immediately.
+
+One jit'd ``decode_step`` serves the whole fleet of slots each step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    # filled by the engine:
+    output: List[int] = dataclasses.field(default_factory=list)
+    submitted_at: float = 0.0
+    finished_at: Optional[float] = None
+
+
+class _Slot:
+    __slots__ = ("req", "prefill_ix", "generated", "last_token")
+
+    def __init__(self, req: Request):
+        self.req = req
+        self.prefill_ix = 0  # next prompt token to feed
+        self.generated = 0
+        self.last_token = req.prompt[0]
+
+
+class ServeEngine:
+    def __init__(self, model, params, cfg, *, max_batch: int, max_len: int,
+                 greedy: bool = True, context_state=None):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.greedy = greedy
+        self.state = (
+            context_state
+            if context_state is not None
+            else model.init_decode_state(cfg, max_batch, max_len, cfg.compute_dtype)
+        )
+        self.slots: List[Optional[_Slot]] = [None] * max_batch
+        self.queue: List[Request] = []
+        self.done: Dict[int, Request] = {}
+        self.steps = 0
+        self.tokens_processed = 0
+        self._step_fn = jax.jit(
+            lambda params, state, toks: model.decode_step(params, state, toks, cfg)
+        )
+
+    # --- client API ---------------------------------------------------------
+
+    def submit(self, req: Request):
+        req.submitted_at = time.perf_counter()
+        self.queue.append(req)
+
+    def run_until_done(self, max_steps: int = 100_000):
+        while (self.queue or any(self.slots)) and self.steps < max_steps:
+            self.step()
+        return self.done
+
+    # --- internals ----------------------------------------------------------
+
+    def _reset_slot_state(self, b: int):
+        """Zero slot b's state slice and its position (stale KV is masked)."""
+
+        def zero_slot(leaf):
+            if getattr(leaf, "ndim", 0) >= 2:
+                return leaf.at[:, b].set(0) if leaf.shape[0] != self.max_batch \
+                    else leaf.at[b].set(0)
+            return leaf
+
+        # states are stacked (layers, B, ...) or flat (B, ...); 'pos' is (B,)
+        st = dict(self.state)
+        pos = st.pop("pos")
+        st = jax.tree.map(zero_slot, st)
+        st["pos"] = pos.at[b].set(0)
+        self.state = st
+
+    def _admit(self):
+        for b in range(self.max_batch):
+            if self.slots[b] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[b] = _Slot(req)
+                self._reset_slot_state(b)
+
+    def step(self):
+        self._admit()
+        if not any(self.slots):
+            return
+        toks = np.zeros((self.max_batch,), np.int32)
+        for b, slot in enumerate(self.slots):
+            if slot is None:
+                continue
+            if slot.prefill_ix < len(slot.req.prompt):
+                toks[b] = slot.req.prompt[slot.prefill_ix]
+            else:
+                toks[b] = slot.last_token
+        logits, self.state = self._step_fn(self.params, self.state, jnp.asarray(toks))
+        sampled = np.asarray(jnp.argmax(logits, axis=-1))
+        self.steps += 1
+
+        for b, slot in enumerate(self.slots):
+            if slot is None:
+                continue
+            self.tokens_processed += 1
+            if slot.prefill_ix < len(slot.req.prompt) - 1:
+                slot.prefill_ix += 1  # still prefilling; ignore logits
+                continue
+            # this step consumed the last prompt token (or a generated one):
+            slot.prefill_ix = len(slot.req.prompt)
+            tok = int(sampled[b])
+            slot.req.output.append(tok)
+            slot.last_token = tok
+            slot.generated += 1
+            eos = slot.req.eos_id is not None and tok == slot.req.eos_id
+            if eos or slot.generated >= slot.req.max_new_tokens:
+                slot.req.finished_at = time.perf_counter()
+                self.done[slot.req.rid] = slot.req
+                self.slots[b] = None
+
+    # --- metrics -------------------------------------------------------------
+
+    def stats(self):
+        lat = [r.finished_at - r.submitted_at for r in self.done.values()
+               if r.finished_at]
+        return {
+            "steps": self.steps,
+            "tokens": self.tokens_processed,
+            "completed": len(self.done),
+            "mean_latency_s": float(np.mean(lat)) if lat else None,
+        }

@@ -1,0 +1,214 @@
+"""Fault-tolerant training loop + pjit train-step builder.
+
+Features (designed for 1000+ nodes, exercised here on host devices):
+
+* pjit train step with donated params/opt-state, FSDP+TP shardings from
+  ``distributed.sharding``, optional microbatch gradient accumulation
+  (lax.scan), optional int8 error-feedback gradient compression.
+* checkpoint/restart: step-versioned atomic checkpoints (async writer),
+  auto-resume from the latest step; deterministic data stream keyed by step
+  so restarts are exact.
+* preemption handling: SIGTERM triggers a final synchronous save.
+* straggler monitor: per-step wall-time EWMA; steps slower than
+  ``straggler_factor`` x EWMA are logged with a re-dispatch hook (on real
+  fleets this triggers slice replacement; here it records the event).
+* elastic restore: checkpoints are mesh-agnostic; restore re-shards onto the
+  current mesh (scale up/down between runs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from functools import partial
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import checkpoint as ckpt_lib
+from repro.distributed import sharding as shd
+from repro.optim import adamw_init, adamw_update, warmup_cosine
+from repro.optim.compression import compress_decompress, ef_init
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    max_grad_norm: float = 1.0
+    grad_accum: int = 1
+    moment_dtype: str = "float32"  # bfloat16 halves optimizer HBM
+    accum_dtype: str = "float32"  # grad-accumulation buffer dtype
+    compress_grads: bool = False
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 200
+    straggler_factor: float = 3.0
+    seed: int = 0
+
+
+def build_train_step(loss_fn: Callable, tcfg: TrainConfig, grad_shardings=None):
+    """loss_fn(params, batch) -> (scalar, metrics). Returns step fn:
+    (params, opt_state, batch, step) -> (params, opt_state, metrics).
+
+    ``grad_shardings`` (pytree of NamedSharding matching params) pins the
+    gradient / accumulation-carry layout to the parameter layout — without it
+    GSPMD keeps accumulated grads replicated over the FSDP axes, which blows
+    per-device HBM by the data-axis extent on 100B+ models.
+    """
+
+    def constrain(grads):
+        if grad_shardings is None:
+            return grads
+        return jax.tree.map(jax.lax.with_sharding_constraint, grads, grad_shardings)
+
+    def grads_of(params, batch):
+        (l, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return constrain(grads), l, metrics
+
+    def train_step(params, opt_state, batch, step):
+        if tcfg.grad_accum > 1:
+            micro = jax.tree.map(
+                lambda x: x.reshape((tcfg.grad_accum, x.shape[0] // tcfg.grad_accum)
+                                    + x.shape[1:]),
+                batch,
+            )
+
+            adt = jnp.dtype(tcfg.accum_dtype)
+
+            def acc(carry, mb):
+                g_acc, l_acc = carry
+                g, l, _ = grads_of(params, mb)
+                g = jax.tree.map(lambda a, b: a + b.astype(adt), g_acc, g)
+                return (constrain(g), l_acc + l), ()
+
+            zeros = constrain(
+                jax.tree.map(lambda p: jnp.zeros(p.shape, adt), params)
+            )
+            (grads, l), _ = jax.lax.scan(acc, (zeros, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / tcfg.grad_accum, grads)
+            l = l / tcfg.grad_accum
+            metrics = {}
+        else:
+            grads, l, metrics = grads_of(params, batch)
+
+        if tcfg.compress_grads:
+            grads, opt_state_ef = compress_decompress(grads, opt_state["ef"])
+        lr = warmup_cosine(step, peak_lr=tcfg.peak_lr, warmup_steps=tcfg.warmup_steps,
+                           total_steps=tcfg.total_steps)
+        params, inner, om = adamw_update(
+            grads, opt_state["adam"], params, lr,
+            weight_decay=tcfg.weight_decay, max_grad_norm=tcfg.max_grad_norm,
+        )
+        new_opt = {"adam": inner}
+        if tcfg.compress_grads:
+            new_opt["ef"] = opt_state_ef
+        out_metrics = {"loss": l, "lr": lr, **om, **metrics}
+        return params, new_opt, out_metrics
+
+    return train_step
+
+
+def init_opt_state(params, tcfg: TrainConfig):
+    state = {"adam": adamw_init(params, moment_dtype=jnp.dtype(tcfg.moment_dtype))}
+    if tcfg.compress_grads:
+        state["ef"] = ef_init(params)
+    return state
+
+
+class Trainer:
+    """Single-controller fault-tolerant loop."""
+
+    def __init__(self, loss_fn, params, tcfg: TrainConfig, mesh=None,
+                 param_shardings=None, batch_fn: Callable[[int], Any] = None):
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.batch_fn = batch_fn
+        self.params = params
+        self.opt_state = init_opt_state(params, tcfg)
+        self.step = 0
+        self._preempted = False
+        self._step_ewma = None
+        self.straggler_events = []
+
+        step_fn = build_train_step(loss_fn, tcfg)
+        donate = (0, 1)
+        if mesh is not None and param_shardings is not None:
+            self._jit_step = jax.jit(
+                step_fn,
+                donate_argnums=donate,
+                in_shardings=(param_shardings,
+                              jax.tree.map(lambda _: None, self.opt_state),
+                              None, None),
+            )
+        else:
+            self._jit_step = jax.jit(step_fn, donate_argnums=donate)
+
+        try:  # preemption hook (not available in some embedded interpreters)
+            signal.signal(signal.SIGTERM, self._on_sigterm)
+        except ValueError:
+            pass
+
+    # --- fault tolerance ---------------------------------------------------
+
+    def _on_sigterm(self, *_):
+        self._preempted = True
+
+    def maybe_restore(self):
+        d = self.tcfg.ckpt_dir
+        if not d:
+            return False
+        last = ckpt_lib.latest_step(d)
+        if last is None:
+            return False
+        tree = {"params": self.params, "opt": self.opt_state}
+        restored, extra = ckpt_lib.restore(d, last, tree)
+        self.params, self.opt_state = restored["params"], restored["opt"]
+        self.step = int(extra.get("step", last))
+        return True
+
+    def save(self, synchronous=False):
+        d = self.tcfg.ckpt_dir
+        if not d:
+            return
+        tree = {"params": self.params, "opt": self.opt_state}
+        extra = {"step": self.step}
+        if synchronous:
+            ckpt_lib.save(d, self.step, tree, extra)
+        else:
+            ckpt_lib.save_async(d, self.step, tree, extra)
+
+    def _monitor(self, dt):
+        if self._step_ewma is None:
+            self._step_ewma = dt
+        if dt > self.tcfg.straggler_factor * self._step_ewma and self.step > 3:
+            self.straggler_events.append((self.step, dt, self._step_ewma))
+        self._step_ewma = 0.9 * self._step_ewma + 0.1 * dt
+
+    # --- main loop ----------------------------------------------------------
+
+    def run(self, num_steps: int, log_every: int = 50, log_fn=print):
+        history = []
+        while self.step < num_steps and not self._preempted:
+            t0 = time.perf_counter()
+            batch = self.batch_fn(self.step)
+            self.params, self.opt_state, metrics = self._jit_step(
+                self.params, self.opt_state, batch, jnp.asarray(self.step)
+            )
+            jax.block_until_ready(metrics["loss"])
+            self._monitor(time.perf_counter() - t0)
+            self.step += 1
+            if self.step % log_every == 0 or self.step == num_steps:
+                m = {k: float(v) for k, v in metrics.items()}
+                history.append({"step": self.step, **m})
+                log_fn(f"step {self.step}: " +
+                       " ".join(f"{k}={v:.4g}" for k, v in m.items()))
+            if self.tcfg.ckpt_dir and self.step % self.tcfg.ckpt_every == 0:
+                self.save()
+        if self._preempted:
+            self.save(synchronous=True)  # graceful preemption save
+        ckpt_lib.wait_for_saves()
+        return history

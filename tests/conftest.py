@@ -1,0 +1,5 @@
+import os
+
+# Tests run single-device (the multi-pod dry-run manages its own device
+# count inside launch/dryrun.py; distributed tests spawn subprocesses).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

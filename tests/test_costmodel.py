@@ -1,0 +1,64 @@
+"""The scan-exact jaxpr cost model that backs the roofline analysis."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.costmodel import (collective_bytes_scaled,
+                                    computation_multipliers, jaxpr_cost,
+                                    traced_cost)
+
+
+def test_dot_general_flops_exact():
+    f = lambda a, b: a @ b
+    a = jnp.zeros((64, 128))
+    b = jnp.zeros((128, 32))
+    c = traced_cost(f, a, b)
+    assert c["flops"] == 2 * 64 * 128 * 32
+    assert c["bytes"] == (64 * 128 + 128 * 32 + 64 * 32) * 4
+
+
+def test_scan_multiplies_body():
+    W = jnp.zeros((32, 32))
+
+    def f(x):
+        def body(c, _):
+            return jnp.tanh(c @ W), ()
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+
+    c1 = traced_cost(f, jnp.zeros((8, 32)))
+    # one iteration:
+    g = lambda x: jnp.tanh(x @ W)
+    c0 = traced_cost(g, jnp.zeros((8, 32)))
+    assert abs(c1["flops"] - 10 * c0["flops"]) / c1["flops"] < 1e-6
+
+
+def test_grad_of_remat_counts_recompute():
+    W = jnp.zeros((16, 16))
+
+    def body(x):
+        return jnp.tanh(x @ W).sum()
+
+    plain = traced_cost(jax.grad(body), jnp.zeros((4, 16)))
+    remat = traced_cost(jax.grad(jax.checkpoint(body)), jnp.zeros((4, 16)))
+    assert remat["flops"] >= plain["flops"]  # recompute visible
+
+
+def test_while_trip_count_heuristic():
+    hlo = """
+ENTRY %main (p: f32[8]) -> f32[8] {
+  %w = (s32[], f32[8]) while(%t), condition=%cond.1, body=%body.2
+}
+%cond.1 (arg: (s32[], f32[8])) -> pred[] {
+  %c = s32[] constant(28)
+  %lt = pred[] compare(%i, %c), direction=LT
+}
+%body.2 (arg: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %ar = f32[8]{0} all-reduce(%x), to_apply=%sum.3
+}
+"""
+    mult = computation_multipliers(hlo)
+    assert mult.get("body.2") == 28
+    per_kind, _ = collective_bytes_scaled(hlo)
+    assert per_kind["all-reduce"] == 28 * 8 * 4

@@ -1,0 +1,190 @@
+"""PDE operators (sections 3.2/3.3): every method against dense-derivative
+ground truth; stochastic estimators against their exact targets; Griewank
+interpolation machinery."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import operators as ops
+from repro.core.interpolation import (biharmonic_gammas, compositions, gamma,
+                                      interpolation_family)
+
+D = 4
+
+
+@pytest.fixture(scope="module")
+def setup():
+    key = jax.random.PRNGKey(0)
+    W1 = jax.random.normal(key, (D, 8)) / 2
+    W2 = jax.random.normal(jax.random.fold_in(key, 1), (8, 1)) / 2
+    f = lambda x: jnp.tanh(jnp.tanh(x @ W1) @ W2).sum()
+    x = jax.random.normal(jax.random.fold_in(key, 2), (D,))
+    H = jax.hessian(f)(x)
+    d4 = jax.jacfwd(jax.jacfwd(jax.hessian(f)))(x)
+    bih = sum(d4[i, i, j, j] for i in range(D) for j in range(D))
+    return f, x, H, d4, bih
+
+
+@pytest.mark.parametrize("method", ops.METHODS)
+def test_laplacian(setup, method):
+    f, x, H, _, _ = setup
+    np.testing.assert_allclose(
+        ops.laplacian(f, x, method=method), jnp.trace(H), rtol=2e-5
+    )
+
+
+@pytest.mark.parametrize("method", ops.METHODS)
+def test_weighted_laplacian(setup, method):
+    f, x, H, _, _ = setup
+    sigma = jax.random.normal(jax.random.PRNGKey(3), (D, 3))
+    want = jnp.trace(sigma @ sigma.T @ H)
+    np.testing.assert_allclose(
+        ops.weighted_laplacian(f, x, sigma, method=method), want, rtol=2e-5
+    )
+
+
+@pytest.mark.parametrize("method", ops.METHODS)
+def test_biharmonic(setup, method):
+    f, x, _, _, bih = setup
+    np.testing.assert_allclose(ops.biharmonic(f, x, method=method), bih, rtol=1e-4)
+
+
+def test_biharmonic_nested_taylor(setup):
+    f, x, _, _, bih = setup
+    np.testing.assert_allclose(
+        ops.biharmonic_nested_taylor(f, x, method="collapsed"), bih, rtol=1e-4
+    )
+
+
+def test_stochastic_laplacian_converges(setup):
+    f, x, H, _, _ = setup
+    est = ops.laplacian_stochastic(f, x, jax.random.PRNGKey(9), 20_000,
+                                   method="collapsed")
+    np.testing.assert_allclose(est, jnp.trace(H), rtol=0.05)
+
+
+def test_stochastic_laplacian_methods_agree(setup):
+    """Same key + samples => identical estimates across Taylor methods."""
+    f, x, _, _, _ = setup
+    key = jax.random.PRNGKey(11)
+    a = ops.laplacian_stochastic(f, x, key, 64, method="standard")
+    b = ops.laplacian_stochastic(f, x, key, 64, method="collapsed")
+    np.testing.assert_allclose(a, b, rtol=2e-5)
+
+
+def test_stochastic_biharmonic_unbiased_quartic():
+    """Gaussian 4th-order Hutchinson with the 1/(3S) constant (the paper's
+    eq. 9 prefactor is corrected here; see DESIGN.md). On f = (a.x)^4 the
+    target is exactly 24|a|^4 and the estimator's relative std is
+    sqrt(96/S)/3, so S = 2e5 gives ~0.7% — a tight unbiasedness check."""
+    a = jnp.array([0.5, -1.0, 0.8, 0.3])
+    f = lambda x: (x @ a) ** 4
+    x = jnp.zeros(4)
+    want = 24.0 * float(a @ a) ** 2
+    est = ops.biharmonic_stochastic(f, x, jax.random.PRNGKey(5), 200_000,
+                                    method="collapsed")
+    np.testing.assert_allclose(est, want, rtol=0.05)
+
+
+def test_stochastic_biharmonic_mlp_converges_loosely(setup):
+    """High-variance regime: three independent estimates must bracket the
+    exact value within Monte-Carlo error."""
+    f, x, _, _, bih = setup
+    ests = [float(ops.biharmonic_stochastic(f, x, jax.random.PRNGKey(s),
+                                            100_000, method="collapsed"))
+            for s in (3, 5, 7)]
+    np.testing.assert_allclose(np.mean(ests), float(bih), rtol=0.4)
+
+
+def test_mixed_partials_via_interpolation(setup):
+    f, x, H, d4, _ = setup
+    e = jnp.eye(D)
+    v = ops.linear_operator(f, x, [(1.0, [(e[0], 1), (e[1], 1)])])
+    np.testing.assert_allclose(v, H[0, 1], rtol=2e-5)
+    v4 = ops.linear_operator(f, x, [(2.0, [(e[0], 2), (e[2], 2)])])
+    np.testing.assert_allclose(v4, 2.0 * d4[0, 0, 2, 2], rtol=1e-4)
+    # sum of terms with shared K
+    v_sum = ops.linear_operator(
+        f, x, [(1.0, [(e[0], 2), (e[1], 2)]), (0.5, [(e[1], 2), (e[3], 2)])]
+    )
+    np.testing.assert_allclose(
+        v_sum, d4[0, 0, 1, 1] + 0.5 * d4[1, 1, 3, 3], rtol=1e-4
+    )
+
+
+def test_gamma_symmetries_and_fig4_values():
+    g = biharmonic_gammas()
+    assert abs(g[(4, 0)] - g[(0, 4)]) < 1e-12
+    assert abs(g[(3, 1)] - g[(1, 3)]) < 1e-12
+    # gamma_{(2,2),(2,2)} = 0.625 etc (fig. 4 of the paper)
+    np.testing.assert_allclose(g[(2, 2)], 0.625, rtol=1e-4)
+    np.testing.assert_allclose(g[(3, 1)], -1.0 / 3.0, rtol=1e-4)
+
+
+def test_compositions():
+    assert set(compositions(4, 2)) == {(4, 0), (3, 1), (2, 2), (1, 3), (0, 4)}
+    assert all(sum(j) == 3 for j in compositions(3, 3))
+
+
+def test_interpolation_family_reconstructs_identity():
+    """<d^2 f, u (x) w> from pure 2-jets for random u, w (eq. 11, K=2)."""
+    f = lambda x: jnp.sin(x[0] * x[1]) + x[2] ** 3 * x[0]
+    x = jnp.array([0.3, -0.7, 0.9])
+    H = jax.hessian(f)(x)
+    u = jnp.array([1.0, 2.0, -1.0])
+    w = jnp.array([0.5, -1.5, 2.0])
+    total = 0.0
+    for j, coeff in interpolation_family((1, 1)):
+        d = j[0] * u + j[1] * w
+        total += coeff * (d @ H @ d)
+    np.testing.assert_allclose(total, u @ H @ w, rtol=1e-4)
+
+
+def test_vector_counts_match_paper():
+    # table F2 / section 3.2-3.3 counting
+    assert ops.vector_counts("laplacian", 50) == {"standard": 101, "collapsed": 52}
+    assert ops.vector_counts("laplacian", 50, samples=8) == {
+        "standard": 17, "collapsed": 10}
+    bc = ops.vector_counts("biharmonic", 5)
+    assert bc["standard"] == 6 * 25 - 10 + 1  # 6D^2 - 2D + 1
+    assert bc["collapsed"] == 4.5 * 25 - 7.5 + 4  # 9/2 D^2 - 3/2 D + 4
+
+
+def test_batched_operators(setup):
+    f, _, _, _, _ = setup
+    xb = jax.random.normal(jax.random.PRNGKey(21), (5, D))
+    fb = lambda xs: jax.vmap(f)(xs)
+    Hb = jax.vmap(jax.hessian(f))(xb)
+    want = jax.vmap(jnp.trace)(Hb)
+    for m in ops.METHODS:
+        np.testing.assert_allclose(ops.laplacian(fb, xb, method=m), want, rtol=2e-5)
+
+
+def test_value_grad_laplacian_triple(setup):
+    f, x, H, _, _ = setup
+    u, g, lap = ops.value_grad_laplacian(f, x)
+    np.testing.assert_allclose(u, f(x), rtol=1e-6)
+    np.testing.assert_allclose(g, jax.grad(f)(x), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(lap, jnp.trace(H), rtol=2e-5)
+    # batched
+    xb = jax.random.normal(jax.random.PRNGKey(33), (6, D))
+    fb = lambda xs: jax.vmap(f)(xs)
+    u, g, lap = ops.value_grad_laplacian(fb, xb)
+    assert u.shape == (6,) and g.shape == (6, D) and lap.shape == (6,)
+    np.testing.assert_allclose(g, jax.vmap(jax.grad(f))(xb), rtol=1e-5, atol=1e-6)
+
+
+def test_weighted_laplacian_state_dependent_sigma(setup):
+    """sigma(x) per example (Kolmogorov-type PDEs, section 3.2)."""
+    f, _, _, _, _ = setup
+    xb = jax.random.normal(jax.random.PRNGKey(41), (5, D))
+    fb = lambda xs: jax.vmap(f)(xs)
+    sig = jax.random.normal(jax.random.PRNGKey(42), (5, D, 3))
+    got = ops.weighted_laplacian(fb, xb, sig, method="collapsed")
+    Hb = jax.vmap(jax.hessian(f))(xb)
+    want = jax.vmap(lambda s, H: jnp.trace(s @ s.T @ H))(sig, Hb)
+    np.testing.assert_allclose(got, want, rtol=2e-5)
+    got_n = ops.weighted_laplacian(fb, xb, sig, method="nested")
+    np.testing.assert_allclose(got_n, want, rtol=2e-5)

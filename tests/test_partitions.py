@@ -1,0 +1,53 @@
+"""Faa di Bruno combinatorics (paper eq. 3 / appendix A)."""
+
+import math
+
+from hypothesis import given, strategies as st
+
+from repro.core.partitions import (faa_di_bruno_terms, multiplicity,
+                                   nontrivial_terms, partitions)
+
+BELL = [1, 1, 2, 5, 15, 52, 203, 877, 4140]
+
+
+def test_partitions_small():
+    assert partitions(4) == ((4,), (3, 1), (2, 2), (2, 1, 1), (1, 1, 1, 1))
+    assert partitions(0) == ((),)
+
+
+def test_multiplicities_match_cheat_sheet():
+    # appendix A, k = 4 row
+    assert multiplicity((4,)) == 1
+    assert multiplicity((3, 1)) == 4
+    assert multiplicity((2, 2)) == 3
+    assert multiplicity((2, 1, 1)) == 6
+    assert multiplicity((1, 1, 1, 1)) == 1
+    # k = 6 spot checks from the cheat sheet
+    assert multiplicity((4, 1, 1)) == 15
+    assert multiplicity((2, 2, 2)) == 15
+    assert multiplicity((3, 2, 1)) == 60
+    assert multiplicity((4, 2)) == 15
+    assert multiplicity((2, 2, 1, 1)) == 45
+
+
+@given(st.integers(min_value=1, max_value=8))
+def test_multiplicities_sum_to_bell(k):
+    # sum over integer partitions of nu(sigma) = number of set partitions
+    assert sum(multiplicity(s) for s in partitions(k)) == BELL[k]
+
+
+@given(st.integers(min_value=1, max_value=8))
+def test_partitions_sum_to_k(k):
+    for s in partitions(k):
+        assert sum(s) == k
+        assert tuple(sorted(s, reverse=True)) == s
+
+
+@given(st.integers(min_value=1, max_value=8))
+def test_trivial_partition_separated(k):
+    terms = faa_di_bruno_terms(k)
+    nts = nontrivial_terms(k)
+    assert len(terms) == len(nts) + 1
+    assert all(s != (k,) for _, s in nts)
+    # the trivial term (the linear one the paper collapses) has nu = 1
+    assert dict((s, n) for n, s in terms)[(k,)] == 1

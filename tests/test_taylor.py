@@ -1,0 +1,151 @@
+"""Standard Taylor mode interpreter vs jax.experimental.jet (the oracle) and
+vs nested AD, including property-based function generation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.experimental import jet as jjet
+
+from repro.core.taylor import jet, jet_fan
+
+
+def _mlp(key, D):
+    W1 = jax.random.normal(key, (D, 8)) * 0.4
+    W2 = jax.random.normal(jax.random.fold_in(key, 1), (8, 3)) * 0.4
+    return lambda x: jnp.sin(jnp.tanh(x @ W1) @ W2).sum()
+
+
+@pytest.mark.parametrize("K", [1, 2, 3, 4, 5])
+def test_matches_jax_jet(K):
+    D = 5
+    f = _mlp(jax.random.PRNGKey(0), D)
+    x = jax.random.normal(jax.random.PRNGKey(1), (D,))
+    series = [list(jax.random.normal(jax.random.PRNGKey(2), (K, D)))]
+    p_ref, s_ref = jjet.jet(f, (x,), series)
+    p_my, s_my = jet(f, (x,), series)
+    np.testing.assert_allclose(p_ref, p_my, rtol=1e-5, atol=1e-6)
+    for a, b in zip(s_ref, s_my):
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-4)
+
+
+UNARIES = {
+    "tanh": jnp.tanh,
+    "exp": lambda x: jnp.exp(0.3 * x),
+    "sin": jnp.sin,
+    "cos": jnp.cos,
+    "sigmoid": jax.nn.sigmoid,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "softplus": jax.nn.softplus,
+    "log1pexp": lambda x: jnp.log(1 + jnp.exp(x)),
+    "sqrt_sq": lambda x: jnp.sqrt(1.0 + x * x),
+    "rsqrt_sq": lambda x: jax.lax.rsqrt(1.0 + x * x),
+    "erf": jax.scipy.special.erf,
+    "square": jnp.square,
+    "abs": jnp.abs,
+    "div": lambda x: x / (2.0 + jnp.cos(x)),
+    "pow": lambda x: (1.5 + jnp.tanh(x)) ** 2.5,
+    "softmax": lambda x: jax.nn.softmax(x) * x.shape[-1],
+    "logsumexp": lambda x: jax.scipy.special.logsumexp(x)[None] + 0 * x,
+    "max_pair": lambda x: jnp.maximum(x, jnp.roll(x, 1)),
+    "prod": lambda x: jnp.prod(1.0 + 0.1 * x)[None] + 0 * x,
+}
+
+
+@settings(deadline=None, max_examples=30)
+@given(
+    names=st.lists(st.sampled_from(sorted(UNARIES)), min_size=1, max_size=3),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_property_random_compositions_match_oracle_k2(names, seed):
+    """Random compositions of supported primitives: our K=2 jets must match
+    forward-over-forward nested AD (d^2/dt^2 f(x + t v))."""
+    D = 4
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (D,)) * 0.5
+    v = jax.random.normal(jax.random.fold_in(key, 7), (D,))
+    W = jax.random.normal(jax.random.fold_in(key, 9), (D, D)) * 0.3
+
+    def f(y):
+        h = y @ W
+        for n in names:
+            h = UNARIES[n](h)
+        return (h * h).sum()
+
+    # oracle: second directional derivative by nested jvp
+    g1 = lambda y: jax.jvp(f, (y,), (v,))[1]
+    d2 = jax.jvp(g1, (x,), (v,))[1]
+    _, series = jet(f, (x,), [[v, jnp.zeros_like(v)]])
+    np.testing.assert_allclose(series[1], d2, rtol=5e-3, atol=1e-4)
+
+
+def test_jet_through_scan_matches_unrolled():
+    D = 4
+    Ws = jax.random.normal(jax.random.PRNGKey(0), (3, D, D)) * 0.4
+
+    def f_scan(x):
+        def body(h, W):
+            return jnp.tanh(W @ h), (h**2).sum()
+        h, ys = jax.lax.scan(body, x, Ws)
+        return h.sum() + ys.sum()
+
+    def f_unrolled(x):
+        h, acc = x, 0.0
+        for i in range(3):
+            acc = acc + (h**2).sum()
+            h = jnp.tanh(Ws[i] @ h)
+        return h.sum() + acc
+
+    x = jax.random.normal(jax.random.PRNGKey(1), (D,))
+    v = jax.random.normal(jax.random.PRNGKey(2), (D,))
+    series = [[v, v * 0.5, v * 0.1]]
+    p1, s1 = jet(f_scan, (x,), series)
+    p2, s2 = jet(f_unrolled, (x,), series)
+    np.testing.assert_allclose(p1, p2, rtol=1e-5)
+    for a, b in zip(s1, s2):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_jet_fan_laplacian_vs_hessian():
+    D = 5
+    f = _mlp(jax.random.PRNGKey(3), D)
+    x = jax.random.normal(jax.random.PRNGKey(4), (D,))
+    _, coeffs = jet_fan(f, x, jnp.eye(D), 2)
+    np.testing.assert_allclose(
+        coeffs[1].sum(0), jnp.trace(jax.hessian(f)(x)), rtol=1e-4
+    )
+
+
+def test_symbolic_zero_weights_stay_free():
+    """Constants must keep ZERO coefficients (no materialized zero tensors)."""
+    from repro.core.jets import ZERO, Jet
+    from repro.core.taylor import interpret_jaxpr
+
+    W = jnp.ones((4, 4))
+    f = lambda x: (x @ W).sum()
+    closed = jax.make_jaxpr(f)(jnp.ones(4))
+    out, = interpret_jaxpr(closed, 3, [Jet(jnp.ones(4), [jnp.ones(4), ZERO, ZERO])])
+    assert out.coeffs[1] is ZERO and out.coeffs[2] is ZERO
+
+
+@pytest.mark.parametrize("K", [5, 6])
+def test_high_order_matches_jax_jet(K):
+    """Deep orders exercise the full Faa di Bruno partition machinery."""
+    D = 3
+    W = jax.random.normal(jax.random.PRNGKey(0), (D, 6)) * 0.3
+
+    def f(x):
+        h = jnp.tanh(x @ W)
+        return (jnp.exp(0.3 * h) * jnp.sin(h)).sum()
+
+    from jax.experimental import jet as jjet
+
+    x = jax.random.normal(jax.random.PRNGKey(1), (D,)) * 0.5
+    series = [list(jax.random.normal(jax.random.PRNGKey(2), (K, D)) * 0.5)]
+    p_ref, s_ref = jjet.jet(f, (x,), series)
+    p_my, s_my = jet(f, (x,), series)
+    np.testing.assert_allclose(p_ref, p_my, rtol=1e-5)
+    for a, b in zip(s_ref, s_my):
+        np.testing.assert_allclose(a, b, rtol=5e-3, atol=1e-3)

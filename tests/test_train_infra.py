@@ -1,0 +1,159 @@
+"""Training substrate: optimizer, schedules, compression, checkpointing,
+fault-tolerant loop (restart resumes the exact data stream)."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint as ckpt
+from repro.configs import get_smoke_config
+from repro.data import collocation_batch, token_batch
+from repro.models import mlp as M
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm, warmup_cosine
+from repro.optim.compression import compress_decompress, ef_init
+from repro.train.trainer import Trainer, TrainConfig, build_train_step, init_opt_state
+
+
+def test_adamw_reduces_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = adamw_init(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw_update(g, state, params, 0.05, weight_decay=0.0)
+    assert float(loss(params)) < 1e-2
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones(4) * 10.0}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(norm, 20.0, rtol=1e-6)
+    np.testing.assert_allclose(
+        jnp.linalg.norm(clipped["a"]), 1.0, rtol=1e-5
+    )
+
+
+def test_schedule_shape():
+    lrs = [float(warmup_cosine(jnp.asarray(s), peak_lr=1.0, warmup_steps=10,
+                               total_steps=100)) for s in range(100)]
+    assert lrs[0] < lrs[9] <= 1.0
+    assert abs(max(lrs) - 1.0) < 1e-5
+    assert lrs[-1] < 0.2
+
+
+def test_compression_error_feedback_unbiased_over_time():
+    """With error feedback, the *accumulated* compressed gradient tracks the
+    accumulated true gradient (1-bit-Adam property)."""
+    key = jax.random.PRNGKey(0)
+    ef = ef_init({"g": jnp.zeros(64)})
+    total_true = jnp.zeros(64)
+    total_comp = jnp.zeros(64)
+    for i in range(50):
+        g = {"g": jax.random.normal(jax.random.fold_in(key, i), (64,))}
+        out, ef = compress_decompress(g, ef)
+        total_true += g["g"]
+        total_comp += out["g"]
+    resid = jnp.abs(total_true - total_comp).max()
+    assert float(resid) < 0.1  # bounded by one quantization step
+
+
+def test_checkpoint_roundtrip_and_latest():
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.ones(4)}}
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 3, tree, {"step": 3})
+        ckpt.save(d, 7, tree, {"step": 7})
+        assert ckpt.latest_step(d) == 7
+        restored, extra = ckpt.restore(d, 7, tree)
+        assert extra["step"] == 7
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_async_checkpoint():
+    tree = {"w": jnp.ones((8, 8))}
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save_async(d, 1, tree, {"step": 1})
+        ckpt.wait_for_saves()
+        assert ckpt.latest_step(d) == 1
+
+
+def test_trainer_restart_is_exact():
+    """A crashed-and-restarted run must land on the same weights as an
+    uninterrupted run (deterministic data + checkpoint/restart)."""
+    cfg = get_smoke_config("mlp-pinn")
+    loss_fn = lambda p, b: M.loss(p, b, cfg)
+    bf = lambda s: collocation_batch(0, s, 32, cfg.mlp_sizes[0])
+
+    def fresh():
+        return M.init(jax.random.PRNGKey(0), cfg)
+
+    with tempfile.TemporaryDirectory() as d:
+        tcfg = TrainConfig(peak_lr=1e-3, warmup_steps=2, total_steps=20,
+                           ckpt_dir=d, ckpt_every=10)
+        t1 = Trainer(loss_fn, fresh(), tcfg, batch_fn=bf)
+        t1.run(20, log_every=100)
+        final_uninterrupted = jax.tree.leaves(t1.params)
+
+    with tempfile.TemporaryDirectory() as d:
+        tcfg = TrainConfig(peak_lr=1e-3, warmup_steps=2, total_steps=20,
+                           ckpt_dir=d, ckpt_every=10)
+        t2 = Trainer(loss_fn, fresh(), tcfg, batch_fn=bf)
+        t2.run(10, log_every=100)
+        t2.save(synchronous=True)
+        # simulated crash; restart from checkpoint
+        t3 = Trainer(loss_fn, fresh(), tcfg, batch_fn=bf)
+        assert t3.maybe_restore() and t3.step == 10
+        t3.run(20, log_every=100)
+        final_restarted = jax.tree.leaves(t3.params)
+
+    for a, b in zip(final_uninterrupted, final_restarted):
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-7)
+
+
+def test_grad_accum_matches_full_batch():
+    cfg = get_smoke_config("mlp-pinn")
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    batch = collocation_batch(0, 0, 32, cfg.mlp_sizes[0])
+    loss_fn = lambda p, b: M.loss(p, b, cfg)
+    s1 = build_train_step(loss_fn, TrainConfig(grad_accum=1, max_grad_norm=None,
+                                               weight_decay=0.0))
+    s4 = build_train_step(loss_fn, TrainConfig(grad_accum=4, max_grad_norm=None,
+                                               weight_decay=0.0))
+    o1 = init_opt_state(params, TrainConfig())
+    o4 = init_opt_state(params, TrainConfig())
+    p1, _, m1 = jax.jit(s1)(params, o1, batch, jnp.zeros((), jnp.int32))
+    p4, _, m4 = jax.jit(s4)(params, o4, batch, jnp.zeros((), jnp.int32))
+    # same data, same average gradient -> same update (PINN loss is a mean)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+        np.testing.assert_allclose(a, b, rtol=5e-4, atol=5e-5)
+
+
+def test_straggler_monitor_records():
+    cfg = get_smoke_config("mlp-pinn")
+    t = Trainer(lambda p, b: M.loss(p, b, cfg), M.init(jax.random.PRNGKey(0), cfg),
+                TrainConfig(straggler_factor=1.5),
+                batch_fn=lambda s: collocation_batch(0, s, 16, cfg.mlp_sizes[0]))
+    for dt in [0.1] * 10 + [10.0]:
+        t.step += 1
+        t._monitor(dt)
+    assert t.straggler_events, "slow step must be recorded"
+
+
+def test_token_batch_deterministic():
+    a = token_batch(0, 5, 4, 16, 100)
+    b = token_batch(0, 5, 4, 16, 100)
+    np.testing.assert_array_equal(a, b)
+    c = token_batch(0, 6, 4, 16, 100)
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+    assert int(a.max()) < 100 and int(a.min()) >= 0
+
+
+def test_collocation_boundary_points():
+    b = collocation_batch(0, 0, 64, 5)
+    xb = np.asarray(b["x_boundary"])
+    on_boundary = np.any((xb == 0.0) | (xb == 1.0), axis=-1)
+    assert on_boundary.all()
