@@ -1,7 +1,9 @@
-"""Shared benchmark utilities: the paper's MLP, timing, CSV output."""
+"""Shared benchmark utilities: the paper's MLP, timing, CSV + BENCH-json
+output."""
 
 from __future__ import annotations
 
+import json
 import time
 from typing import Callable, Dict, List
 
@@ -54,3 +56,9 @@ def emit(rows: List[Dict], header: List[str]):
     print(",".join(header))
     for r in rows:
         print(",".join(str(r.get(h, "")) for h in header))
+
+
+def emit_bench(bench: str, **fields):
+    """Machine-readable one-line result: ``BENCH {json}`` (grep-able by CI
+    dashboards; one row per (benchmark, method) cell)."""
+    print("BENCH " + json.dumps({"bench": bench, **fields}, sort_keys=True))

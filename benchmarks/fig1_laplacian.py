@@ -1,9 +1,15 @@
 """Figure 1: Laplacian of the paper's tanh MLP — nested 1st-order AD vs
-standard Taylor mode vs collapsed Taylor mode (jit-compiled, CPU wall time).
+standard Taylor mode vs collapsed Taylor mode (jit-compiled, CPU wall time),
+plus the kernel-offload execution of collapsed mode (``backend='pallas'``,
+the fused collapsed-jet Pallas path; interpret-mode on CPU, so its CPU
+numbers measure dispatch overhead only — the ratio story is a TPU/GPU one).
 
 The paper's headline numbers (GPU): nested 0.57 ms/datum, standard Taylor
 0.84 (1.5x slower!), collapsed 0.29 (0.50x). The *ratios* are the claim being
 reproduced; absolute times differ on CPU.
+
+Each (method, slope) cell is also emitted as a machine-readable ``BENCH``
+json row (see benchmarks/common.emit_bench).
 """
 
 from __future__ import annotations
@@ -11,11 +17,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import best_time, emit, linfit_slope, paper_mlp
+from benchmarks.common import best_time, emit, emit_bench, linfit_slope, paper_mlp
 from repro.core import operators as ops
 
 
-def run(D: int = 50, batches=(1, 2, 4, 8), repeats: int = 5):
+def run(D: int = 50, batches=(1, 2, 4, 8), repeats: int = 5,
+        include_pallas: bool = True):
     f, _ = paper_mlp(D)
     methods = {
         "nested": lambda x: ops.laplacian(f, x, method="nested"),
@@ -23,6 +30,9 @@ def run(D: int = 50, batches=(1, 2, 4, 8), repeats: int = 5):
         "collapsed_taylor": lambda x: ops.laplacian(f, x, method="collapsed"),
         "rewrite_taylor": lambda x: ops.laplacian(f, x, method="rewrite"),
     }
+    if include_pallas:
+        methods["pallas"] = lambda x: ops.laplacian(
+            f, x, method="collapsed", backend="pallas")
     rows = []
     slopes = {}
     for name, fn in methods.items():
@@ -42,6 +52,10 @@ def run(D: int = 50, batches=(1, 2, 4, 8), repeats: int = 5):
             "us_per_call": f"{s*1e6:.1f}",
             "derived": f"per-datum_vs_nested={s/base:.2f}x",
         })
+        emit_bench("fig1_laplacian", method=name, D=D,
+                   us_per_datum=round(s * 1e6, 2),
+                   vs_nested=round(s / base, 4),
+                   backend=("pallas" if name == "pallas" else "interpreter"))
     return rows
 
 

@@ -29,6 +29,10 @@ def main():
     ap.add_argument("--batch", type=int, default=512)
     ap.add_argument("--method", default="collapsed",
                     choices=["nested", "standard", "collapsed", "rewrite"])
+    ap.add_argument("--backend", default=None,
+                    choices=["interpreter", "pallas"],
+                    help="pallas offloads the collapsed Laplacian onto the "
+                         "fused collapsed-jet kernels (method=collapsed only)")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
 
@@ -38,12 +42,14 @@ def main():
     params = model.init(jax.random.PRNGKey(0), cfg)
     n_params = sum(p.size for p in jax.tree.leaves(params))
     print(f"Poisson PINN in {args.dim}D; {n_params/1e6:.2f}M params; "
-          f"Laplacian method = {args.method}")
+          f"Laplacian method = {args.method}"
+          + (f" (backend={args.backend})" if args.backend else ""))
 
     tcfg = TrainConfig(peak_lr=2e-3, warmup_steps=50, total_steps=args.steps,
                        weight_decay=0.0, ckpt_dir=args.ckpt_dir, ckpt_every=200)
     trainer = Trainer(
-        lambda p, b: model.loss(p, b, cfg, method=args.method),
+        lambda p, b: model.loss(p, b, cfg, method=args.method,
+                                backend=args.backend),
         params, tcfg,
         batch_fn=lambda s: collocation_batch(0, s, args.batch, args.dim),
     )

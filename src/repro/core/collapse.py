@@ -20,6 +20,13 @@ The propagation rules mirror ``taylor.py``:
 
 Only the *nonlinear* partitions see the direction axis; the linear part
 propagates the collapsed sum directly.
+
+Execution backends: :func:`collapsed_fan` runs on this file's CRULES
+interpreter by default; ``backend="pallas"`` swaps in
+:func:`repro.core.offload.interpret_collapsed_offload`, which routes
+MLP-shaped ``dot_general -> add -> activation`` segments through the fused
+collapsed-jet Pallas kernels (``kernels/jet_mlp``) and falls back to CRULES
+for everything else.
 """
 
 from __future__ import annotations
@@ -517,30 +524,33 @@ def _top_k(K, in_jets, eqn):
 # ---------------------------------------------------------------------------
 
 
-@defcrule("jit", "pjit")
-def _jit_rule(K, in_jets, eqn):
-    return interpret_collapsed(eqn.params["jaxpr"], K, in_jets)
+def call_subjaxpr(eqn):
+    """The inlined subjaxpr of a call-like primitive, or None.
+
+    Single source of truth for both the CRULES interpreter and the offload
+    interpreter (which must recurse with *itself* to keep fusing inside
+    jit/remat/custom-derivative bodies)."""
+    name = eqn.primitive.name
+    if name in ("jit", "pjit"):
+        return eqn.params["jaxpr"]
+    if name == "custom_jvp_call":
+        return eqn.params["call_jaxpr"]
+    if name in ("custom_vjp_call", "custom_vjp_call_jaxpr"):
+        return eqn.params.get("call_jaxpr") or eqn.params.get("fun_jaxpr")
+    if name in ("remat", "checkpoint", "remat2"):
+        jx = eqn.params["jaxpr"]
+        if not hasattr(jx, "jaxpr"):  # open Jaxpr -> close with no consts
+            import jax.extend.core as jex
+
+            jx = jex.ClosedJaxpr(jx, ())
+        return jx
+    return None
 
 
-@defcrule("custom_jvp_call")
-def _custom_jvp(K, in_jets, eqn):
-    return interpret_collapsed(eqn.params["call_jaxpr"], K, in_jets)
-
-
-@defcrule("custom_vjp_call", "custom_vjp_call_jaxpr")
-def _custom_vjp(K, in_jets, eqn):
-    cj = eqn.params.get("call_jaxpr") or eqn.params.get("fun_jaxpr")
-    return interpret_collapsed(cj, K, in_jets)
-
-
-@defcrule("remat", "checkpoint", "remat2")
-def _remat(K, in_jets, eqn):
-    jx = eqn.params["jaxpr"]
-    if not hasattr(jx, "jaxpr"):
-        import jax.extend.core as jex
-
-        jx = jex.ClosedJaxpr(jx, ())
-    return interpret_collapsed(jx, K, in_jets)
+@defcrule("jit", "pjit", "custom_jvp_call", "custom_vjp_call",
+          "custom_vjp_call_jaxpr", "remat", "checkpoint", "remat2")
+def _call_rule(K, in_jets, eqn):
+    return interpret_collapsed(call_subjaxpr(eqn), K, in_jets)
 
 
 @defcrule("scan")
@@ -773,7 +783,10 @@ def interpret_collapsed(closed_jaxpr, K: int, in_jets: Sequence[CollapsedJet]):
     return [read(v) for v in jaxpr.outvars]
 
 
-def collapsed_fan(fun, x, directions, K: int):
+BACKENDS = ("interpreter", "pallas")
+
+
+def collapsed_fan(fun, x, directions, K: int, backend: str | None = None):
     """Collapsed Taylor mode over R directions (paper fig. 2, right; eq. D14).
 
     Input jets: ``x_0 = x``, ``x_{1,r} = directions[r]``,
@@ -782,11 +795,22 @@ def collapsed_fan(fun, x, directions, K: int):
     Returns ``(f0, lower, top)`` where ``top = sum_r f_{K,r}`` — e.g. for K=2
     and unit-basis directions, ``top`` is the Laplacian (= forward Laplacian).
     Propagates ``1 + (K-1)R + 1`` vectors instead of ``1 + K*R``.
+
+    ``backend``: ``None``/"interpreter" runs every primitive through CRULES;
+    "pallas" routes affine+activation segments (MLP layers) through the fused
+    collapsed-jet Pallas kernels via :mod:`repro.core.offload`, falling back
+    to CRULES for everything else.
     """
+    if backend in (None, "interpreter"):
+        interp = interpret_collapsed
+    elif backend == "pallas":
+        from .offload import interpret_collapsed_offload as interp
+    else:
+        raise ValueError(f"unknown backend {backend!r}; have {BACKENDS}")
     x = jnp.asarray(x)
     closed_jaxpr = jax.make_jaxpr(fun)(x)
     in_jet = CollapsedJet(x, [jnp.asarray(directions)] + [ZERO] * (K - 2), ZERO)
-    (out,) = interpret_collapsed(closed_jaxpr, K, [in_jet])
+    (out,) = interp(closed_jaxpr, K, [in_jet])
     R = jnp.shape(directions)[0]
     lower = [instantiate(c, out.primal, R) for c in out.lower]
     top = instantiate(out.top, out.primal)

@@ -1,0 +1,385 @@
+"""Automatic Pallas kernel offload for collapsed Taylor mode.
+
+The paper argues the collapsed forward sweep "could — or should — be done by
+a machine learning compiler". This module is that compiler pass for our own
+interpreter: :func:`interpret_collapsed_offload` walks the same jaxpr as
+:func:`repro.core.collapse.interpret_collapsed`, but first *plans* kernel
+offload segments — ``dot_general -> add(bias) -> elementwise activation``
+chains, the MLP-layer shape of every PINN/VMC network — and routes each
+matching segment through the fused collapsed-jet Pallas kernel
+(:func:`repro.kernels.jet_mlp.ops.collapsed_jet_layer_op`). Everything else
+falls back to the per-primitive ``CRULES``, so arbitrary programs still work;
+users opt in with ``operators.laplacian(f, x, method="collapsed",
+backend="pallas")`` and never touch ``kernels/``.
+
+Segment matching is structural + behavioural:
+
+* the ``dot_general`` must be a plain matmul (contract lhs-last with rhs-dim
+  0, no batch dims) whose rhs is a jet-constant (a weight);
+* a following ``add`` whose other operand is a jet-constant ``(Dout,)``
+  vector (possibly via ``broadcast_in_dim``) is folded in as the bias;
+* the maximal literal-only elementwise subgraph consuming the affine output
+  is *classified by probing*: it is evaluated on a fixed 1-D probe and
+  compared against the closed-form activations the kernel supports
+  (:data:`repro.kernels.jet_mlp.jet_mlp.ACTIVATION_FNS`). This recognizes
+  both single-primitive activations (``tanh``/``sin``/``logistic``/``relu``)
+  and decomposed ones (exact ``gelu`` traces to a 5-eqn erf subgraph), and is
+  safe under an outer ``jit`` because only jaxpr literals participate.
+
+Whether a var is jet-constant is only known at interpretation time (weights
+are constants of the traced function, but the same jaxpr shape could put a
+propagated value on the rhs), so the plan records candidates and the final
+fuse/fallback decision is made per segment against the live environment.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.jet_mlp.jet_mlp import ACTIVATION_FNS
+from repro.kernels.jet_mlp.ops import collapsed_jet_layer_op
+
+from .collapse import CRULES, _bind, call_subjaxpr
+from .jets import ZERO, CollapsedJet, is_zero
+
+# elementwise primitives an activation subgraph may be built from; all are
+# shape-preserving on the chain operand with at most scalar-literal partners.
+_ELEMENTWISE = {
+    "tanh", "sin", "cos", "logistic", "exp", "expm1", "erf", "erfc", "log",
+    "log1p", "mul", "add", "sub", "div", "neg", "max", "min", "abs",
+    "integer_pow", "pow", "square", "sqrt", "rsqrt", "copy",
+}
+
+# dense near the origin (where smooth activations differ) plus large
+# magnitudes, so clipped/saturating variants (relu6, hardtanh, clip) cannot
+# alias a supported activation inside a narrow window.
+_PROBE = np.concatenate([
+    np.linspace(-3.5, 3.5, 29, dtype=np.float32),
+    np.array([-30.0, -12.0, -6.5, -4.8, 4.8, 6.5, 12.0, 30.0],
+             dtype=np.float32),
+])
+_PROBE_TOL = 1e-5
+
+
+def _is_literal(v) -> bool:
+    return type(v).__name__ == "Literal"
+
+
+@dataclasses.dataclass
+class Segment:
+    """A fusible affine(+activation) region anchored at a dot_general eqn."""
+
+    dot_idx: int
+    lhs_var: Any
+    w_var: Any
+    bias_var: Any  # None -> no bias; may be a Literal
+    activation: str  # kernel activation name ("linear" if none recognized)
+    out_var: Any  # var the fused result is written to
+    skip: Set[int]  # eqn indices covered by the kernel when fused
+
+
+def _probe_classify(region_eqns, start_var, out_var) -> Optional[str]:
+    """Evaluate the candidate activation subgraph on the probe and compare
+    against the kernel's supported activations. Literal-only regions are
+    concrete even under an outer jit."""
+    env = {start_var: _PROBE}
+    try:
+        for eqn in region_eqns:
+            args = []
+            for v in eqn.invars:
+                if _is_literal(v):
+                    args.append(v.val)
+                else:
+                    args.append(env[v])
+            outs = eqn.primitive.bind(*args, **eqn.params)
+            outs = outs if eqn.primitive.multiple_results else [outs]
+            for ov, o in zip(eqn.outvars, outs):
+                env[ov] = o
+        got = np.asarray(env[out_var], dtype=np.float32)
+    except Exception:
+        return None
+    for name, fn in ACTIVATION_FNS.items():
+        want = np.asarray(fn(jnp.asarray(_PROBE)), dtype=np.float32)
+        if np.allclose(got, want, rtol=_PROBE_TOL, atol=_PROBE_TOL):
+            return name
+    return None
+
+
+def _activation_region(jaxpr, consumers, start_var, eqn_index):
+    """Maximal literal-only elementwise subgraph rooted at ``start_var``.
+
+    Returns (region eqn indices in program order, external output var) or
+    (None, None) when the region is empty or has multiple external outputs.
+    """
+    outvars = set(jaxpr.outvars)
+    region: Set[int] = set()
+    region_vars = {start_var}
+    changed = True
+    while changed:
+        changed = False
+        for v in list(region_vars):
+            for idx in consumers.get(v, ()):
+                if idx in region:
+                    continue
+                eqn = jaxpr.eqns[idx]
+                if eqn.primitive.name not in _ELEMENTWISE:
+                    continue
+                ok = True
+                for iv in eqn.invars:
+                    if _is_literal(iv):
+                        continue
+                    if iv not in region_vars:
+                        ok = False
+                        break
+                if not ok:
+                    continue
+                if any(tuple(ov.aval.shape) != tuple(start_var.aval.shape)
+                       for ov in eqn.outvars):
+                    continue
+                region.add(idx)
+                region_vars.update(eqn.outvars)
+                changed = True
+    if not region:
+        return None, None
+    # external outputs: region vars needed outside the region
+    external = []
+    for idx in region:
+        for ov in jaxpr.eqns[idx].outvars:
+            used_outside = ov in outvars or any(
+                c not in region for c in consumers.get(ov, ())
+            )
+            if used_outside:
+                external.append(ov)
+    if len(external) != 1:
+        return None, None
+    # the region must fully own the affine output
+    if start_var in outvars or any(c not in region
+                                   for c in consumers.get(start_var, ())):
+        return None, None
+    return sorted(region), external[0]
+
+
+def _var_shape(v) -> Tuple[int, ...]:
+    return tuple(np.shape(v.val)) if _is_literal(v) else tuple(v.aval.shape)
+
+
+def _bias_like(shape: Tuple[int, ...], dout: int) -> bool:
+    """A shape whose value can be reinterpreted as a (Dout,) bias: scalar, or
+    trailing dim in {1, Dout} with all leading dims of size 1 (jaxprs often
+    broadcast a (Dout,) bias only to (1, Dout) and rely on add's rank-equal
+    broadcasting)."""
+    if shape == ():
+        return True
+    return shape[-1] in (1, dout) and all(s == 1 for s in shape[:-1])
+
+
+# producers that only reshape/retype a bias vector, preserving its values
+_BIAS_PURE = ("broadcast_in_dim", "reshape", "squeeze", "convert_element_type",
+              "copy")
+
+
+def _match_bias(jaxpr, producer_idx, consumers, y_var, dot_idx):
+    """Detect ``y + b`` with a (broadcast of a) jet-constant (Dout,) bias
+    following the dot.
+
+    The fused segment executes at the dot's position, so the bias source must
+    be *available there*: a literal, a constvar/invar, or a value produced by
+    an eqn before the dot. Bias values frequently flow through pure
+    reshape/broadcast/convert eqns traced *after* the dot (e.g. weak-typed
+    biases insert ``convert_element_type``); we walk back through those to an
+    available source, skipping each link whose output feeds only the chain.
+
+    Returns (bias_var, add_out_var, skip_idxs) or (None, y_var, empty)."""
+    outvars = set(jaxpr.outvars)
+    cons = consumers.get(y_var, ())
+    if y_var in outvars or len(cons) != 1:
+        return None, y_var, set()
+    add_idx = cons[0]
+    eqn = jaxpr.eqns[add_idx]
+    if eqn.primitive.name != "add":
+        return None, y_var, set()
+    a, b = eqn.invars
+    other = b if a is y_var else a
+    if other is y_var:  # y + y: not a bias
+        return None, y_var, set()
+    dout = tuple(y_var.aval.shape)[-1]
+    if not _bias_like(_var_shape(other), dout):
+        return None, y_var, set()
+
+    skip = {add_idx}
+    cur, cur_consumer = other, add_idx
+    while True:
+        if _is_literal(cur) or not _bias_like(_var_shape(cur), dout):
+            break
+        idx = producer_idx.get(cur)
+        if idx is None or idx < dot_idx:
+            break  # invar/constvar, or computed before the dot: available
+        be = jaxpr.eqns[idx]
+        if be.primitive.name not in _BIAS_PURE:
+            return None, y_var, set()  # bias genuinely computed after the dot
+        if (cur_consumer in skip
+                and consumers.get(cur, ()) == [cur_consumer]
+                and cur not in outvars):
+            skip.add(idx)  # link feeds only the (skipped) chain
+        cur, cur_consumer = be.invars[0], idx
+    if not (_is_literal(cur) or _bias_like(_var_shape(cur), dout)):
+        return None, y_var, set()
+    return cur, eqn.outvars[0], skip
+
+
+def plan_segments(closed_jaxpr) -> Dict[int, Segment]:
+    """Scan a jaxpr for fusible affine(+activation) segments."""
+    jaxpr = closed_jaxpr.jaxpr
+    consumers: Dict[Any, List[int]] = {}
+    producer_idx: Dict[Any, int] = {}
+    for idx, eqn in enumerate(jaxpr.eqns):
+        for v in eqn.invars:
+            if not _is_literal(v):
+                consumers.setdefault(v, []).append(idx)
+        for v in eqn.outvars:
+            producer_idx[v] = idx
+    outvars = set(jaxpr.outvars)
+
+    plan: Dict[int, Segment] = {}
+    for idx, eqn in enumerate(jaxpr.eqns):
+        if eqn.primitive.name != "dot_general":
+            continue
+        lhs, rhs = eqn.invars
+        if _is_literal(lhs) or _is_literal(rhs):
+            continue
+        nl = len(lhs.aval.shape)
+        if nl not in (1, 2) or len(rhs.aval.shape) != 2:
+            continue
+        (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+        if lb or rb or tuple(lc) != (nl - 1,) or tuple(rc) != (0,):
+            continue
+        y = eqn.outvars[0]
+        skip = {idx}
+        bias_var, z_var, bias_skip = _match_bias(jaxpr, producer_idx,
+                                                 consumers, y, idx)
+        skip |= bias_skip
+        out_var, activation = z_var, "linear"
+        if z_var not in outvars:
+            region, act_out = _activation_region(jaxpr, consumers, z_var, idx)
+            if region is not None:
+                name = _probe_classify([jaxpr.eqns[i] for i in region],
+                                       z_var, act_out)
+                if name is None and len(region) > 1:
+                    # retry with just the first consumer (e.g. tanh whose
+                    # output feeds further elementwise work) — but only when
+                    # that eqn is z's SOLE consumer, so the shrunk region
+                    # still owns the pre-activation var it skips (gated
+                    # shapes like sigmoid(z)*z consume z twice and must fall
+                    # back to linear-only fusion).
+                    first = region[0]
+                    feqn = jaxpr.eqns[first]
+                    if (consumers.get(z_var, ()) == [first]
+                            and len(feqn.outvars) == 1):
+                        name = _probe_classify([feqn], z_var, feqn.outvars[0])
+                        if name is not None:
+                            region, act_out = [first], feqn.outvars[0]
+                if name is not None:
+                    activation = name
+                    out_var = act_out
+                    skip |= set(region)
+        plan[idx] = Segment(idx, lhs, rhs, bias_var, activation, out_var, skip)
+    return plan
+
+
+def _try_fuse(seg: Segment, read, K: int):
+    """Fuse one planned segment against the live jet environment; returns the
+    output CollapsedJet, or None to fall back to the interpreter."""
+    lhs = read(seg.lhs_var)
+    wj = read(seg.w_var)
+    if lhs.is_constant() or not wj.is_constant():
+        return None
+    w = wj.primal
+    dout = w.shape[1]
+    if seg.bias_var is None:
+        b = jnp.zeros((dout,), dtype=w.dtype)
+    else:
+        bj = read(seg.bias_var)
+        if not bj.is_constant():
+            return None
+        bp = jnp.asarray(bj.primal)
+        if bp.size == dout:
+            b = bp.reshape((dout,)).astype(w.dtype)
+        else:  # scalar bias broadcast over Dout
+            b = jnp.broadcast_to(bp.reshape(()), (dout,)).astype(w.dtype)
+    h0 = lhs.primal
+    if h0.ndim not in (1, 2):
+        return None
+    if np.dtype(h0.dtype) not in (np.dtype(np.float32), np.dtype(np.float16),
+                                  np.dtype(jnp.bfloat16)):
+        # the kernel accumulates in f32; silently degrading f64 (x64 mode)
+        # would betray the 1e-5 interpreter-match contract — fall back.
+        return None
+    lower = [None if is_zero(c) else c for c in lhs.lower]
+    top = None if is_zero(lhs.top) else lhs.top
+    t0, tl, tt = collapsed_jet_layer_op(
+        h0, lower, top, w, b, K=K, activation=seg.activation,
+    )
+    return CollapsedJet(t0, list(tl), tt)
+
+
+def interpret_collapsed_offload(closed_jaxpr, K: int,
+                                in_jets: Sequence[CollapsedJet]):
+    """Collapsed-jet interpreter with automatic Pallas kernel offload.
+
+    Same contract as :func:`repro.core.collapse.interpret_collapsed`; planned
+    segments run fused, everything else (including control flow, whose bodies
+    stay on the interpreter) uses ``CRULES``.
+    """
+    plan = plan_segments(closed_jaxpr)
+    jaxpr = closed_jaxpr.jaxpr
+    env: Dict[Any, CollapsedJet] = {}
+
+    def read(v):
+        if _is_literal(v):
+            return CollapsedJet(v.val, [ZERO] * (K - 1), ZERO)
+        return env[v]
+
+    for var, const in zip(jaxpr.constvars, closed_jaxpr.consts):
+        env[var] = CollapsedJet(const, [ZERO] * (K - 1), ZERO)
+    for var, j in zip(jaxpr.invars, in_jets):
+        env[var] = j
+
+    skipped: Set[int] = set()
+    for idx, eqn in enumerate(jaxpr.eqns):
+        if idx in skipped:
+            continue
+        seg = plan.get(idx)
+        if seg is not None:
+            out = _try_fuse(seg, read, K)
+            if out is not None:
+                env[seg.out_var] = out
+                skipped |= seg.skip
+                continue
+        jets_in = [read(v) for v in eqn.invars]
+        name = eqn.primitive.name
+        sub = call_subjaxpr(eqn)
+        if all(j.is_constant() for j in jets_in) and name not in (
+                "scan", "cond", "while"):
+            outs_p = _bind(eqn, *[j.primal for j in jets_in])
+            outs = [CollapsedJet(p, [ZERO] * (K - 1), ZERO) for p in outs_p]
+        elif sub is not None:
+            # recurse with the offload interpreter so fusion continues inside
+            # jit/remat/custom-derivative bodies
+            outs = interpret_collapsed_offload(sub, K, jets_in)
+        else:
+            rule = CRULES.get(name)
+            if rule is None:
+                raise NotImplementedError(
+                    f"no collapsed-Taylor rule for primitive '{name}'"
+                )
+            outs = rule(K, jets_in, eqn)
+            if isinstance(outs, CollapsedJet):
+                outs = [outs]
+        for v, o in zip(eqn.outvars, outs):
+            env[v] = o
+
+    return [read(v) for v in jaxpr.outvars]

@@ -15,6 +15,11 @@ Each operator comes in methods:
 
 and exact / stochastic variants. ``f`` maps ``(D,) -> ()``/``(C,)`` or a batch
 ``(B, D) -> (B,)`` (rows independent — the PINN/VMC convention).
+
+Every Taylor-mode operator also takes ``backend``: ``None``/"interpreter"
+runs the pure-jaxpr interpreter; "pallas" (method='collapsed' only) offloads
+MLP-shaped affine+activation segments to the fused collapsed-jet Pallas
+kernels via :mod:`repro.core.offload` — no user-visible kernel calls needed.
 """
 
 from __future__ import annotations
@@ -27,13 +32,23 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import nested as _nested
-from .collapse import collapsed_fan
+from .collapse import BACKENDS, collapsed_fan
 from .interpolation import biharmonic_plan
 from .jets import ZERO, Jet, instantiate
 from .rewrite import collapse_sum_by_rewrite
 from .taylor import interpret_jaxpr, jet_fan
 
 METHODS = ("nested", "standard", "collapsed", "rewrite")
+
+
+def _no_kernel_backend(method, backend):
+    """Non-collapsed methods cannot honor backend='pallas'; raise instead of
+    silently ignoring the knob."""
+    if backend not in (None, "interpreter"):
+        raise ValueError(
+            f"backend={backend!r} requires method='collapsed' (the Pallas "
+            f"kernels implement the collapsed propagation), got "
+            f"method={method!r}")
 
 
 def _broadcast_directions(dirs: jax.Array, x: jax.Array) -> jax.Array:
@@ -44,17 +59,19 @@ def _broadcast_directions(dirs: jax.Array, x: jax.Array) -> jax.Array:
     return jnp.broadcast_to(dirs, (R,) + x.shape)
 
 
-def _sum_top_standard(f, x, dirs, K):
+def _sum_top_standard(f, x, dirs, K, backend=None):
+    _no_kernel_backend("standard", backend)
     _, coeffs = jet_fan(f, x, dirs, K)
     return coeffs[K - 1].sum(axis=0)
 
 
-def _sum_top_collapsed(f, x, dirs, K):
-    _, _, top = collapsed_fan(f, x, dirs, K)
+def _sum_top_collapsed(f, x, dirs, K, backend=None):
+    _, _, top = collapsed_fan(f, x, dirs, K, backend=backend)
     return top
 
 
-def _sum_top_rewrite(f, x, dirs, K):
+def _sum_top_rewrite(f, x, dirs, K, backend=None):
+    _no_kernel_backend("rewrite", backend)
     closed = jax.make_jaxpr(f)(x)
 
     def fan(x_, V_):
@@ -80,12 +97,15 @@ _TOP = {
 # ---------------------------------------------------------------------------
 
 
-def laplacian(f: Callable, x: jax.Array, method: str = "collapsed") -> jax.Array:
-    """Exact Laplacian. method='collapsed' is the forward Laplacian."""
+def laplacian(f: Callable, x: jax.Array, method: str = "collapsed",
+              backend: Optional[str] = None) -> jax.Array:
+    """Exact Laplacian. method='collapsed' is the forward Laplacian;
+    backend='pallas' executes it on fused collapsed-jet kernels."""
     if method == "nested":
+        _no_kernel_backend(method, backend)
         return _nested.laplacian_nested(f, x)
     dirs = _broadcast_directions(jnp.eye(x.shape[-1]), x)
-    return _TOP[method](f, x, dirs, 2)
+    return _TOP[method](f, x, dirs, 2, backend=backend)
 
 
 def laplacian_stochastic(
@@ -95,6 +115,7 @@ def laplacian_stochastic(
     samples: int,
     method: str = "collapsed",
     dist: str = "rademacher",
+    backend: Optional[str] = None,
 ) -> jax.Array:
     """Hutchinson estimate (1/S) sum_s <d^2 f, v_s^(x)2> (eq. 7a, stochastic).
 
@@ -102,12 +123,14 @@ def laplacian_stochastic(
     optimization of the Hutchinson estimator.
     """
     if method == "nested":
+        _no_kernel_backend(method, backend)
         return _nested.laplacian_nested_stochastic(f, x, key, samples, dist)
     dirs = _nested.sample_directions(key, samples, x, dist)
-    return _TOP[method](f, x, dirs, 2) / samples
+    return _TOP[method](f, x, dirs, 2, backend=backend) / samples
 
 
-def value_grad_laplacian(f: Callable, x: jax.Array):
+def value_grad_laplacian(f: Callable, x: jax.Array,
+                         backend: Optional[str] = None):
     """(f(x), grad f(x), Delta f(x)) from ONE collapsed 2-jet pass.
 
     The forward Laplacian's lower coefficients along basis directions ARE the
@@ -116,7 +139,7 @@ def value_grad_laplacian(f: Callable, x: jax.Array):
     folx exposes the same triple).
     """
     dirs = _broadcast_directions(jnp.eye(x.shape[-1]), x)
-    primal, lower, top = collapsed_fan(f, x, dirs, 2)
+    primal, lower, top = collapsed_fan(f, x, dirs, 2, backend=backend)
     grad = jnp.moveaxis(lower[0], 0, -1)  # (R, *batch) -> (*batch, D)
     return primal, grad, top
 
@@ -127,7 +150,8 @@ def value_grad_laplacian(f: Callable, x: jax.Array):
 
 
 def weighted_laplacian(
-    f: Callable, x: jax.Array, sigma: jax.Array, method: str = "collapsed"
+    f: Callable, x: jax.Array, sigma: jax.Array, method: str = "collapsed",
+    backend: Optional[str] = None,
 ) -> jax.Array:
     """Tr(sigma sigma^T d^2 f) per example.
 
@@ -140,12 +164,14 @@ def weighted_laplacian(
     if sigma.ndim == 3:  # (B, D, R): per-example directions
         dirs = jnp.moveaxis(sigma, -1, 0).astype(x.dtype)  # (R, B, D)
         if method == "nested":
+            _no_kernel_backend(method, backend)
             return jax.vmap(lambda v: _nested.vhvp(f, x, v))(dirs).sum(axis=0)
-        return _TOP[method](f, x, dirs, 2)
+        return _TOP[method](f, x, dirs, 2, backend=backend)
     if method == "nested":
+        _no_kernel_backend(method, backend)
         return _nested.weighted_laplacian_nested(f, x, sigma)
     dirs = _broadcast_directions(jnp.moveaxis(sigma, -1, 0), x)
-    return _TOP[method](f, x, dirs, 2)
+    return _TOP[method](f, x, dirs, 2, backend=backend)
 
 
 def weighted_laplacian_stochastic(
@@ -156,16 +182,18 @@ def weighted_laplacian_stochastic(
     samples: int,
     method: str = "collapsed",
     dist: str = "rademacher",
+    backend: Optional[str] = None,
 ) -> jax.Array:
     """(1/S) sum_s <d^2 f, (sigma v_s)^(x)2> — Hu et al.'s estimator, collapsed."""
     if method == "nested":
+        _no_kernel_backend(method, backend)
         v = _nested.sample_directions(key, samples, jnp.zeros(sigma.shape[-1]), dist)
         dirs = v @ sigma.T  # (S, D)
         dirs = _broadcast_directions(dirs, x)
         return jax.vmap(lambda d: _nested.vhvp(f, x, d))(dirs).mean(axis=0)
     v = _nested.sample_directions(key, samples, jnp.zeros(sigma.shape[-1]), dist)
     dirs = _broadcast_directions(v @ sigma.T, x)
-    return _TOP[method](f, x, dirs, 2) / samples
+    return _TOP[method](f, x, dirs, 2, backend=backend) / samples
 
 
 # ---------------------------------------------------------------------------
@@ -173,7 +201,8 @@ def weighted_laplacian_stochastic(
 # ---------------------------------------------------------------------------
 
 
-def biharmonic(f: Callable, x: jax.Array, method: str = "collapsed") -> jax.Array:
+def biharmonic(f: Callable, x: jax.Array, method: str = "collapsed",
+               backend: Optional[str] = None) -> jax.Array:
     """Exact biharmonic Delta^2 f.
 
     'nested' nests two HVP-trace Laplacians (the paper's footnote-2 baseline).
@@ -182,23 +211,25 @@ def biharmonic(f: Callable, x: jax.Array, method: str = "collapsed") -> jax.Arra
     (D + D(D-1) + D(D-1)/2 4-jets), each group's sum collapsed.
     """
     if method == "nested":
+        _no_kernel_backend(method, backend)
         return _nested.biharmonic_nested(f, x)
     D = x.shape[-1]
     out = None
     for scale, dirs in biharmonic_plan(D):
         dirs_b = _broadcast_directions(jnp.asarray(dirs), x)
-        group = _TOP[method](f, x, dirs_b, 4)
+        group = _TOP[method](f, x, dirs_b, 4, backend=backend)
         out = scale * group if out is None else out + scale * group
     return out
 
 
 def biharmonic_nested_taylor(
-    f: Callable, x: jax.Array, method: str = "collapsed"
+    f: Callable, x: jax.Array, method: str = "collapsed",
+    backend: Optional[str] = None,
 ) -> jax.Array:
     """Delta(Delta f) with each Laplacian computed in (collapsed) Taylor mode —
     the most efficient scheme per the paper's appendix G."""
-    inner = lambda y: laplacian(f, y, method=method)
-    return laplacian(inner, x, method=method)
+    inner = lambda y: laplacian(f, y, method=method, backend=backend)
+    return laplacian(inner, x, method=method, backend=backend)
 
 
 def biharmonic_stochastic(
@@ -207,13 +238,15 @@ def biharmonic_stochastic(
     key: jax.Array,
     samples: int,
     method: str = "collapsed",
+    backend: Optional[str] = None,
 ) -> jax.Array:
     """(1/(3S)) sum_s <d^4 f, v_s^(x)4>, v ~ N(0,I) (Gaussian-unbiased
     normalization of eq. 9; see nested.biharmonic_nested_stochastic)."""
     if method == "nested":
+        _no_kernel_backend(method, backend)
         return _nested.biharmonic_nested_stochastic(f, x, key, samples)
     dirs = _nested.sample_directions(key, samples, x, "normal")
-    return _TOP[method](f, x, dirs, 4) / (3.0 * samples)
+    return _TOP[method](f, x, dirs, 4, backend=backend) / (3.0 * samples)
 
 
 # ---------------------------------------------------------------------------
@@ -226,6 +259,7 @@ def linear_operator(
     x: jax.Array,
     terms,
     method: str = "collapsed",
+    backend: Optional[str] = None,
 ) -> jax.Array:
     """Compute sum over ``terms`` of  c * <d^K f(x), v_1^(x)p_1 (x) ... (x) v_I^(x)p_I>.
 
@@ -256,11 +290,12 @@ def linear_operator(
     for scale, dirs in groups.items():
         dirs_b = _broadcast_directions(jnp.stack(dirs), x)
         if method == "nested":
+            _no_kernel_backend(method, backend)
             vals = jax.vmap(
                 lambda v: _nested.directional_derivative_nested(f, x, v, K)
             )(dirs_b).sum(axis=0)
         else:
-            vals = _TOP[method](f, x, dirs_b, K)
+            vals = _TOP[method](f, x, dirs_b, K, backend=backend)
         out = scale * vals if out is None else out + scale * vals
     return out
 

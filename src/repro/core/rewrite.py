@@ -404,10 +404,12 @@ def collapse_sum_by_rewrite(fn: Callable, *example_args) -> Callable:
                 keep = [i for i in range(_aval_ndim(op)) if i not in raxes]
                 din = keep[d]
                 stats.pushed.append(name)
-                new_axes = tuple(i - (1 if i > din else 0) for i in raxes)
-                return lax.reduce_sum_p.bind(
-                    ssum(op, din), axes=new_axes, out_sharding=eqn.params.get("out_sharding")
-                )
+                new_axes = tuple(int(i) - (1 if i > din else 0) for i in raxes)
+                # go through the public API so the primitive's params match the
+                # running JAX version's abstract-eval signature (binding a
+                # hand-rolled param dict breaks across releases, e.g. the
+                # 'out_sharding' param).
+                return jnp.sum(ssum(op, din), axis=new_axes)
 
             if name == "select_n":
                 pred = eqn.invars[0]

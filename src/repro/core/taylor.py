@@ -175,6 +175,18 @@ def _tower_erf(x, m):
     return out
 
 
+def _tower_erfc(x, m):
+    # erfc = 1 - erf: same Hermite-style tower with the sign flipped for k>=1.
+    out = [jax.scipy.special.erfc(x)]
+    if m >= 1:
+        g = (2.0 / math.sqrt(math.pi)) * jnp.exp(-x * x)
+        p = [1.0]
+        for _ in range(1, m + 1):
+            out.append(-_poly_eval(p, x) * g)
+            p = _poly_sub(_poly_der(p), _poly_mul([0.0, 2.0], p))
+    return out
+
+
 TOWERS.update(
     exp=_tower_exp,
     tanh=_tower_tanh,
@@ -186,6 +198,7 @@ TOWERS.update(
     expm1=_tower_expm1,
     square=_tower_square,
     erf=_tower_erf,
+    erfc=_tower_erfc,
 )
 
 # ---------------------------------------------------------------------------

@@ -52,6 +52,23 @@ DEFAULT_RULES = {
 }
 
 
+def compat_mesh(axis_shapes, axis_names) -> Mesh:
+    """Construct a device mesh portably across JAX versions.
+
+    ``jax.sharding.AxisType`` (and ``jax.make_mesh``'s ``axis_types`` kwarg)
+    only exist on newer JAX; older releases behave as if every axis were
+    Auto. Callers that want plain Auto axes should use this instead of
+    touching ``AxisType`` directly."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(axis_shapes, axis_names,
+                                 axis_types=(axis_type.Auto,) * len(axis_names))
+        except TypeError:  # make_mesh predates axis_types
+            pass
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
 def _rules():
     return getattr(_state, "rules", None)
 

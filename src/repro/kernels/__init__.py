@@ -1,3 +1,16 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Custom Pallas kernels for the paper's compute hot-spots.
+
+``jet_mlp/``   — the fused collapsed-K-jet layer (K in {2, 4}; tanh, sin,
+                 gelu, logistic, relu, linear): the forward-Laplacian /
+                 biharmonic hot loop. Users normally never call it directly:
+                 ``operators.<op>(f, x, method="collapsed",
+                 backend="pallas")`` routes MLP-shaped segments through it
+                 automatically via :mod:`repro.core.offload`.
+``autotune``   — MXU-aligned block-size selection for those kernels, with a
+                 per-shape timing cache persisted to disk.
+``flash_attention/`` — streaming attention used by the serving/training
+                 stacks.
+
+Each kernel ships an ``ops.py`` (padding/jit wrappers) and a ``ref.py``
+(pure-jnp oracle, used by interpret-mode CPU tests).
+"""

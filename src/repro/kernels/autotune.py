@@ -1,0 +1,235 @@
+"""Block-size autotuner for the fused collapsed-jet Pallas kernels.
+
+The kernel grid is ``(B/block_b, Dout/block_d, R/block_r)``; throughput is
+very sensitive to the block choice (VMEM residency of the W tile and the
+direction accumulator vs. grid parallelism). The seed hard-coded 128/128/8 and
+clamped with ``min(block_b, max(8, B))`` — which can pick blocks that are not
+MXU-aligned. This module replaces both:
+
+* :func:`default_config` — a deterministic MXU-aligned heuristic, used on CPU
+  / interpret mode (where timing Pallas is meaningless) and as the timing
+  fallback;
+* :func:`get_block_config` — the cached entry point. On an accelerator it
+  times every aligned candidate (:func:`candidate_configs`) with the real
+  kernel and keeps the argmin. Results are memoized in-process and persisted
+  to a JSON cache file keyed by ``(B, Din, Dout, R) | K | dtype | backend``,
+  so the tuning cost is paid once per shape per machine.
+
+Cache location: ``$REPRO_AUTOTUNE_CACHE`` if set, else
+``~/.cache/repro/autotune.json``.
+
+Alignment rules (f32 MXU/VPU tiling): ``block_b`` is a multiple of 8 (sublane),
+``block_d`` a multiple of 128 (lane); ``block_r`` is a grid-only axis and may
+be any power of two. Callers pad their operands up to block multiples.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, NamedTuple, Optional, Sequence, Tuple
+
+import numpy as np
+
+_SUBLANE = 8
+_LANE = 128
+
+# conservative per-core VMEM budget for one grid step's working set (bytes)
+_VMEM_BUDGET = 12 * 1024 * 1024
+
+
+class BlockConfig(NamedTuple):
+    block_b: int
+    block_d: int
+    block_r: int
+
+
+_MEM_CACHE: Dict[str, BlockConfig] = {}
+
+
+def round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def cache_path() -> str:
+    path = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    if path:
+        return os.path.expanduser(path)
+    return os.path.expanduser("~/.cache/repro/autotune.json")
+
+
+def load_cache() -> Dict[str, list]:
+    try:
+        with open(cache_path()) as f:
+            data = json.load(f)
+        return data if isinstance(data, dict) else {}
+    except (OSError, ValueError):
+        return {}
+
+
+def save_cache(entries: Dict[str, list]) -> None:
+    path = cache_path()
+    try:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        # per-process tmp name: concurrent tuners on one host must not
+        # interleave writes into a shared tmp file (last os.replace still
+        # wins, which merely re-tunes the dropped key next run).
+        tmp = f"{path}.{os.getpid()}.tmp"
+        with open(tmp, "w") as f:
+            json.dump(entries, f, indent=0, sort_keys=True)
+        os.replace(tmp, path)
+    except OSError:  # read-only FS etc. — cache is best-effort
+        pass
+
+
+def clear_memory_cache() -> None:
+    _MEM_CACHE.clear()
+
+
+def shape_key(B: int, Din: int, Dout: int, R: int, K: int, dtype,
+              backend: str) -> str:
+    return f"{B}x{Din}x{Dout}x{R}|K{K}|{dtype}|{backend}"
+
+
+def _pow2_le(n: int) -> int:
+    p = 1
+    while p * 2 <= n:
+        p *= 2
+    return p
+
+
+def _vmem_bytes(cfg: BlockConfig, Din: int, K: int, itemsize: int = 4) -> int:
+    """Rough working-set estimate for one grid step (inputs + outputs +
+    scratch), used to discard configs that cannot fit in VMEM."""
+    bb, bd, br = cfg
+    inputs = (K - 1) * br * bb * Din + 2 * bb * Din + Din * bd + bd
+    outputs = (K - 1) * br * bb * bd + 2 * bb * bd
+    scratch = (K + 1) * bb * bd
+    # lower matmul intermediates Z_q live as registers/VMEM temporaries
+    temps = (K - 1) * br * bb * bd
+    return (inputs + outputs + scratch + temps) * itemsize
+
+
+def candidate_configs(B: int, Din: int, Dout: int, R: int, K: int) -> Tuple[BlockConfig, ...]:
+    """MXU-aligned candidate blocks, largest-block-first, VMEM-filtered."""
+    b_cap = round_up(max(B, 1), _SUBLANE)
+    d_cap = round_up(max(Dout, 1), _LANE)
+    r_cap = max(R, 1)
+    bbs = sorted({min(v, b_cap) for v in (8, 16, 32, 64, 128, 256)})
+    bds = sorted({min(v, d_cap) for v in (128, 256, 512)})
+    brs = sorted({min(v, _pow2_le(r_cap) if r_cap < 8 else v)
+                  for v in (1, 2, 4, 8, 16)})
+    out = []
+    for bb in bbs:
+        for bd in bds:
+            for br in brs:
+                cfg = BlockConfig(bb, bd, br)
+                if bb % _SUBLANE or bd % _LANE:
+                    continue
+                if _vmem_bytes(cfg, round_up(Din, _LANE), K) > _VMEM_BUDGET:
+                    continue
+                out.append(cfg)
+    out.sort(key=lambda c: (-c.block_b * c.block_d, -c.block_r))
+    return tuple(dict.fromkeys(out))
+
+
+def default_config(B: int, Din: int, Dout: int, R: int, K: int) -> BlockConfig:
+    """Deterministic MXU-aligned heuristic (no timing)."""
+    bb = min(128, round_up(max(B, 1), _SUBLANE))
+    bd = min(128, round_up(max(Dout, 1), _LANE))
+    br = min(8, _pow2_le(max(R, 1)) if R < 8 else 8)
+    cfg = BlockConfig(bb, bd, br)
+    while _vmem_bytes(cfg, round_up(Din, _LANE), K) > _VMEM_BUDGET and cfg.block_r > 1:
+        cfg = cfg._replace(block_r=cfg.block_r // 2)
+    return cfg
+
+
+def _time_one(run, repeats: int = 3, warmup: int = 1) -> float:
+    import jax
+
+    for _ in range(warmup):
+        jax.block_until_ready(run())
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(run())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def autotune(B: int, Din: int, Dout: int, R: int, K: int, dtype,
+             candidates: Optional[Sequence[BlockConfig]] = None) -> BlockConfig:
+    """Time the real fused kernel over aligned candidates; return the argmin.
+
+    Inputs are zeros of the padded shapes — the kernel is data-oblivious, so
+    timing is representative. Candidates that fail to compile are skipped.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.jet_mlp.jet_mlp import collapsed_jet_layer
+
+    if candidates is None:
+        candidates = candidate_configs(B, Din, Dout, R, K)
+    best_cfg, best_t = None, float("inf")
+    din_p = round_up(Din, _LANE)
+    for cfg in candidates:
+        bb, bd, br = cfg
+        Bp, Dp, Rp = round_up(B, bb), round_up(Dout, bd), round_up(R, br)
+        h0 = jnp.zeros((Bp, din_p), dtype)
+        hl = jnp.zeros((K - 1, Rp, Bp, din_p), dtype)
+        ht = jnp.zeros((Bp, din_p), dtype)
+        w = jnp.zeros((din_p, Dp), dtype)
+        b = jnp.zeros((Dp,), dtype)
+        try:
+            fn = jax.jit(lambda h0, hl, ht, w, b, _cfg=cfg: collapsed_jet_layer(
+                h0, hl, ht, w, b, K=K, activation="tanh",
+                block_b=_cfg.block_b, block_d=_cfg.block_d,
+                block_r=_cfg.block_r))
+            t = _time_one(lambda: fn(h0, hl, ht, w, b))
+        except Exception:  # unsupported block combo on this backend
+            continue
+        if t < best_t:
+            best_cfg, best_t = cfg, t
+    return best_cfg or default_config(B, Din, Dout, R, K)
+
+
+def get_block_config(B: int, Din: int, Dout: int, R: int, K: int, dtype,
+                     interpret: bool = False) -> BlockConfig:
+    """Cached block config for a kernel shape.
+
+    interpret=True (CPU validation path) returns the deterministic heuristic —
+    timing the Pallas interpreter would tune for the wrong machine. On
+    accelerators the timed result is persisted to the disk cache.
+    """
+    import jax
+
+    backend = "interpret" if interpret else jax.default_backend()
+    key = shape_key(B, Din, Dout, R, K, np.dtype(dtype).name, backend)
+    if key in _MEM_CACHE:
+        return _MEM_CACHE[key]
+    disk = load_cache()
+    if key in disk:
+        cfg = BlockConfig(*disk[key])
+        _MEM_CACHE[key] = cfg
+        return cfg
+    if interpret or backend == "cpu":
+        cfg = default_config(B, Din, Dout, R, K)
+        _MEM_CACHE[key] = cfg  # heuristic: memoize but don't persist
+        return cfg
+    cfg = autotune(B, Din, Dout, R, K, dtype)
+    _MEM_CACHE[key] = cfg
+    disk[key] = list(cfg)
+    save_cache(disk)
+    return cfg
+
+
+def put_config(B: int, Din: int, Dout: int, R: int, K: int, dtype,
+               backend: str, cfg: BlockConfig) -> None:
+    """Record a config in both caches (used by tests and offline tuning)."""
+    key = shape_key(B, Din, Dout, R, K, np.dtype(dtype).name, backend)
+    _MEM_CACHE[key] = BlockConfig(*cfg)
+    disk = load_cache()
+    disk[key] = list(cfg)
+    save_cache(disk)

@@ -1,31 +1,47 @@
-"""Pallas TPU kernel: fused collapsed-2-jet MLP layer (the forward-Laplacian
-hot loop, paper sections 3.1/3.2).
+"""Pallas TPU kernel: fused collapsed-K-jet MLP layer (the forward sweep of
+collapsed Taylor mode, paper sections 3.1/3.2; Laplacian K=2 and biharmonic
+K=4 towers).
 
-One layer of collapsed Taylor mode for `tanh(x @ W + b)` propagates
+One layer of collapsed Taylor mode for ``phi(x @ W + b)`` propagates the
+bundle ``(h0, lower[1..K-1] (R-stacked), top = sum_r h_{K,r})``:
 
-    z0 = h0 W + b          t0  = tanh(z0)
-    Z1 = H1 W  (R dirs)    T1  = phi'(z0) * Z1
-    z2 = h2s W             t2s = phi'(z0) * z2 + phi''(z0) * sum_r Z1_r^2
+    z0   = h0 W + b                      t0   = phi(z0)
+    Z_q  = H_q W   (q = 1..K-1, R dirs)  T_q  = Faa di Bruno (eq. 3) in Z_1..Z_q
+    zt   = ht W                          tt   = phi'(z0) zt
+                                              + sum_r [nontrivial partitions]
 
-Unfused, XLA materializes Z1 and Z1^2 (both (R, B, D)) in HBM — the dominant
-traffic of the whole operator. This kernel keeps the direction reduction in
-VMEM: the grid is (B/bB, D/bD, R/bR) with the R axis innermost; the running
-sum of Z1^2 lives in a VMEM scratch accumulator, phi'(z0)/phi''(z0) are
-computed once at r-block 0 and reused from scratch, and only t0, T1, t2s ever
-reach HBM. Three MXU matmuls (h0 W, H1 W, h2s W) share the same W tile.
+Unfused, XLA materializes every Z_q and the partition products (all
+``(R, B, D)``) in HBM — the dominant traffic of the whole operator. This
+kernel keeps the direction reduction in VMEM: the grid is
+``(B/bB, D/bD, R/bR)`` with the R axis innermost; the running sum over the
+nontrivial Faa di Bruno partitions lives in a VMEM scratch accumulator, the
+derivative tower ``phi'(z0)..phi^(K)(z0)`` is computed once at r-block 0 and
+reused from scratch, and only ``t0, T_q, tt`` ever reach HBM. All K+1 MXU
+matmuls share the same W tile.
+
+The per-order propagation formulas are *derived from the same combinatorics
+as the interpreter* (:mod:`repro.core.partitions`), and the in-kernel
+derivative towers (:data:`ACTIVATION_TOWERS`) mirror
+:data:`repro.core.taylor.TOWERS` — tanh/sin/logistic are literally the same
+table entries, so kernel and interpreter cannot drift apart.
 
 MXU alignment: all block dims are multiples of (8, 128) for f32; callers pad
-via ops.py. Validated against ref.py in interpret mode for shape/dtype sweeps
-(tests/test_kernels.py).
+via ops.py (block sizes come from :mod:`repro.kernels.autotune`). Validated
+against ref.py in interpret mode for K x activation x ragged-shape sweeps
+(tests/test_offload.py, tests/test_kernels.py).
 """
 
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.core.partitions import faa_di_bruno_terms, nontrivial_terms
+from repro.core.taylor import TOWERS, _poly_der, _poly_eval, _poly_mul, _poly_sub
 
 try:  # TPU-specific memory spaces; interpret mode works without them
     from jax.experimental.pallas import tpu as pltpu
@@ -36,63 +52,150 @@ except Exception:  # pragma: no cover
     _VMEM = None
 
 
-def _kernel(h0_ref, h1_ref, h2_ref, w_ref, b_ref,
-            t0_ref, t1_ref, t2_ref,
-            d1_s, d2_s, acc_s, *, nk: int, activation: str):
+# ---------------------------------------------------------------------------
+# In-kernel derivative towers, mirroring taylor.TOWERS.
+#
+# Each entry maps (z0, m) -> [phi(z0), phi'(z0), ..., phi^(m)(z0)] using ops
+# that trace cleanly inside a Pallas kernel. tanh / sin / logistic ARE the
+# interpreter's tower functions; gelu (exact, erf-based — the decomposition
+# the interpreter sees), relu and linear are kernel-side additions.
+# ---------------------------------------------------------------------------
+
+
+def _tower_gelu(x, m):
+    """Exact GELU x * Phi(x): phi^(k) (k>=2) = p_k(x) * pdf(x),
+    p_2 = 2 - x^2, p_{k+1} = p_k' - x p_k (since pdf' = -x pdf)."""
+    cdf = 0.5 * (1.0 + jax.scipy.special.erf(x * (2.0 ** -0.5)))
+    out = [x * cdf]
+    if m >= 1:
+        pdf = (1.0 / math.sqrt(2.0 * math.pi)) * jnp.exp(-0.5 * x * x)
+        out.append(cdf + x * pdf)
+        p = [2.0, 0.0, -1.0]
+        for _ in range(2, m + 1):
+            out.append(_poly_eval(p, x) * pdf)
+            p = _poly_sub(_poly_der(p), _poly_mul([0.0, 1.0], p))
+    return out
+
+
+def _tower_relu(x, m):
+    d1 = (x >= 0).astype(x.dtype)
+    return [jnp.maximum(x, 0.0), d1][: m + 1] + [jnp.zeros_like(x)] * max(0, m - 1)
+
+
+def _tower_linear(x, m):
+    return [x, jnp.ones_like(x)][: m + 1] + [jnp.zeros_like(x)] * max(0, m - 1)
+
+
+ACTIVATION_TOWERS = {
+    "tanh": TOWERS["tanh"],
+    "sin": TOWERS["sin"],
+    "logistic": TOWERS["logistic"],
+    "gelu": _tower_gelu,
+    "relu": _tower_relu,
+    "linear": _tower_linear,
+}
+
+# Reference callables (used by core.offload to classify activation subgraphs
+# and by ref.py / tests as oracles). "linear" is intentionally absent: it is
+# the no-activation fallback, not something to pattern-match.
+ACTIVATION_FNS = {
+    "tanh": jnp.tanh,
+    "sin": jnp.sin,
+    "logistic": jax.nn.sigmoid,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=False),
+    "relu": lambda x: jnp.maximum(x, 0.0),
+}
+
+
+def _collapsed_jet_kernel(h0_ref, hl_ref, ht_ref, w_ref, b_ref,
+                          t0_ref, tl_ref, tt_ref,
+                          d_s, acc_s, *, nk: int, K: int, activation: str):
+    tower = ACTIVATION_TOWERS[activation]
     k = pl.program_id(2)
 
     @pl.when(k == 0)
     def _first():
         z0 = jnp.dot(h0_ref[...], w_ref[...], preferred_element_type=jnp.float32)
         z0 = z0 + b_ref[...]
-        z2 = jnp.dot(h2_ref[...], w_ref[...], preferred_element_type=jnp.float32)
-        if activation == "tanh":
-            t0 = jnp.tanh(z0)
-            d1 = 1.0 - t0 * t0
-            d2 = -2.0 * t0 * d1
-        else:  # linear output layer
-            t0 = z0
-            d1 = jnp.ones_like(z0)
-            d2 = jnp.zeros_like(z0)
-        t0_ref[...] = t0.astype(t0_ref.dtype)
-        d1_s[...] = d1
-        d2_s[...] = d2
-        acc_s[...] = d1 * z2
+        zt = jnp.dot(ht_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+        d = tower(z0, K)
+        t0_ref[...] = d[0].astype(t0_ref.dtype)
+        for m in range(1, K + 1):
+            d_s[m - 1, ...] = d[m]
+        acc_s[...] = d[1] * zt
 
-    d1 = d1_s[...]
-    # (bR, bB, Din) @ (Din, bD) -> (bR, bB, bD)
-    z1 = jax.lax.dot_general(
-        h1_ref[...], w_ref[...], (((2,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )
-    t1_ref[...] = (d1[None] * z1).astype(t1_ref.dtype)
-    acc_s[...] += d2_s[...] * jnp.sum(z1 * z1, axis=0)
+    # lower-order stacked matmuls: Z[q] : (bR, bB, bD), q = 1..K-1
+    z = [
+        jax.lax.dot_general(
+            hl_ref[q, ...], w_ref[...], (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        for q in range(K - 1)
+    ]
+
+    def partition_product(sigma):
+        p = z[sigma[0] - 1]
+        for s in sigma[1:]:
+            p = p * z[s - 1]
+        return p
+
+    # per-direction lower outputs: T_q = sum_sigma nu d^{|sigma|} prod Z_s
+    for q in range(1, K):
+        acc = None
+        for nu, sigma in faa_di_bruno_terms(q):
+            term = d_s[len(sigma) - 1, ...][None] * partition_product(sigma)
+            if nu != 1:
+                term = float(nu) * term
+            acc = term if acc is None else acc + term
+        tl_ref[q - 1, ...] = acc.astype(tl_ref.dtype)
+
+    # direction-summed top contribution of this r-block (eq. 6 nontrivial part)
+    top = None
+    for nu, sigma in nontrivial_terms(K):
+        term = d_s[len(sigma) - 1, ...] * jnp.sum(partition_product(sigma), axis=0)
+        if nu != 1:
+            term = float(nu) * term
+        top = term if top is None else top + term
+    if top is not None:
+        acc_s[...] += top
 
     @pl.when(k == nk - 1)
     def _last():
-        t2_ref[...] = acc_s[...].astype(t2_ref.dtype)
+        tt_ref[...] = acc_s[...].astype(tt_ref.dtype)
 
 
-def jet_mlp_layer(h0, h1, h2s, w, b, *, activation: str = "tanh",
-                  block_b: int = 128, block_d: int = 128, block_r: int = 8,
-                  interpret: bool = False):
-    """One fused collapsed-jet layer.
+def collapsed_jet_layer(h0, hl, ht, w, b, *, K: int = 2, activation: str = "tanh",
+                        block_b: int = 128, block_d: int = 128, block_r: int = 8,
+                        interpret: bool = False):
+    """One fused collapsed-K-jet layer.
 
-    h0: (B, Din); h1: (R, B, Din); h2s: (B, Din); w: (Din, Dout); b: (Dout,).
-    Returns (t0 (B, Dout), t1 (R, B, Dout), t2s (B, Dout)).
-    Shapes must be pre-padded to the block sizes (ops.py handles padding).
+    h0: (B, Din); hl: (K-1, R, B, Din) stacked lower coefficients;
+    ht: (B, Din) direction-summed top; w: (Din, Dout); b: (Dout,).
+    Returns (t0 (B, Dout), tl (K-1, R, B, Dout), tt (B, Dout)).
+    Shapes must be pre-padded to the block sizes (ops.py handles padding and
+    block selection via the autotuner).
     """
+    if activation not in ACTIVATION_TOWERS:
+        raise ValueError(
+            f"unsupported activation {activation!r}; "
+            f"have {sorted(ACTIVATION_TOWERS)}"
+        )
+    if K < 2:
+        raise ValueError(f"collapsed jets need K >= 2, got {K}")
     B, Din = h0.shape
-    R = h1.shape[0]
+    if hl.shape[0] != K - 1:
+        raise ValueError(f"hl leading dim {hl.shape[0]} != K-1 = {K - 1}")
+    R = hl.shape[1]
     Dout = w.shape[1]
     assert B % block_b == 0 and Dout % block_d == 0 and R % block_r == 0
     grid = (B // block_b, Dout // block_d, R // block_r)
     nk = grid[2]
 
-    kernel = functools.partial(_kernel, nk=nk, activation=activation)
+    kernel = functools.partial(_collapsed_jet_kernel, nk=nk, K=K,
+                               activation=activation)
     out_shapes = (
         jax.ShapeDtypeStruct((B, Dout), h0.dtype),
-        jax.ShapeDtypeStruct((R, B, Dout), h0.dtype),
+        jax.ShapeDtypeStruct((K - 1, R, B, Dout), h0.dtype),
         jax.ShapeDtypeStruct((B, Dout), h0.dtype),
     )
     return pl.pallas_call(
@@ -100,24 +203,40 @@ def jet_mlp_layer(h0, h1, h2s, w, b, *, activation: str = "tanh",
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_b, Din), lambda i, j, k: (i, 0)),
-            pl.BlockSpec((block_r, block_b, Din), lambda i, j, k: (k, i, 0)),
+            pl.BlockSpec((K - 1, block_r, block_b, Din),
+                         lambda i, j, k: (0, k, i, 0)),
             pl.BlockSpec((block_b, Din), lambda i, j, k: (i, 0)),
             pl.BlockSpec((Din, block_d), lambda i, j, k: (0, j)),
             pl.BlockSpec((block_d,), lambda i, j, k: (j,)),
         ],
         out_specs=(
             pl.BlockSpec((block_b, block_d), lambda i, j, k: (i, j)),
-            pl.BlockSpec((block_r, block_b, block_d), lambda i, j, k: (k, i, j)),
+            pl.BlockSpec((K - 1, block_r, block_b, block_d),
+                         lambda i, j, k: (0, k, i, j)),
             pl.BlockSpec((block_b, block_d), lambda i, j, k: (i, j)),
         ),
         out_shape=out_shapes,
         scratch_shapes=[
-            _scratch((block_b, block_d)),
-            _scratch((block_b, block_d)),
+            _scratch((K, block_b, block_d)),
             _scratch((block_b, block_d)),
         ],
         interpret=interpret,
-    )(h0, h1, h2s, w, b)
+    )(h0, hl, ht, w, b)
+
+
+def jet_mlp_layer(h0, h1, h2s, w, b, *, activation: str = "tanh",
+                  block_b: int = 128, block_d: int = 128, block_r: int = 8,
+                  interpret: bool = False):
+    """Back-compat K=2 entry point (the forward-Laplacian layer).
+
+    h0: (B, Din); h1: (R, B, Din); h2s: (B, Din). Returns
+    (t0 (B, Dout), t1 (R, B, Dout), t2s (B, Dout)).
+    """
+    t0, tl, tt = collapsed_jet_layer(
+        h0, h1[None], h2s, w, b, K=2, activation=activation,
+        block_b=block_b, block_d=block_d, block_r=block_r, interpret=interpret,
+    )
+    return t0, tl[0], tt
 
 
 def _scratch(shape):

@@ -1,6 +1,11 @@
-"""Jit'd wrappers for the fused collapsed-jet MLP kernel: padding to MXU
-block shapes, layer chaining (the full forward-Laplacian network), and the
-interpret-mode switch for CPU validation."""
+"""Jit'd wrappers for the fused collapsed-jet layer kernel.
+
+This is the boundary the offload dispatcher (:mod:`repro.core.offload`)
+calls into: padding to MXU block shapes (blocks chosen by
+:mod:`repro.kernels.autotune`), symbolic-zero coefficient instantiation,
+batch-shape canonicalization, layer chaining (the full forward-Laplacian
+network), and the interpret-mode switch for CPU validation.
+"""
 
 from __future__ import annotations
 
@@ -8,8 +13,13 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from .jet_mlp import jet_mlp_layer
+from repro.kernels import autotune
+
+from .jet_mlp import collapsed_jet_layer
+
+_LANE = 128
 
 
 def _on_cpu() -> bool:
@@ -26,30 +36,122 @@ def _pad_to(x, axis, mult):
     return jnp.pad(x, widths)
 
 
-def jet_mlp_layer_op(h0, h1, h2s, w, b, *, activation="tanh",
-                     block_b=128, block_d=128, block_r=8, interpret=None):
-    """Padding-safe fused layer. Shapes: h0 (B, Din), h1 (R, B, Din),
-    h2s (B, Din), w (Din, Dout), b (Dout,)."""
-    if interpret is None:
-        interpret = _on_cpu()
-    B, Din = h0.shape
-    R = h1.shape[0]
-    Dout = w.shape[1]
-    block_b = min(block_b, max(8, B))
-    block_d = min(block_d, max(128, 128))
-    block_r = min(block_r, R)
+# ---------------------------------------------------------------------------
+# Differentiable fused layer: pallas_call has no automatic VJP, so the
+# backward pass re-runs the unfused reference semantics under jax.vjp
+# (rematerialized backward — exactly the graph XLA would differentiate).
+# This is what lets ``backend='pallas'`` sit inside a jax.grad training loss.
+# ---------------------------------------------------------------------------
 
-    h0p = _pad_to(h0, 0, block_b)
-    h1p = _pad_to(_pad_to(h1, 1, block_b), 0, block_r)
-    h2p = _pad_to(h2s, 0, block_b)
-    wp = _pad_to(w, 1, block_d)
-    bp = _pad_to(b, 0, block_d)
 
-    t0, t1, t2 = jet_mlp_layer(
-        h0p, h1p, h2p, wp, bp, activation=activation,
+@partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9, 10))
+def _fused_layer(h0, hl, ht, w, b, K, activation, block_b, block_d, block_r,
+                 interpret):
+    return collapsed_jet_layer(
+        h0, hl, ht, w, b, K=K, activation=activation,
         block_b=block_b, block_d=block_d, block_r=block_r, interpret=interpret,
     )
-    return t0[:B, :Dout], t1[:R, :B, :Dout], t2[:B, :Dout]
+
+
+def _fused_layer_fwd(h0, hl, ht, w, b, K, activation, block_b, block_d,
+                     block_r, interpret):
+    out = _fused_layer(h0, hl, ht, w, b, K, activation, block_b, block_d,
+                       block_r, interpret)
+    return out, (h0, hl, ht, w, b)
+
+
+def _fused_layer_bwd(K, activation, block_b, block_d, block_r, interpret,
+                     res, g):
+    from .ref import collapsed_jet_layer_ref
+
+    h0, hl, ht, w, b = res
+    _, vjp = jax.vjp(
+        lambda *a: collapsed_jet_layer_ref(*a, K=K, activation=activation),
+        h0, hl, ht, w, b,
+    )
+    return vjp(g)
+
+
+_fused_layer.defvjp(_fused_layer_fwd, _fused_layer_bwd)
+
+
+def collapsed_jet_layer_op(h0, lower, top, w, b, *, K: int = 2,
+                           activation: str = "tanh",
+                           block_b=None, block_d=None, block_r=None,
+                           interpret=None):
+    """Padding-safe fused collapsed-K-jet layer for arbitrary batch shapes.
+
+    h0: (*batch, Din); ``lower``: sequence of K-1 coefficient arrays, each
+    (R, *batch, Din) or ``None`` (symbolically zero); ``top``: (*batch, Din)
+    or ``None``; w: (Din, Dout); b: (Dout,).
+
+    Block sizes default to the autotuner's choice for this shape
+    (:func:`repro.kernels.autotune.get_block_config`); explicit values
+    override it. Returns ``(t0, [K-1 lower coeffs], tt)`` with the kernel's
+    padding stripped and the input batch shape restored.
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    if len(lower) != K - 1:
+        raise ValueError(f"need K-1={K - 1} lower coefficients, got {len(lower)}")
+
+    if np.dtype(h0.dtype) == np.dtype(np.float64):
+        raise ValueError(
+            "the fused collapsed-jet kernel accumulates in float32 and would "
+            "silently lose float64 precision; use the interpreter backend "
+            "for x64 computations")
+    batch_shape = h0.shape[:-1]
+    Din = h0.shape[-1]
+    B = int(np.prod(batch_shape)) if batch_shape else 1
+    Dout = w.shape[1]
+    R = next((c.shape[0] for c in lower if c is not None), 1)
+    dtype = h0.dtype
+
+    if block_b is None or block_d is None or block_r is None:
+        cfg = autotune.get_block_config(B, Din, Dout, R, K, dtype,
+                                        interpret=interpret)
+        block_b = block_b or cfg.block_b
+        block_d = block_d or cfg.block_d
+        block_r = block_r or cfg.block_r
+
+    h0_2 = h0.reshape(B, Din)
+    low = [
+        jnp.zeros((R, B, Din), dtype) if c is None else c.reshape(R, B, Din)
+        for c in lower
+    ]
+    hl = jnp.stack(low)  # (K-1, R, B, Din)
+    ht = jnp.zeros((B, Din), dtype) if top is None else top.reshape(B, Din)
+
+    # pad to block multiples; the contraction dim is padded to lane width so
+    # every matmul tile is MXU-aligned (zeros are exact).
+    din_mult = 1 if interpret else _LANE
+    h0p = _pad_to(_pad_to(h0_2, 0, block_b), 1, din_mult)
+    hlp = _pad_to(_pad_to(_pad_to(hl, 1, block_r), 2, block_b), 3, din_mult)
+    htp = _pad_to(_pad_to(ht, 0, block_b), 1, din_mult)
+    wp = _pad_to(_pad_to(w, 0, din_mult), 1, block_d)
+    bp = _pad_to(b, 0, block_d)
+
+    t0, tl, tt = _fused_layer(
+        h0p, hlp, htp, wp, bp, K, activation,
+        block_b, block_d, block_r, interpret,
+    )
+    t0 = t0[:B, :Dout].reshape(*batch_shape, Dout)
+    tt = tt[:B, :Dout].reshape(*batch_shape, Dout)
+    out_lower = [
+        tl[q, :R, :B, :Dout].reshape(R, *batch_shape, Dout) for q in range(K - 1)
+    ]
+    return t0, out_lower, tt
+
+
+def jet_mlp_layer_op(h0, h1, h2s, w, b, *, activation="tanh",
+                     block_b=None, block_d=None, block_r=None, interpret=None):
+    """Back-compat K=2 fused layer. Shapes: h0 (B, Din), h1 (R, B, Din),
+    h2s (B, Din), w (Din, Dout), b (Dout,)."""
+    t0, tl, tt = collapsed_jet_layer_op(
+        h0, [h1], h2s, w, b, K=2, activation=activation,
+        block_b=block_b, block_d=block_d, block_r=block_r, interpret=interpret,
+    )
+    return t0, tl[0], tt
 
 
 @partial(jax.jit, static_argnames=("sizes", "interpret"))
@@ -58,6 +160,8 @@ def forward_laplacian_mlp(params, x, sizes, interpret=None):
 
     This is the collapsed Taylor mode (K=2, basis directions) of section 3.2
     executed as a chain of Pallas kernels. x: (B, D) -> ((B,), (B,)).
+    Prefer ``operators.laplacian(f, x, method="collapsed", backend="pallas")``
+    for arbitrary networks — it routes through the same kernels automatically.
     """
     B, D = x.shape
     h0 = x

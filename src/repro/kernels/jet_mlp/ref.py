@@ -1,26 +1,58 @@
-"""Pure-jnp oracle for the fused collapsed-jet MLP layer kernel."""
+"""Pure-jnp oracles for the fused collapsed-jet MLP layer kernel.
+
+``collapsed_jet_layer_ref`` is the unfused semantics of
+``kernels.jet_mlp.collapsed_jet_layer`` for any K >= 2 and every activation in
+:data:`~repro.kernels.jet_mlp.jet_mlp.ACTIVATION_TOWERS`; the K=2 tanh/linear
+``jet_mlp_layer_ref`` wrapper is kept for the original forward-Laplacian
+call sites.
+"""
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core.partitions import faa_di_bruno_terms, nontrivial_terms
+
+from .jet_mlp import ACTIVATION_TOWERS
+
+
+def collapsed_jet_layer_ref(h0, hl, ht, w, b, *, K: int = 2,
+                            activation: str = "tanh"):
+    """Reference semantics of ``collapsed_jet_layer`` (unfused).
+
+    h0: (B, Din); hl: (K-1, R, B, Din); ht: (B, Din); w: (Din, Dout);
+    b: (Dout,). Returns (t0, tl (K-1, R, B, Dout), tt).
+    """
+    z0 = h0 @ w + b
+    zl = jnp.einsum("qrbi,io->qrbo", hl, w)
+    zt = ht @ w
+    d = ACTIVATION_TOWERS[activation](z0, K)
+
+    def partition_product(sigma):
+        p = zl[sigma[0] - 1]
+        for s in sigma[1:]:
+            p = p * zl[s - 1]
+        return p
+
+    tl = []
+    for q in range(1, K):
+        acc = None
+        for nu, sigma in faa_di_bruno_terms(q):
+            term = float(nu) * d[len(sigma)][None] * partition_product(sigma)
+            acc = term if acc is None else acc + term
+        tl.append(acc)
+
+    tt = d[1] * zt
+    for nu, sigma in nontrivial_terms(K):
+        tt = tt + float(nu) * d[len(sigma)] * jnp.sum(partition_product(sigma), axis=0)
+    return d[0], jnp.stack(tl), tt
+
 
 def jet_mlp_layer_ref(h0, h1, h2s, w, b, activation: str = "tanh"):
-    """Reference semantics of kernels.jet_mlp.jet_mlp_layer (unfused)."""
-    z0 = h0 @ w + b
-    z1 = jnp.einsum("rbi,io->rbo", h1, w)
-    z2 = h2s @ w
-    if activation == "tanh":
-        t0 = jnp.tanh(z0)
-        d1 = 1.0 - t0 * t0
-        d2 = -2.0 * t0 * d1
-    elif activation == "linear":
-        t0, d1, d2 = z0, jnp.ones_like(z0), jnp.zeros_like(z0)
-    else:
-        raise ValueError(activation)
-    t1 = d1[None] * z1
-    t2s = d1 * z2 + d2 * jnp.sum(z1 * z1, axis=0)
-    return t0, t1, t2s
+    """Reference semantics of kernels.jet_mlp.jet_mlp_layer (K=2, unfused)."""
+    t0, tl, tt = collapsed_jet_layer_ref(h0, h1[None], h2s, w, b, K=2,
+                                         activation=activation)
+    return t0, tl[0], tt
 
 
 def collapsed_laplacian_mlp_ref(params, x, sizes):

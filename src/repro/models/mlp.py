@@ -57,12 +57,12 @@ def rhs(x):
     return D * math.pi**2 * manufactured_solution(x)
 
 
-def loss(params, batch, cfg, method: str = "collapsed"):
+def loss(params, batch, cfg, method: str = "collapsed", backend=None):
     from repro.core.operators import laplacian
 
     x_int, x_bdy = batch["x"], batch.get("x_boundary")
     f = lambda y: apply(params, y, cfg)
-    lap = laplacian(f, x_int, method=method)
+    lap = laplacian(f, x_int, method=method, backend=backend)
     residual = -lap - rhs(x_int)
     pde = 0.5 * jnp.mean(residual**2)
     bc = jnp.zeros(())

@@ -6,6 +6,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # property-based deps are optional (requirements-dev.txt)
 from hypothesis import given, settings, strategies as st
 
 from repro.core.collapse import collapsed_fan

@@ -49,8 +49,7 @@ def test_divisible_spec_drops_uneven_axes():
 
 
 def test_auto_spec_heuristic():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = shd.compat_mesh((1, 1), ("data", "model"))
     spec = shd.auto_spec((4, 8, 16, 2, 64), mesh)
     assert len(spec) == 5
 
@@ -61,8 +60,8 @@ def test_compressed_psum_multidevice():
         from jax.sharding import PartitionSpec as P
         from jax.experimental.shard_map import shard_map
         from repro.distributed.collectives import compressed_psum
-        mesh = jax.make_mesh((8,), ('pod',),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.distributed.sharding import compat_mesh
+        mesh = compat_mesh((8,), ('pod',))
         x = jax.random.normal(jax.random.PRNGKey(0), (8, 128))
         f = shard_map(lambda s: compressed_psum(s, 'pod'), mesh,
                       in_specs=P('pod'), out_specs=P('pod'))
@@ -87,8 +86,7 @@ def test_sharded_train_step_multidevice():
 
         cfg = get_smoke_config('qwen2-1.5b')
         model = get_model(cfg)
-        mesh = jax.make_mesh((4, 2), ('data', 'model'),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = shd.compat_mesh((4, 2), ('data', 'model'))
         params = model.init(jax.random.PRNGKey(0), cfg)
         p_shard = shd.param_shardings(mesh, params)
         params = jax.device_put(params, p_shard)
@@ -114,11 +112,10 @@ def test_elastic_restore_across_meshes():
         import tempfile, jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro import checkpoint as ckpt
+        from repro.distributed.sharding import compat_mesh
 
-        mesh1 = jax.make_mesh((8,), ('data',),
-                              axis_types=(jax.sharding.AxisType.Auto,))
-        mesh2 = jax.make_mesh((2, 4), ('data', 'model'),
-                              axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh1 = compat_mesh((8,), ('data',))
+        mesh2 = compat_mesh((2, 4), ('data', 'model'))
         tree = {'w': jax.device_put(jnp.arange(64.).reshape(8, 8),
                                     NamedSharding(mesh1, P('data')))}
         with tempfile.TemporaryDirectory() as d:

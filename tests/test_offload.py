@@ -1,0 +1,305 @@
+"""Kernel offload subsystem: the generalized collapsed-jet kernel vs its
+unfused oracle (K x activation x ragged shapes, interpret mode), the block
+autotuner (MXU alignment + cache round-trip), and the dispatch layer
+(`backend='pallas'` operators match the CRULES interpreter with no
+hand-written kernel calls in user code)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import operators as ops
+from repro.kernels import autotune
+from repro.kernels.jet_mlp.jet_mlp import ACTIVATION_FNS, ACTIVATION_TOWERS
+from repro.kernels.jet_mlp.ops import collapsed_jet_layer_op
+from repro.kernels.jet_mlp.ref import collapsed_jet_layer_ref
+
+ACTS = sorted(ACTIVATION_TOWERS)
+
+
+# ---------------------------------------------------------------------------
+# generalized kernel vs reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("K", [2, 4])
+@pytest.mark.parametrize("act", ACTS)
+@pytest.mark.parametrize("B,Din,Dout,R", [
+    (5, 7, 130, 3),      # ragged everywhere: exercises padding on B/Dout/R
+    (16, 12, 64, 8),
+])
+def test_collapsed_jet_kernel_sweep(K, act, B, Din, Dout, R):
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    h0 = jax.random.normal(ks[0], (B, Din))
+    hl = jax.random.normal(ks[1], (K - 1, R, B, Din))
+    ht = jax.random.normal(ks[2], (B, Din))
+    w = jax.random.normal(ks[3], (Din, Dout)) / np.sqrt(Din)
+    b = jax.random.normal(ks[4], (Dout,))
+    ref = collapsed_jet_layer_ref(h0, hl, ht, w, b, K=K, activation=act)
+    got = collapsed_jet_layer_op(h0, list(hl), ht, w, b, K=K, activation=act,
+                                 interpret=True)
+    np.testing.assert_allclose(ref[0], got[0], rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(ref[1], jnp.stack(got[1]), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(ref[2], got[2], rtol=2e-4, atol=2e-4)
+
+
+def test_kernel_symbolic_zero_coefficients():
+    """None lower/top coefficients (symbolic zeros at the first layer) match
+    materialized zeros."""
+    K, B, Din, Dout, R = 4, 4, 6, 32, 5
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    h0 = jax.random.normal(ks[0], (B, Din))
+    h1 = jax.random.normal(ks[1], (R, B, Din))
+    w = jax.random.normal(ks[2], (Din, Dout)) / np.sqrt(Din)
+    b = jnp.zeros((Dout,))
+    zeros = jnp.zeros((R, B, Din))
+    ref = collapsed_jet_layer_op(h0, [h1, zeros, zeros], jnp.zeros((B, Din)),
+                                 w, b, K=K, activation="tanh", interpret=True)
+    got = collapsed_jet_layer_op(h0, [h1, None, None], None, w, b, K=K,
+                                 activation="tanh", interpret=True)
+    for a, g in zip(ref, got):
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(g)):
+            np.testing.assert_allclose(x, y, rtol=1e-6, atol=1e-6)
+
+
+def test_activation_towers_match_autodiff():
+    """The in-kernel derivative towers equal nested jax.grad up to order 4
+    (relu checked away from the origin, where its subgradient convention is
+    the interpreter's, not jax.grad's)."""
+    x = jnp.array([-1.7, -0.4, 0.3, 1.1, 2.2])
+    for name, fn in ACTIVATION_FNS.items():
+        towers = ACTIVATION_TOWERS[name](x, 4)
+        g = fn
+        for m in range(5):
+            want = jax.vmap(g)(x)
+            np.testing.assert_allclose(np.asarray(towers[m]), np.asarray(want),
+                                       rtol=2e-5, atol=2e-5, err_msg=f"{name}^{m}")
+            g = jax.grad(g)
+
+
+# ---------------------------------------------------------------------------
+# autotuner
+# ---------------------------------------------------------------------------
+
+
+def test_autotuner_blocks_are_mxu_aligned_for_ragged_shapes():
+    for (B, Din, Dout, R) in [(5, 7, 130, 3), (48, 56, 200, 13), (1, 3, 1, 50)]:
+        for K in (2, 4):
+            cfg = autotune.default_config(B, Din, Dout, R, K)
+            assert cfg.block_b % 8 == 0, cfg
+            assert cfg.block_d % 128 == 0, cfg
+            assert cfg.block_r >= 1
+            for c in autotune.candidate_configs(B, Din, Dout, R, K):
+                assert c.block_b % 8 == 0 and c.block_d % 128 == 0, c
+
+
+def test_autotuner_cache_roundtrip(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "autotune.json"))
+    autotune.clear_memory_cache()
+    cfg = autotune.BlockConfig(64, 256, 4)
+    autotune.put_config(48, 56, 200, 13, 2, jnp.float32, "tpu", cfg)
+    # survives a fresh in-memory cache (i.e. round-trips through disk)
+    autotune.clear_memory_cache()
+    disk = autotune.load_cache()
+    key = autotune.shape_key(48, 56, 200, 13, 2, "float32", "tpu")
+    assert disk[key] == [64, 256, 4]
+    # corrupt cache file degrades to empty, not a crash
+    (tmp_path / "autotune.json").write_text("{not json")
+    assert autotune.load_cache() == {}
+    autotune.clear_memory_cache()
+
+
+def test_get_block_config_interpret_is_deterministic(monkeypatch, tmp_path):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "autotune.json"))
+    autotune.clear_memory_cache()
+    a = autotune.get_block_config(9, 5, 768, 5, 2, jnp.float32, interpret=True)
+    b = autotune.get_block_config(9, 5, 768, 5, 2, jnp.float32, interpret=True)
+    assert a == b
+    assert a.block_b % 8 == 0 and a.block_d % 128 == 0
+    # heuristic configs are memoized but not persisted
+    assert autotune.load_cache() == {}
+    autotune.clear_memory_cache()
+
+
+# ---------------------------------------------------------------------------
+# dispatch layer: operators with backend='pallas'
+# ---------------------------------------------------------------------------
+
+
+def _mlp3(act, D, key):
+    ks = jax.random.split(key, 6)
+    W1 = jax.random.normal(ks[0], (D, 16)) / np.sqrt(D)
+    b1 = jax.random.normal(ks[1], (16,)) * 0.1
+    W2 = jax.random.normal(ks[2], (16, 16)) / 4
+    b2 = jax.random.normal(ks[3], (16,)) * 0.1
+    W3 = jax.random.normal(ks[4], (16, 1)) / 4
+    b3 = jax.random.normal(ks[5], (1,)) * 0.1
+    fn = ACTIVATION_FNS.get(act, lambda x: x)
+
+    def f(x):
+        h = fn(x @ W1 + b1)
+        h = fn(h @ W2 + b2)
+        return (h @ W3 + b3)[..., 0]
+
+    return f
+
+
+@pytest.mark.parametrize("act", ACTS)
+def test_laplacian_pallas_matches_interpreter(act):
+    """Acceptance: laplacian(f, x, method='collapsed', backend='pallas')
+    matches the interpreter path to 1e-5 for a 3-layer MLP per activation,
+    with no hand-written kernel calls in user code."""
+    D = 5
+    f = _mlp3(act, D, jax.random.PRNGKey(3))
+    x = jax.random.uniform(jax.random.PRNGKey(7), (9, D)) * 2 - 1
+    ref = ops.laplacian(f, x, method="collapsed")
+    got = ops.laplacian(f, x, method="collapsed", backend="pallas")
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+    # unbatched convention (D,) -> ()
+    got1 = ops.laplacian(f, x[0], method="collapsed", backend="pallas")
+    np.testing.assert_allclose(got1, ops.laplacian(f, x[0], method="collapsed"),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_laplacian_pallas_under_jit():
+    D = 4
+    f = _mlp3("tanh", D, jax.random.PRNGKey(5))
+    x = jax.random.normal(jax.random.PRNGKey(6), (7, D))
+    jfn = jax.jit(lambda x: ops.laplacian(f, x, method="collapsed",
+                                          backend="pallas"))
+    np.testing.assert_allclose(jfn(x), ops.laplacian(f, x, method="collapsed"),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_biharmonic_pallas_matches_interpreter():
+    """K=4 tower through the kernel (three Griewank direction groups)."""
+    f = _mlp3("tanh", 3, jax.random.PRNGKey(11))
+    x = jax.random.normal(jax.random.PRNGKey(12), (3,)) * 0.5
+    ref = ops.biharmonic(f, x, method="collapsed")
+    got = ops.biharmonic(f, x, method="collapsed", backend="pallas")
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-5)
+
+
+def test_value_grad_laplacian_pallas():
+    f = _mlp3("gelu", 4, jax.random.PRNGKey(13))
+    x = jax.random.normal(jax.random.PRNGKey(14), (6, 4))
+    u, g, lap = ops.value_grad_laplacian(f, x, backend="pallas")
+    u2, g2, lap2 = ops.value_grad_laplacian(f, x)
+    np.testing.assert_allclose(u, u2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(g, g2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(lap, lap2, rtol=1e-5, atol=1e-6)
+
+
+def test_pallas_backend_requires_collapsed_method():
+    f = _mlp3("tanh", 3, jax.random.PRNGKey(15))
+    x = jax.random.normal(jax.random.PRNGKey(16), (4, 3))
+    for method in ("standard", "rewrite", "nested"):
+        with pytest.raises(ValueError, match="collapsed"):
+            ops.laplacian(f, x, method=method, backend="pallas")
+    # the nested early-return paths of the other operators must not silently
+    # swallow the knob either
+    with pytest.raises(ValueError, match="collapsed"):
+        ops.biharmonic(f, x[0], method="nested", backend="pallas")
+    with pytest.raises(ValueError, match="collapsed"):
+        ops.laplacian_stochastic(f, x, jax.random.PRNGKey(0), 4,
+                                 method="nested", backend="pallas")
+
+
+def test_kernel_rejects_float64():
+    """The kernel accumulates in f32; x64 inputs must fail loudly at the op
+    boundary (the offload dispatcher falls back to the interpreter instead)."""
+    h0 = np.zeros((2, 4), np.float64)
+    w = np.zeros((4, 8), np.float64)
+    with pytest.raises(ValueError, match="float64"):
+        collapsed_jet_layer_op(h0, [np.zeros((1, 2, 4))], None, w,
+                               np.zeros((8,)), K=2, activation="tanh")
+
+
+def test_offload_fuses_inside_remat_body():
+    """Call primitives (remat/jit) recurse with the offload interpreter, so
+    fusion coverage survives inside their bodies."""
+    W = jax.random.normal(jax.random.PRNGKey(0), (4, 8)) / 2
+    b = jnp.zeros((8,))
+    x = jax.random.normal(jax.random.PRNGKey(2), (5, 4))
+    body = jax.checkpoint(lambda y: jnp.tanh(y @ W + b))
+    f = lambda x: jnp.sum(body(x), axis=-1)
+    ref = ops.laplacian(f, x, method="collapsed")
+    got = ops.laplacian(f, x, method="collapsed", backend="pallas")
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_offload_falls_back_on_nonfusible_programs():
+    """Programs with no MLP segment (or exotic ops) run through CRULES and
+    still match."""
+    f = lambda x: jnp.sin(x[..., 0] * x[..., 1]) + jnp.cos(x).sum(axis=-1)
+    x = jax.random.normal(jax.random.PRNGKey(17), (5, 3))
+    ref = ops.laplacian(f, x, method="collapsed")
+    got = ops.laplacian(f, x, method="collapsed", backend="pallas")
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_offload_weak_typed_and_computed_bias():
+    """Bias values that flow through eqns traced after the dot: weak-typed
+    biases insert convert_element_type (look-through + fuse); a bias computed
+    by a non-pure eqn (b1 + b2) must fall back cleanly, not crash."""
+    W = jax.random.normal(jax.random.PRNGKey(0), (4, 8)) / 2
+    x = jax.random.normal(jax.random.PRNGKey(2), (5, 4))
+    b = jnp.full((8,), 0.5)  # weak-typed
+    b2 = jnp.ones((8,)) * 0.25
+    for f in (lambda x: jnp.sum(jnp.tanh(x @ W + b), axis=-1),
+              lambda x: jnp.sum(jnp.tanh(x @ W + (b + b2)), axis=-1)):
+        ref = ops.laplacian(f, x, method="collapsed")
+        got = ops.laplacian(f, x, method="collapsed", backend="pallas")
+        np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_offload_gated_activation_falls_back():
+    """silu/swish consumes the pre-activation twice; the dispatcher must not
+    shrink the activation region in a way that orphans it."""
+    W = jax.random.normal(jax.random.PRNGKey(0), (4, 8)) / 2
+    b = jnp.zeros((8,))
+    x = jax.random.normal(jax.random.PRNGKey(2), (5, 4))
+    f = lambda x: jnp.sum(jax.nn.silu(x @ W + b), axis=-1)
+    ref = ops.laplacian(f, x, method="collapsed")
+    got = ops.laplacian(f, x, method="collapsed", backend="pallas")
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_offload_relu6_not_misclassified_as_relu():
+    """Clipped activations agree with relu on a narrow window; the probe must
+    cover large magnitudes so relu6 fuses at most the max and keeps the min
+    on the interpreter."""
+    W = jax.random.normal(jax.random.PRNGKey(0), (4, 8)) / 2
+    b = jnp.zeros((8,))
+    x = jax.random.normal(jax.random.PRNGKey(2), (5, 4)) * 8.0  # beyond the clip
+    f = lambda x: jnp.sum(jnp.minimum(jnp.maximum(x @ W + b, 0.0), 6.0), axis=-1)
+    ref = ops.laplacian(f, x, method="collapsed")
+    got = ops.laplacian(f, x, method="collapsed", backend="pallas")
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+    u, g, lap = ops.value_grad_laplacian(f, x, backend="pallas")
+    u2, g2, lap2 = ops.value_grad_laplacian(f, x)
+    np.testing.assert_allclose(u, u2, rtol=1e-6)
+    np.testing.assert_allclose(g, g2, rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(lap, lap2, rtol=1e-6, atol=1e-7)
+
+
+def test_grad_through_pallas_backend():
+    """The fused layer's custom VJP lets the offloaded Laplacian sit inside a
+    differentiated PINN-style loss."""
+    W1 = jax.random.normal(jax.random.PRNGKey(0), (4, 8)) / 2
+    b1 = jnp.zeros((8,))
+    W2 = jax.random.normal(jax.random.PRNGKey(1), (8, 1)) / 2
+    x = jax.random.normal(jax.random.PRNGKey(2), (6, 4))
+
+    def loss(params, backend=None):
+        W1, b1, W2 = params
+        f = lambda y: (jnp.tanh(y @ W1 + b1) @ W2)[..., 0]
+        return jnp.mean(ops.laplacian(f, x, method="collapsed",
+                                      backend=backend) ** 2)
+
+    p = (W1, b1, W2)
+    g_ref = jax.grad(loss)(p)
+    g_pal = jax.grad(lambda p: loss(p, "pallas"))(p)
+    for a, b in zip(g_ref, g_pal):
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=1e-6)

@@ -2,6 +2,9 @@
 
 import math
 
+import pytest
+
+pytest.importorskip("hypothesis")  # property-based deps are optional (requirements-dev.txt)
 from hypothesis import given, strategies as st
 
 from repro.core.partitions import (faa_di_bruno_terms, multiplicity,

@@ -1,4 +1,9 @@
-"""End-to-end behaviour: the paper's technique inside real training loops."""
+"""End-to-end behaviour: the paper's technique inside real training loops.
+
+The training-loop tests run for minutes and are marked ``slow`` (deselected
+by the default pytest profile; run with ``pytest -m slow``)."""
+
+import pytest
 
 import jax
 import jax.numpy as jnp
@@ -10,6 +15,7 @@ from repro.models import get_model
 from repro.train.trainer import Trainer, TrainConfig
 
 
+@pytest.mark.slow
 def test_pinn_training_with_collapsed_laplacian_converges():
     """The paper-kind end-to-end: Poisson PINN trained with the collapsed
     Taylor-mode Laplacian in the loss; residual must drop substantially."""
@@ -36,6 +42,7 @@ def test_pinn_methods_give_same_loss_value():
     np.testing.assert_allclose(vals, vals[0], rtol=1e-5)
 
 
+@pytest.mark.slow
 def test_lm_training_loss_decreases():
     cfg = get_smoke_config("qwen2-1.5b")
     model = get_model(cfg)
@@ -49,6 +56,7 @@ def test_lm_training_loss_decreases():
     assert hist[-1]["loss"] < hist[0]["loss"], hist
 
 
+@pytest.mark.slow
 def test_moe_training_step_finite():
     cfg = get_smoke_config("deepseek-moe-16b")
     model = get_model(cfg)

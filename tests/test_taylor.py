@@ -5,6 +5,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # property-based deps are optional (requirements-dev.txt)
 from hypothesis import given, settings, strategies as st
 from jax.experimental import jet as jjet
 
