@@ -1,0 +1,97 @@
+"""Transformer-attention Laplacian: CRULES interpreter vs fused Pallas path.
+
+The attention companion to fig1_laplacian: a transformer PINN (one token per
+lifted feature, canonical ``attn_impl='reference'`` graph) whose Laplacian is
+computed in collapsed Taylor mode, once on the per-primitive interpreter and
+once with ``backend='pallas'`` — the offload planner fusing each
+``q·kᵀ → softmax → ·v`` block through ``kernels/jet_attention`` (the Pallas
+kernel on accelerators; on CPU the dispatcher lowers the fused segment to the
+reference graph, see ``jet_attention/ops.py``).
+
+What the numbers mean per host:
+
+* **TPU/GPU** — the comparison this benchmark exists for: the interpreter
+  materializes every ``(R, N, S, S)`` score/probability coefficient in HBM
+  while the kernel keeps them in VMEM, so the gap grows with S.
+* **CPU** — a dispatch/semantics check, not a bandwidth story: XLA compiles
+  the interpreter's jaxpr into the same handful of fused einsums, so the two
+  paths are near parity and the measured ratio mostly reflects shared-host
+  noise (hence the interleaved timing). Do not read CPU ratios as the
+  kernel's value; run this on an accelerator host for the real comparison
+  (ROADMAP: on-accelerator autotune/bench validation).
+
+Each (backend, S) cell is emitted as a machine-readable ``BENCH`` json row
+(see benchmarks/common.emit_bench) with the host platform attached.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import compare_times, emit, emit_bench
+from repro.configs.base import ModelConfig
+from repro.core import operators as ops
+from repro.models import transformer
+
+
+def transformer_pinn(S: int, D: int, d_model: int = 32, num_layers: int = 1,
+                     key=None):
+    """u(x): (B, D) -> (B,) with an S-token transformer trunk. Coordinates
+    are lifted to S tokens by a fixed random projection (operator-learning
+    style: sequence length decoupled from the PDE dimension)."""
+    cfg = ModelConfig(
+        name="attn-pinn", family="dense", num_layers=num_layers,
+        d_model=d_model, num_heads=1, num_kv_heads=1, d_ff=2 * d_model,
+        vocab_size=8, act="gelu", dtype="float32", param_dtype="float32",
+        attn_impl="reference", remat=False,
+    )
+    key = key if key is not None else jax.random.PRNGKey(0)
+    kp, ke, kh = jax.random.split(key, 3)
+    params = transformer.init(kp, cfg)
+    lift = jax.random.normal(ke, (D, S, d_model)) * 0.3
+    pos = jax.random.normal(kh, (S, d_model)) * 0.1
+    head = jnp.ones((d_model,)) / d_model
+
+    def f(x):
+        tokens = jnp.einsum("bd,dsm->bsm", x, lift) + pos[None]
+        h, _ = transformer.backbone_unrolled(params, tokens, cfg,
+                                             jnp.arange(S))
+        return jnp.mean(h, axis=-2) @ head
+
+    return f
+
+
+def run(D: int = 4, B: int = 2, seqs=(64, 256), rounds: int = 8):
+    platform = jax.default_backend()
+    rows = []
+    for S in seqs:
+        f = transformer_pinn(S, D)
+        x = jax.random.normal(jax.random.PRNGKey(S), (B, D)) * 0.5
+        fns = {
+            backend: jax.jit(lambda x, b=backend: ops.laplacian(
+                f, x, method="collapsed", backend=b))
+            for backend in ("interpreter", "pallas")
+        }
+        times = compare_times(fns, x, rounds=rounds)
+        for backend, t in times.items():
+            rows.append({"name": f"attn_lap/{backend}/S{S}",
+                         "ms_per_call": f"{t*1e3:.2f}", "derived": ""})
+        speedup = times["interpreter"] / times["pallas"]
+        rows.append({"name": f"attn_lap/speedup/S{S}", "ms_per_call": "",
+                     "derived": f"pallas_vs_interpreter={speedup:.2f}x"})
+        for backend, t in times.items():
+            emit_bench("attention_laplacian", method="collapsed",
+                       backend=backend, S=S, D=D, B=B, platform=platform,
+                       ms_per_call=round(t * 1e3, 3),
+                       speedup_vs_interpreter=(
+                           round(speedup, 4) if backend == "pallas" else 1.0))
+    return rows
+
+
+def main():
+    emit(run(), ["name", "ms_per_call", "derived"])
+
+
+if __name__ == "__main__":
+    main()

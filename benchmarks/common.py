@@ -45,6 +45,23 @@ def best_time(fn: Callable, *args, repeats: int = 5, warmup: int = 2) -> float:
     return best
 
 
+def compare_times(fns: Dict[str, Callable], *args, rounds: int = 8,
+                  warmup: int = 2) -> Dict[str, float]:
+    """Best wall-time per callable with the candidates interleaved round-robin,
+    so machine-speed drift (shared-host noise) hits every candidate equally
+    instead of biasing whichever ran in the slow minute."""
+    for fn in fns.values():
+        for _ in range(warmup):
+            jax.block_until_ready(fn(*args))
+    best = {name: float("inf") for name in fns}
+    for _ in range(rounds):
+        for name, fn in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            best[name] = min(best[name], time.perf_counter() - t0)
+    return best
+
+
 def linfit_slope(xs: List[float], ys: List[float]) -> float:
     """Least-squares slope (the paper's per-datum/per-sample cost)."""
     A = np.stack([np.asarray(xs, float), np.ones(len(xs))], 1)

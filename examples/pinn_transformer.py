@@ -1,0 +1,81 @@
+"""Transformer PINN: collapsed Taylor mode through attention blocks.
+
+STDE/DOF-style operator-learning networks put attention between the PDE
+coordinates and the solution head. Collapsed Taylor mode (paper eq. 6)
+propagates straight through ``q·kᵀ → softmax → ·v`` via the CRULES
+interpreter, and ``backend='pallas'`` fuses each attention block into the
+streaming-softmax collapsed-jet kernel (``kernels/jet_attention``) — matched
+automatically by the offload planner, no kernel calls in user code:
+
+    operators.laplacian(f, x, method="collapsed", backend="pallas")
+
+The model lifts each coordinate of ``x in R^D`` to a token, runs a small
+decoder-only transformer (``models/transformer.backbone_unrolled`` with
+``attn_impl='reference'``, the canonical fusible attention graph), and pools
+to a scalar ``u(x)``.
+
+Run:  PYTHONPATH=src python examples/pinn_transformer.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import operators as ops
+from repro.models import transformer
+
+
+def make_pinn(D: int, key, d_model: int = 32, num_layers: int = 2):
+    cfg = ModelConfig(
+        name="pinn-transformer", family="dense", num_layers=num_layers,
+        d_model=d_model, num_heads=2, num_kv_heads=2, d_ff=2 * d_model,
+        vocab_size=8, act="gelu", dtype="float32", param_dtype="float32",
+        attn_impl="reference", remat=False,
+    )
+    kp, ke, kh = jax.random.split(key, 3)
+    params = transformer.init(kp, cfg)
+    lift = jax.random.normal(ke, (D, d_model)) * 0.5  # coordinate embedding
+    pos = jax.random.normal(kh, (D, d_model)) * 0.1
+    head = jnp.ones((d_model,)) / d_model
+
+    def f(x):
+        """u(x): (B, D) -> (B,). One token per PDE coordinate."""
+        tokens = x[..., None] * lift[None] + pos[None]  # (B, S=D, d_model)
+        h, _ = transformer.backbone_unrolled(params, tokens, cfg,
+                                             jnp.arange(D))
+        return jnp.mean(h, axis=-2) @ head
+
+    return f
+
+
+def main():
+    D, B = 6, 4
+    f = make_pinn(D, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, D)) * 0.5
+
+    print(f"Laplacian of a {D}-token transformer PINN (batch {B})\n")
+    times, results = {}, {}
+    for backend in ("interpreter", "pallas"):
+        fn = jax.jit(lambda x, b=backend: ops.laplacian(
+            f, x, method="collapsed", backend=b))
+        out = jax.block_until_ready(fn(x))
+        t0 = time.perf_counter()
+        for _ in range(5):
+            jax.block_until_ready(fn(x))
+        times[backend] = (time.perf_counter() - t0) / 5
+        results[backend] = out
+
+    err = float(jnp.abs(results["pallas"] - results["interpreter"]).max())
+    print(f"{'backend':12s} {'time [ms]':>10s}")
+    for b, t in times.items():
+        print(f"{b:12s} {t*1e3:10.2f}")
+    print(f"\nmax |pallas - interpreter| = {err:.2e}")
+    print("(every attention block ran as one fused collapsed-jet attention "
+          "op under backend='pallas' — the Pallas kernel on accelerators, "
+          "its fused reference graph on CPU)")
+
+
+if __name__ == "__main__":
+    main()

@@ -73,10 +73,16 @@ def _write(ckpt_dir, step, host_arrays, treedef, extra) -> str:
 
 _write_queue: "queue.Queue" = queue.Queue()
 _writer_thread: Optional[threading.Thread] = None
-_pending = threading.Semaphore(0)
+# in-flight write count under a condition: the queue alone cannot signal
+# completion (the writer dequeues BEFORE writing, so an empty queue can
+# coincide with a write still in flight — wait_for_saves returning then lets
+# the caller delete the directory out from under the writer).
+_pending_cv = threading.Condition()
+_pending_count = 0
 
 
 def _writer_loop():
+    global _pending_count
     while True:
         item = _write_queue.get()
         if item is None:
@@ -84,24 +90,29 @@ def _writer_loop():
         try:
             _write(*item)
         finally:
-            _pending.release()
+            with _pending_cv:
+                _pending_count -= 1
+                _pending_cv.notify_all()
 
 
 def save_async(ckpt_dir: str, step: int, tree, extra: Optional[dict] = None):
     """Fetch to host (blocking only on device->host copy) and write in a
     background thread. Call wait_for_saves() before exiting."""
-    global _writer_thread
+    global _writer_thread, _pending_count
     flat = _flatten(tree)
     host = {k: np.asarray(v) for k, v in flat.items()}  # device->host fetch
     if _writer_thread is None or not _writer_thread.is_alive():
         _writer_thread = threading.Thread(target=_writer_loop, daemon=True)
         _writer_thread.start()
+    with _pending_cv:
+        _pending_count += 1
     _write_queue.put((ckpt_dir, step, host, jax.tree_util.tree_structure(tree), extra))
 
 
 def wait_for_saves():
-    while not _write_queue.empty():
-        _pending.acquire()
+    with _pending_cv:
+        while _pending_count:
+            _pending_cv.wait()
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:

@@ -59,6 +59,9 @@ class ModelConfig:
     dtype: str = "bfloat16"  # activation/compute dtype
     param_dtype: str = "float32"
     attn_chunk: int = 512  # kv-block size of the streaming-softmax attention
+    # attention graph: 'flash' (scanned streaming softmax) | 'reference'
+    # (canonical masked-softmax graph that collapsed-Taylor offload can fuse)
+    attn_impl: str = "flash"
     remat: bool = True
     remat_policy: str = "nothing"  # nothing | dots (see distributed notes)
     use_pallas: bool = False  # TPU runtime: use Pallas kernels where available

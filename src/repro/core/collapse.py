@@ -205,6 +205,37 @@ def _dot_general(K, in_jets, eqn):
     return [_propagate_bilinear_collapsed(bil, bil_vv, a, b, K)]
 
 
+@defcrule("reduce_prod")
+def _reduce_prod(K, in_jets, eqn):
+    """Product reduction = fold of elementwise multiplies (collapsed Leibniz
+    per fold step), mirroring the standard-Taylor rule in taylor.py. Masked
+    attention fallbacks and probability-product heads hit this inside mixed
+    graphs; the fold keeps every step's direction axis intact."""
+    (a,) = in_jets
+    axes = sorted(eqn.params["axes"], reverse=True)
+    out = a
+    for ax in axes:
+        n = out.primal.shape[ax]
+
+        def take(j, i, ax=ax):
+            return CollapsedJet(
+                jnp.take(j.primal, i, axis=ax),
+                # lower coefficients carry a leading R axis
+                [map_coeff(lambda c: jnp.take(c, i, axis=ax + 1), cc)
+                 for cc in j.lower],
+                map_coeff(lambda c: jnp.take(c, i, axis=ax), j.top),
+            )
+
+        acc = take(out, 0)
+        for i in range(1, n):
+            acc = _propagate_bilinear_collapsed(
+                jnp.multiply, jnp.multiply, acc, take(out, i), K)
+        out = acc
+    out.lower = [_shape_to(c, out.primal, True) for c in out.lower]
+    out.top = _shape_to(out.top, out.primal, False)
+    return [out]
+
+
 @defcrule("div")
 def _div(K, in_jets, eqn):
     a, b = in_jets

@@ -4,42 +4,65 @@ The paper argues the collapsed forward sweep "could — or should — be done by
 a machine learning compiler". This module is that compiler pass for our own
 interpreter: :func:`interpret_collapsed_offload` walks the same jaxpr as
 :func:`repro.core.collapse.interpret_collapsed`, but first *plans* kernel
-offload segments — ``dot_general -> add(bias) -> elementwise activation``
-chains, the MLP-layer shape of every PINN/VMC network — and routes each
-matching segment through the fused collapsed-jet Pallas kernel
-(:func:`repro.kernels.jet_mlp.ops.collapsed_jet_layer_op`). Everything else
-falls back to the per-primitive ``CRULES``, so arbitrary programs still work;
-users opt in with ``operators.laplacian(f, x, method="collapsed",
-backend="pallas")`` and never touch ``kernels/``.
+offload segments and routes each matching segment through a fused
+collapsed-jet Pallas kernel. Everything else falls back to the per-primitive
+``CRULES``, so arbitrary programs still work; users opt in with
+``operators.laplacian(f, x, method="collapsed", backend="pallas")`` and never
+touch ``kernels/``.
 
-Segment matching is structural + behavioural:
+Planning is a *registry of segment matchers* (:data:`SEGMENT_MATCHERS`).
+Each matcher inspects one anchor equation plus its neighbourhood and, on a
+structural match, returns a :class:`Segment` describing the fused region:
+the equations the kernel covers (``skip``), jet-constant equations traced
+after the anchor that must be evaluated early (``hoist`` — e.g. iota-derived
+attention masks), and a ``try_fuse`` that makes the final fuse/fallback
+decision against the live jet environment. New kernels plug in with
+:func:`register_segment_matcher`; matchers are tried in registration order
+(first match per anchor wins).
 
-* the ``dot_general`` must be a plain matmul (contract lhs-last with rhs-dim
-  0, no batch dims) whose rhs is a jet-constant (a weight);
-* a following ``add`` whose other operand is a jet-constant ``(Dout,)``
-  vector (possibly via ``broadcast_in_dim``) is folded in as the bias;
-* the maximal literal-only elementwise subgraph consuming the affine output
-  is *classified by probing*: it is evaluated on a fixed 1-D probe and
-  compared against the closed-form activations the kernel supports
-  (:data:`repro.kernels.jet_mlp.jet_mlp.ACTIVATION_FNS`). This recognizes
-  both single-primitive activations (``tanh``/``sin``/``logistic``/``relu``)
-  and decomposed ones (exact ``gelu`` traces to a 5-eqn erf subgraph), and is
-  safe under an outer ``jit`` because only jaxpr literals participate.
+Two matchers ship today:
 
-Whether a var is jet-constant is only known at interpretation time (weights
-are constants of the traced function, but the same jaxpr shape could put a
-propagated value on the rhs), so the plan records candidates and the final
-fuse/fallback decision is made per segment against the live environment.
+* **jet_mlp** — ``dot_general -> add(bias) -> elementwise activation``
+  chains, the MLP-layer shape of every PINN/VMC network, fused into
+  :func:`repro.kernels.jet_mlp.ops.collapsed_jet_layer_op`. The dot must be
+  a plain matmul whose rhs is a jet-constant weight; a following jet-constant
+  ``(Dout,)`` bias add is folded in; the maximal literal-only elementwise
+  subgraph consuming the affine output is *classified by probing* — it is
+  evaluated on a fixed 1-D probe and compared against the kernel's supported
+  activations, which recognizes both single-primitive activations and
+  decomposed ones (exact ``gelu`` traces to a 5-eqn erf subgraph).
+
+* **jet_attention** — ``dot_general(q·kᵀ) [-> scale] [-> mask select] ->
+  softmax -> dot_general(·v)`` blocks, the attention shape of transformer
+  PINN / operator-learning networks, fused into
+  :func:`repro.kernels.jet_attention.ops.collapsed_jet_attention_op`. The
+  score dot must contract the trailing feature dim with leading batch dims;
+  the scale must be scalar and jet-constant; a ``where``-style mask select
+  (flat ``select_n`` or the ``pjit[_where]`` jnp.where lowers to) is folded
+  into the kernel's mask input, with the iota-derived mask producers hoisted;
+  the maximal row-reduction subgraph between scores and the value dot is
+  classified by probing against row softmax — the same behavioural contract
+  as the activation classifier, so any numerically-equal softmax spelling
+  fuses. The op lowers per platform (Pallas kernel on accelerators, the
+  equivalent fused reference graph on CPU).
+
+Probing is safe under an outer ``jit`` because only jaxpr literals and fixed
+probe arrays participate. Whether a var is jet-constant (weights, masks,
+scales) is only known at interpretation time, so the plan records candidates
+and ``try_fuse`` re-checks per segment against the live environment,
+falling back to ``CRULES`` when the structure's runtime preconditions fail
+(e.g. a propagated-jet scale or weight).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.jet_attention.ops import collapsed_jet_attention_op
 from repro.kernels.jet_mlp.jet_mlp import ACTIVATION_FNS
 from repro.kernels.jet_mlp.ops import collapsed_jet_layer_op
 
@@ -64,29 +87,209 @@ _PROBE = np.concatenate([
 ])
 _PROBE_TOL = 1e-5
 
+_FUSIBLE_DTYPES = (np.dtype(np.float32), np.dtype(np.float16),
+                   np.dtype(jnp.bfloat16))
+
 
 def _is_literal(v) -> bool:
     return type(v).__name__ == "Literal"
 
 
+# ---------------------------------------------------------------------------
+# plan context + matcher registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PlanContext:
+    """Pre-computed jaxpr indices shared by all matchers."""
+
+    jaxpr: Any
+    consumers: Dict[Any, List[int]]
+    producer_idx: Dict[Any, int]
+    outvars: Set[Any]
+    tainted: Set[Any]  # vars transitively dependent on the jaxpr inputs
+
+    def sole_consumer(self, v) -> Optional[int]:
+        """The index of v's only consuming eqn, or None when v escapes (is a
+        jaxpr output or has 0/2+ consumers) — segment chains must own their
+        intermediates."""
+        if v in self.outvars:
+            return None
+        cons = self.consumers.get(v, ())
+        return cons[0] if len(cons) == 1 else None
+
+    def is_propagated(self, v) -> bool:
+        """True when ``v`` depends on the differentiated inputs, i.e. it
+        carries a propagated jet and can never serve as a jet-constant
+        structural slot (scale, mask)."""
+        return not _is_literal(v) and v in self.tainted
+
+
 @dataclasses.dataclass
 class Segment:
-    """A fusible affine(+activation) region anchored at a dot_general eqn."""
+    """A fusible region anchored at one eqn index.
 
-    dot_idx: int
-    lhs_var: Any
-    w_var: Any
-    bias_var: Any  # None -> no bias; may be a Literal
-    activation: str  # kernel activation name ("linear" if none recognized)
-    out_var: Any  # var the fused result is written to
-    skip: Set[int]  # eqn indices covered by the kernel when fused
+    ``skip``: eqn indices covered by the kernel when fused. ``hoist``:
+    jet-constant eqns traced after the anchor whose values the kernel needs
+    (evaluated primally by ``try_fuse``; their results are committed to the
+    environment alongside the kernel output).
+    """
+
+    anchor: int
+    out_var: Any
+    skip: Set[int]
+    hoist: Tuple[int, ...] = ()
+
+    def try_fuse(self, read, K: int, jaxpr) -> Optional[Dict[Any, CollapsedJet]]:
+        raise NotImplementedError
+
+
+MatcherFn = Callable[[PlanContext, int], Optional[Segment]]
+SEGMENT_MATCHERS: List[MatcherFn] = []
+
+
+def register_segment_matcher(fn: MatcherFn, *, index: Optional[int] = None):
+    """Add a matcher to the registry (earlier matchers win per anchor)."""
+    if index is None:
+        SEGMENT_MATCHERS.append(fn)
+    else:
+        SEGMENT_MATCHERS.insert(index, fn)
+    return fn
+
+
+def plan_segments(closed_jaxpr) -> Dict[int, Segment]:
+    """Scan a jaxpr for fusible segments (one per anchor eqn, first matcher
+    wins)."""
+    jaxpr = closed_jaxpr.jaxpr
+    consumers: Dict[Any, List[int]] = {}
+    producer_idx: Dict[Any, int] = {}
+    tainted: Set[Any] = set(jaxpr.invars)
+    for idx, eqn in enumerate(jaxpr.eqns):
+        for v in eqn.invars:
+            if not _is_literal(v):
+                consumers.setdefault(v, []).append(idx)
+        for v in eqn.outvars:
+            producer_idx[v] = idx
+        if any(not _is_literal(v) and v in tainted for v in eqn.invars):
+            tainted.update(eqn.outvars)
+    ctx = PlanContext(jaxpr, consumers, producer_idx, set(jaxpr.outvars),
+                      tainted)
+
+    plan: Dict[int, Segment] = {}
+    for idx in range(len(jaxpr.eqns)):
+        for matcher in SEGMENT_MATCHERS:
+            seg = matcher(ctx, idx)
+            if seg is not None:
+                plan[idx] = seg
+                break
+    return plan
+
+
+def _hoist_closure(ctx: PlanContext, roots: Sequence[Any],
+                   anchor: int) -> Tuple[int, ...]:
+    """Eqn indices > anchor (in program order) needed to produce ``roots`` at
+    the anchor's position. Values produced before the anchor (or invars /
+    constvars / literals) need no hoisting."""
+    idxs: Set[int] = set()
+    todo = [v for v in roots if v is not None and not _is_literal(v)]
+    while todo:
+        v = todo.pop()
+        idx = ctx.producer_idx.get(v)
+        if idx is None or idx < anchor or idx in idxs:
+            continue
+        idxs.add(idx)
+        for iv in ctx.jaxpr.eqns[idx].invars:
+            if not _is_literal(iv):
+                todo.append(iv)
+    return tuple(sorted(idxs))
+
+
+def _run_hoist(seg: Segment, read, K: int, jaxpr):
+    """Evaluate the segment's hoisted eqns primally; returns {var: jet} or
+    None when any input is a propagated jet (not actually jet-constant)."""
+    extra: Dict[Any, CollapsedJet] = {}
+
+    def read2(v):
+        if not _is_literal(v) and v in extra:
+            return extra[v]
+        return read(v)
+
+    for idx in seg.hoist:
+        eqn = jaxpr.eqns[idx]
+        jets = [read2(v) for v in eqn.invars]
+        if not all(j.is_constant() for j in jets):
+            return None
+        outs = _bind(eqn, *[j.primal for j in jets])
+        for ov, o in zip(eqn.outvars, outs):
+            extra[ov] = CollapsedJet(o, [ZERO] * (K - 1), ZERO)
+    return extra
+
+
+# ---------------------------------------------------------------------------
+# jet_mlp matcher: dot_general -> add(bias) -> elementwise activation
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class MlpSegment(Segment):
+    """An affine(+activation) region anchored at a plain-matmul dot_general."""
+
+    lhs_var: Any = None
+    w_var: Any = None
+    bias_var: Any = None  # None -> no bias; may be a Literal
+    activation: str = "linear"
+
+    def try_fuse(self, read, K, jaxpr):
+        lhs = read(self.lhs_var)
+        wj = read(self.w_var)
+        if lhs.is_constant() or not wj.is_constant():
+            return None
+        w = wj.primal
+        dout = w.shape[1]
+        if self.bias_var is None:
+            b = jnp.zeros((dout,), dtype=w.dtype)
+        else:
+            bj = read(self.bias_var)
+            if not bj.is_constant():
+                return None
+            bp = jnp.asarray(bj.primal)
+            if bp.size == dout:
+                b = bp.reshape((dout,)).astype(w.dtype)
+            else:  # scalar bias broadcast over Dout
+                b = jnp.broadcast_to(bp.reshape(()), (dout,)).astype(w.dtype)
+        h0 = lhs.primal
+        if h0.ndim not in (1, 2):
+            return None
+        if np.dtype(h0.dtype) not in _FUSIBLE_DTYPES:
+            # the kernel accumulates in f32; silently degrading f64 (x64 mode)
+            # would betray the 1e-5 interpreter-match contract — fall back.
+            return None
+        lower = [None if is_zero(c) else c for c in lhs.lower]
+        top = None if is_zero(lhs.top) else lhs.top
+        t0, tl, tt = collapsed_jet_layer_op(
+            h0, lower, top, w, b, K=K, activation=self.activation,
+        )
+        return {self.out_var: CollapsedJet(t0, list(tl), tt)}
 
 
 def _probe_classify(region_eqns, start_var, out_var) -> Optional[str]:
     """Evaluate the candidate activation subgraph on the probe and compare
     against the kernel's supported activations. Literal-only regions are
     concrete even under an outer jit."""
-    env = {start_var: _PROBE}
+    got = _eval_region(region_eqns, start_var, out_var, _PROBE)
+    if got is None:
+        return None
+    for name, fn in ACTIVATION_FNS.items():
+        want = np.asarray(fn(jnp.asarray(_PROBE)), dtype=np.float32)
+        if np.allclose(got, want, rtol=_PROBE_TOL, atol=_PROBE_TOL):
+            return name
+    return None
+
+
+def _eval_region(region_eqns, start_var, out_var, probe) -> Optional[np.ndarray]:
+    """Concretely evaluate a literal-only region on a probe input."""
+    env = {start_var: probe}
     try:
         for eqn in region_eqns:
             args = []
@@ -99,23 +302,18 @@ def _probe_classify(region_eqns, start_var, out_var) -> Optional[str]:
             outs = outs if eqn.primitive.multiple_results else [outs]
             for ov, o in zip(eqn.outvars, outs):
                 env[ov] = o
-        got = np.asarray(env[out_var], dtype=np.float32)
+        return np.asarray(env[out_var], dtype=np.float32)
     except Exception:
         return None
-    for name, fn in ACTIVATION_FNS.items():
-        want = np.asarray(fn(jnp.asarray(_PROBE)), dtype=np.float32)
-        if np.allclose(got, want, rtol=_PROBE_TOL, atol=_PROBE_TOL):
-            return name
-    return None
 
 
-def _activation_region(jaxpr, consumers, start_var, eqn_index):
+def _activation_region(ctx: PlanContext, start_var):
     """Maximal literal-only elementwise subgraph rooted at ``start_var``.
 
     Returns (region eqn indices in program order, external output var) or
     (None, None) when the region is empty or has multiple external outputs.
     """
-    outvars = set(jaxpr.outvars)
+    jaxpr, consumers, outvars = ctx.jaxpr, ctx.consumers, ctx.outvars
     region: Set[int] = set()
     region_vars = {start_var}
     changed = True
@@ -182,7 +380,7 @@ _BIAS_PURE = ("broadcast_in_dim", "reshape", "squeeze", "convert_element_type",
               "copy")
 
 
-def _match_bias(jaxpr, producer_idx, consumers, y_var, dot_idx):
+def _match_bias(ctx: PlanContext, y_var, dot_idx):
     """Detect ``y + b`` with a (broadcast of a) jet-constant (Dout,) bias
     following the dot.
 
@@ -194,11 +392,10 @@ def _match_bias(jaxpr, producer_idx, consumers, y_var, dot_idx):
     available source, skipping each link whose output feeds only the chain.
 
     Returns (bias_var, add_out_var, skip_idxs) or (None, y_var, empty)."""
-    outvars = set(jaxpr.outvars)
-    cons = consumers.get(y_var, ())
-    if y_var in outvars or len(cons) != 1:
+    jaxpr, consumers, outvars = ctx.jaxpr, ctx.consumers, ctx.outvars
+    add_idx = ctx.sole_consumer(y_var)
+    if add_idx is None:
         return None, y_var, set()
-    add_idx = cons[0]
     eqn = jaxpr.eqns[add_idx]
     if eqn.primitive.name != "add":
         return None, y_var, set()
@@ -215,7 +412,7 @@ def _match_bias(jaxpr, producer_idx, consumers, y_var, dot_idx):
     while True:
         if _is_literal(cur) or not _bias_like(_var_shape(cur), dout):
             break
-        idx = producer_idx.get(cur)
+        idx = ctx.producer_idx.get(cur)
         if idx is None or idx < dot_idx:
             break  # invar/constvar, or computed before the dot: available
         be = jaxpr.eqns[idx]
@@ -231,99 +428,398 @@ def _match_bias(jaxpr, producer_idx, consumers, y_var, dot_idx):
     return cur, eqn.outvars[0], skip
 
 
-def plan_segments(closed_jaxpr) -> Dict[int, Segment]:
-    """Scan a jaxpr for fusible affine(+activation) segments."""
-    jaxpr = closed_jaxpr.jaxpr
-    consumers: Dict[Any, List[int]] = {}
-    producer_idx: Dict[Any, int] = {}
-    for idx, eqn in enumerate(jaxpr.eqns):
-        for v in eqn.invars:
-            if not _is_literal(v):
-                consumers.setdefault(v, []).append(idx)
-        for v in eqn.outvars:
-            producer_idx[v] = idx
-    outvars = set(jaxpr.outvars)
-
-    plan: Dict[int, Segment] = {}
-    for idx, eqn in enumerate(jaxpr.eqns):
-        if eqn.primitive.name != "dot_general":
-            continue
-        lhs, rhs = eqn.invars
-        if _is_literal(lhs) or _is_literal(rhs):
-            continue
-        nl = len(lhs.aval.shape)
-        if nl not in (1, 2) or len(rhs.aval.shape) != 2:
-            continue
-        (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
-        if lb or rb or tuple(lc) != (nl - 1,) or tuple(rc) != (0,):
-            continue
-        y = eqn.outvars[0]
-        skip = {idx}
-        bias_var, z_var, bias_skip = _match_bias(jaxpr, producer_idx,
-                                                 consumers, y, idx)
-        skip |= bias_skip
-        out_var, activation = z_var, "linear"
-        if z_var not in outvars:
-            region, act_out = _activation_region(jaxpr, consumers, z_var, idx)
-            if region is not None:
-                name = _probe_classify([jaxpr.eqns[i] for i in region],
-                                       z_var, act_out)
-                if name is None and len(region) > 1:
-                    # retry with just the first consumer (e.g. tanh whose
-                    # output feeds further elementwise work) — but only when
-                    # that eqn is z's SOLE consumer, so the shrunk region
-                    # still owns the pre-activation var it skips (gated
-                    # shapes like sigmoid(z)*z consume z twice and must fall
-                    # back to linear-only fusion).
-                    first = region[0]
-                    feqn = jaxpr.eqns[first]
-                    if (consumers.get(z_var, ()) == [first]
-                            and len(feqn.outvars) == 1):
-                        name = _probe_classify([feqn], z_var, feqn.outvars[0])
-                        if name is not None:
-                            region, act_out = [first], feqn.outvars[0]
-                if name is not None:
-                    activation = name
-                    out_var = act_out
-                    skip |= set(region)
-        plan[idx] = Segment(idx, lhs, rhs, bias_var, activation, out_var, skip)
-    return plan
-
-
-def _try_fuse(seg: Segment, read, K: int):
-    """Fuse one planned segment against the live jet environment; returns the
-    output CollapsedJet, or None to fall back to the interpreter."""
-    lhs = read(seg.lhs_var)
-    wj = read(seg.w_var)
-    if lhs.is_constant() or not wj.is_constant():
+@register_segment_matcher
+def match_mlp_segment(ctx: PlanContext, idx: int) -> Optional[MlpSegment]:
+    jaxpr = ctx.jaxpr
+    eqn = jaxpr.eqns[idx]
+    if eqn.primitive.name != "dot_general":
         return None
-    w = wj.primal
-    dout = w.shape[1]
-    if seg.bias_var is None:
-        b = jnp.zeros((dout,), dtype=w.dtype)
-    else:
-        bj = read(seg.bias_var)
-        if not bj.is_constant():
+    lhs, rhs = eqn.invars
+    if _is_literal(lhs) or _is_literal(rhs):
+        return None
+    nl = len(lhs.aval.shape)
+    if nl not in (1, 2) or len(rhs.aval.shape) != 2:
+        return None
+    (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+    if lb or rb or tuple(lc) != (nl - 1,) or tuple(rc) != (0,):
+        return None
+    y = eqn.outvars[0]
+    skip = {idx}
+    bias_var, z_var, bias_skip = _match_bias(ctx, y, idx)
+    skip |= bias_skip
+    out_var, activation = z_var, "linear"
+    if z_var not in ctx.outvars:
+        region, act_out = _activation_region(ctx, z_var)
+        if region is not None:
+            name = _probe_classify([jaxpr.eqns[i] for i in region],
+                                   z_var, act_out)
+            if name is None and len(region) > 1:
+                # retry with just the first consumer (e.g. tanh whose
+                # output feeds further elementwise work) — but only when
+                # that eqn is z's SOLE consumer, so the shrunk region
+                # still owns the pre-activation var it skips (gated
+                # shapes like sigmoid(z)*z consume z twice and must fall
+                # back to linear-only fusion).
+                first = region[0]
+                feqn = jaxpr.eqns[first]
+                if (ctx.consumers.get(z_var, ()) == [first]
+                        and len(feqn.outvars) == 1):
+                    name = _probe_classify([feqn], z_var, feqn.outvars[0])
+                    if name is not None:
+                        region, act_out = [first], feqn.outvars[0]
+            if name is not None:
+                activation = name
+                out_var = act_out
+                skip |= set(region)
+    return MlpSegment(anchor=idx, out_var=out_var, skip=skip,
+                      lhs_var=lhs, w_var=rhs, bias_var=bias_var,
+                      activation=activation)
+
+
+# ---------------------------------------------------------------------------
+# jet_attention matcher: dot(q,kT) [-> scale] [-> mask] -> softmax -> dot(.,v)
+# ---------------------------------------------------------------------------
+
+# primitives a row-softmax subgraph may be built from (reductions over the
+# trailing key axis, keepdims broadcasts, the exp/normalize arithmetic).
+_SOFTMAX_PRIMS = {
+    "reduce_max", "reduce_sum", "max", "min", "sub", "add", "mul", "div",
+    "exp", "neg", "broadcast_in_dim", "reshape", "convert_element_type",
+    "stop_gradient", "copy",
+}
+
+
+@dataclasses.dataclass
+class AttentionSegment(Segment):
+    """A softmax-attention block anchored at the q·kᵀ dot_general."""
+
+    q_var: Any = None
+    k_var: Any = None
+    v_var: Any = None
+    scale_var: Any = None  # None | var/Literal (scalar)
+    scale_op: str = ""  # "mul" | "div"
+    mask_var: Any = None  # None | var (True = attend)
+
+    def try_fuse(self, read, K, jaxpr):
+        q, k, v = read(self.q_var), read(self.k_var), read(self.v_var)
+        if q.is_constant() and k.is_constant() and v.is_constant():
+            return None  # fully constant: cheaper on the primal path
+        if any(np.dtype(j.primal.dtype) not in _FUSIBLE_DTYPES
+               for j in (q, k, v)):
             return None
-        bp = jnp.asarray(bj.primal)
-        if bp.size == dout:
-            b = bp.reshape((dout,)).astype(w.dtype)
-        else:  # scalar bias broadcast over Dout
-            b = jnp.broadcast_to(bp.reshape(()), (dout,)).astype(w.dtype)
-    h0 = lhs.primal
-    if h0.ndim not in (1, 2):
+        # the scale/mask producers may themselves be hoisted eqns (traced
+        # after the anchor), so hoist FIRST and resolve through its results
+        extra = _run_hoist(self, read, K, jaxpr)
+        if extra is None:
+            return None
+
+        def read2(var):
+            if not _is_literal(var) and var in extra:
+                return extra[var]
+            return read(var)
+
+        scale = 1.0
+        if self.scale_var is not None:
+            sj = read2(self.scale_var)
+            if not sj.is_constant():
+                return None  # propagated-jet scale: not attention-shaped
+            sval = jnp.asarray(sj.primal).reshape(())
+            scale = 1.0 / sval if self.scale_op == "div" else sval
+        mask = None
+        if self.mask_var is not None:
+            mj = read2(self.mask_var)
+            if not mj.is_constant():
+                return None
+            m = jnp.asarray(mj.primal)
+            if m.ndim > 2:  # leading size-1 dims, validated at plan time
+                m = m.reshape(m.shape[-2:])
+            mask = m
+
+        def triple(j):
+            lower = [None if is_zero(c) else c for c in j.lower]
+            top = None if is_zero(j.top) else j.top
+            return (j.primal, lower, top)
+
+        o0, ol, ot = collapsed_jet_attention_op(
+            triple(q), triple(k), triple(v), K=K, mask=mask, scale=scale,
+        )
+        out = {self.out_var: CollapsedJet(o0, list(ol), ot)}
+        out.update(extra)
+        return out
+
+
+def _match_where(eqn):
+    """Recognize ``where(mask, chain, fill)`` as either a flat ``select_n`` or
+    the ``pjit[_where]`` call jnp.where lowers to.
+
+    Returns (pred_pos, chain_pos, fill_pos) positions into ``eqn.invars``, or
+    None. The chain must ride the on-True branch (mask True = keep score)."""
+    name = eqn.primitive.name
+    if name == "select_n":
+        if len(eqn.invars) != 3:
+            return None
+        return (0, 2, 1)  # select_n(pred, on_false, on_true)
+    if name in ("jit", "pjit") and eqn.params.get("name") == "_where":
+        inner = eqn.params["jaxpr"].jaxpr
+        if len(inner.invars) != 3 or len(eqn.invars) != 3:
+            return None
+        src = {v: i for i, v in enumerate(inner.invars)}
+        sel = None
+        for ie in inner.eqns:
+            if ie.primitive.name in ("convert_element_type",
+                                     "broadcast_in_dim", "reshape", "copy"):
+                if ie.invars[0] in src:
+                    src[ie.outvars[0]] = src[ie.invars[0]]
+            elif ie.primitive.name == "select_n" and sel is None:
+                sel = ie
+            else:
+                return None
+        if sel is None or len(sel.invars) != 3:
+            return None
+        pos = [src.get(v) for v in sel.invars]
+        if None in pos or len(set(pos)) != 3:
+            return None
+        pred_pos, false_pos, true_pos = pos
+        return (pred_pos, true_pos, false_pos)
+    return None
+
+
+def _resolve_literal_scalar(ctx: PlanContext, v) -> Optional[float]:
+    """Follow a var through pure reshape/broadcast/convert producers to a
+    scalar literal value; None when it isn't one."""
+    for _ in range(8):
+        if _is_literal(v):
+            val = np.asarray(v.val)
+            return float(val.reshape(())) if val.size == 1 else None
+        idx = ctx.producer_idx.get(v)
+        if idx is None:
+            return None
+        eqn = ctx.jaxpr.eqns[idx]
+        if eqn.primitive.name not in _BIAS_PURE:
+            return None
+        v = eqn.invars[0]
+    return None
+
+
+def _softmax_region(ctx: PlanContext, start_var):
+    """Maximal row-reduction subgraph rooted at ``start_var`` (shape-
+    disciplined: full (…, Sq, Skv), row (…, Sq), or keepdims (…, Sq, 1)
+    intermediates; reductions over the trailing axis only).
+
+    Returns (region idxs, external output var with the full shape) or
+    (None, None)."""
+    jaxpr, consumers, outvars = ctx.jaxpr, ctx.consumers, ctx.outvars
+    full = tuple(start_var.aval.shape)
+    nd = len(full)
+    allowed_shapes = {full, full[:-1], full[:-1] + (1,)}
+    region: Set[int] = set()
+    region_vars = {start_var}
+    changed = True
+    while changed:
+        changed = False
+        for v in list(region_vars):
+            for idx in consumers.get(v, ()):
+                if idx in region:
+                    continue
+                eqn = jaxpr.eqns[idx]
+                name = eqn.primitive.name
+                if name not in _SOFTMAX_PRIMS:
+                    continue
+                if name in ("reduce_max", "reduce_sum") and \
+                        tuple(eqn.params["axes"]) != (nd - 1,):
+                    continue
+                if any(not _is_literal(iv) and iv not in region_vars
+                       for iv in eqn.invars):
+                    continue
+                if any(tuple(ov.aval.shape) not in allowed_shapes
+                       for ov in eqn.outvars):
+                    continue
+                region.add(idx)
+                region_vars.update(eqn.outvars)
+                changed = True
+    if not region:
+        return None, None
+    external = []
+    for idx in region:
+        for ov in jaxpr.eqns[idx].outvars:
+            if ov in outvars or any(c not in region
+                                    for c in consumers.get(ov, ())):
+                external.append(ov)
+    if len(external) != 1 or tuple(external[0].aval.shape) != full:
+        return None, None
+    if start_var in outvars or any(c not in region
+                                   for c in consumers.get(start_var, ())):
+        return None, None
+    return sorted(region), external[0]
+
+
+def _probe_softmax(ctx: PlanContext, region, start_var, out_var) -> bool:
+    """Behavioural classification: the region must equal row softmax on a
+    fixed pseudo-random probe.
+
+    Probing at the traced shape would materialize (*batch, Sq, Skv) arrays at
+    plan time — gigabytes for real transformer workloads, per layer. The
+    region is shape-disciplined (every intermediate is the full score shape,
+    the row shape, or its keepdims form), so the only shape-carrying params
+    (broadcast_in_dim / reshape targets) can be rewritten onto a reduced
+    geometry — batch dims 1, rows/keys capped — and the region evaluated
+    there at O(1) cost. Any eqn whose params or (non-scalar) literals resist
+    the rewrite fails closed (no fusion)."""
+    full = tuple(start_var.aval.shape)
+    nd = len(full)
+    red_full = (1,) * (nd - 2) + (min(full[-2], 8), min(full[-1], 19))
+    shape_map = {
+        full: red_full,
+        full[:-1]: red_full[:-1],
+        full[:-1] + (1,): red_full[:-1] + (1,),
+    }
+    probe = np.asarray(
+        np.random.default_rng(0).uniform(-6.0, 6.0, red_full), np.float32)
+    env = {start_var: probe}
+    try:
+        for idx in region:
+            eqn = ctx.jaxpr.eqns[idx]
+            params = dict(eqn.params)
+            for key in ("shape", "new_sizes"):
+                if key in params:
+                    tgt = shape_map.get(tuple(params[key]))
+                    if tgt is None:
+                        return False
+                    params[key] = tgt
+            args = []
+            for v in eqn.invars:
+                if _is_literal(v):
+                    if np.ndim(v.val) != 0:
+                        return False  # array literal: can't rescale safely
+                    args.append(v.val)
+                else:
+                    args.append(env[v])
+            outs = eqn.primitive.bind(*args, **params)
+            outs = outs if eqn.primitive.multiple_results else [outs]
+            for ov, o in zip(eqn.outvars, outs):
+                env[ov] = o
+        got = np.asarray(env[out_var], dtype=np.float32)
+    except Exception:
+        return False
+    e = np.exp(probe - probe.max(axis=-1, keepdims=True))
+    want = e / e.sum(axis=-1, keepdims=True)
+    return got.shape == red_full and np.allclose(got, want, rtol=_PROBE_TOL,
+                                                 atol=_PROBE_TOL)
+
+
+def _mask_shape_ok(shape: Tuple[int, ...], sq: int, skv: int) -> bool:
+    """Mask avals we can reinterpret as a shared (Sq, Skv) mask: trailing
+    dims broadcastable to (Sq, Skv), all leading dims of size 1."""
+    if len(shape) > 2 and any(s != 1 for s in shape[:-2]):
+        return False
+    trail = shape[-2:]
+    if len(trail) == 2 and trail[0] not in (1, sq):
+        return False
+    if len(trail) >= 1 and trail[-1] not in (1, skv):
+        return False
+    return True
+
+
+@register_segment_matcher
+def match_attention_segment(ctx: PlanContext,
+                            idx: int) -> Optional[AttentionSegment]:
+    jaxpr = ctx.jaxpr
+    eqn = jaxpr.eqns[idx]
+    if eqn.primitive.name != "dot_general":
         return None
-    if np.dtype(h0.dtype) not in (np.dtype(np.float32), np.dtype(np.float16),
-                                  np.dtype(jnp.bfloat16)):
-        # the kernel accumulates in f32; silently degrading f64 (x64 mode)
-        # would betray the 1e-5 interpreter-match contract — fall back.
+    q_var, k_var = eqn.invars
+    if _is_literal(q_var) or _is_literal(k_var):
         return None
-    lower = [None if is_zero(c) else c for c in lhs.lower]
-    top = None if is_zero(lhs.top) else lhs.top
-    t0, tl, tt = collapsed_jet_layer_op(
-        h0, lower, top, w, b, K=K, activation=seg.activation,
-    )
-    return CollapsedJet(t0, list(tl), tt)
+    nl = len(q_var.aval.shape)
+    if nl < 2 or len(k_var.aval.shape) != nl:
+        return None
+    nb = nl - 2
+    (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+    batch = tuple(range(nb))
+    if (tuple(lc) != (nl - 1,) or tuple(rc) != (nl - 1,)
+            or tuple(lb) != batch or tuple(rb) != batch):
+        return None
+    s_var = eqn.outvars[0]
+    sq, skv = s_var.aval.shape[-2:]
+    skip = {idx}
+
+    # optional scalar score scale
+    cur = s_var
+    scale_var, scale_op = None, ""
+    nxt = ctx.sole_consumer(cur)
+    if nxt is not None:
+        seqn = jaxpr.eqns[nxt]
+        if seqn.primitive.name in ("mul", "div"):
+            a, b = seqn.invars
+            other = b if a is cur else a
+            if (other is not cur and _var_shape(other) == ()
+                    and not ctx.is_propagated(other)
+                    and (seqn.primitive.name == "mul" or b is other)):
+                scale_var, scale_op = other, seqn.primitive.name
+                skip.add(nxt)
+                cur = seqn.outvars[0]
+                nxt = ctx.sole_consumer(cur)
+
+    # optional where-style mask select
+    mask_var = None
+    hoist_roots: List[Any] = [scale_var]
+    if nxt is not None:
+        weqn = jaxpr.eqns[nxt]
+        pos = _match_where(weqn)
+        if pos is not None and weqn.invars[pos[1]] is cur:
+            pred, fill = weqn.invars[pos[0]], weqn.invars[pos[2]]
+            fill_val = _resolve_literal_scalar(ctx, fill)
+            # the fill must be finite: the kernel's -1e30 convention gives a
+            # fully-masked row the interpreter's uniform softmax, but a
+            # -inf fill makes the interpreter NaN there — don't paper over
+            # that with a finite fused result.
+            if (fill_val is not None and fill_val <= -1e9
+                    and np.isfinite(fill_val)
+                    and not _is_literal(pred)
+                    and not ctx.is_propagated(pred)
+                    and _mask_shape_ok(_var_shape(pred), sq, skv)):
+                mask_var = pred
+                skip.add(nxt)
+                hoist_roots += [pred, fill]
+                cur = weqn.outvars[0]
+
+    # the softmax subgraph, classified by probing
+    region, p_var = _softmax_region(ctx, cur)
+    if region is None or not _probe_softmax(ctx, region, cur, p_var):
+        return None
+    skip |= set(region)
+
+    # second dot: probabilities against v
+    d2 = ctx.sole_consumer(p_var)
+    if d2 is None:
+        return None
+    eqn2 = jaxpr.eqns[d2]
+    if eqn2.primitive.name != "dot_general" or eqn2.invars[0] is not p_var:
+        return None
+    v_var = eqn2.invars[1]
+    if _is_literal(v_var) or len(v_var.aval.shape) != nb + 2:
+        return None
+    (lc2, rc2), (lb2, rb2) = eqn2.params["dimension_numbers"]
+    if (tuple(lc2) != (nl - 1,) or tuple(rc2) != (nb,)
+            or tuple(lb2) != batch or tuple(rb2) != batch):
+        return None
+    # v must exist when the segment executes (at the anchor's position)
+    v_idx = ctx.producer_idx.get(v_var)
+    if v_idx is not None and v_idx > idx:
+        return None
+    skip.add(d2)
+
+    hoist = _hoist_closure(ctx, hoist_roots, idx)
+    skip |= set(hoist)
+    return AttentionSegment(anchor=idx, out_var=eqn2.outvars[0], skip=skip,
+                            hoist=hoist, q_var=q_var, k_var=k_var,
+                            v_var=v_var, scale_var=scale_var,
+                            scale_op=scale_op, mask_var=mask_var)
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
 
 
 def interpret_collapsed_offload(closed_jaxpr, K: int,
@@ -354,9 +850,9 @@ def interpret_collapsed_offload(closed_jaxpr, K: int,
             continue
         seg = plan.get(idx)
         if seg is not None:
-            out = _try_fuse(seg, read, K)
-            if out is not None:
-                env[seg.out_var] = out
+            outs_map = seg.try_fuse(read, K, jaxpr)
+            if outs_map is not None:
+                env.update(outs_map)
                 skipped |= seg.skip
                 continue
         jets_in = [read(v) for v in eqn.invars]

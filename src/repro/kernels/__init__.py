@@ -1,16 +1,29 @@
 """Custom Pallas kernels for the paper's compute hot-spots.
 
-``jet_mlp/``   — the fused collapsed-K-jet layer (K in {2, 4}; tanh, sin,
-                 gelu, logistic, relu, linear): the forward-Laplacian /
-                 biharmonic hot loop. Users normally never call it directly:
-                 ``operators.<op>(f, x, method="collapsed",
-                 backend="pallas")`` routes MLP-shaped segments through it
-                 automatically via :mod:`repro.core.offload`.
-``autotune``   — MXU-aligned block-size selection for those kernels, with a
-                 per-shape timing cache persisted to disk.
-``flash_attention/`` — streaming attention used by the serving/training
-                 stacks.
+``jet_mlp/``        — the fused collapsed-K-jet layer (K in {2, 4}; tanh,
+                      sin, gelu, logistic, relu, linear): the
+                      forward-Laplacian / biharmonic hot loop of MLP-shaped
+                      networks.
+``jet_attention/``  — the fused collapsed-K-jet attention block
+                      (``q·kᵀ → softmax → ·v`` with FlashAttention-2-style
+                      streaming softmax, one online-softmax state per Taylor
+                      coefficient): the hot loop of transformer-PINN /
+                      operator-learning networks.
+``autotune``        — MXU-aligned block-size selection for both jet kernels,
+                      with a per-shape timing cache persisted to disk whose
+                      keys are namespaced by kernel name.
+``flash_attention/`` — streaming (primal-only) attention used by the
+                      serving/training stacks.
 
-Each kernel ships an ``ops.py`` (padding/jit wrappers) and a ``ref.py``
-(pure-jnp oracle, used by interpret-mode CPU tests).
+Users normally never call the jet kernels directly:
+``operators.<op>(f, x, method="collapsed", backend="pallas")`` routes both
+MLP-shaped and attention-shaped segments through them automatically via the
+matcher registry in :mod:`repro.core.offload`.
+
+Each kernel ships an ``ops.py`` (padding/jit/custom-VJP wrappers) and a
+``ref.py`` (pure-jnp oracle, used by interpret-mode CPU tests); the jet
+kernels share their collapsed-series combinatorics with the CRULES
+interpreter through :mod:`repro.core.partitions` /
+:mod:`repro.kernels.jet_attention.series`, so kernels and interpreter cannot
+drift apart.
 """

@@ -1,26 +1,33 @@
 """Block-size autotuner for the fused collapsed-jet Pallas kernels.
 
-The kernel grid is ``(B/block_b, Dout/block_d, R/block_r)``; throughput is
-very sensitive to the block choice (VMEM residency of the W tile and the
-direction accumulator vs. grid parallelism). The seed hard-coded 128/128/8 and
-clamped with ``min(block_b, max(8, B))`` — which can pick blocks that are not
-MXU-aligned. This module replaces both:
+Two kernels are tuned here:
 
-* :func:`default_config` — a deterministic MXU-aligned heuristic, used on CPU
-  / interpret mode (where timing Pallas is meaningless) and as the timing
-  fallback;
-* :func:`get_block_config` — the cached entry point. On an accelerator it
-  times every aligned candidate (:func:`candidate_configs`) with the real
-  kernel and keeps the argmin. Results are memoized in-process and persisted
-  to a JSON cache file keyed by ``(B, Din, Dout, R) | K | dtype | backend``,
-  so the tuning cost is paid once per shape per machine.
+* ``jet_mlp`` — grid ``(B/block_b, Dout/block_d, R/block_r)``; throughput is
+  very sensitive to the block choice (VMEM residency of the W tile and the
+  direction accumulator vs. grid parallelism).
+  :func:`default_config` / :func:`candidate_configs` /
+  :func:`get_block_config` cover it.
+* ``jet_attention`` — grid ``(N, Sq/block_q, Skv/block_k)``; the lever is the
+  VMEM residency of the per-coefficient online-softmax state vs. the size of
+  the ``(R, bQ, bK)`` score-series tiles.
+  :func:`attention_default_config` / :func:`attention_candidate_configs` /
+  :func:`get_attention_block_config` cover it.
+
+Both share one mechanism: a deterministic MXU-aligned heuristic used on CPU /
+interpret mode (where timing Pallas is meaningless) and as the timing
+fallback, plus a cached timing sweep on accelerators. Results are memoized
+in-process and persisted to a JSON cache file whose keys are *namespaced by
+kernel name* (``jet_mlp|…`` / ``jet_attention|…``) so the two kernels' block
+configs can never collide; legacy un-namespaced entries (written before the
+attention kernel existed, and necessarily jet_mlp's) are migrated on load.
 
 Cache location: ``$REPRO_AUTOTUNE_CACHE`` if set, else
 ``~/.cache/repro/autotune.json``.
 
-Alignment rules (f32 MXU/VPU tiling): ``block_b`` is a multiple of 8 (sublane),
-``block_d`` a multiple of 128 (lane); ``block_r`` is a grid-only axis and may
-be any power of two. Callers pad their operands up to block multiples.
+Alignment rules (f32 MXU/VPU tiling): sublane-dim blocks (``block_b``,
+``block_q``) are multiples of 8, lane-dim blocks (``block_d``, ``block_k``)
+multiples of 128; ``block_r`` is a grid-only axis and may be any power of
+two. Callers pad their operands up to block multiples.
 """
 
 from __future__ import annotations
@@ -45,7 +52,14 @@ class BlockConfig(NamedTuple):
     block_r: int
 
 
-_MEM_CACHE: Dict[str, BlockConfig] = {}
+class AttnBlockConfig(NamedTuple):
+    block_q: int
+    block_k: int
+
+
+KERNELS = ("jet_mlp", "jet_attention")
+
+_MEM_CACHE: Dict[str, tuple] = {}
 
 
 def round_up(n: int, m: int) -> int:
@@ -59,11 +73,34 @@ def cache_path() -> str:
     return os.path.expanduser("~/.cache/repro/autotune.json")
 
 
+def _migrate_key(key: str) -> str:
+    """Namespace a legacy (pre-jet_attention) cache key.
+
+    Old keys look like ``"48x56x200x13|K2|float32|tpu"``; every entry written
+    back then belonged to the only kernel that existed, jet_mlp. Keys already
+    namespaced (``"<kernel>|…"``) pass through; unrecognizable keys are
+    dropped by the caller.
+    """
+    head = key.split("|", 1)[0]
+    if head in KERNELS:
+        return key
+    if "x" in head and head.replace("x", "").isdigit():
+        return f"jet_mlp|{key}"
+    return ""
+
+
 def load_cache() -> Dict[str, list]:
     try:
         with open(cache_path()) as f:
             data = json.load(f)
-        return data if isinstance(data, dict) else {}
+        if not isinstance(data, dict):
+            return {}
+        out = {}
+        for k, v in data.items():
+            nk = _migrate_key(k) if isinstance(k, str) else ""
+            if nk:
+                out[nk] = v
+        return out
     except (OSError, ValueError):
         return {}
 
@@ -87,9 +124,18 @@ def clear_memory_cache() -> None:
     _MEM_CACHE.clear()
 
 
+def _key(kernel: str, dims, K: int, dtype, backend: str) -> str:
+    return f"{kernel}|{'x'.join(str(d) for d in dims)}|K{K}|{dtype}|{backend}"
+
+
 def shape_key(B: int, Din: int, Dout: int, R: int, K: int, dtype,
-              backend: str) -> str:
-    return f"{B}x{Din}x{Dout}x{R}|K{K}|{dtype}|{backend}"
+              backend: str, kernel: str = "jet_mlp") -> str:
+    return _key(kernel, (B, Din, Dout, R), K, dtype, backend)
+
+
+def attention_shape_key(N: int, Sq: int, Skv: int, dh: int, R: int, K: int,
+                        dtype, backend: str) -> str:
+    return _key("jet_attention", (N, Sq, Skv, dh, R), K, dtype, backend)
 
 
 def _pow2_le(n: int) -> int:
@@ -230,6 +276,127 @@ def put_config(B: int, Din: int, Dout: int, R: int, K: int, dtype,
     """Record a config in both caches (used by tests and offline tuning)."""
     key = shape_key(B, Din, Dout, R, K, np.dtype(dtype).name, backend)
     _MEM_CACHE[key] = BlockConfig(*cfg)
+    disk = load_cache()
+    disk[key] = list(cfg)
+    save_cache(disk)
+
+
+# ---------------------------------------------------------------------------
+# jet_attention: (block_q, block_k) selection
+# ---------------------------------------------------------------------------
+
+
+def _attn_vmem_bytes(cfg: AttnBlockConfig, dh: int, R: int, K: int,
+                     itemsize: int = 4) -> int:
+    """Working-set estimate for one jet-attention grid step: the q/k/v series
+    tiles, the (R-stacked) score/exp series, and the online-softmax state."""
+    bq, bk = cfg
+    nser = 2 + (K - 1) * R  # primal + stacked lower coefficients + top
+    qkv = nser * (bq + 2 * bk) * dh
+    scores = 2 * nser * bq * bk  # S and E series
+    state = nser * bq * (dh + 1) * 2  # u/l scratch + the dU/G temporaries
+    return (qkv + scores + state) * itemsize
+
+
+def attention_candidate_configs(Sq: int, Skv: int, dh: int, R: int,
+                                K: int) -> Tuple[AttnBlockConfig, ...]:
+    """MXU-aligned (bQ, bK) candidates, largest-first, VMEM-filtered."""
+    q_cap = round_up(max(Sq, 1), _SUBLANE)
+    k_cap = round_up(max(Skv, 1), _LANE)
+    bqs = sorted({min(v, q_cap) for v in (8, 16, 32, 64, 128, 256)})
+    bks = sorted({min(v, k_cap) for v in (128, 256, 512)})
+    out = []
+    for bq in bqs:
+        for bk in bks:
+            cfg = AttnBlockConfig(bq, bk)
+            if bq % _SUBLANE or bk % _LANE:
+                continue
+            if _attn_vmem_bytes(cfg, round_up(dh, _LANE), R, K) > _VMEM_BUDGET:
+                continue
+            out.append(cfg)
+    out.sort(key=lambda c: -c.block_q * c.block_k)
+    return tuple(dict.fromkeys(out))
+
+
+def attention_default_config(Sq: int, Skv: int, dh: int, R: int,
+                             K: int) -> AttnBlockConfig:
+    """Deterministic MXU-aligned heuristic (no timing)."""
+    bq = min(128, round_up(max(Sq, 1), _SUBLANE))
+    bk = min(128, round_up(max(Skv, 1), _LANE))
+    cfg = AttnBlockConfig(bq, bk)
+    while (_attn_vmem_bytes(cfg, round_up(dh, _LANE), R, K) > _VMEM_BUDGET
+           and cfg.block_q > _SUBLANE):
+        cfg = cfg._replace(block_q=max(_SUBLANE, cfg.block_q // 2))
+    return cfg
+
+
+def autotune_attention(N: int, Sq: int, Skv: int, dh: int, R: int, K: int,
+                       dtype, candidates: Optional[Sequence[AttnBlockConfig]]
+                       = None) -> AttnBlockConfig:
+    """Time the real fused attention kernel over aligned candidates."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.jet_attention.jet_attention import collapsed_jet_attention
+
+    if candidates is None:
+        candidates = attention_candidate_configs(Sq, Skv, dh, R, K)
+    best_cfg, best_t = None, float("inf")
+    dh_p = round_up(dh, _LANE)
+    for cfg in candidates:
+        bq, bk = cfg
+        Sqp, Skp = round_up(Sq, bq), round_up(Skv, bk)
+        # ops.py always feeds a float32 mask; time the same specialization
+        mask = jnp.ones((Sqp, Skp), jnp.float32)
+        q0 = jnp.zeros((N, Sqp, dh_p), dtype)
+        ql = jnp.zeros((K - 1, R, N, Sqp, dh_p), dtype)
+        k0 = jnp.zeros((N, Skp, dh_p), dtype)
+        kl = jnp.zeros((K - 1, R, N, Skp, dh_p), dtype)
+        try:
+            fn = jax.jit(lambda m, a, al, b, bl, c, cl, _cfg=cfg:
+                         collapsed_jet_attention(
+                             m, a, al, a, b, bl, b, c, cl, c, K=K,
+                             block_q=_cfg.block_q, block_k=_cfg.block_k))
+            t = _time_one(lambda: fn(mask, q0, ql, k0, kl, k0, kl))
+        except Exception:  # unsupported block combo on this backend
+            continue
+        if t < best_t:
+            best_cfg, best_t = cfg, t
+    return best_cfg or attention_default_config(Sq, Skv, dh, R, K)
+
+
+def get_attention_block_config(N: int, Sq: int, Skv: int, dh: int, R: int,
+                               K: int, dtype,
+                               interpret: bool = False) -> AttnBlockConfig:
+    """Cached (bQ, bK) for a jet-attention shape (see get_block_config)."""
+    import jax
+
+    backend = "interpret" if interpret else jax.default_backend()
+    key = attention_shape_key(N, Sq, Skv, dh, R, K, np.dtype(dtype).name,
+                              backend)
+    if key in _MEM_CACHE:
+        return AttnBlockConfig(*_MEM_CACHE[key])
+    disk = load_cache()
+    if key in disk:
+        cfg = AttnBlockConfig(*disk[key])
+        _MEM_CACHE[key] = cfg
+        return cfg
+    if interpret or backend == "cpu":
+        cfg = attention_default_config(Sq, Skv, dh, R, K)
+        _MEM_CACHE[key] = cfg  # heuristic: memoize but don't persist
+        return cfg
+    cfg = autotune_attention(N, Sq, Skv, dh, R, K, dtype)
+    _MEM_CACHE[key] = cfg
+    disk[key] = list(cfg)
+    save_cache(disk)
+    return cfg
+
+
+def put_attention_config(N: int, Sq: int, Skv: int, dh: int, R: int, K: int,
+                         dtype, backend: str, cfg: AttnBlockConfig) -> None:
+    key = attention_shape_key(N, Sq, Skv, dh, R, K, np.dtype(dtype).name,
+                              backend)
+    _MEM_CACHE[key] = AttnBlockConfig(*cfg)
     disk = load_cache()
     disk[key] = list(cfg)
     save_cache(disk)

@@ -101,7 +101,7 @@ def flash_attention_fwd(q, k, v, *, causal=True, window=None,
     def scratch(shape):
         if pltpu is not None:
             return pltpu.VMEM(shape, jnp.float32)
-        return pl.MemorySpace.ANY(shape, jnp.float32)  # pragma: no cover
+        return pl.MemoryRef(shape, jnp.float32, pl.ANY)  # pragma: no cover
 
     return pl.pallas_call(
         kernel,

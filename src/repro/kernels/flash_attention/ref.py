@@ -1,3 +1,11 @@
-"""Oracle for the flash-attention kernel: naive softmax attention."""
+"""Oracle for the flash-attention kernel: naive softmax attention.
 
-from repro.models.layers import attention_reference  # noqa: F401
+One code path, not a copy: this re-exports
+:func:`repro.models.layers.attention_reference`, which itself routes through
+the shared :func:`repro.models.layers.masked_softmax` — the same canonical
+mask/softmax subgraph the collapsed-Taylor offload planner
+(:mod:`repro.core.offload`) probe-classifies. Kernel oracle, model reference
+path and offload matcher therefore agree on a single softmax graph.
+"""
+
+from repro.models.layers import attention_reference, masked_softmax  # noqa: F401

@@ -1,0 +1,13 @@
+"""Fused collapsed-K-jet attention (q·kᵀ → softmax → ·v in one pass).
+
+``jet_attention.py`` is the Pallas kernel (FlashAttention-2-style streaming
+softmax with online-softmax state *per Taylor coefficient*), ``ref.py`` the
+pure-jnp unfused oracle, ``ops.py`` the padded/jit'd/differentiable boundary
+the offload dispatcher (:mod:`repro.core.offload`) calls into — lowering per
+platform: the kernel on accelerators, the oracle as one fused XLA graph on
+CPU — and ``series.py`` the symbolic-zero-aware collapsed-series algebra all
+executions share.
+"""
+
+from .ops import collapsed_jet_attention_op  # noqa: F401
+from .ref import collapsed_jet_attention_ref  # noqa: F401

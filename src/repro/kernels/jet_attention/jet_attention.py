@@ -1,0 +1,274 @@
+"""Pallas TPU kernel: fused collapsed-K-jet attention (FlashAttention-2-style
+streaming softmax propagating a collapsed Taylor bundle through
+``q·kᵀ → softmax → ·v`` in one pass).
+
+Collapsed Taylor mode for an attention block carries, per operand, the bundle
+``(x0, lower[1..K-1] (R-stacked), top = sum_r x_{K,r})``. Unfused, the CRULES
+interpreter materializes every score/probability coefficient — all
+``(R, N, Sq, Skv)`` — in HBM; for transformer PINN / operator-learning
+workloads those are the dominant traffic of the whole operator. This kernel
+keeps them in VMEM: the grid is ``(N, Sq/bQ, Skv/bK)`` with the KV axis
+innermost, and the online-softmax state is carried *per Taylor coefficient* —
+
+    m                      running row max (primal only: the shift is
+                           jet-constant, the traced graph stop_gradients it)
+    l0, l_q[r], lt         normalizer series (row sums of the exp series)
+    u0, u_q[r], ut         unnormalized output series (exp series · v series)
+
+Every accumulator is degree-1 homogeneous in ``exp(-m)``, so one correction
+factor ``exp(m_prev - m_new)`` rescales the whole bundle when the max moves,
+exactly as in scalar FlashAttention. The summed Laplacian channel (the
+``top``) is collapsed on the fly: its nontrivial Faa di Bruno partitions are
+direction-summed inside each block (single ``(R·dh)``-contraction matmuls)
+and only the collapsed vector is carried. At the last KV block the normalizer
+series is inverted (reciprocal tower) and combined with the output series by
+the collapsed Leibniz rule — both via :mod:`.series`, the same combinatorics
+the interpreter uses, so kernel and CRULES cannot drift apart.
+
+Masking is data-driven and tri-state: a ``(Sq, Skv)`` tile rides the grid
+with ``1`` = attend, ``0`` = user-masked (score ``-1e30`` and zeroed
+coefficients — the interpreter's ``select_n`` rule, which makes a fully
+user-masked row normalize uniformly over its real keys, exactly like the
+reference), and ``-1`` = padding (score ``-inf``: contributes nothing under
+any row max, so ops.py's block padding never leaks into the normalizer).
+A KV block with no live entry skips its MXU work once every row of the
+q-tile has seen a live key (then its masked entries would contribute exact
+zeros); until then it is processed so that potentially-fully-masked rows
+keep interpreter semantics. Block sizes come from
+:mod:`repro.kernels.autotune` (namespaced ``jet_attention`` cache entries);
+callers pad via ops.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .series import bilinear_series, exp_series, reciprocal_series
+
+try:  # TPU-specific memory spaces; interpret mode works without them
+    from jax.experimental.pallas import tpu as pltpu
+except Exception:  # pragma: no cover
+    pltpu = None
+
+NEG_INF = -1e30
+
+
+def _dot(a, b, dims):
+    return jax.lax.dot_general(a, b, (dims, ((), ())),
+                               preferred_element_type=jnp.float32)
+
+
+def _bdot(a, b, dims):  # batched over the leading R axis
+    return jax.lax.dot_general(a, b, (dims, ((0,), (0,))),
+                               preferred_element_type=jnp.float32)
+
+
+def _qk_prod(a, b, sa, sb, collapse):
+    """Score products: q-side (.., bQ, dh) x k-side (.., bK, dh) -> (.., bQ, bK)."""
+    if collapse:
+        return _dot(a, b, ((0, 2), (0, 2)))
+    if sa and sb:
+        return _bdot(a, b, ((2,), (2,)))
+    if sa:
+        return _dot(a, b, ((2,), (1,)))
+    if sb:
+        return _bdot(jnp.broadcast_to(a, (b.shape[0],) + a.shape), b,
+                     ((2,), (2,)))
+    return _dot(a, b, ((1,), (1,)))
+
+
+def _ev_prod(e, v, se, sv, collapse):
+    """Weighted-value products: (.., bQ, bK) x (.., bK, dh) -> (.., bQ, dh)."""
+    if collapse:
+        return _dot(e, v, ((0, 2), (0, 1)))
+    if se and sv:
+        return _bdot(e, v, ((2,), (1,)))
+    if se:
+        return _dot(e, v, ((2,), (0,)))
+    if sv:
+        return _bdot(jnp.broadcast_to(e, (v.shape[0],) + e.shape), v,
+                     ((2,), (1,)))
+    return _dot(e, v, ((1,), (0,)))
+
+
+def _ug_prod(u, g, su, sg, collapse):
+    """Normalization products: (.., bQ, dh) x (.., bQ) -> (.., bQ, dh)."""
+    t = u * g[..., None]
+    return t.sum(axis=0) if collapse else t
+
+
+def _series(primal, lower, top, K):
+    return [primal] + [lower[q] for q in range(K - 1)] + [top]
+
+
+def _masked_series(x0_ref, xl_ref, xt_ref, zero, K):
+    """Read one operand's coefficient series, leaving statically-zero
+    channels as None so the series algebra skips their MXU work (the kernel
+    analogue of the interpreter's symbolic zeros)."""
+    f32 = jnp.float32
+    xl = None
+    lower = []
+    for q in range(K - 1):
+        if zero[1 + q]:
+            lower.append(None)
+        else:
+            if xl is None:
+                xl = xl_ref[:, :, 0].astype(f32)
+            lower.append(xl[q])
+    top = None if zero[K] else xt_ref[0].astype(f32)
+    return [x0_ref[0].astype(f32)] + lower + [top]
+
+
+def _kernel(mask_ref, q0_ref, ql_ref, qt_ref, k0_ref, kl_ref, kt_ref,
+            v0_ref, vl_ref, vt_ref, o0_ref, ol_ref, ot_ref,
+            m_s, l0_s, ll_s, lt_s, u0_s, ul_s, ut_s, *, nk: int, K: int,
+            qzero, kzero, vzero):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        for ref in (l0_s, ll_s, lt_s, u0_s, ul_s, ut_s):
+            ref[...] = jnp.zeros_like(ref)
+
+    mb = mask_ref[...]
+    # skip only when the block cannot change any state: all padding, or no
+    # live entry while every row already saw one (its user-masked entries
+    # would then contribute exp(-1e30 - finite) = exact zeros).
+    rows_started = jnp.all(m_s[...] > 0.5 * NEG_INF)
+    live = jnp.any(mb >= 0) & (jnp.any(mb > 0) | ~rows_started)
+
+    @pl.when(live)
+    def _compute():
+        Q = _masked_series(q0_ref, ql_ref, qt_ref, qzero, K)
+        Kc = _masked_series(k0_ref, kl_ref, kt_ref, kzero, K)
+        V = _masked_series(v0_ref, vl_ref, vt_ref, vzero, K)
+
+        S = bilinear_series(Q, Kc, K, _qk_prod)
+        S[0] = jnp.where(mb > 0, S[0], NEG_INF)
+        S[0] = jnp.where(mb < 0, -jnp.inf, S[0])  # padding: dead at any max
+        live01 = jnp.maximum(mb, 0.0)
+        S[1:] = [None if c is None else c * live01 for c in S[1:]]
+
+        m_prev = m_s[...]
+        m_new = jnp.maximum(m_prev, S[0].max(axis=-1))
+        corr = jnp.exp(m_prev - m_new)
+        e0 = jnp.exp(S[0] - m_new[:, None])
+        E = exp_series(e0, S, K)
+        dU = bilinear_series(E, V, K, _ev_prod)
+
+        # a channel that is None here is None at EVERY kv step (the zero
+        # specs are static), so its scratch accumulator stays at its zero
+        # init and needs no rescale either.
+        l0_s[...] = l0_s[...] * corr + E[0].sum(axis=-1)
+        u0_s[...] = u0_s[...] * corr[:, None] + dU[0]
+        if E[K] is not None:
+            lt_s[...] = lt_s[...] * corr + E[K].sum(axis=-1)
+        if dU[K] is not None:
+            ut_s[...] = ut_s[...] * corr[:, None] + dU[K]
+        for q in range(1, K):
+            if E[q] is not None:
+                ll_s[q - 1, ...] = ll_s[q - 1, ...] * corr[None, :] \
+                    + E[q].sum(axis=-1)
+            if dU[q] is not None:
+                ul_s[q - 1, ...] = ul_s[q - 1, ...] * corr[None, :, None] \
+                    + dU[q]
+        m_s[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finish():
+        # real rows always have l0 >= 1 (max entry contributes exp(0) = 1);
+        # the clamp keeps all-padding rows (stripped later) finite instead of
+        # overflowing the reciprocal tower.
+        l0 = jnp.maximum(l0_s[...], 1.0)
+        L = _series(l0, ll_s, lt_s[...], K)
+        U = _series(u0_s[...], ul_s, ut_s[...], K)
+        G = reciprocal_series(L, K)
+        O = bilinear_series(U, G, K, _ug_prod)
+        o0_ref[0, ...] = O[0].astype(o0_ref.dtype)
+        ot_ref[0, ...] = O[K].astype(ot_ref.dtype)
+        for q in range(1, K):
+            ol_ref[q - 1, :, 0, ...] = O[q].astype(ol_ref.dtype)
+
+
+def collapsed_jet_attention(mask, q0, ql, qt, k0, kl, kt, v0, vl, vt, *,
+                            K: int = 2, block_q: int = 128, block_k: int = 128,
+                            interpret: bool = False,
+                            qzero=None, kzero=None, vzero=None):
+    """One fused collapsed-K-jet attention block.
+
+    mask: (Sq, Skv) tri-state float (see module docstring), shared across N;
+    q0/qt: (N, Sq, dh); ql: (K-1, R, N, Sq, dh); k*/v* likewise over Skv.
+    ``qzero``/``kzero``/``vzero`` are optional static (K+1)-tuples flagging
+    symbolically-zero coefficient channels (index 0 = primal, 1..K-1 =
+    lower, K = top); flagged channels must be zero-filled and their MXU work
+    is skipped. Sq/Skv must be pre-padded to the block sizes (ops.py handles
+    padding, scale folding, zero specs and block selection via the
+    autotuner). Returns (o0, ol (K-1, R, N, Sq, dh), ot) in q0's dtype.
+    """
+    if K < 2:
+        raise ValueError(f"collapsed jets need K >= 2, got {K}")
+    if ql.shape[0] != K - 1:
+        raise ValueError(f"ql leading dim {ql.shape[0]} != K-1 = {K - 1}")
+    dense = (False,) * (K + 1)
+    qzero, kzero, vzero = (tuple(z) if z is not None else dense
+                           for z in (qzero, kzero, vzero))
+    N, Sq, dh = q0.shape
+    Skv = k0.shape[1]
+    dv = v0.shape[2]
+    R = ql.shape[1]
+    assert Sq % block_q == 0 and Skv % block_k == 0
+    grid = (N, Sq // block_q, Skv // block_k)
+    nk = grid[2]
+
+    kernel = functools.partial(_kernel, nk=nk, K=K, qzero=qzero, kzero=kzero,
+                               vzero=vzero)
+
+    def series_specs(b, d, kv):
+        idx = ((lambda n, i, j: (n, j, 0)) if kv
+               else (lambda n, i, j: (n, i, 0)))
+        lidx = ((lambda n, i, j: (0, 0, n, j, 0)) if kv
+                else (lambda n, i, j: (0, 0, n, i, 0)))
+        return [
+            pl.BlockSpec((1, b, d), idx),
+            pl.BlockSpec((K - 1, R, 1, b, d), lidx),
+            pl.BlockSpec((1, b, d), idx),
+        ]
+
+    out_shapes = (
+        jax.ShapeDtypeStruct((N, Sq, dv), q0.dtype),
+        jax.ShapeDtypeStruct((K - 1, R, N, Sq, dv), q0.dtype),
+        jax.ShapeDtypeStruct((N, Sq, dv), q0.dtype),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, block_k), lambda n, i, j: (i, j)),
+            *series_specs(block_q, dh, kv=False),
+            *series_specs(block_k, dh, kv=True),
+            *series_specs(block_k, dv, kv=True),
+        ],
+        out_specs=tuple(series_specs(block_q, dv, kv=False)),
+        out_shape=out_shapes,
+        scratch_shapes=[
+            _scratch((block_q,)),
+            _scratch((block_q,)),
+            _scratch((K - 1, R, block_q)),
+            _scratch((block_q,)),
+            _scratch((block_q, dv)),
+            _scratch((K - 1, R, block_q, dv)),
+            _scratch((block_q, dv)),
+        ],
+        interpret=interpret,
+    )(mask, q0, ql, qt, k0, kl, kt, v0, vl, vt)
+
+
+def _scratch(shape):
+    if pltpu is not None:
+        return pltpu.VMEM(shape, jnp.float32)
+    return pl.MemoryRef(shape, jnp.float32, pl.ANY)  # pragma: no cover

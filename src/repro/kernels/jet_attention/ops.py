@@ -1,0 +1,209 @@
+"""Jit'd wrappers for the fused collapsed-jet attention kernel.
+
+This is the boundary the offload dispatcher (:mod:`repro.core.offload`)
+calls into: batch-shape flattening, scale folding (a jet-constant softmax
+scale is linear, so it multiplies every q coefficient), symbolic-zero
+coefficient instantiation, padding to the autotuned ``(bQ, bK)`` blocks with
+the padding folded into the mask, and a custom VJP whose backward re-runs
+the unfused reference (:mod:`.ref`) under ``jax.vjp`` — exactly the graph
+XLA would differentiate, so ``backend='pallas'`` composes with ``jax.grad``
+training losses.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import autotune
+
+from .jet_attention import collapsed_jet_attention
+from .ref import collapsed_jet_attention_ref
+
+_LANE = 128
+_SUBLANE = 8
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_axis(x, axis, mult):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(10, 11, 12, 13, 14))
+def _fused(mask, q0, ql, qt, k0, kl, kt, v0, vl, vt, K, block_q, block_k,
+           interpret, zeros):
+    qzero, kzero, vzero = zeros
+    return collapsed_jet_attention(
+        mask, q0, ql, qt, k0, kl, kt, v0, vl, vt, K=K,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+        qzero=qzero, kzero=kzero, vzero=vzero,
+    )
+
+
+def _fused_fwd(mask, q0, ql, qt, k0, kl, kt, v0, vl, vt, K, block_q, block_k,
+               interpret, zeros):
+    out = _fused(mask, q0, ql, qt, k0, kl, kt, v0, vl, vt, K, block_q,
+                 block_k, interpret, zeros)
+    return out, (mask, q0, ql, qt, k0, kl, kt, v0, vl, vt)
+
+
+def _fused_bwd(K, block_q, block_k, interpret, zeros, res, g):
+    mask, *jets = res
+    _, vjp = jax.vjp(
+        lambda *a: collapsed_jet_attention_ref(
+            *a, K=K, mask=mask > 0, valid=mask >= 0), *jets
+    )
+    return (jnp.zeros_like(mask), *vjp(g))
+
+
+_fused.defvjp(_fused_fwd, _fused_bwd)
+
+
+def collapsed_jet_attention_op(q, k, v, *, K: int = 2, mask=None, scale=1.0,
+                               block_q=None, block_k=None, interpret=None,
+                               lowering: str = "auto"):
+    """Padding-safe fused collapsed-K-jet attention for arbitrary batch shapes.
+
+    ``q``/``k``/``v`` are collapsed-jet triples ``(x0, lower, top)`` with
+    ``x0``: (*batch, S, d); ``lower``: sequence of K-1 coefficient arrays,
+    each (R, *batch, S, d) or ``None`` (symbolically zero); ``top``:
+    (*batch, S, d) or ``None``. ``mask``: (Sq, Skv) bool/0-1 (True = attend)
+    or ``None`` for full attention; ``scale`` multiplies the scores and must
+    be jet-constant. Block sizes default to the autotuner's choice
+    (:func:`repro.kernels.autotune.get_attention_block_config`).
+
+    ``lowering`` picks the execution strategy: ``"kernel"`` runs the Pallas
+    kernel (emulated when ``interpret``), ``"reference"`` runs the unfused
+    oracle as one XLA graph with the same symbolic-zero skipping, and
+    ``"auto"`` — the offload dispatcher's setting — chooses the kernel on
+    accelerators and the reference graph on CPU, where XLA compiles it
+    tighter than grid-step kernel emulation ever runs.
+
+    Returns ``(o0, [K-1 lower coeffs], ot)`` with the kernel's padding
+    stripped and the input batch shape restored.
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    if lowering not in ("auto", "kernel", "reference"):
+        raise ValueError(f"unknown lowering {lowering!r}")
+    if lowering == "auto":
+        lowering = "reference" if _on_cpu() else "kernel"
+    q0, q_low, q_top = q
+    k0, k_low, k_top = k
+    v0, v_low, v_top = v
+    for low in (q_low, k_low, v_low):
+        if len(low) != K - 1:
+            raise ValueError(
+                f"need K-1={K - 1} lower coefficients, got {len(low)}")
+    if np.dtype(q0.dtype) == np.dtype(np.float64):
+        raise ValueError(
+            "the fused collapsed-jet attention kernel accumulates in float32 "
+            "and would silently lose float64 precision; use the interpreter "
+            "backend for x64 computations")
+
+    batch_shape = q0.shape[:-2]
+    Sq, dh = q0.shape[-2:]
+    Skv, dv = v0.shape[-2:]
+    N = int(np.prod(batch_shape)) if batch_shape else 1
+    R = next((c.shape[0] for x in (q_low, k_low, v_low) for c in x
+              if c is not None), 1)
+    dtype = q0.dtype
+
+    if lowering == "reference":
+        # one fused XLA graph, symbolic zeros preserved; no padding needed
+        def flat(x0, low, top, S, d):
+            return (x0.reshape(N, S, d),
+                    [None if c is None else c.reshape(R, N, S, d)
+                     for c in low],
+                    None if top is None else top.reshape(N, S, d))
+
+        q0f, qlf, qtf = flat(q0, q_low, q_top, Sq, dh)
+        q0f = q0f * scale
+        qlf = [None if c is None else c * scale for c in qlf]
+        qtf = None if qtf is None else qtf * scale
+        mb = None
+        if mask is not None:
+            mb = jnp.broadcast_to(jnp.asarray(mask), (Sq, Skv)).astype(bool)
+        o0, ol, ot = collapsed_jet_attention_ref(
+            q0f, qlf, qtf, *flat(k0, k_low, k_top, Skv, dh),
+            *flat(v0, v_low, v_top, Skv, dv), K=K, mask=mb)
+        return (o0.reshape(*batch_shape, Sq, dv),
+                [ol[j].reshape(R, *batch_shape, Sq, dv)
+                 for j in range(K - 1)],
+                ot.reshape(*batch_shape, Sq, dv))
+
+    def stack(x0, low, top, S, d):
+        x0 = x0.reshape(N, S, d)
+        lows = [
+            jnp.zeros((R, N, S, d), dtype) if c is None
+            else c.reshape(R, N, S, d)
+            for c in low
+        ]
+        xl = jnp.stack(lows)  # (K-1, R, N, S, d)
+        xt = (jnp.zeros((N, S, d), dtype) if top is None
+              else top.reshape(N, S, d))
+        return x0, xl, xt
+
+    # static symbolic-zero channel specs: the kernel skips their MXU work
+    # (index 0 = primal, 1..K-1 = lower coefficients, K = top)
+    def zspec(low, top):
+        return (False,) + tuple(c is None for c in low) + (top is None,)
+
+    zeros = (zspec(q_low, q_top), zspec(k_low, k_top), zspec(v_low, v_top))
+
+    q0, ql, qt = stack(q0, q_low, q_top, Sq, dh)
+    k0, kl, kt = stack(k0, k_low, k_top, Skv, dh)
+    v0, vl, vt = stack(v0, v_low, v_top, Skv, dv)
+
+    # fold the (jet-constant) score scale into the q series: linear in q.
+    q0, ql, qt = q0 * scale, ql * scale, qt * scale
+
+    if block_q is None or block_k is None:
+        cfg = autotune.get_attention_block_config(N, Sq, Skv, dh, R, K, dtype,
+                                                  interpret=interpret)
+        block_q = block_q or cfg.block_q
+        block_k = block_k or cfg.block_k
+
+    if mask is None:
+        mask = jnp.ones((Sq, Skv), jnp.float32)
+    else:
+        mask = jnp.broadcast_to(jnp.asarray(mask), (Sq, Skv))
+        mask = mask.astype(jnp.float32)
+    # tri-state mask: 1 = attend, 0 = user-masked (-1e30 score, counts for a
+    # fully-masked row's uniform normalizer), -1 = padding (-inf score,
+    # never counts). Padded q rows are stripped below.
+    pad_q, pad_k = (-Sq) % block_q, (-Skv) % block_k
+    mask = jnp.pad(mask, ((0, pad_q), (0, pad_k)), constant_values=-1.0)
+
+    d_mult = 1 if interpret else _LANE
+    q0p = _pad_axis(_pad_axis(q0, 1, block_q), 2, d_mult)
+    qlp = _pad_axis(_pad_axis(ql, 3, block_q), 4, d_mult)
+    qtp = _pad_axis(_pad_axis(qt, 1, block_q), 2, d_mult)
+    k0p = _pad_axis(_pad_axis(k0, 1, block_k), 2, d_mult)
+    klp = _pad_axis(_pad_axis(kl, 3, block_k), 4, d_mult)
+    ktp = _pad_axis(_pad_axis(kt, 1, block_k), 2, d_mult)
+    v0p = _pad_axis(_pad_axis(v0, 1, block_k), 2, d_mult)
+    vlp = _pad_axis(_pad_axis(vl, 3, block_k), 4, d_mult)
+    vtp = _pad_axis(_pad_axis(vt, 1, block_k), 2, d_mult)
+
+    o0, ol, ot = _fused(mask, q0p, qlp, qtp, k0p, klp, ktp, v0p, vlp, vtp,
+                        K, block_q, block_k, interpret, zeros)
+    o0 = o0[:, :Sq, :dv].reshape(*batch_shape, Sq, dv)
+    ot = ot[:, :Sq, :dv].reshape(*batch_shape, Sq, dv)
+    out_lower = [
+        ol[j, :R, :, :Sq, :dv].reshape(R, *batch_shape, Sq, dv)
+        for j in range(K - 1)
+    ]
+    return o0, out_lower, ot

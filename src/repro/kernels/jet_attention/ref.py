@@ -1,0 +1,111 @@
+"""Pure-jnp oracle for the fused collapsed-jet attention kernel.
+
+``collapsed_jet_attention_ref`` is the unfused semantics of
+``kernels.jet_attention.collapsed_jet_attention``: it propagates a collapsed
+K-jet through ``softmax(q·kᵀ + mask)·v`` by materializing the full score /
+probability series — exactly the graph the CRULES interpreter executes
+(bilinear scores, Faa di Bruno through ``exp``, linear row-sum, reciprocal
+composition, bilinear against v), so it doubles as the backward-pass graph of
+the kernel's custom VJP (:mod:`.ops`).
+
+Inputs are pre-scaled: fold any ``1/sqrt(dh)`` into the q series before
+calling (scaling is linear, so it applies uniformly to every coefficient).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .series import bilinear_series, exp_series, reciprocal_series
+
+NEG_INF = -1e30
+
+
+def _qk_prod(a, b, sa, sb, collapse):
+    if collapse:
+        return jnp.einsum("rnqd,rnkd->nqk", a, b)
+    if sa and sb:
+        return jnp.einsum("rnqd,rnkd->rnqk", a, b)
+    if sa:
+        return jnp.einsum("rnqd,nkd->rnqk", a, b)
+    if sb:
+        return jnp.einsum("nqd,rnkd->rnqk", a, b)
+    return jnp.einsum("nqd,nkd->nqk", a, b)
+
+
+def _ev_prod(e, v, se, sv, collapse):
+    if collapse:
+        return jnp.einsum("rnqk,rnkd->nqd", e, v)
+    if se and sv:
+        return jnp.einsum("rnqk,rnkd->rnqd", e, v)
+    if se:
+        return jnp.einsum("rnqk,nkd->rnqd", e, v)
+    if sv:
+        return jnp.einsum("nqk,rnkd->rnqd", e, v)
+    return jnp.einsum("nqk,nkd->nqd", e, v)
+
+
+def _ug_prod(u, g, su, sg, collapse):
+    t = u * g[..., None]
+    return t.sum(axis=0) if collapse else t
+
+
+def collapsed_jet_attention_ref(q0, ql, qt, k0, kl, kt, v0, vl, vt, *,
+                                K: int = 2, mask=None, valid=None):
+    """Reference semantics of ``collapsed_jet_attention`` (unfused).
+
+    q0/qt: (N, Sq, dh); ql: (K-1, R, N, Sq, dh); k*/v* likewise over Skv;
+    mask: (Sq, Skv) bool (True = attend) or None. ``valid`` marks real
+    (non-padding) positions: a user-masked entry scores ``-1e30`` (so a
+    fully-masked row normalizes uniformly over its real keys, like the
+    interpreter's ``select_n``/softmax graph), an invalid one ``-inf`` (it
+    contributes nothing regardless of the row max — ops.py's block padding).
+    Returns (o0 (N, Sq, dh), ol (K-1, R, N, Sq, dh), ot (N, Sq, dh)).
+    """
+    # coefficient containers may be lists holding ``None`` (symbolic zeros,
+    # as handed over by the offload dispatcher) or dense stacked arrays; the
+    # shared series algebra skips every product a None touches.
+    Q = [q0, *[ql[j] for j in range(K - 1)], qt]
+    Kc = [k0, *[kl[j] for j in range(K - 1)], kt]
+    V = [v0, *[vl[j] for j in range(K - 1)], vt]
+
+    S = bilinear_series(Q, Kc, K, _qk_prod)
+    keep = None
+    if mask is not None:
+        S[0] = jnp.where(mask, S[0], NEG_INF)
+        keep = mask
+    if valid is not None:
+        S[0] = jnp.where(valid, S[0], -jnp.inf)
+        keep = valid if keep is None else keep & valid
+    if keep is not None:
+        kf = keep.astype(S[0].dtype)
+        S[1:] = [None if c is None else c * kf for c in S[1:]]
+
+    # streaming-softmax numerics: the max shift is jet-constant (the traced
+    # graph wraps it in stop_gradient), so only e0 sees it. The clamp keeps
+    # all-padding rows (max = -inf) from producing exp(-inf - -inf) = NaN,
+    # matching the kernel's finite running-max initialization.
+    m = jax.lax.stop_gradient(
+        jnp.maximum(jnp.max(S[0], axis=-1, keepdims=True), NEG_INF))
+    e0 = jnp.exp(S[0] - m)
+    E = exp_series(e0, S, K)
+
+    L = [None if c is None else c.sum(axis=-1) for c in E]
+    # any row with a real key has l0 >= 1 (its max entry contributes
+    # exp(0) = 1), so this clamp only touches all-padding rows — whose zero
+    # mass would otherwise overflow the reciprocal tower (1/l0^(K+1)) and
+    # NaN-poison the custom-VJP backward through 0 * inf.
+    L[0] = jnp.maximum(L[0], 1.0)
+    G = reciprocal_series(L, K)
+
+    U = bilinear_series(E, V, K, _ev_prod)
+    O = bilinear_series(U, G, K, _ug_prod)
+    R = next((c.shape[0] for c in (*Q[1:K], *Kc[1:K], *V[1:K])
+              if c is not None), 1)
+    lower = jnp.stack([
+        jnp.zeros((R,) + O[0].shape, O[0].dtype) if c is None else c
+        for c in O[1:K]
+    ])
+    top = jnp.zeros_like(O[0]) if O[K] is None else O[K]
+    return O[0], lower, top

@@ -1,0 +1,125 @@
+"""Collapsed-series algebra shared by the jet-attention kernel and its oracle.
+
+A *collapsed K-series* is a list ``X[0..K]`` of Taylor coefficients of a value
+along R directions, in the representation of
+:class:`repro.core.jets.CollapsedJet`:
+
+* ``X[0]`` — the primal, shared across directions (no R axis);
+* ``X[j]`` (j = 1..K-1) — per-direction coefficients with a *leading* R axis;
+* ``X[K]`` — the direction-summed top coefficient (no R axis).
+
+Entries may be ``None`` — the symbolic zero of :mod:`repro.core.jets` in
+list form. A ``None`` coefficient contributes no products: Laplacian seeds
+reach the first attention block with zero tops (any linear lift of the
+coordinates keeps them zero) and biharmonic seeds with zero middle
+coefficients, and skipping their terms at trace time removes the
+corresponding MXU work entirely, exactly like the interpreter's
+symbolic-zero algebra. The helpers implement the two propagation rules of
+the paper (Leibniz for bilinear ops, Faa di Bruno / eq. 6 for elementwise
+composition) *shape-generically*: products are supplied by the caller, so
+the same code runs on full ``(N, S, ...)`` arrays in the oracle and on VMEM
+tiles inside the Pallas kernel. The combinatorics are the interpreter's own
+(:mod:`repro.core.partitions`), so kernel, oracle and ``CRULES`` cannot
+drift apart.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, List, Sequence
+
+from repro.core.partitions import binomial, faa_di_bruno_terms, nontrivial_terms
+
+# prod(a, b, a_stacked, b_stacked, collapse) -> array
+#   a_stacked/b_stacked: whether the operand carries the leading R axis;
+#   collapse: both stacked, result summed over R (the eq.-6 top terms).
+ProdFn = Callable
+
+
+def _add(acc, t):
+    if t is None:
+        return acc
+    return t if acc is None else acc + t
+
+
+def bilinear_series(A: Sequence, B: Sequence, K: int, prod: ProdFn) -> List:
+    """Collapsed Leibniz rule: the series of ``A * B`` for a bilinear product.
+
+    Mirrors :func:`repro.core.collapse._propagate_bilinear_collapsed`,
+    including its symbolic-zero skipping: products with a ``None`` operand
+    are never emitted, and an output coefficient with no surviving terms is
+    itself ``None``.
+    """
+    out: List = []
+    for j in range(K):
+        acc = None
+        for i in range(j + 1):
+            if A[i] is None or B[j - i] is None:
+                continue
+            t = prod(A[i], B[j - i], i > 0, j - i > 0, False)
+            c = binomial(j, i)
+            acc = _add(acc, float(c) * t if c != 1 else t)
+        out.append(acc)
+    top = None
+    if A[0] is not None and B[K] is not None:
+        top = _add(top, prod(A[0], B[K], False, False, False))
+    if A[K] is not None and B[0] is not None:
+        top = _add(top, prod(A[K], B[0], False, False, False))
+    for i in range(1, K):
+        if A[i] is None or B[K - i] is None:
+            continue
+        t = prod(A[i], B[K - i], True, True, True)
+        c = binomial(K, i)
+        top = _add(top, float(c) * t if c != 1 else t)
+    out.append(top)
+    return out
+
+
+def elementwise_series(d: Sequence, X: Sequence, K: int) -> List:
+    """Collapsed Faa di Bruno (paper eq. 6): compose a derivative tower with a
+    collapsed series.
+
+    ``d[0..K]`` are the derivatives of the elementwise function at ``X[0]``
+    (unstacked shapes). Nontrivial partitions see the direction axis; the
+    linear (trivial) part propagates the collapsed top directly. Partitions
+    touching a ``None`` (symbolically zero) coefficient are skipped.
+    """
+    out: List = [d[0]]
+    for k in range(1, K):
+        acc = None
+        for nu, sigma in faa_di_bruno_terms(k):
+            if any(X[s] is None for s in sigma):
+                continue
+            p = X[sigma[0]]
+            for s in sigma[1:]:
+                p = p * X[s]
+            t = d[len(sigma)][None] * p  # broadcast over the leading R axis
+            acc = _add(acc, float(nu) * t if nu != 1 else t)
+        out.append(acc)
+    top = None if X[K] is None else d[1] * X[K]
+    for nu, sigma in nontrivial_terms(K):
+        if any(X[s] is None for s in sigma):
+            continue
+        p = X[sigma[0]]
+        for s in sigma[1:]:
+            p = p * X[s]
+        t = d[len(sigma)] * p.sum(axis=0)
+        top = _add(top, float(nu) * t if nu != 1 else t)
+    out.append(top)
+    return out
+
+
+def exp_series(e0, X: Sequence, K: int) -> List:
+    """``exp`` composition: every derivative equals the primal value ``e0``."""
+    return elementwise_series([e0] * (K + 1), X, K)
+
+
+def reciprocal_series(L: Sequence, K: int) -> List:
+    """``1/l`` composition: d^n (1/l) = (-1)^n n! / l^(n+1) (the interpreter's
+    ``_power_tower(-1)``)."""
+    inv = 1.0 / L[0]
+    d = [inv]
+    fact = 1.0
+    for n in range(1, K + 1):
+        fact *= -n
+        d.append(fact * inv ** (n + 1))
+    return elementwise_series(d, L, K)

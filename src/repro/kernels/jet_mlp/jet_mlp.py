@@ -242,4 +242,6 @@ def jet_mlp_layer(h0, h1, h2s, w, b, *, activation: str = "tanh",
 def _scratch(shape):
     if pltpu is not None:
         return pltpu.VMEM(shape, jnp.float32)
-    return pl.MemorySpace.ANY(shape, jnp.float32)  # pragma: no cover
+    # pl.MemorySpace members are not callable; MemoryRef is the portable
+    # scratch constructor on builds without the TPU extras.
+    return pl.MemoryRef(shape, jnp.float32, pl.ANY)  # pragma: no cover

@@ -129,6 +129,26 @@ def _chunk_mask(q_pos, k_pos, causal, window, kv_len):
     return m
 
 
+def masked_softmax(s, mask=None):
+    """Row softmax over the trailing (key) axis with an optional boolean mask
+    (True = attend).
+
+    This is the ONE canonical mask/softmax subgraph: every non-streaming
+    attention path (attention_reference — which kernels/flash_attention/ref.py
+    re-exports as its oracle — and the decode-time cached_attention) traces
+    through it, so the offload probe classifier
+    (:mod:`repro.core.offload`) sees a single graph shape:
+    ``where(mask, s, -1e30) -> stop_gradient'd row max -> exp -> row sum ->
+    div``. The max shift is stop_gradient'd so Taylor/jet interpreters treat
+    it as the constant it mathematically is.
+    """
+    if mask is not None:
+        s = jnp.where(mask, s, NEG_INF)
+    m = jax.lax.stop_gradient(jnp.max(s, axis=-1, keepdims=True))
+    e = jnp.exp(s - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
 def _flash_fwd_impl(q, k, v, causal, window, q_offset, chunk, kv_len):
     """q: (B, Sq, Hkv, G, dh); k, v: (B, Skv, Hkv, dh).
 
@@ -253,21 +273,34 @@ def flash_attention(
 
 
 def attention_reference(q, k, v, *, causal=True, window=None, q_offset=0, kv_len=None):
-    """Naive softmax attention (oracle for flash & the Pallas kernel)."""
+    """Naive softmax attention (oracle for flash & the Pallas kernels).
+
+    Canonical graph: GQA key/value heads are broadcast over their query
+    groups, everything is laid out ``(B, H, S, dh)``, and the block is two
+    batched dot_generals around the shared :func:`masked_softmax` — the
+    attention shape :mod:`repro.core.offload`'s jet_attention matcher fuses
+    when this runs under a collapsed-Taylor operator with
+    ``backend='pallas'``.
+    """
     B, Sq, Hq, dh = q.shape
-    Hkv = k.shape[2]
+    Skv, Hkv = k.shape[1], k.shape[2]
     G = Hq // Hkv
-    qg = q.reshape(B, Sq, Hkv, G, dh)
-    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k, preferred_element_type=jnp.float32)
-    s = s / math.sqrt(dh)
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    qh = jnp.moveaxis(q, 2, 1)  # (B, Hq, Sq, dh)
+    kh = jnp.moveaxis(k, 2, 1)
+    vh = jnp.moveaxis(v, 2, 1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qh, kh,
+                   preferred_element_type=jnp.float32) / math.sqrt(dh)
     q_pos = q_offset + jnp.arange(Sq)
-    k_pos = jnp.arange(k.shape[1])
-    mask = _chunk_mask(q_pos, k_pos, causal, window, kv_len if kv_len is not None else k.shape[1])
-    s = jnp.where(mask[None, None, None], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v,
+    k_pos = jnp.arange(Skv)
+    mask = _chunk_mask(q_pos, k_pos, causal, window,
+                       kv_len if kv_len is not None else Skv)
+    p = masked_softmax(s, mask)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p.astype(vh.dtype), vh,
                    preferred_element_type=jnp.float32)
-    return o.reshape(B, Sq, Hq, dh).astype(q.dtype)
+    return jnp.moveaxis(o, 1, 2).astype(q.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -312,11 +345,18 @@ def _proj_qkv(params, x, cfg):
 
 
 def attention_layer(params, x, cfg, *, positions, causal=True, window=None):
-    """Training/prefill path: full-sequence streaming attention."""
+    """Training/prefill path: full-sequence streaming attention.
+
+    ``cfg.attn_impl='reference'`` swaps in the canonical
+    :func:`attention_reference` graph — the form the collapsed-Taylor
+    offload planner fuses; differential-operator heads (transformer PINNs)
+    trace with that setting."""
     q, k, v = _proj_qkv(params, x, cfg)
     q = rope(q, positions, cfg.rope_theta)
     k = rope(k, positions, cfg.rope_theta)
-    if cfg.use_pallas:
+    if getattr(cfg, "attn_impl", "flash") == "reference":
+        out = attention_reference(q, k, v, causal=causal, window=window)
+    elif cfg.use_pallas:
         from repro.kernels.flash_attention import ops as fa_ops
 
         out = fa_ops.flash_attention(q, k, v, causal=causal, window=window)
@@ -364,10 +404,9 @@ def cached_attention(params, q, ck, cv, pos, *, window=None, mask_by_pos=True):
         ok = k_pos[None] <= pos[:, None]  # (B, S)
         if window is not None:
             ok = ok & (pos[:, None] - k_pos[None] < window)
+        p = masked_softmax(s, ok[:, None, None, None, :])
     else:
-        ok = jnp.ones((B, ck.shape[1]), bool)
-    s = jnp.where(ok[:, None, None, None, :], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
+        p = masked_softmax(s)
     o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(cv.dtype), cv)
     o = o.reshape(B, 1, Hq, dh)
     return jnp.einsum("bshk,hkd->bsd", o, params["wo"]["kernel"].astype(q.dtype))

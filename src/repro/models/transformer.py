@@ -117,6 +117,32 @@ def backbone(params, x, cfg, positions):
     return L.rmsnorm(params["final_norm"], x, cfg.norm_eps), aux
 
 
+def backbone_unrolled(params, x, cfg, positions):
+    """:func:`backbone` with the layer stack unrolled in Python (no scan).
+
+    Differential-operator heads (transformer PINNs / operator learning)
+    trace through this path with ``cfg.attn_impl='reference'``: ``lax.scan``
+    bodies stay on the per-primitive CRULES interpreter, but unrolled
+    attention blocks expose the canonical masked-softmax graph that
+    :mod:`repro.core.offload` fuses into the jet_attention Pallas kernel
+    under ``operators.<op>(..., method='collapsed', backend='pallas')``.
+    """
+
+    def unstack(stacked):
+        n = jax.tree.leaves(stacked)[0].shape[0]
+        return [jax.tree.map(lambda a: a[i], stacked) for i in range(n)]
+
+    aux = jnp.zeros(())
+    if "prefix_layers" in params:
+        for layer in unstack(params["prefix_layers"]):
+            x, a = _block(layer, x, cfg, positions, False)
+            aux += a
+    for layer in unstack(params["layers"]):
+        x, a = _block(layer, x, cfg, positions, cfg.num_experts > 0)
+        aux += a
+    return L.rmsnorm(params["final_norm"], x, cfg.norm_eps), aux
+
+
 def unembed(params, x, cfg):
     if cfg.tied_embeddings:
         kern = params["embed"]["embedding"].T

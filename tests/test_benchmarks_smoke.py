@@ -1,0 +1,34 @@
+"""Import-check the benchmark scripts in tier-1 (they are run by hand /
+CI dashboards, but a stale import must fail fast in the test loop), plus a
+tiny-shape smoke of the attention-Laplacian benchmark's model builder."""
+
+import importlib
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.mark.parametrize("mod", [
+    "benchmarks.common",
+    "benchmarks.fig1_laplacian",
+    "benchmarks.attention_laplacian",
+    "benchmarks.rewrite_flops",
+    "benchmarks.table1_operators",
+    "benchmarks.tableF2_theory",
+])
+def test_benchmark_module_imports(mod):
+    assert importlib.import_module(mod) is not None
+
+
+def test_attention_laplacian_bench_smoke():
+    """The benchmark's transformer PINN agrees across backends at a tiny
+    shape (the full sweep is the by-hand benchmark, not a test)."""
+    from benchmarks.attention_laplacian import transformer_pinn
+    from repro.core import operators as ops
+
+    f = transformer_pinn(S=8, D=3, d_model=16)
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 3)) * 0.5
+    ref = ops.laplacian(f, x, method="collapsed")
+    got = ops.laplacian(f, x, method="collapsed", backend="pallas")
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,569 @@
+"""Fused collapsed-jet attention: kernel vs oracle (K x mask x ragged
+shapes, interpret mode), the offload planner's attention matcher (segments
+matched on canonical graphs, not matched when structural slots carry
+propagated jets), operator-level acceptance (`backend='pallas'` equals the
+CRULES interpreter on transformer-PINN graphs), and the namespaced autotune
+cache."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import offload
+from repro.core import operators as ops
+from repro.kernels import autotune
+from repro.kernels.jet_attention.ops import collapsed_jet_attention_op
+from repro.kernels.jet_attention.ref import collapsed_jet_attention_ref
+
+MASKS = ("full", "causal", "window")
+
+
+def _mask(kind, sq, skv):
+    if kind == "full":
+        return None
+    qp, kp = jnp.arange(sq), jnp.arange(skv)
+    m = kp[None, :] <= qp[:, None]
+    if kind == "window":
+        m = m & (qp[:, None] - kp[None, :] < 3)
+    return m
+
+
+# ---------------------------------------------------------------------------
+# kernel vs reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("lowering", ["kernel", "reference"])
+@pytest.mark.parametrize("K", [2, 4])
+@pytest.mark.parametrize("mask_kind", MASKS)
+@pytest.mark.parametrize("B,H,Sq,Skv,dh,R", [
+    (2, 2, 10, 13, 5, 3),   # ragged everywhere: exercises Sq/Skv padding
+    (1, 1, 16, 16, 8, 2),
+])
+def test_collapsed_jet_attention_sweep(lowering, K, mask_kind, B, H, Sq, Skv,
+                                       dh, R):
+    if mask_kind != "full" and Sq != Skv:
+        Skv = Sq  # positional masks assume square score tiles here
+    ks = jax.random.split(jax.random.PRNGKey(0), 9)
+
+    def rnd(i, shape):
+        return jax.random.normal(ks[i], shape, jnp.float32) * 0.5
+
+    batch = (B, H)
+    N = B * H
+    q0, k0, v0 = (rnd(0, batch + (Sq, dh)), rnd(1, batch + (Skv, dh)),
+                  rnd(2, batch + (Skv, dh)))
+    ql = rnd(3, (K - 1, R) + batch + (Sq, dh))
+    kl = rnd(4, (K - 1, R) + batch + (Skv, dh))
+    vl = rnd(5, (K - 1, R) + batch + (Skv, dh))
+    qt, kt, vt = (rnd(6, batch + (Sq, dh)), rnd(7, batch + (Skv, dh)),
+                  rnd(8, batch + (Skv, dh)))
+    mask = _mask(mask_kind, Sq, Skv)
+    scale = 1.0 / math.sqrt(dh)
+
+    o0, ol, ot = collapsed_jet_attention_op(
+        (q0, list(ql), qt), (k0, list(kl), kt), (v0, list(vl), vt),
+        K=K, mask=mask, scale=scale, interpret=True, lowering=lowering)
+
+    def flat(x0, low, top, S):
+        return (x0.reshape(N, S, dh),
+                low.reshape(K - 1, R, N, S, dh),
+                top.reshape(N, S, dh))
+
+    r0, rl, rt = collapsed_jet_attention_ref(
+        *flat(q0 * scale, ql * scale, qt * scale, Sq),
+        *flat(k0, kl, kt, Skv), *flat(v0, vl, vt, Skv), K=K, mask=mask)
+    np.testing.assert_allclose(o0, r0.reshape(batch + (Sq, dh)),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(
+        jnp.stack(ol), rl.reshape((K - 1, R) + batch + (Sq, dh)),
+        rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(ot, rt.reshape(batch + (Sq, dh)),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_attention_kernel_symbolic_zero_coefficients():
+    """None lower/top coefficients (symbolic zeros) match materialized
+    zeros."""
+    K, Sq, dh, R = 4, 6, 4, 2
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    q0 = jax.random.normal(ks[0], (Sq, dh))
+    k0 = jax.random.normal(ks[1], (Sq, dh))
+    v0 = jax.random.normal(ks[2], (Sq, dh))
+    q1 = jax.random.normal(ks[3], (R, Sq, dh))
+    z = jnp.zeros((R, Sq, dh))
+    zt = jnp.zeros((Sq, dh))
+    ref = collapsed_jet_attention_op(
+        (q0, [q1, z, z], zt), (k0, [z, z, z], zt), (v0, [z, z, z], zt),
+        K=K, interpret=True, lowering="kernel")
+    got = collapsed_jet_attention_op(
+        (q0, [q1, None, None], None), (k0, [None] * 3, None),
+        (v0, [None] * 3, None), K=K, interpret=True, lowering="kernel")
+    for a, g in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
+        np.testing.assert_allclose(a, g, rtol=1e-6, atol=1e-6)
+    # and the reference lowering agrees with the kernel's zero-skipping
+    # (blocked online softmax vs full-row sums: f32 ordering noise, same
+    # tolerance as the kernel-vs-ref sweep)
+    got = collapsed_jet_attention_op(
+        (q0, [q1, None, None], None), (k0, [None] * 3, None),
+        (v0, [None] * 3, None), K=K, interpret=True, lowering="reference")
+    for a, g in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
+        np.testing.assert_allclose(a, g, rtol=2e-4, atol=2e-4)
+
+
+def test_attention_fully_masked_rows_match_reference():
+    """A mask with all-False rows (interpreter convention: uniform over the
+    real keys) must survive fusion AND block padding — padded key columns
+    may not leak into the fully-masked rows' normalizer."""
+    K, Sq, Skv, dh, R = 2, 6, 10, 4, 2
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    q0 = jax.random.normal(ks[0], (Sq, dh))
+    k0 = jax.random.normal(ks[1], (Skv, dh))
+    v0 = jax.random.normal(ks[2], (Skv, dh))
+    q1 = jax.random.normal(ks[3], (R, Sq, dh))
+    mask = jnp.ones((Sq, Skv), bool).at[2, :].set(False).at[5, :].set(False)
+    got = collapsed_jet_attention_op(
+        (q0, [q1], None), (k0, [None], None), (v0, [None], None),
+        K=K, mask=mask, interpret=True, lowering="kernel")
+    ref = collapsed_jet_attention_ref(
+        q0[None], q1[None, :, None], jnp.zeros((1, Sq, dh)),
+        k0[None], jnp.zeros((1, R, 1, Skv, dh)), jnp.zeros((1, Skv, dh)),
+        v0[None], jnp.zeros((1, R, 1, Skv, dh)), jnp.zeros((1, Skv, dh)),
+        K=K, mask=mask)
+    np.testing.assert_allclose(got[0], ref[0][0], rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(jnp.stack(got[1]), ref[1][:, :, 0],
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got[2], ref[2][0], rtol=1e-5, atol=1e-5)
+    # the fully-masked rows ARE the interpreter's uniform average of v
+    np.testing.assert_allclose(got[0][2], v0.mean(axis=0), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_attention_fully_masked_rows_through_offload():
+    """End to end: an empty-row mask through the fused operator path equals
+    the CRULES interpreter."""
+    D, dm, dh = 4, 6, 6
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    emb = jax.random.normal(ks[0], (D, dm)) * 0.5
+    Wq, Wk, Wv = (jax.random.normal(k, (dm, dh)) / np.sqrt(dm)
+                  for k in ks[1:4])
+    mask = jnp.ones((D, D), bool).at[1, :].set(False)
+
+    def f(x):
+        t = x[..., None] * emb[None]
+        q, k, v = t @ Wq, t @ Wk, t @ Wv
+        s = jnp.einsum("bqe,bke->bqk", q, k) / math.sqrt(dh)
+        s = jnp.where(mask, s, -1e30)
+        m = jax.lax.stop_gradient(jnp.max(s, axis=-1, keepdims=True))
+        e = jnp.exp(s - m)
+        p = e / jnp.sum(e, axis=-1, keepdims=True)
+        return jnp.einsum("bqk,bke->bqe", p, v).sum(axis=(-1, -2))
+
+    x = jax.random.normal(jax.random.PRNGKey(4), (3, D)) * 0.5
+    assert len(_attention_segments(f, x)) == 1
+    ref = ops.laplacian(f, x, method="collapsed")
+    got = ops.laplacian(f, x, method="collapsed", backend="pallas")
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_attention_kernel_rejects_float64():
+    q0 = np.zeros((2, 4), np.float64)
+    with pytest.raises(ValueError, match="float64"):
+        collapsed_jet_attention_op(
+            (q0, [None], None), (q0, [None], None), (q0, [None], None), K=2)
+
+
+# ---------------------------------------------------------------------------
+# offload plan: the attention matcher
+# ---------------------------------------------------------------------------
+
+
+def _attn_f(D=4, dm=8, dh=8, mask_kind="causal", scale_fn=None,
+            v_after_scores=False, softmax_tweak=None):
+    ks = jax.random.split(jax.random.PRNGKey(0), 6)
+    emb = jax.random.normal(ks[0], (D, dm)) * 0.5
+    pos = jax.random.normal(ks[1], (D, dm)) * 0.1
+    Wq = jax.random.normal(ks[2], (dm, dh)) / np.sqrt(dm)
+    Wk = jax.random.normal(ks[3], (dm, dh)) / np.sqrt(dm)
+    Wv = jax.random.normal(ks[4], (dm, dh)) / np.sqrt(dm)
+
+    def f(x):  # (B, D) -> (B,)
+        t = x[..., None] * emb[None] + pos[None]
+        q = t @ Wq
+        k = t @ Wk
+        v = None if v_after_scores else t @ Wv
+        s = jnp.einsum("bqe,bke->bqk", q, k)
+        s = s * (scale_fn(x) if scale_fn else 1.0 / math.sqrt(dh))
+        if v_after_scores:
+            v = t @ Wv  # traced after the score dot: unavailable at anchor
+        if mask_kind == "propagated":
+            m = (x.sum() > -1e6) & (jnp.arange(D)[None, :] <=
+                                    jnp.arange(D)[:, None])
+            s = jnp.where(m, s, -1e30)
+        else:
+            m = _mask(mask_kind, D, D)
+            if m is not None:
+                s = jnp.where(m, s, -1e30)
+        mx = jax.lax.stop_gradient(jnp.max(s, axis=-1, keepdims=True))
+        e = jnp.exp(s - mx)
+        z = jnp.sum(e, axis=-1, keepdims=True)
+        p = e / (z + 1.0) if softmax_tweak == "shifted_norm" else e / z
+        o = jnp.einsum("bqk,bke->bqe", p, v)
+        return jnp.tanh(o).sum(axis=(-1, -2))
+
+    return f
+
+
+def _attention_segments(f, x):
+    closed = jax.make_jaxpr(f)(x)
+    plan = offload.plan_segments(closed)
+    return [s for s in plan.values()
+            if isinstance(s, offload.AttentionSegment)]
+
+
+@pytest.mark.parametrize("mask_kind", MASKS)
+def test_plan_matches_attention_segment(mask_kind):
+    f = _attn_f(mask_kind=mask_kind)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 4))
+    segs = _attention_segments(f, x)
+    assert len(segs) == 1
+    seg = segs[0]
+    assert (seg.mask_var is not None) == (mask_kind != "full")
+    assert seg.scale_var is not None and seg.scale_op == "mul"
+    # the segment owns the whole block: both dots + softmax
+    assert seg.anchor in seg.skip and len(seg.skip) >= 7
+    if mask_kind != "full":
+        assert len(seg.hoist) > 0  # iota-derived mask traced after the dot
+
+
+def test_plan_rejects_propagated_scale():
+    """A score scale that depends on x carries a propagated jet: the segment
+    must NOT be matched (the whole block falls back to CRULES) — and the
+    fallback numerics still agree with the interpreter."""
+    f = _attn_f(scale_fn=lambda x: 1.0 / (1.0 + x.sum() ** 2))
+    x = jax.random.normal(jax.random.PRNGKey(2), (3, 4)) * 0.3
+    assert _attention_segments(f, x) == []
+    got = ops.laplacian(f, x, method="collapsed", backend="pallas")
+    ref = ops.laplacian(f, x, method="collapsed")
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_plan_rejects_propagated_mask():
+    f = _attn_f(mask_kind="propagated")
+    x = jax.random.normal(jax.random.PRNGKey(3), (3, 4)) * 0.3
+    assert _attention_segments(f, x) == []
+    got = ops.laplacian(f, x, method="collapsed", backend="pallas")
+    ref = ops.laplacian(f, x, method="collapsed")
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_plan_rejects_v_traced_after_scores():
+    """v produced after the score dot is unavailable when the fused segment
+    executes at its anchor: no match, clean fallback."""
+    f = _attn_f(v_after_scores=True)
+    x = jax.random.normal(jax.random.PRNGKey(4), (3, 4)) * 0.3
+    assert _attention_segments(f, x) == []
+    got = ops.laplacian(f, x, method="collapsed", backend="pallas")
+    ref = ops.laplacian(f, x, method="collapsed")
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_fuse_hoisted_jet_constant_scale():
+    """A jet-constant scale whose producing eqn is traced AFTER the score dot
+    (e.g. a learned temperature exp(log_tau)) must be hoisted and fused, not
+    crash the dispatcher."""
+    ks = jax.random.split(jax.random.PRNGKey(20), 5)
+    D, dm, dh = 4, 6, 6
+    emb = jax.random.normal(ks[0], (D, dm)) * 0.5
+    Wq, Wk, Wv = (jax.random.normal(k, (dm, dh)) / np.sqrt(dm)
+                  for k in ks[1:4])
+    log_tau = jnp.float32(-0.7)
+
+    def f(x):
+        t = x[..., None] * emb[None]
+        q, k, v = t @ Wq, t @ Wk, t @ Wv
+        s = jnp.einsum("bqe,bke->bqk", q, k)
+        s = s * jnp.exp(log_tau)  # exp eqn traced after the dot: hoisted
+        m = jax.lax.stop_gradient(jnp.max(s, axis=-1, keepdims=True))
+        e = jnp.exp(s - m)
+        p = e / jnp.sum(e, axis=-1, keepdims=True)
+        return jnp.einsum("bqk,bke->bqe", p, v).sum(axis=(-1, -2))
+
+    x = jax.random.normal(ks[4], (3, D)) * 0.5
+    segs = _attention_segments(f, x)
+    assert len(segs) == 1 and len(segs[0].hoist) > 0
+    ref = ops.laplacian(f, x, method="collapsed")
+    got = ops.laplacian(f, x, method="collapsed", backend="pallas")
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_plan_rejects_infinite_mask_fill():
+    """where(mask, s, -inf) NaNs the interpreter on fully-masked rows; the
+    kernel's finite -1e30 convention would silently differ, so an infinite
+    fill must not match (and the fallback stays numerically faithful)."""
+    ks = jax.random.split(jax.random.PRNGKey(21), 5)
+    D, dm = 4, 6
+    emb = jax.random.normal(ks[0], (D, dm)) * 0.5
+    Wq, Wk, Wv = (jax.random.normal(k, (dm, dm)) / np.sqrt(dm)
+                  for k in ks[1:4])
+
+    def f(x):
+        t = x[..., None] * emb[None]
+        q, k, v = t @ Wq, t @ Wk, t @ Wv
+        s = jnp.einsum("bqe,bke->bqk", q, k) / math.sqrt(dm)
+        mask = jnp.arange(D)[None, :] <= jnp.arange(D)[:, None]
+        s = jnp.where(mask, s, -jnp.inf)
+        m = jax.lax.stop_gradient(jnp.max(s, axis=-1, keepdims=True))
+        e = jnp.exp(s - m)
+        p = e / jnp.sum(e, axis=-1, keepdims=True)
+        return jnp.einsum("bqk,bke->bqe", p, v).sum(axis=(-1, -2))
+
+    x = jax.random.normal(ks[4], (3, D)) * 0.5
+    assert _attention_segments(f, x) == []
+    ref = ops.laplacian(f, x, method="collapsed")
+    got = ops.laplacian(f, x, method="collapsed", backend="pallas")
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_plan_rejects_non_softmax_normalizer():
+    """The probe classifier only fuses subgraphs numerically equal to row
+    softmax; a shifted normalizer e/(sum+1) must not fuse."""
+    f = _attn_f(softmax_tweak="shifted_norm")
+    x = jax.random.normal(jax.random.PRNGKey(5), (3, 4)) * 0.3
+    assert _attention_segments(f, x) == []
+    got = ops.laplacian(f, x, method="collapsed", backend="pallas")
+    ref = ops.laplacian(f, x, method="collapsed")
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# operator-level acceptance: backend='pallas' == CRULES interpreter
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mask_kind", MASKS)
+def test_laplacian_pallas_matches_interpreter_attention(mask_kind):
+    f = _attn_f(mask_kind=mask_kind)
+    x = jax.random.normal(jax.random.PRNGKey(6), (3, 4)) * 0.5
+    assert len(_attention_segments(f, x)) == 1
+    ref = ops.laplacian(f, x, method="collapsed")
+    got = ops.laplacian(f, x, method="collapsed", backend="pallas")
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_laplacian_pallas_attention_under_jit():
+    f = _attn_f()
+    x = jax.random.normal(jax.random.PRNGKey(7), (3, 4)) * 0.5
+    jfn = jax.jit(lambda x: ops.laplacian(f, x, method="collapsed",
+                                          backend="pallas"))
+    np.testing.assert_allclose(jfn(x), ops.laplacian(f, x, method="collapsed"),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("mask_kind", ["full", "causal"])
+def test_biharmonic_pallas_matches_interpreter_attention(mask_kind):
+    """K=4 collapsed jets through the fused attention block."""
+    f = _attn_f(D=3, dm=6, dh=6, mask_kind=mask_kind)
+    x = jax.random.normal(jax.random.PRNGKey(8), (3,)) * 0.3
+    ref = ops.biharmonic(f, x, method="collapsed")
+    got = ops.biharmonic(f, x, method="collapsed", backend="pallas")
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-5)
+
+
+def test_value_grad_laplacian_pallas_attention():
+    f = _attn_f(mask_kind="window")
+    x = jax.random.normal(jax.random.PRNGKey(9), (4, 4)) * 0.5
+    u, g, lap = ops.value_grad_laplacian(f, x, backend="pallas")
+    u2, g2, lap2 = ops.value_grad_laplacian(f, x)
+    np.testing.assert_allclose(u, u2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(g, g2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(lap, lap2, rtol=1e-5, atol=1e-6)
+
+
+def test_grad_through_pallas_attention():
+    """The fused attention's custom VJP composes with jax.grad (PINN-style
+    training of a transformer trunk)."""
+    ks = jax.random.split(jax.random.PRNGKey(10), 4)
+    D, dm, dh = 3, 6, 6
+    emb = jax.random.normal(ks[0], (D, dm)) * 0.5
+    x = jax.random.normal(ks[1], (4, D)) * 0.5
+
+    def loss(params, backend=None):
+        Wq, Wk, Wv = params
+
+        def f(y):
+            t = y[..., None] * emb[None]
+            q, k, v = t @ Wq, t @ Wk, t @ Wv
+            s = jnp.einsum("bqe,bke->bqk", q, k) / math.sqrt(dh)
+            m = jax.lax.stop_gradient(jnp.max(s, axis=-1, keepdims=True))
+            e = jnp.exp(s - m)
+            p = e / jnp.sum(e, axis=-1, keepdims=True)
+            return jnp.einsum("bqk,bke->bqe", p, v).sum(axis=(-1, -2))
+
+        return jnp.mean(ops.laplacian(f, x, method="collapsed",
+                                      backend=backend) ** 2)
+
+    p0 = tuple(jax.random.normal(k, (dm, dh)) / np.sqrt(dm)
+               for k in jax.random.split(ks[2], 3))
+    g_ref = jax.grad(loss)(p0)
+    g_pal = jax.grad(lambda p: loss(p, "pallas"))(p0)
+    for a, b in zip(g_ref, g_pal):
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=1e-6)
+
+
+def test_transformer_model_attention_fuses(monkeypatch):
+    """The real models/transformer path (attn_impl='reference',
+    backbone_unrolled) exposes fusible attention blocks — the ISSUE's
+    plan-inspection acceptance — and the fused kernel actually executes
+    (once per layer), it is not a silent fallback."""
+    from repro.configs.base import ModelConfig
+    from repro.models import transformer
+
+    cfg = ModelConfig(
+        name="t", family="dense", num_layers=2, d_model=16, num_heads=2,
+        num_kv_heads=2, d_ff=32, vocab_size=8, act="gelu", dtype="float32",
+        param_dtype="float32", attn_impl="reference", remat=False)
+    D = 4
+    params = transformer.init(jax.random.PRNGKey(0), cfg)
+    emb = jax.random.normal(jax.random.PRNGKey(1), (D, cfg.d_model)) * 0.5
+
+    def f(x):
+        t = x[..., None] * emb[None]
+        h, _ = transformer.backbone_unrolled(params, t, cfg, jnp.arange(D))
+        return jnp.mean(h, axis=(-1, -2))
+
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, D)) * 0.5
+    segs = _attention_segments(f, x)
+    assert len(segs) == cfg.num_layers  # one fused block per layer
+
+    calls = []
+    real_op = offload.collapsed_jet_attention_op
+    monkeypatch.setattr(
+        offload, "collapsed_jet_attention_op",
+        lambda *a, **kw: calls.append(1) or real_op(*a, **kw))
+    ref = ops.laplacian(f, x, method="collapsed")
+    got = ops.laplacian(f, x, method="collapsed", backend="pallas")
+    assert len(calls) == cfg.num_layers
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# collapsed reduce_prod (the CRULES gap this PR closes)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("K", [2, 4])
+def test_collapsed_reduce_prod_matches_standard(K):
+    from repro.core.collapse import collapsed_fan
+    from repro.core.taylor import jet_fan
+
+    D, R = 4, 3
+    f = lambda x: jnp.prod(jnp.sin(x) + 1.5, axis=-1).sum()
+    x = jax.random.normal(jax.random.PRNGKey(12), (D,)) * 0.5
+    dirs = jax.random.normal(jax.random.PRNGKey(13), (R, D))
+    _, coeffs = jet_fan(f, x, dirs, K)
+    _, lower, top = collapsed_fan(f, x, dirs, K)
+    np.testing.assert_allclose(top, coeffs[K - 1].sum(axis=0),
+                               rtol=1e-4, atol=1e-5)
+    for q in range(K - 1):
+        np.testing.assert_allclose(lower[q], coeffs[q], rtol=1e-4, atol=1e-5)
+
+
+def test_collapsed_reduce_prod_multi_axis_laplacian():
+    from repro.core.collapse import collapsed_fan
+
+    f = lambda x: jnp.prod(jnp.cos(x).reshape(2, 2), axis=(0, 1))
+    x = jax.random.normal(jax.random.PRNGKey(14), (4,)) * 0.5
+    _, _, top = collapsed_fan(f, x, jnp.eye(4), 2)
+    np.testing.assert_allclose(top, jnp.trace(jax.hessian(f)(x)), rtol=1e-4)
+
+
+def test_reduce_prod_inside_offload_backend():
+    """Mixed graphs (fused MLP segment + reduce_prod fallback) run end to
+    end on backend='pallas'."""
+    W = jax.random.normal(jax.random.PRNGKey(15), (4, 8)) / 2
+    f = lambda x: jnp.prod(jnp.tanh(x @ W) + 2.0, axis=-1)
+    x = jax.random.normal(jax.random.PRNGKey(16), (3, 4)) * 0.5
+    got = ops.laplacian(f, x, method="collapsed", backend="pallas")
+    ref = ops.laplacian(f, x, method="collapsed")
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# namespaced autotune cache
+# ---------------------------------------------------------------------------
+
+
+def test_autotune_keys_are_namespaced_per_kernel():
+    mlp_key = autotune.shape_key(8, 16, 32, 4, 2, "float32", "tpu")
+    attn_key = autotune.attention_shape_key(8, 16, 32, 4, 2, 2, "float32",
+                                            "tpu")
+    assert mlp_key.startswith("jet_mlp|")
+    assert attn_key.startswith("jet_attention|")
+    assert mlp_key != attn_key
+
+
+def test_autotune_legacy_cache_migration(tmp_path, monkeypatch):
+    """Pre-namespacing entries (written when only jet_mlp existed) migrate to
+    the jet_mlp namespace; junk keys are dropped, not crashed on."""
+    import json
+
+    backend = jax.default_backend()
+    path = tmp_path / "autotune.json"
+    legacy = {
+        f"48x56x200x13|K2|float32|{backend}": [64, 256, 4],  # legacy jet_mlp
+        "jet_mlp|8x8x128x1|K2|float32|tpu": [8, 128, 1],  # already namespaced
+        "garbage": [1, 2, 3],
+    }
+    path.write_text(json.dumps(legacy))
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(path))
+    autotune.clear_memory_cache()
+    disk = autotune.load_cache()
+    assert disk[f"jet_mlp|48x56x200x13|K2|float32|{backend}"] == [64, 256, 4]
+    assert disk["jet_mlp|8x8x128x1|K2|float32|tpu"] == [8, 128, 1]
+    assert "garbage" not in disk and len(disk) == 2
+    # a migrated entry is found by the namespaced lookup path
+    cfg = autotune.get_block_config(48, 56, 200, 13, 2, jnp.float32)
+    assert tuple(cfg) == (64, 256, 4)
+    autotune.clear_memory_cache()
+
+
+def test_attention_autotune_cache_roundtrip(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "a.json"))
+    autotune.clear_memory_cache()
+    cfg = autotune.AttnBlockConfig(64, 256)
+    autotune.put_attention_config(4, 256, 256, 64, 3, 2, jnp.float32, "tpu",
+                                  cfg)
+    autotune.clear_memory_cache()
+    disk = autotune.load_cache()
+    key = autotune.attention_shape_key(4, 256, 256, 64, 3, 2, "float32",
+                                       "tpu")
+    assert disk[key] == [64, 256]
+    autotune.clear_memory_cache()
+
+
+def test_attention_autotune_default_is_aligned():
+    for (Sq, Skv, dh, R) in [(10, 13, 5, 3), (256, 256, 64, 8), (7, 3, 2, 50)]:
+        for K in (2, 4):
+            cfg = autotune.attention_default_config(Sq, Skv, dh, R, K)
+            assert cfg.block_q % 8 == 0, cfg
+            assert cfg.block_k % 128 == 0, cfg
+            for c in autotune.attention_candidate_configs(Sq, Skv, dh, R, K):
+                assert c.block_q % 8 == 0 and c.block_k % 128 == 0, c
+
+
+def test_attention_get_block_config_interpret_deterministic(tmp_path,
+                                                            monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "a.json"))
+    autotune.clear_memory_cache()
+    a = autotune.get_attention_block_config(2, 100, 100, 16, 4, 2,
+                                            jnp.float32, interpret=True)
+    b = autotune.get_attention_block_config(2, 100, 100, 16, 4, 2,
+                                            jnp.float32, interpret=True)
+    assert a == b
+    # heuristic configs are memoized but not persisted
+    assert autotune.load_cache() == {}
+    autotune.clear_memory_cache()
