@@ -55,8 +55,9 @@ def transformer_pinn(S: int, D: int, d_model: int = 32, num_layers: int = 1,
 
     def f(x):
         tokens = jnp.einsum("bd,dsm->bsm", x, lift) + pos[None]
-        h, _ = transformer.backbone_unrolled(params, tokens, cfg,
-                                             jnp.arange(S))
+        # scanned backbone: the recursive offload engine fuses inside the
+        # scan body (depth scaling is benchmarks/scan_depth.py's story)
+        h, _ = transformer.backbone(params, tokens, cfg, jnp.arange(S))
         return jnp.mean(h, axis=-2) @ head
 
     return f

@@ -1,0 +1,123 @@
+"""Laplacian wall-clock vs transformer depth: scanned+fused vs unrolled+fused
+vs scanned CRULES.
+
+The recursive offload engine (core/offload.py) plans a ``lax.scan`` body once
+per (K, jet-constant signature) and fuses its jet_attention / jet_mlp
+segments on every iteration, so the scanned ``models/transformer.backbone``
+— whose jaxpr is O(1) in depth — no longer pays the per-primitive CRULES
+interpreter inside the loop. This benchmark sweeps layer depth and times the
+collapsed-Laplacian of a transformer PINN three ways:
+
+* ``scan_fused``     — scanned backbone, ``backend='pallas'`` (the new
+                       default fusing path; one plan, O(1) trace size);
+* ``unroll_fused``   — ``backbone(..., unroll=True)``, ``backend='pallas'``
+                       (the PR-2 stopgap: fuses, but jaxpr and compile time
+                       grow linearly with depth);
+* ``scan_crules``    — scanned backbone on the per-primitive interpreter
+                       (the pre-engine behavior inside scan bodies).
+
+On CPU the fused-vs-CRULES *runtime* gap is modest by construction (XLA
+compiles the interpreter jaxpr into much the same einsums — see
+benchmarks/attention_laplacian.py); the depth story here is trace/compile
+scaling and plan-cache behavior, and the kernel's VMEM-vs-HBM win needs an
+accelerator host (ROADMAP open item). Each (mode, depth) cell emits a
+machine-readable ``BENCH`` json row with trace+compile and steady-state
+timings plus the plan-cache counters.
+
+Run:  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/scan_depth.py
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import compare_times, emit, emit_bench
+from repro.configs.base import ModelConfig
+from repro.core import offload
+from repro.core import operators as ops
+from repro.models import transformer
+
+
+def transformer_pinn(depth: int, D: int = 4, d_model: int = 16,
+                     unroll: bool = False, key=None):
+    """u(x): (B, D) -> (B,) with a depth-layer tanh-MLP transformer trunk
+    (one token per coordinate; act='tanh' so the MLP segments classify)."""
+    cfg = ModelConfig(
+        name="scan-depth", family="dense", num_layers=depth, d_model=d_model,
+        num_heads=1, num_kv_heads=1, d_ff=2 * d_model, vocab_size=8,
+        act="tanh", dtype="float32", param_dtype="float32",
+        attn_impl="reference", remat=False,
+    )
+    key = key if key is not None else jax.random.PRNGKey(0)
+    kp, ke = jax.random.split(key)
+    params = transformer.init(kp, cfg)
+    lift = jax.random.normal(ke, (D, d_model)) * 0.5
+    head = jnp.ones((d_model,)) / d_model
+
+    def f(x):
+        tokens = x[..., None] * lift[None]
+        h, _ = transformer.backbone(params, tokens, cfg, jnp.arange(D),
+                                    unroll=unroll)
+        return jnp.mean(h, axis=-2) @ head
+
+    return f
+
+
+def _modes(depth: int, D: int):
+    f_scan = transformer_pinn(depth, D)
+    f_unroll = transformer_pinn(depth, D, unroll=True)
+    return {
+        "scan_fused": jax.jit(lambda x: ops.laplacian(
+            f_scan, x, method="collapsed", backend="pallas")),
+        "unroll_fused": jax.jit(lambda x: ops.laplacian(
+            f_unroll, x, method="collapsed", backend="pallas")),
+        "scan_crules": jax.jit(lambda x: ops.laplacian(
+            f_scan, x, method="collapsed")),
+    }
+
+
+def run(D: int = 4, B: int = 2, depths=(2, 8, 24), rounds: int = 5):
+    platform = jax.default_backend()
+    rows = []
+    for depth in depths:
+        x = jax.random.normal(jax.random.PRNGKey(depth), (B, D)) * 0.5
+        fns = _modes(depth, D)
+        # first-call cost: trace (interpreter walk + plan) + compile
+        first_ms, cache = {}, {}
+        for name, fn in fns.items():
+            offload.clear_plan_cache()
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(x))
+            first_ms[name] = (time.perf_counter() - t0) * 1e3
+            if name == "scan_fused":  # the recursive engine's traffic
+                cache = offload.plan_cache_info()
+        times = compare_times(fns, x, rounds=rounds, warmup=1)
+        for name, t in times.items():
+            rows.append({
+                "name": f"scan_depth/{name}/L{depth}",
+                "ms_per_call": f"{t * 1e3:.2f}",
+                "first_call_ms": f"{first_ms[name]:.0f}",
+            })
+            emit_bench("scan_depth", mode=name, depth=depth, D=D, B=B,
+                       platform=platform, ms_per_call=round(t * 1e3, 3),
+                       first_call_ms=round(first_ms[name], 1),
+                       speedup_vs_crules=round(
+                           times["scan_crules"] / t, 4))
+        rows.append({
+            "name": f"scan_depth/plan_cache/L{depth}",
+            "ms_per_call": "",
+            "first_call_ms": (f"misses={cache.get('misses', 0)} "
+                              f"hits={cache.get('hits', 0)}"),
+        })
+    return rows
+
+
+def main():
+    emit(run(), ["name", "ms_per_call", "first_call_ms"])
+
+
+if __name__ == "__main__":
+    main()

@@ -10,9 +10,12 @@ automatically by the offload planner, no kernel calls in user code:
     operators.laplacian(f, x, method="collapsed", backend="pallas")
 
 The model lifts each coordinate of ``x in R^D`` to a token, runs a small
-decoder-only transformer (``models/transformer.backbone_unrolled`` with
+decoder-only transformer (the *scanned* ``models/transformer.backbone`` with
 ``attn_impl='reference'``, the canonical fusible attention graph), and pools
-to a scalar ``u(x)``.
+to a scalar ``u(x)``. The recursive offload engine plans the ``lax.scan``
+layer stack's body once and fuses its attention and MLP segments on every
+iteration — hand-unrolling (``backbone_unrolled``) is no longer needed for
+fusion; see ``benchmarks/scan_depth.py`` for the unroll-vs-scan comparison.
 
 Run:  PYTHONPATH=src python examples/pinn_transformer.py
 """
@@ -43,8 +46,7 @@ def make_pinn(D: int, key, d_model: int = 32, num_layers: int = 2):
     def f(x):
         """u(x): (B, D) -> (B,). One token per PDE coordinate."""
         tokens = x[..., None] * lift[None] + pos[None]  # (B, S=D, d_model)
-        h, _ = transformer.backbone_unrolled(params, tokens, cfg,
-                                             jnp.arange(D))
+        h, _ = transformer.backbone(params, tokens, cfg, jnp.arange(D))
         return jnp.mean(h, axis=-2) @ head
 
     return f

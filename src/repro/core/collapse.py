@@ -24,14 +24,19 @@ propagates the collapsed sum directly.
 Execution backends: :func:`collapsed_fan` runs on this file's CRULES
 interpreter by default; ``backend="pallas"`` swaps in
 :func:`repro.core.offload.interpret_collapsed_offload`, which routes
-MLP-shaped ``dot_general -> add -> activation`` segments through the fused
-collapsed-jet Pallas kernels (``kernels/jet_mlp``) and falls back to CRULES
-for everything else.
+MLP/attention-shaped segments through the fused collapsed-jet Pallas kernels
+and falls back to CRULES for everything else. Both drivers share one
+jaxpr-walking core (:func:`interpret_with_plan`); control-flow and call
+rules recurse through the dynamically-scoped :func:`current_interpreter`,
+so the offload driver keeps planning and fusing inside ``scan``/``cond``/
+``while``/``pjit``/``remat``/custom-derivative bodies.
 """
 
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, List, Sequence
+import contextlib
+import threading
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -55,6 +60,62 @@ def defcrule(*names):
 def _bind(eqn, *args):
     out = eqn.primitive.bind(*args, **eqn.params)
     return out if eqn.primitive.multiple_results else [out]
+
+
+# ---------------------------------------------------------------------------
+# sub-jaxpr recursion: the *current interpreter*
+#
+# Control-flow and call rules (scan/cond/while/jit/remat/custom_*) must
+# recurse with whatever interpreter is driving the walk — the plain CRULES
+# interpreter by default, or the offload interpreter (core/offload.py), which
+# plans and fuses kernel segments inside every sub-jaxpr it visits. The
+# active interpreter is dynamically scoped and thread-local (mirroring how
+# JAX keeps trace state per thread): drivers push themselves while walking,
+# rules recurse through :func:`_recurse`.
+# ---------------------------------------------------------------------------
+
+_DYN = threading.local()
+
+
+def _stack(name: str) -> List:
+    stack = getattr(_DYN, name, None)
+    if stack is None:
+        stack = []
+        setattr(_DYN, name, stack)
+    return stack
+
+
+def current_interpreter() -> Callable:
+    """Interpreter used for sub-jaxpr recursion (defaults to CRULES)."""
+    stack = _stack("interp")
+    return stack[-1] if stack else interpret_collapsed
+
+
+def current_via() -> str:
+    """Label of the innermost control-flow/call context ('' at top level)."""
+    stack = _stack("via")
+    return stack[-1] if stack else ""
+
+
+@contextlib.contextmanager
+def using_interpreter(interp: Callable):
+    stack = _stack("interp")
+    stack.append(interp)
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
+def _recurse(closed_jaxpr, K: int, in_jets, via: Optional[str] = None):
+    if via is None:
+        return current_interpreter()(closed_jaxpr, K, in_jets)
+    stack = _stack("via")
+    stack.append(via)
+    try:
+        return current_interpreter()(closed_jaxpr, K, in_jets)
+    finally:
+        stack.pop()
 
 
 def _shape_to(c, like, stacked=None):
@@ -581,7 +642,7 @@ def call_subjaxpr(eqn):
 @defcrule("jit", "pjit", "custom_jvp_call", "custom_vjp_call",
           "custom_vjp_call_jaxpr", "remat", "checkpoint", "remat2")
 def _call_rule(K, in_jets, eqn):
-    return interpret_collapsed(call_subjaxpr(eqn), K, in_jets)
+    return _recurse(call_subjaxpr(eqn), K, in_jets, via=eqn.primitive.name)
 
 
 @defcrule("scan")
@@ -679,7 +740,7 @@ def _scan(K, in_jets, eqn):
     def jet_body(carry_flat, xs_flat):
         cjets = unflatten_carry(carry_flat)
         xjets = unflatten_xs(xs_flat)
-        outs = interpret_collapsed(body, K, list(consts) + cjets + xjets)
+        outs = _recurse(body, K, list(consts) + cjets + xjets, via="scan")
         new_carry, ys = outs[:ncar], outs[ncar:]
         ys_holder["pat"] = [zpat(y) for y in ys]
         ys_flat = []
@@ -745,7 +806,7 @@ def _abstract_pattern(body, K, consts, carry, xs, pattern, ncar):
             top = ZERO if is_zero(j.top) else next(it)
             primal = next(it)
             jets_in.append(CollapsedJet(primal, lower, top))
-        outs = interpret_collapsed(body, K, jets_in)
+        outs = _recurse(body, K, jets_in, via="scan")
         run.pattern = [
             tuple(not is_zero(c) for c in o.lower) + (not is_zero(o.top),)
             for o in outs[:ncar]
@@ -774,12 +835,134 @@ def _abstract_pattern(body, K, consts, carry, xs, pattern, ncar):
     return run.pattern
 
 
+def _flatten_jets(jets, K: int, r_axis: int):
+    """(primal, lower[R-stacked]..., top) bundle with every coefficient
+    materialized — the K+1-stride carrier for cond/while boundaries."""
+    flat = []
+    for j in jets:
+        flat.append(j.primal)
+        flat.extend(instantiate(c, j.primal, r_axis) for c in j.lower)
+        flat.append(instantiate(j.top, j.primal))
+    return flat
+
+
+def _unflatten_jets(flat, n: int, K: int):
+    jets, i = [], 0
+    for _ in range(n):
+        primal = flat[i]
+        i += 1
+        lower = list(flat[i : i + K - 1])
+        i += K - 1
+        jets.append(CollapsedJet(primal, lower, flat[i]))
+        i += 1
+    return jets
+
+
+@defcrule("cond")
+def _cond(K, in_jets, eqn):
+    """Collapsed-jet-of-cond: jet every branch, switch on the primal index.
+
+    All coefficients are materialized across the branch boundary (branches
+    may have different symbolic-zero patterns; ``lax.switch`` needs one
+    structure), with lower coefficients carrying their leading R axis.
+    Branch bodies recurse through the *current* interpreter, so the offload
+    engine keeps fusing inside them.
+    """
+    branches = eqn.params["branches"]
+    index = in_jets[0].primal
+    ops = in_jets[1:]
+    if all(j.is_constant() for j in in_jets):
+        outs = _bind(eqn, *[j.primal for j in in_jets])
+        return [CollapsedJet(p, [ZERO] * (K - 1), ZERO) for p in outs]
+    r_axis = _infer_r(ops)
+    # jet-constant operands (weights lifted to cond operands) are closed
+    # over, NOT flattened through the switch: materializing their zero
+    # coefficients would destroy the jet-constant signature the recursive
+    # offload planner keys on inside the branches.
+    live = [not j.is_constant() for j in ops]
+
+    n_live = sum(live)
+
+    def mk_branch(br):
+        def f(*flat):
+            it = iter(_unflatten_jets(flat, n_live, K))
+            jets = [next(it) if lv else j for j, lv in zip(ops, live)]
+            outs = _recurse(br, K, jets, via="cond")
+            return tuple(_flatten_jets(outs, K, r_axis))
+
+        return f
+
+    flat_in = _flatten_jets([j for j, lv in zip(ops, live) if lv], K, r_axis)
+    outs_flat = jax.lax.switch(index, [mk_branch(b) for b in branches],
+                               *flat_in)
+    return _unflatten_jets(outs_flat, len(outs_flat) // (K + 1), K)
+
+
+@defcrule("while")
+def _while(K, in_jets, eqn):
+    """Collapsed-jet-of-while (the remaining CRULES control-flow gap).
+
+    The carry becomes a flat (primal, lower[R-stacked]..., top) bundle with
+    every coefficient materialized — a while body may flip a coefficient's
+    zero-ness on any iteration and the trip count is data-dependent, so
+    there is no bounded fixed point to exploit; materializing is the correct
+    (and simple) join. The loop condition is evaluated on primals only (its
+    output is boolean, hence jet-constant); differentiated cond consts are
+    rejected loudly. The body recurses through the *current* interpreter.
+    """
+    params = eqn.params
+    ncc, nbc = params["cond_nconsts"], params["body_nconsts"]
+    cond_jaxpr, body_jaxpr = params["cond_jaxpr"], params["body_jaxpr"]
+    cconsts = in_jets[:ncc]
+    bconsts = in_jets[ncc : ncc + nbc]
+    carry = in_jets[ncc + nbc :]
+    if all(j.is_constant() for j in in_jets):
+        outs = _bind(eqn, *[j.primal for j in in_jets])
+        return [CollapsedJet(p, [ZERO] * (K - 1), ZERO) for p in outs]
+    if not all(j.is_constant() for j in cconsts):
+        raise NotImplementedError(
+            "collapsed jet of while_loop with differentiated cond constants")
+    r_axis = _infer_r(in_jets)
+
+    def flatten(jets):
+        return _flatten_jets(jets, K, r_axis)
+
+    def unflatten(flat):
+        return _unflatten_jets(flat, len(carry), K)
+
+    def cond_fn(flat):
+        prim = [CollapsedJet(j.primal, [ZERO] * (K - 1), ZERO)
+                for j in unflatten(flat)]
+        (out,) = _recurse(cond_jaxpr, K, list(cconsts) + prim,
+                          via="while_cond")
+        return out.primal
+
+    def body_fn(flat):
+        outs = _recurse(body_jaxpr, K, list(bconsts) + unflatten(flat),
+                        via="while")
+        return flatten(outs)
+
+    out_flat = jax.lax.while_loop(cond_fn, body_fn, flatten(carry))
+    return unflatten(out_flat)
+
+
 # ---------------------------------------------------------------------------
 # driver
 # ---------------------------------------------------------------------------
 
 
-def interpret_collapsed(closed_jaxpr, K: int, in_jets: Sequence[CollapsedJet]):
+def interpret_with_plan(closed_jaxpr, K: int,
+                        in_jets: Sequence[CollapsedJet],
+                        plan: Optional[Dict[int, Any]] = None):
+    """Shared jaxpr-walking core of every collapsed interpreter.
+
+    Walks the eqns once: planned segments (``plan``: {eqn index: Segment},
+    see :mod:`repro.core.offload`) get a fuse attempt first — on success the
+    segment's outputs are committed and its covered eqns skipped; everything
+    else takes the constant fast path or the per-primitive ``CRULES``, whose
+    control-flow/call rules recurse through :func:`current_interpreter` so a
+    plan-aware driver keeps planning inside sub-jaxprs.
+    """
     jaxpr = closed_jaxpr.jaxpr
     env: Dict[Any, CollapsedJet] = {}
 
@@ -793,7 +976,18 @@ def interpret_collapsed(closed_jaxpr, K: int, in_jets: Sequence[CollapsedJet]):
     for var, j in zip(jaxpr.invars, in_jets):
         env[var] = j
 
-    for eqn in jaxpr.eqns:
+    skipped = set()
+    for idx, eqn in enumerate(jaxpr.eqns):
+        if idx in skipped:
+            continue
+        if plan is not None:
+            seg = plan.get(idx)
+            if seg is not None:
+                outs_map = seg.try_fuse(read, K, jaxpr)
+                if outs_map is not None:
+                    env.update(outs_map)
+                    skipped |= seg.skip
+                    continue
         jets_in = [read(v) for v in eqn.invars]
         name = eqn.primitive.name
         if all(j.is_constant() for j in jets_in) and name not in ("scan", "cond", "while"):
@@ -814,6 +1008,12 @@ def interpret_collapsed(closed_jaxpr, K: int, in_jets: Sequence[CollapsedJet]):
     return [read(v) for v in jaxpr.outvars]
 
 
+def interpret_collapsed(closed_jaxpr, K: int, in_jets: Sequence[CollapsedJet]):
+    """Plan-free collapsed interpreter: every primitive through ``CRULES``."""
+    with using_interpreter(interpret_collapsed):
+        return interpret_with_plan(closed_jaxpr, K, in_jets, None)
+
+
 BACKENDS = ("interpreter", "pallas")
 
 
@@ -828,9 +1028,10 @@ def collapsed_fan(fun, x, directions, K: int, backend: str | None = None):
     Propagates ``1 + (K-1)R + 1`` vectors instead of ``1 + K*R``.
 
     ``backend``: ``None``/"interpreter" runs every primitive through CRULES;
-    "pallas" routes affine+activation segments (MLP layers) through the fused
-    collapsed-jet Pallas kernels via :mod:`repro.core.offload`, falling back
-    to CRULES for everything else.
+    "pallas" routes MLP (affine+activation) and attention segments through
+    the fused collapsed-jet Pallas kernels via :mod:`repro.core.offload` —
+    recursively, inside ``scan``/``cond``/``while``/``pjit``/``remat``
+    bodies too — falling back to CRULES for everything else.
     """
     if backend in (None, "interpreter"):
         interp = interpret_collapsed

@@ -54,11 +54,15 @@ def instantiate(c: Coeff, like: jax.Array, r_axis: int | None = None) -> jax.Arr
     """Materialize a coefficient; ZERO becomes zeros shaped like ``like``.
 
     If ``r_axis`` is given, a leading direction axis of that size is added.
+    ``like`` may be any array-like, including the Python scalars that show
+    up as while/cond carry primals (loop counters).
     """
     if not is_zero(c):
         return c
-    shape = like.shape if r_axis is None else (r_axis,) + like.shape
-    return jnp.zeros(shape, dtype=like.dtype)
+    shape = jnp.shape(like)
+    if r_axis is not None:
+        shape = (r_axis,) + shape
+    return jnp.zeros(shape, jnp.result_type(like))
 
 
 def add_coeff(a: Coeff, b: Coeff) -> Coeff:

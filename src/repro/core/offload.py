@@ -1,72 +1,110 @@
-"""Automatic Pallas kernel offload for collapsed Taylor mode.
+"""Recursive Pallas kernel offload engine for collapsed Taylor mode.
 
 The paper argues the collapsed forward sweep "could — or should — be done by
 a machine learning compiler". This module is that compiler pass for our own
-interpreter: :func:`interpret_collapsed_offload` walks the same jaxpr as
-:func:`repro.core.collapse.interpret_collapsed`, but first *plans* kernel
-offload segments and routes each matching segment through a fused
-collapsed-jet Pallas kernel. Everything else falls back to the per-primitive
-``CRULES``, so arbitrary programs still work; users opt in with
-``operators.laplacian(f, x, method="collapsed", backend="pallas")`` and never
-touch ``kernels/``.
+interpreter — and it is *recursive*: :func:`interpret_collapsed_offload`
+drives the shared jaxpr-walking core
+(:func:`repro.core.collapse.interpret_with_plan`) and installs itself as the
+:func:`~repro.core.collapse.current_interpreter`, so the control-flow and
+call rules (``scan``, ``cond``, ``while``, ``jit``/``pjit``, ``remat``,
+``custom_jvp/vjp``) re-enter *this* driver for every sub-jaxpr. Segments
+fuse wherever they live — in particular inside the ``lax.scan`` layer
+stacks of deep weight-tied networks (``models/transformer.backbone``), not
+just in hand-unrolled trunks. Everything unmatched falls back to the
+per-primitive ``CRULES``, so arbitrary programs still work; users opt in
+with ``operators.laplacian(f, x, method="collapsed", backend="pallas")``
+and never touch ``kernels/``.
 
-Planning is a *registry of segment matchers* (:data:`SEGMENT_MATCHERS`).
-Each matcher inspects one anchor equation plus its neighbourhood and, on a
-structural match, returns a :class:`Segment` describing the fused region:
-the equations the kernel covers (``skip``), jet-constant equations traced
-after the anchor that must be evaluated early (``hoist`` — e.g. iota-derived
-attention masks), and a ``try_fuse`` that makes the final fuse/fallback
-decision against the live jet environment. New kernels plug in with
-:func:`register_segment_matcher`; matchers are tried in registration order
-(first match per anchor wins).
+The engine has three layers:
+
+1. **Planning** — :func:`plan_segments` scans one jaxpr for fusible
+   segments via a *registry of matchers* (:data:`SEGMENT_MATCHERS`; first
+   match per anchor eqn wins, new kernels plug in with
+   :func:`register_segment_matcher`). Planning is purely structural, with
+   one runtime input: the *jet-constant signature* — which invars carry
+   propagated jets. At the top level every invar is propagated, but inside
+   a scan body the sliced layer weights are invars too and are
+   jet-constant; the signature seeds the taint analysis that lets matchers
+   use such invars as structural slots (scales, masks) and reject
+   propagated ones.
+
+2. **The plan cache** — plans are memoized per ``(sub-jaxpr id, K,
+   jet-constant signature)`` (:func:`plan_cache_info` /
+   :func:`clear_plan_cache`). A 48-layer scanned backbone plans its body
+   once: the scan rule's symbolic-zero fixed point and the body re-trace
+   all hit the cached plan. On a cache miss the engine also *prewarms* the
+   autotuner (:func:`repro.kernels.autotune.prewarm` via each segment's
+   ``prewarm``) so kernel block configs resolve before ``lax.scan`` traces
+   the body, never mid-trace.
+
+3. **Fusing** — each planned :class:`Segment` records the eqns the kernel
+   covers (``skip``), jet-constant eqns traced after the anchor that must
+   be evaluated early (``hoist`` — e.g. iota-derived attention masks), and
+   a ``try_fuse`` that makes the final fuse/fallback decision against the
+   live jet environment (propagated-jet slots, unsupported dtypes, and
+   fully-constant segments fall back to ``CRULES``).
 
 Two matchers ship today:
 
 * **jet_mlp** — ``dot_general -> add(bias) -> elementwise activation``
-  chains, the MLP-layer shape of every PINN/VMC network, fused into
-  :func:`repro.kernels.jet_mlp.ops.collapsed_jet_layer_op`. The dot must be
-  a plain matmul whose rhs is a jet-constant weight; a following jet-constant
-  ``(Dout,)`` bias add is folded in; the maximal literal-only elementwise
-  subgraph consuming the affine output is *classified by probing* — it is
-  evaluated on a fixed 1-D probe and compared against the kernel's supported
-  activations, which recognizes both single-primitive activations and
-  decomposed ones (exact ``gelu`` traces to a 5-eqn erf subgraph).
+  chains (any leading batch rank — PINN ``(B, D)`` inputs and transformer
+  ``(B, S, D)`` token stacks alike), fused into
+  :func:`repro.kernels.jet_mlp.ops.collapsed_jet_layer_op`. The dot must
+  contract the lhs feature dim with a jet-constant 2-D weight; a following
+  jet-constant ``(Dout,)`` bias add is folded in; the maximal literal-only
+  elementwise subgraph consuming the affine output is *classified by
+  probing* — evaluated on a fixed 1-D probe and compared against the
+  kernel's supported activations, which recognizes both single-primitive
+  activations and decomposed ones (exact ``gelu`` traces to a 5-eqn erf
+  subgraph).
 
 * **jet_attention** — ``dot_general(q·kᵀ) [-> scale] [-> mask select] ->
-  softmax -> dot_general(·v)`` blocks, the attention shape of transformer
-  PINN / operator-learning networks, fused into
+  softmax [-> astype] -> dot_general(·v)`` blocks, fused into
   :func:`repro.kernels.jet_attention.ops.collapsed_jet_attention_op`. The
   score dot must contract the trailing feature dim with leading batch dims;
   the scale must be scalar and jet-constant; a ``where``-style mask select
   (flat ``select_n`` or the ``pjit[_where]`` jnp.where lowers to) is folded
-  into the kernel's mask input, with the iota-derived mask producers hoisted;
-  the maximal row-reduction subgraph between scores and the value dot is
-  classified by probing against row softmax — the same behavioural contract
-  as the activation classifier, so any numerically-equal softmax spelling
-  fuses. The op lowers per platform (Pallas kernel on accelerators, the
-  equivalent fused reference graph on CPU).
+  into the kernel's mask input, with the iota-derived mask producers
+  hoisted; the maximal row-reduction subgraph between scores and the value
+  dot is classified by probing against row softmax; a trailing
+  ``convert_element_type`` (the ``p.astype(v.dtype)`` of mixed-precision
+  blocks) is folded so bf16/f16 transformers fuse too. The op lowers per
+  platform (Pallas kernel on accelerators, the equivalent fused reference
+  graph on CPU).
 
-Probing is safe under an outer ``jit`` because only jaxpr literals and fixed
-probe arrays participate. Whether a var is jet-constant (weights, masks,
-scales) is only known at interpretation time, so the plan records candidates
-and ``try_fuse`` re-checks per segment against the live environment,
-falling back to ``CRULES`` when the structure's runtime preconditions fail
-(e.g. a propagated-jet scale or weight).
+Probing only touches jaxpr literals and fixed probe arrays, and runs under
+``jax.ensure_compile_time_eval`` so it stays concrete inside ambient traces
+— a user ``jit`` around the operator, or the scan rule's symbolic-zero
+``eval_shape`` where the recursive engine plans sub-jaxpr bodies. Whether a
+var is jet-constant (weights, masks, scales) is only known at
+interpretation time, so the plan records candidates and ``try_fuse``
+re-checks per segment against the live environment.
+
+:func:`explain` dumps the recursive plan for a function — per sub-jaxpr
+(labelled by the control-flow context it hangs off), the matched segments,
+whether each fused, and what fell back to the interpreter — and is the
+assertion surface for "did my network actually fuse inside the scan".
 """
 
 from __future__ import annotations
 
 import dataclasses
+import weakref
+from collections import Counter
 from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.jet_attention import ops as jet_attention_ops
 from repro.kernels.jet_attention.ops import collapsed_jet_attention_op
+from repro.kernels.jet_mlp import ops as jet_mlp_ops
 from repro.kernels.jet_mlp.jet_mlp import ACTIVATION_FNS
 from repro.kernels.jet_mlp.ops import collapsed_jet_layer_op
 
-from .collapse import CRULES, _bind, call_subjaxpr
+from .collapse import (_bind, _infer_r, _stack as _dyn_stack, collapsed_fan,
+                       current_via, interpret_with_plan, using_interpreter)
 from .jets import ZERO, CollapsedJet, is_zero
 
 # elementwise primitives an activation subgraph may be built from; all are
@@ -136,6 +174,8 @@ class Segment:
     environment alongside the kernel output).
     """
 
+    kind = "segment"
+
     anchor: int
     out_var: Any
     skip: Set[int]
@@ -143,6 +183,14 @@ class Segment:
 
     def try_fuse(self, read, K: int, jaxpr) -> Optional[Dict[Any, CollapsedJet]]:
         raise NotImplementedError
+
+    def prewarm(self, K: int, R: int) -> None:
+        """Resolve the kernel's autotuned block config for this segment's
+        static shapes ahead of execution (best-effort; see
+        :func:`repro.kernels.autotune.prewarm`)."""
+
+    def describe(self) -> str:
+        return ""
 
 
 MatcherFn = Callable[[PlanContext, int], Optional[Segment]]
@@ -158,13 +206,26 @@ def register_segment_matcher(fn: MatcherFn, *, index: Optional[int] = None):
     return fn
 
 
-def plan_segments(closed_jaxpr) -> Dict[int, Segment]:
+def plan_segments(closed_jaxpr,
+                  propagated: Optional[Sequence[bool]] = None
+                  ) -> Dict[int, Segment]:
     """Scan a jaxpr for fusible segments (one per anchor eqn, first matcher
-    wins)."""
+    wins).
+
+    ``propagated``: per-invar bools — True when that invar carries a
+    propagated jet. Defaults to all-True (the top-level convention: every
+    differentiated input is an invar). Sub-jaxprs pass the live jet-constant
+    signature so that e.g. scan-sliced weights — invars of the body — can
+    serve as jet-constant structural slots, while scan-carried activations
+    stay tainted.
+    """
     jaxpr = closed_jaxpr.jaxpr
     consumers: Dict[Any, List[int]] = {}
     producer_idx: Dict[Any, int] = {}
-    tainted: Set[Any] = set(jaxpr.invars)
+    if propagated is None:
+        tainted: Set[Any] = set(jaxpr.invars)
+    else:
+        tainted = {v for v, p in zip(jaxpr.invars, propagated) if p}
     for idx, eqn in enumerate(jaxpr.eqns):
         for v in eqn.invars:
             if not _is_literal(v):
@@ -173,8 +234,10 @@ def plan_segments(closed_jaxpr) -> Dict[int, Segment]:
             producer_idx[v] = idx
         if any(not _is_literal(v) and v in tainted for v in eqn.invars):
             tainted.update(eqn.outvars)
-    ctx = PlanContext(jaxpr, consumers, producer_idx, set(jaxpr.outvars),
-                      tainted)
+    # sub-jaxpr outvars may be Literals (e.g. a scan body returning a
+    # constant aux) — only real vars participate in escape analysis
+    outvars = {v for v in jaxpr.outvars if not _is_literal(v)}
+    ctx = PlanContext(jaxpr, consumers, producer_idx, outvars, tainted)
 
     plan: Dict[int, Segment] = {}
     for idx in range(len(jaxpr.eqns)):
@@ -183,6 +246,79 @@ def plan_segments(closed_jaxpr) -> Dict[int, Segment]:
             if seg is not None:
                 plan[idx] = seg
                 break
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# plan cache: one plan per (sub-jaxpr, K, jet-constant signature)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _PlanCacheEntry:
+    ref: Any  # weakref to the jaxpr: plans die with the graph they describe
+    plans: Dict[Tuple[int, Tuple[bool, ...]], Dict[int, Segment]]
+
+
+_PLAN_CACHE: Dict[int, _PlanCacheEntry] = {}
+_PLAN_CACHE_MAX = 256
+_PLAN_STATS = {"hits": 0, "misses": 0}
+
+
+def plan_cache_info() -> Dict[str, int]:
+    """{'hits', 'misses', 'size'} of the recursive plan cache. A scanned
+    N-layer backbone shows 1 miss for the body per (K, signature) and N-ish
+    hits (the scan rule's fixed-point rounds + the body re-trace)."""
+    return dict(_PLAN_STATS, size=len(_PLAN_CACHE))
+
+
+def clear_plan_cache() -> None:
+    _PLAN_CACHE.clear()
+    _PLAN_STATS.update(hits=0, misses=0)
+
+
+def _plan_for(closed_jaxpr, K: int,
+              in_jets: Sequence[CollapsedJet]) -> Dict[int, Segment]:
+    """Cached plan for one (sub-)jaxpr under the live jet-constant
+    signature; prewarms the autotuner for freshly planned segments.
+
+    Keyed by ``id(jaxpr)`` with a *weak* reference: entries evaporate when
+    the jaxpr is collected (a dead plan can never be reused — its Segments
+    point at that jaxpr's vars), so eager per-call re-traces don't pile up
+    retained graphs, while sub-jaxprs that JAX's own trace caches keep
+    alive (scan bodies, pjit bodies) stay planned across calls."""
+    jaxpr = closed_jaxpr.jaxpr
+    sig = tuple(not j.is_constant() for j in in_jets)
+    jid = id(jaxpr)
+    entry = _PLAN_CACHE.get(jid)
+    if entry is not None and entry.ref() is not jaxpr:  # stale id reuse
+        _PLAN_CACHE.pop(jid, None)
+        entry = None
+    if entry is None:
+        while len(_PLAN_CACHE) >= _PLAN_CACHE_MAX:
+            _PLAN_CACHE.pop(next(iter(_PLAN_CACHE)))
+        try:
+            ref = weakref.ref(jaxpr,
+                              lambda _, jid=jid: _PLAN_CACHE.pop(jid, None))
+        except TypeError:  # non-weakrefable jaxpr class: pin it instead
+            ref = (lambda j=jaxpr: j)
+        entry = _PlanCacheEntry(ref, {})
+        _PLAN_CACHE[jid] = entry
+    key = (K, sig)
+    plan = entry.plans.get(key)
+    if plan is not None:
+        _PLAN_STATS["hits"] += 1
+        return plan
+    _PLAN_STATS["misses"] += 1
+    plan = plan_segments(closed_jaxpr, propagated=sig)
+    entry.plans[key] = plan
+    if plan:
+        r = _infer_r(in_jets)
+        for seg in plan.values():
+            try:
+                seg.prewarm(K, r)
+            except Exception:  # prewarm is best-effort, never fatal
+                pass
     return plan
 
 
@@ -203,6 +339,22 @@ def _hoist_closure(ctx: PlanContext, roots: Sequence[Any],
             if not _is_literal(iv):
                 todo.append(iv)
     return tuple(sorted(idxs))
+
+
+def _cast_jet(jet: CollapsedJet, out_var) -> CollapsedJet:
+    """Match a fused kernel's output dtype to the replaced var's aval.
+
+    Kernels accumulate in f32 and return their input dtype, but the graph
+    they replace may differ — e.g. ``preferred_element_type=float32`` dots
+    on bf16 operands, or a folded ``p.astype(...)`` whose target is not the
+    q dtype. Downstream eqns (and scan carries especially) were traced for
+    the aval dtype, so drift must be corrected at the segment boundary."""
+    want = np.dtype(out_var.aval.dtype)
+    if np.dtype(jet.primal.dtype) == want:
+        return jet
+    cast = lambda c: c if is_zero(c) else c.astype(want)
+    return CollapsedJet(jet.primal.astype(want),
+                        [cast(c) for c in jet.lower], cast(jet.top))
 
 
 def _run_hoist(seg: Segment, read, K: int, jaxpr):
@@ -233,7 +385,11 @@ def _run_hoist(seg: Segment, read, K: int, jaxpr):
 
 @dataclasses.dataclass
 class MlpSegment(Segment):
-    """An affine(+activation) region anchored at a plain-matmul dot_general."""
+    """An affine(+activation) region anchored at a feature-contracting
+    dot_general (any leading batch rank: ``(B, Din)`` PINN inputs and
+    ``(B, S, Din)`` transformer token stacks alike)."""
+
+    kind = "jet_mlp"
 
     lhs_var: Any = None
     w_var: Any = None
@@ -259,7 +415,7 @@ class MlpSegment(Segment):
             else:  # scalar bias broadcast over Dout
                 b = jnp.broadcast_to(bp.reshape(()), (dout,)).astype(w.dtype)
         h0 = lhs.primal
-        if h0.ndim not in (1, 2):
+        if h0.ndim < 1:
             return None
         if np.dtype(h0.dtype) not in _FUSIBLE_DTYPES:
             # the kernel accumulates in f32; silently degrading f64 (x64 mode)
@@ -270,7 +426,16 @@ class MlpSegment(Segment):
         t0, tl, tt = collapsed_jet_layer_op(
             h0, lower, top, w, b, K=K, activation=self.activation,
         )
-        return {self.out_var: CollapsedJet(t0, list(tl), tt)}
+        return {self.out_var: _cast_jet(CollapsedJet(t0, list(tl), tt),
+                                        self.out_var)}
+
+    def prewarm(self, K, R):
+        h, w = self.lhs_var.aval, self.w_var.aval
+        jet_mlp_ops.prewarm_blocks(tuple(h.shape[:-1]), int(h.shape[-1]),
+                                   int(w.shape[1]), R, K, h.dtype)
+
+    def describe(self):
+        return self.activation
 
 
 def _probe_classify(region_eqns, start_var, out_var) -> Optional[str]:
@@ -280,29 +445,36 @@ def _probe_classify(region_eqns, start_var, out_var) -> Optional[str]:
     got = _eval_region(region_eqns, start_var, out_var, _PROBE)
     if got is None:
         return None
-    for name, fn in ACTIVATION_FNS.items():
-        want = np.asarray(fn(jnp.asarray(_PROBE)), dtype=np.float32)
-        if np.allclose(got, want, rtol=_PROBE_TOL, atol=_PROBE_TOL):
-            return name
+    with jax.ensure_compile_time_eval():
+        for name, fn in ACTIVATION_FNS.items():
+            want = np.asarray(fn(jnp.asarray(_PROBE)), dtype=np.float32)
+            if np.allclose(got, want, rtol=_PROBE_TOL, atol=_PROBE_TOL):
+                return name
     return None
 
 
 def _eval_region(region_eqns, start_var, out_var, probe) -> Optional[np.ndarray]:
-    """Concretely evaluate a literal-only region on a probe input."""
+    """Concretely evaluate a literal-only region on a probe input.
+
+    Wrapped in ``ensure_compile_time_eval`` so the probe stays concrete even
+    when planning happens inside an ambient trace — under a user ``jit``, or
+    inside the scan rule's abstract-pattern ``eval_shape`` where sub-jaxpr
+    bodies are planned by the recursive engine."""
     env = {start_var: probe}
     try:
-        for eqn in region_eqns:
-            args = []
-            for v in eqn.invars:
-                if _is_literal(v):
-                    args.append(v.val)
-                else:
-                    args.append(env[v])
-            outs = eqn.primitive.bind(*args, **eqn.params)
-            outs = outs if eqn.primitive.multiple_results else [outs]
-            for ov, o in zip(eqn.outvars, outs):
-                env[ov] = o
-        return np.asarray(env[out_var], dtype=np.float32)
+        with jax.ensure_compile_time_eval():
+            for eqn in region_eqns:
+                args = []
+                for v in eqn.invars:
+                    if _is_literal(v):
+                        args.append(v.val)
+                    else:
+                        args.append(env[v])
+                outs = eqn.primitive.bind(*args, **eqn.params)
+                outs = outs if eqn.primitive.multiple_results else [outs]
+                for ov, o in zip(eqn.outvars, outs):
+                    env[ov] = o
+            return np.asarray(env[out_var], dtype=np.float32)
     except Exception:
         return None
 
@@ -438,7 +610,7 @@ def match_mlp_segment(ctx: PlanContext, idx: int) -> Optional[MlpSegment]:
     if _is_literal(lhs) or _is_literal(rhs):
         return None
     nl = len(lhs.aval.shape)
-    if nl not in (1, 2) or len(rhs.aval.shape) != 2:
+    if nl < 1 or len(rhs.aval.shape) != 2:
         return None
     (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
     if lb or rb or tuple(lc) != (nl - 1,) or tuple(rc) != (0,):
@@ -493,6 +665,8 @@ _SOFTMAX_PRIMS = {
 class AttentionSegment(Segment):
     """A softmax-attention block anchored at the q·kᵀ dot_general."""
 
+    kind = "jet_attention"
+
     q_var: Any = None
     k_var: Any = None
     v_var: Any = None
@@ -543,9 +717,24 @@ class AttentionSegment(Segment):
         o0, ol, ot = collapsed_jet_attention_op(
             triple(q), triple(k), triple(v), K=K, mask=mask, scale=scale,
         )
-        out = {self.out_var: CollapsedJet(o0, list(ol), ot)}
+        out = {self.out_var: _cast_jet(CollapsedJet(o0, list(ol), ot),
+                                       self.out_var)}
         out.update(extra)
         return out
+
+    def prewarm(self, K, R):
+        q, v = self.q_var.aval, self.v_var.aval
+        jet_attention_ops.prewarm_blocks(
+            tuple(q.shape[:-2]), int(q.shape[-2]), int(v.shape[-2]),
+            int(q.shape[-1]), R, K, q.dtype)
+
+    def describe(self):
+        bits = []
+        if self.scale_var is not None:
+            bits.append("scale")
+        if self.mask_var is not None:
+            bits.append("mask")
+        return "+".join(bits)
 
 
 def _match_where(eqn):
@@ -625,6 +814,14 @@ def _softmax_region(ctx: PlanContext, start_var):
                 name = eqn.primitive.name
                 if name not in _SOFTMAX_PRIMS:
                     continue
+                if name == "convert_element_type" and (
+                        np.dtype(eqn.params["new_dtype"])
+                        != np.dtype(start_var.aval.dtype)):
+                    # dtype casts bound the region: a bf16 downcast inside
+                    # would fail the f32 probe; the trailing p.astype(...)
+                    # of mixed-precision blocks is folded by the matcher
+                    # after classification instead.
+                    continue
                 if name in ("reduce_max", "reduce_sum") and \
                         tuple(eqn.params["axes"]) != (nd - 1,):
                     continue
@@ -677,28 +874,30 @@ def _probe_softmax(ctx: PlanContext, region, start_var, out_var) -> bool:
         np.random.default_rng(0).uniform(-6.0, 6.0, red_full), np.float32)
     env = {start_var: probe}
     try:
-        for idx in region:
-            eqn = ctx.jaxpr.eqns[idx]
-            params = dict(eqn.params)
-            for key in ("shape", "new_sizes"):
-                if key in params:
-                    tgt = shape_map.get(tuple(params[key]))
-                    if tgt is None:
-                        return False
-                    params[key] = tgt
-            args = []
-            for v in eqn.invars:
-                if _is_literal(v):
-                    if np.ndim(v.val) != 0:
-                        return False  # array literal: can't rescale safely
-                    args.append(v.val)
-                else:
-                    args.append(env[v])
-            outs = eqn.primitive.bind(*args, **params)
-            outs = outs if eqn.primitive.multiple_results else [outs]
-            for ov, o in zip(eqn.outvars, outs):
-                env[ov] = o
-        got = np.asarray(env[out_var], dtype=np.float32)
+        # concrete even under an ambient trace (see _eval_region)
+        with jax.ensure_compile_time_eval():
+            for idx in region:
+                eqn = ctx.jaxpr.eqns[idx]
+                params = dict(eqn.params)
+                for key in ("shape", "new_sizes"):
+                    if key in params:
+                        tgt = shape_map.get(tuple(params[key]))
+                        if tgt is None:
+                            return False
+                        params[key] = tgt
+                args = []
+                for v in eqn.invars:
+                    if _is_literal(v):
+                        if np.ndim(v.val) != 0:
+                            return False  # array literal: can't rescale safely
+                        args.append(v.val)
+                    else:
+                        args.append(env[v])
+                outs = eqn.primitive.bind(*args, **params)
+                outs = outs if eqn.primitive.multiple_results else [outs]
+                for ov, o in zip(eqn.outvars, outs):
+                    env[ov] = o
+            got = np.asarray(env[out_var], dtype=np.float32)
     except Exception:
         return False
     e = np.exp(probe - probe.max(axis=-1, keepdims=True))
@@ -789,6 +988,16 @@ def match_attention_segment(ctx: PlanContext,
         return None
     skip |= set(region)
 
+    # fold a trailing dtype cast (the p.astype(v.dtype) of bf16/f16 blocks)
+    # between the softmax and the value dot — the kernel keeps f32 probs.
+    cast = ctx.sole_consumer(p_var)
+    if cast is not None:
+        ceqn = jaxpr.eqns[cast]
+        if (ceqn.primitive.name == "convert_element_type"
+                and jnp.issubdtype(ceqn.params["new_dtype"], jnp.inexact)):
+            p_var = ceqn.outvars[0]
+            skip.add(cast)
+
     # second dot: probabilities against v
     d2 = ctx.sole_consumer(p_var)
     if d2 is None:
@@ -824,58 +1033,190 @@ def match_attention_segment(ctx: PlanContext,
 
 def interpret_collapsed_offload(closed_jaxpr, K: int,
                                 in_jets: Sequence[CollapsedJet]):
-    """Collapsed-jet interpreter with automatic Pallas kernel offload.
+    """Recursive collapsed-jet interpreter with automatic kernel offload.
 
-    Same contract as :func:`repro.core.collapse.interpret_collapsed`; planned
-    segments run fused, everything else (including control flow, whose bodies
-    stay on the interpreter) uses ``CRULES``.
+    Same contract as :func:`repro.core.collapse.interpret_collapsed`. The
+    (cached) plan for this jaxpr's live jet-constant signature drives the
+    shared walking core; installing this driver as the current interpreter
+    makes every control-flow/call rule (scan, cond, while, pjit, remat,
+    custom_jvp/vjp) re-enter it, so planning and fusion continue inside
+    sub-jaxpr bodies.
     """
-    plan = plan_segments(closed_jaxpr)
-    jaxpr = closed_jaxpr.jaxpr
-    env: Dict[Any, CollapsedJet] = {}
+    plan = _plan_for(closed_jaxpr, K, in_jets)
+    stack = _explain_stack()
+    rec = stack[-1] if stack else None
+    if rec is not None:
+        sig = tuple(not j.is_constant() for j in in_jets)
+        entry = rec._enter(closed_jaxpr.jaxpr, K, sig, current_via())
+        plan = {idx: _RecordedSegment(seg, entry)
+                for idx, seg in plan.items()}
+    with using_interpreter(interpret_collapsed_offload):
+        outs = interpret_with_plan(closed_jaxpr, K, in_jets, plan)
+    if rec is not None:
+        entry._finish(closed_jaxpr.jaxpr, plan)
+    return outs
 
-    def read(v):
-        if _is_literal(v):
-            return CollapsedJet(v.val, [ZERO] * (K - 1), ZERO)
-        return env[v]
 
-    for var, const in zip(jaxpr.constvars, closed_jaxpr.consts):
-        env[var] = CollapsedJet(const, [ZERO] * (K - 1), ZERO)
-    for var, j in zip(jaxpr.invars, in_jets):
-        env[var] = j
+# ---------------------------------------------------------------------------
+# explain: recursive plan dump
+# ---------------------------------------------------------------------------
 
-    skipped: Set[int] = set()
-    for idx, eqn in enumerate(jaxpr.eqns):
-        if idx in skipped:
-            continue
-        seg = plan.get(idx)
-        if seg is not None:
-            outs_map = seg.try_fuse(read, K, jaxpr)
-            if outs_map is not None:
-                env.update(outs_map)
-                skipped |= seg.skip
-                continue
-        jets_in = [read(v) for v in eqn.invars]
-        name = eqn.primitive.name
-        sub = call_subjaxpr(eqn)
-        if all(j.is_constant() for j in jets_in) and name not in (
-                "scan", "cond", "while"):
-            outs_p = _bind(eqn, *[j.primal for j in jets_in])
-            outs = [CollapsedJet(p, [ZERO] * (K - 1), ZERO) for p in outs_p]
-        elif sub is not None:
-            # recurse with the offload interpreter so fusion continues inside
-            # jit/remat/custom-derivative bodies
-            outs = interpret_collapsed_offload(sub, K, jets_in)
-        else:
-            rule = CRULES.get(name)
-            if rule is None:
-                raise NotImplementedError(
-                    f"no collapsed-Taylor rule for primitive '{name}'"
-                )
-            outs = rule(K, jets_in, eqn)
-            if isinstance(outs, CollapsedJet):
-                outs = [outs]
-        for v, o in zip(eqn.outvars, outs):
-            env[v] = o
 
-    return [read(v) for v in jaxpr.outvars]
+@dataclasses.dataclass
+class SegmentOutcome:
+    """One fuse attempt inside a sub-jaxpr."""
+
+    kind: str  # "jet_mlp" | "jet_attention" | ...
+    anchor: int
+    covered: int  # eqns the kernel covers when fused
+    fused: bool
+    detail: str = ""
+
+    def __str__(self):
+        state = "fused" if self.fused else "fell back"
+        d = f" [{self.detail}]" if self.detail else ""
+        return (f"{self.kind}@eqn{self.anchor}{d}: {state} "
+                f"({self.covered} eqns)")
+
+
+@dataclasses.dataclass
+class JaxprReport:
+    """Plan outcome for one (sub-)jaxpr under one (K, signature)."""
+
+    label: str  # "top" | "scan body" | "cond branch" | call primitive name
+    K: int
+    signature: Tuple[bool, ...]
+    num_eqns: int
+    visits: int = 0
+    segments: Dict[int, SegmentOutcome] = dataclasses.field(
+        default_factory=dict)
+    interpreted: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def fused(self, kind: Optional[str] = None) -> List[SegmentOutcome]:
+        return [s for s in self.segments.values()
+                if s.fused and (kind is None or s.kind == kind)]
+
+    def _finish(self, jaxpr, plan):
+        covered: Set[int] = set()
+        for idx, seg in plan.items():
+            oc = self.segments.get(idx)
+            if oc is not None and oc.fused:
+                covered |= seg.skip
+        self.interpreted = dict(Counter(
+            e.primitive.name for i, e in enumerate(jaxpr.eqns)
+            if i not in covered))
+
+
+@dataclasses.dataclass
+class PlanReport:
+    """What :func:`explain` returns: one :class:`JaxprReport` per visited
+    (sub-jaxpr, K, signature), in first-visit order, plus the plan-cache
+    traffic of the run."""
+
+    jaxprs: List[JaxprReport] = dataclasses.field(default_factory=list)
+    cache_hits: int = 0
+    cache_misses: int = 0
+    _index: Dict[Tuple[int, int, Tuple[bool, ...]], JaxprReport] = \
+        dataclasses.field(default_factory=dict)
+
+    def _enter(self, jaxpr, K, sig, via) -> JaxprReport:
+        key = (id(jaxpr), K, sig)
+        entry = self._index.get(key)
+        if entry is None:
+            label = {"scan": "scan body", "while": "while body",
+                     "while_cond": "while cond",
+                     "cond": "cond branch"}.get(via, via or "top")
+            entry = JaxprReport(label=label, K=K, signature=sig,
+                                num_eqns=len(jaxpr.eqns))
+            self._index[key] = entry
+            self.jaxprs.append(entry)
+        entry.visits += 1
+        return entry
+
+    def fused(self, kind: Optional[str] = None) -> List[SegmentOutcome]:
+        return [s for e in self.jaxprs for s in e.fused(kind)]
+
+    def __str__(self):
+        lines = [f"offload plan: {len(self.jaxprs)} jaxpr(s), "
+                 f"{len(self.fused())} fused segment(s), "
+                 f"plan cache {self.cache_misses} miss / "
+                 f"{self.cache_hits} hit"]
+        for e in self.jaxprs:
+            prop = sum(e.signature)
+            lines.append(
+                f"- {e.label}: K={e.K}, {e.num_eqns} eqns, "
+                f"{prop}/{len(e.signature)} propagated invars, "
+                f"{e.visits} visit(s)")
+            for oc in sorted(e.segments.values(), key=lambda s: s.anchor):
+                lines.append(f"    {oc}")
+            if e.interpreted:
+                top = sorted(e.interpreted.items(),
+                             key=lambda kv: (-kv[1], kv[0]))
+                shown = ", ".join(f"{n}×{c}" for n, c in top[:8])
+                more = "" if len(top) <= 8 else ", …"
+                lines.append(f"    interpreter: {shown}{more}")
+        return "\n".join(lines)
+
+
+class _RecordedSegment:
+    """Plan-dict proxy that records each segment's fuse outcome."""
+
+    def __init__(self, seg: Segment, entry: JaxprReport):
+        self._seg, self._entry = seg, entry
+
+    @property
+    def skip(self):
+        return self._seg.skip
+
+    def try_fuse(self, read, K, jaxpr):
+        out = self._seg.try_fuse(read, K, jaxpr)
+        seg = self._seg
+        self._entry.segments[seg.anchor] = SegmentOutcome(
+            kind=seg.kind, anchor=seg.anchor, covered=len(seg.skip),
+            fused=out is not None, detail=seg.describe())
+        return out
+
+
+def _explain_stack() -> List[PlanReport]:
+    # thread-local, like collapse.py's interpreter/via stacks: a concurrent
+    # backend='pallas' run in another thread must not record into (or wrap
+    # its plans for) this thread's report
+    return _dyn_stack("explain")
+
+
+def explain(f, *args, K: int = 2, directions=None) -> PlanReport:
+    """Dump the recursive offload plan for ``f`` under ``backend='pallas'``.
+
+    Runs the offload interpreter *abstractly* (``jax.eval_shape`` — no
+    kernel FLOPs) over a collapsed ``K``-jet of ``f(args[0], *args[1:])``,
+    differentiated w.r.t. the first argument along ``directions`` (default:
+    basis directions over the trailing axis, the Laplacian convention), and
+    reports per sub-jaxpr which segments matched, which fused, and what ran
+    on the interpreter — the assertion surface for "did my scanned backbone
+    actually fuse".
+    """
+    if not args:
+        raise TypeError("explain(f, *args) needs at least one argument")
+    x = jnp.asarray(args[0]) if not hasattr(args[0], "aval") else args[0]
+    rest = args[1:]
+    fn = f if not rest else (lambda y: f(y, *rest))
+    if directions is None:
+        D = x.shape[-1]
+        eye = jnp.eye(D, dtype=x.dtype)
+        directions = jnp.broadcast_to(
+            eye.reshape((D,) + (1,) * (max(x.ndim, 1) - 1) + (D,)),
+            (D,) + tuple(x.shape))
+    report = PlanReport()
+    before = plan_cache_info()
+    stack = _explain_stack()
+    stack.append(report)
+    try:
+        jax.eval_shape(
+            lambda xx, dd: collapsed_fan(fn, xx, dd, K, backend="pallas"),
+            x, directions)
+    finally:
+        stack.pop()
+    after = plan_cache_info()
+    report.cache_hits = after["hits"] - before["hits"]
+    report.cache_misses = after["misses"] - before["misses"]
+    return report

@@ -18,8 +18,12 @@ and exact / stochastic variants. ``f`` maps ``(D,) -> ()``/``(C,)`` or a batch
 
 Every Taylor-mode operator also takes ``backend``: ``None``/"interpreter"
 runs the pure-jaxpr interpreter; "pallas" (method='collapsed' only) offloads
-MLP-shaped affine+activation segments to the fused collapsed-jet Pallas
-kernels via :mod:`repro.core.offload` — no user-visible kernel calls needed.
+MLP- and attention-shaped segments to the fused collapsed-jet Pallas kernels
+via :mod:`repro.core.offload` — no user-visible kernel calls needed. The
+offload engine is *recursive*: ``backend='pallas'`` is honored transitively
+inside ``scan``/``cond``/``while``/``pjit``/``remat`` bodies, so scanned
+layer stacks (``models/transformer.backbone``) fuse exactly like unrolled
+trunks. :func:`explain` dumps the resulting plan for inspection.
 """
 
 from __future__ import annotations
@@ -298,6 +302,22 @@ def linear_operator(
             vals = _TOP[method](f, x, dirs_b, K, backend=backend)
         out = scale * vals if out is None else out + scale * vals
     return out
+
+
+# ---------------------------------------------------------------------------
+# plan inspection
+# ---------------------------------------------------------------------------
+
+
+def explain(f: Callable, *args, K: int = 2, directions=None):
+    """Dump the recursive offload plan for ``f`` under ``backend='pallas'``:
+    per (sub-)jaxpr — including scan/cond/while bodies — which segments
+    matched, which fused, and what fell back to the CRULES interpreter.
+    Thin passthrough to :func:`repro.core.offload.explain` (lazy import so
+    interpreter-only users never pay the kernels' import cost)."""
+    from .offload import explain as _explain
+
+    return _explain(f, *args, K=K, directions=directions)
 
 
 # ---------------------------------------------------------------------------

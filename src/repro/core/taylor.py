@@ -804,6 +804,58 @@ def _cond(K, in_jets, eqn):
     return outs
 
 
+@defrule("while")
+def _while(K, in_jets, eqn):
+    """Jet-of-while: jet the body, evaluate the condition on primals.
+
+    Carry coefficients are fully materialized (a data-dependent trip count
+    admits no symbolic-zero fixed point); the loop condition is boolean and
+    therefore jet-constant, so it reads primals only. Differentiated cond
+    constants are rejected loudly.
+    """
+    params = eqn.params
+    ncc, nbc = params["cond_nconsts"], params["body_nconsts"]
+    cond_jaxpr, body_jaxpr = params["cond_jaxpr"], params["body_jaxpr"]
+    cconsts = in_jets[:ncc]
+    bconsts = in_jets[ncc : ncc + nbc]
+    carry = in_jets[ncc + nbc :]
+    if all(j.is_constant() for j in in_jets):
+        outs = _bind(eqn, *[j.primal for j in in_jets])
+        return [Jet(p, [ZERO] * K) for p in outs]
+    if not all(j.is_constant() for j in cconsts):
+        raise NotImplementedError(
+            "Taylor jet of while_loop with differentiated cond constants")
+
+    def flatten(jets):
+        flat = []
+        for j in jets:
+            flat.append(j.primal)
+            flat.extend(instantiate(c, j.primal) for c in j.coeffs)
+        return flat
+
+    def unflatten(flat):
+        jets, i = [], 0
+        for _ in carry:
+            primal = flat[i]
+            i += 1
+            jets.append(Jet(primal, list(flat[i : i + K])))
+            i += K
+        return jets
+
+    def cond_fn(flat):
+        prim = [Jet(j.primal, [ZERO] * K) for j in unflatten(flat)]
+        (out,) = interpret_jaxpr(cond_jaxpr, K, list(cconsts) + prim)
+        return out.primal
+
+    def body_fn(flat):
+        outs = interpret_jaxpr(body_jaxpr, K,
+                               list(bconsts) + unflatten(flat))
+        return flatten(outs)
+
+    out_flat = jax.lax.while_loop(cond_fn, body_fn, flatten(carry))
+    return unflatten(out_flat)
+
+
 # ---------------------------------------------------------------------------
 # Interpreter driver
 # ---------------------------------------------------------------------------

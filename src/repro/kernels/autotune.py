@@ -400,3 +400,39 @@ def put_attention_config(N: int, Sq: int, Skv: int, dh: int, R: int, K: int,
     disk = load_cache()
     disk[key] = list(cfg)
     save_cache(disk)
+
+
+# ---------------------------------------------------------------------------
+# per-body prewarm hook
+# ---------------------------------------------------------------------------
+
+# (kernel, dims, K, dtype-name, backend) tuples resolved via prewarm() —
+# inspected by tests and by operators debugging sweep timing.
+PREWARMED: list = []
+
+
+def prewarm(kernel: str, dims: Sequence[int], K: int, dtype,
+            interpret: bool = False):
+    """Resolve (and cache) the block config for one kernel shape *ahead of
+    execution*.
+
+    The recursive offload engine (core/offload.py) calls this once per
+    freshly planned sub-jaxpr body — e.g. a ``lax.scan`` layer stack — so
+    the timing sweep runs at plan time, before the scan body is traced;
+    the first loop iteration then hits a warm cache instead of time-sweeping
+    mid-trace. ``dims``: (B, Din, Dout, R) for ``jet_mlp``;
+    (N, Sq, Skv, dh, R) for ``jet_attention``.
+    """
+    import jax
+
+    backend = "interpret" if interpret else jax.default_backend()
+    if len(PREWARMED) >= 1024:  # introspection log, not a cache: keep bounded
+        del PREWARMED[:512]
+    PREWARMED.append((kernel, tuple(int(d) for d in dims), K,
+                      np.dtype(dtype).name, backend))
+    if kernel == "jet_mlp":
+        return get_block_config(*dims, K, dtype, interpret=interpret)
+    if kernel == "jet_attention":
+        return get_attention_block_config(*dims, K, dtype,
+                                          interpret=interpret)
+    raise ValueError(f"unknown kernel {kernel!r}; have {KERNELS}")

@@ -71,6 +71,19 @@ def _fused_bwd(K, block_q, block_k, interpret, zeros, res, g):
 _fused.defvjp(_fused_fwd, _fused_bwd)
 
 
+def prewarm_blocks(batch_shape, Sq: int, Skv: int, dh: int, R: int, K: int,
+                   dtype, interpret=None):
+    """Resolve the autotuned (bQ, bK) for the shape
+    :func:`collapsed_jet_attention_op` would request — same key derivation
+    (flattened batch N, backend/interpret flag) so a later op call is a
+    cache hit. Called by the offload engine's per-body prewarm."""
+    if interpret is None:
+        interpret = _on_cpu()
+    N = int(np.prod(batch_shape)) if batch_shape else 1
+    return autotune.prewarm("jet_attention", (N, Sq, Skv, dh, R), K, dtype,
+                            interpret=interpret)
+
+
 def collapsed_jet_attention_op(q, k, v, *, K: int = 2, mask=None, scale=1.0,
                                block_q=None, block_k=None, interpret=None,
                                lowering: str = "auto"):

@@ -143,6 +143,19 @@ def collapsed_jet_layer_op(h0, lower, top, w, b, *, K: int = 2,
     return t0, out_lower, tt
 
 
+def prewarm_blocks(batch_shape, Din: int, Dout: int, R: int, K: int, dtype,
+                   interpret=None):
+    """Resolve the autotuned block config for the shape
+    :func:`collapsed_jet_layer_op` would request — same key derivation
+    (flattened batch, backend/interpret flag) so a later op call is a cache
+    hit. Called by the offload engine's per-body prewarm."""
+    if interpret is None:
+        interpret = _on_cpu()
+    B = int(np.prod(batch_shape)) if batch_shape else 1
+    return autotune.prewarm("jet_mlp", (B, Din, Dout, R), K, dtype,
+                            interpret=interpret)
+
+
 def jet_mlp_layer_op(h0, h1, h2s, w, b, *, activation="tanh",
                      block_b=None, block_d=None, block_r=None, interpret=None):
     """Back-compat K=2 fused layer. Shapes: h0 (B, Din), h1 (R, B, Din),

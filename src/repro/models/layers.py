@@ -350,7 +350,9 @@ def attention_layer(params, x, cfg, *, positions, causal=True, window=None):
     ``cfg.attn_impl='reference'`` swaps in the canonical
     :func:`attention_reference` graph — the form the collapsed-Taylor
     offload planner fuses; differential-operator heads (transformer PINNs)
-    trace with that setting."""
+    trace with that setting. The recursive offload engine plans through
+    ``lax.scan``, so this fuses both in unrolled trunks and inside the
+    scanned layer stack of ``models/transformer.backbone``."""
     q, k, v = _proj_qkv(params, x, cfg)
     q = rope(q, positions, cfg.rope_theta)
     k = rope(k, positions, cfg.rope_theta)

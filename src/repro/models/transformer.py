@@ -105,42 +105,50 @@ def embed_tokens(params, tokens, cfg):
     return lshard(x, ("batch", "seq", "embed"))
 
 
-def backbone(params, x, cfg, positions):
-    """Embeddings -> final hidden states. ``x``: (B, S, D) continuous inputs
-    (also the entry point for the differential-operator heads)."""
-    aux = jnp.zeros(())
-    if "prefix_layers" in params:
-        x, a = _scan_blocks(params["prefix_layers"], x, cfg, positions, False)
-        aux += a
-    x, a = _scan_blocks(params["layers"], x, cfg, positions, cfg.num_experts > 0)
-    aux += a
-    return L.rmsnorm(params["final_norm"], x, cfg.norm_eps), aux
-
-
-def backbone_unrolled(params, x, cfg, positions):
-    """:func:`backbone` with the layer stack unrolled in Python (no scan).
-
-    Differential-operator heads (transformer PINNs / operator learning)
-    trace through this path with ``cfg.attn_impl='reference'``: ``lax.scan``
-    bodies stay on the per-primitive CRULES interpreter, but unrolled
-    attention blocks expose the canonical masked-softmax graph that
-    :mod:`repro.core.offload` fuses into the jet_attention Pallas kernel
-    under ``operators.<op>(..., method='collapsed', backend='pallas')``.
-    """
-
+def _unrolled_blocks(stacked, x, cfg, positions, moe_layer: bool):
     def unstack(stacked):
         n = jax.tree.leaves(stacked)[0].shape[0]
         return [jax.tree.map(lambda a: a[i], stacked) for i in range(n)]
 
     aux = jnp.zeros(())
-    if "prefix_layers" in params:
-        for layer in unstack(params["prefix_layers"]):
-            x, a = _block(layer, x, cfg, positions, False)
-            aux += a
-    for layer in unstack(params["layers"]):
-        x, a = _block(layer, x, cfg, positions, cfg.num_experts > 0)
+    for layer in unstack(stacked):
+        x, a = _block(layer, x, cfg, positions, moe_layer)
         aux += a
+    return x, aux
+
+
+def backbone(params, x, cfg, positions, *, unroll: bool = False):
+    """Embeddings -> final hidden states. ``x``: (B, S, D) continuous inputs
+    (also the entry point for the differential-operator heads).
+
+    The scanned layer stack is the *fusing default* for differential-operator
+    heads (transformer PINNs / operator learning with
+    ``cfg.attn_impl='reference'``): the recursive offload engine
+    (:mod:`repro.core.offload`) plans the scan body once per (K, signature)
+    and fuses its jet_attention / jet_mlp segments on every iteration under
+    ``operators.<op>(..., method='collapsed', backend='pallas')``.
+    ``unroll=True`` unrolls the stack in Python instead — O(depth) jaxpr
+    size; kept for unroll-vs-scan benchmarks (``benchmarks/scan_depth.py``).
+    """
+    blocks = _unrolled_blocks if unroll else _scan_blocks
+    aux = jnp.zeros(())
+    if "prefix_layers" in params:
+        x, a = blocks(params["prefix_layers"], x, cfg, positions, False)
+        aux += a
+    x, a = blocks(params["layers"], x, cfg, positions, cfg.num_experts > 0)
+    aux += a
     return L.rmsnorm(params["final_norm"], x, cfg.norm_eps), aux
+
+
+def backbone_unrolled(params, x, cfg, positions):
+    """Thin compatibility alias for ``backbone(..., unroll=True)``.
+
+    Historically the only fusing path for collapsed-Taylor operators
+    (``lax.scan`` bodies used to fall back to the CRULES interpreter); the
+    recursive offload engine made the scanned :func:`backbone` the fusing
+    default, so this survives only for callers that want the unrolled jaxpr
+    (e.g. depth-scaling benchmarks)."""
+    return backbone(params, x, cfg, positions, unroll=True)
 
 
 def unembed(params, x, cfg):

@@ -14,6 +14,7 @@ import pytest
     "benchmarks.fig1_laplacian",
     "benchmarks.attention_laplacian",
     "benchmarks.rewrite_flops",
+    "benchmarks.scan_depth",
     "benchmarks.table1_operators",
     "benchmarks.tableF2_theory",
 ])
@@ -32,3 +33,26 @@ def test_attention_laplacian_bench_smoke():
     ref = ops.laplacian(f, x, method="collapsed")
     got = ops.laplacian(f, x, method="collapsed", backend="pallas")
     np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_scan_depth_bench_smoke():
+    """scan_depth's three modes agree at a tiny depth, and the scanned fused
+    path actually fuses inside the scan body."""
+    from benchmarks.scan_depth import transformer_pinn
+    from repro.core import offload
+    from repro.core import operators as ops
+
+    f = transformer_pinn(depth=2, D=3, d_model=16)
+    fu = transformer_pinn(depth=2, D=3, d_model=16, unroll=True)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 3)) * 0.5
+    ref = ops.laplacian(f, x, method="collapsed")
+    np.testing.assert_allclose(
+        ops.laplacian(f, x, method="collapsed", backend="pallas"), ref,
+        rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        ops.laplacian(fu, x, method="collapsed", backend="pallas"), ref,
+        rtol=1e-5, atol=1e-5)
+    rep = offload.explain(f, x, K=2)
+    body = [e for e in rep.jaxprs if e.label == "scan body"]
+    assert body and body[0].fused("jet_attention") and \
+        body[0].fused("jet_mlp")
