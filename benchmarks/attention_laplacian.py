@@ -1,24 +1,38 @@
-"""Transformer-attention Laplacian: CRULES interpreter vs fused Pallas path.
+"""Transformer-attention Laplacian: CRULES interpreter vs the fused Pallas
+paths — per-segment kernels vs the q/k/v/o *superblock*.
 
 The attention companion to fig1_laplacian: a transformer PINN (one token per
-lifted feature, canonical ``attn_impl='reference'`` graph) whose Laplacian is
-computed in collapsed Taylor mode, once on the per-primitive interpreter and
-once with ``backend='pallas'`` — the offload planner fusing each
-``q·kᵀ → softmax → ·v`` block through ``kernels/jet_attention`` (the Pallas
-kernel on accelerators; on CPU the dispatcher lowers the fused segment to the
-reference graph, see ``jet_attention/ops.py``).
+lifted feature, canonical ``attn_impl='reference'`` graph, no rope — the
+PINN convention that lets the whole block fuse) whose Laplacian is computed
+in collapsed Taylor mode three ways:
+
+* ``interpreter`` — the per-primitive CRULES interpreter;
+* ``pallas-per-segment`` — one kernel per segment: q/k/v projections as
+  jet_mlp, the attention core as jet_attention (the pre-superblock plans);
+* ``pallas`` — the superblock: projections + GQA attention + output
+  projection in ONE kernel, one HBM round-trip of the hidden bundle per
+  block instead of one per segment.
 
 What the numbers mean per host:
 
 * **TPU/GPU** — the comparison this benchmark exists for: the interpreter
-  materializes every ``(R, N, S, S)`` score/probability coefficient in HBM
-  while the kernel keeps them in VMEM, so the gap grows with S.
+  materializes every ``(R, N, S, S)`` score/probability coefficient in HBM,
+  the per-segment path still round-trips the full ``(R, B, S, D)`` bundle
+  between every pair of kernels, and the superblock reads/writes it once —
+  so the gaps grow with S and with R.
 * **CPU** — a dispatch/semantics check, not a bandwidth story: XLA compiles
-  the interpreter's jaxpr into the same handful of fused einsums, so the two
-  paths are near parity and the measured ratio mostly reflects shared-host
+  the interpreter's jaxpr into the same handful of fused einsums, so the
+  paths are near parity and the measured ratios mostly reflect shared-host
   noise (hence the interleaved timing). Do not read CPU ratios as the
-  kernel's value; run this on an accelerator host for the real comparison
+  kernels' value; run this on an accelerator host for the real comparison
   (ROADMAP: on-accelerator autotune/bench validation).
+
+Besides the timings, each fused backend emits the *HBM-materialization
+count* of its scan-body plan, derived from ``operators.explain``: the
+number of fused segments per layer — each one writes its output bundle to
+HBM and the next reads it back, so fewer segments = fewer round-trips of
+the collapsed bundle (the superblock's whole point; the counts are exact on
+any host, unlike the CPU timings).
 
 Each (backend, S) cell is emitted as a machine-readable ``BENCH`` json row
 (see benchmarks/common.emit_bench) with the host platform attached.
@@ -34,17 +48,22 @@ from repro.configs.base import ModelConfig
 from repro.core import operators as ops
 from repro.models import transformer
 
+BACKENDS = ("interpreter", "pallas-per-segment", "pallas")
+
 
 def transformer_pinn(S: int, D: int, d_model: int = 32, num_layers: int = 1,
-                     key=None):
-    """u(x): (B, D) -> (B,) with an S-token transformer trunk. Coordinates
-    are lifted to S tokens by a fixed random projection (operator-learning
-    style: sequence length decoupled from the PDE dimension)."""
+                     num_heads: int = 2, num_kv_heads: int = 1, key=None):
+    """u(x): (B, D) -> (B,) with an S-token GQA transformer trunk.
+    Coordinates are lifted to S tokens by a fixed random projection
+    (operator-learning style: sequence length decoupled from the PDE
+    dimension); no rope, so the offload planner fuses each layer's whole
+    attention block as one superblock under ``backend='pallas'``."""
     cfg = ModelConfig(
         name="attn-pinn", family="dense", num_layers=num_layers,
-        d_model=d_model, num_heads=1, num_kv_heads=1, d_ff=2 * d_model,
-        vocab_size=8, act="gelu", dtype="float32", param_dtype="float32",
-        attn_impl="reference", remat=False,
+        d_model=d_model, num_heads=num_heads, num_kv_heads=num_kv_heads,
+        d_ff=2 * d_model, vocab_size=8, act="gelu", dtype="float32",
+        param_dtype="float32", attn_impl="reference", remat=False,
+        use_rope=False,
     )
     key = key if key is not None else jax.random.PRNGKey(0)
     kp, ke, kh = jax.random.split(key, 3)
@@ -63,6 +82,19 @@ def transformer_pinn(S: int, D: int, d_model: int = 32, num_layers: int = 1,
     return f
 
 
+def scan_body_plan_counts(f, x, backend: str):
+    """(fused segments, superblocks, interpreted eqns) of the scan-body plan
+    — the per-layer HBM-materialization accounting (one collapsed-bundle
+    write + read per fused segment boundary)."""
+    rep = ops.explain(f, x, K=2, backend=backend)
+    body = [e for e in rep.jaxprs if e.label == "scan body"]
+    if not body:
+        return 0, 0, 0
+    fused = body[0].fused()
+    supers = body[0].fused("jet_attention_qkv")
+    return len(fused), len(supers), sum(body[0].interpreted.values())
+
+
 def run(D: int = 4, B: int = 2, seqs=(64, 256), rounds: int = 8):
     platform = jax.default_backend()
     rows = []
@@ -72,21 +104,34 @@ def run(D: int = 4, B: int = 2, seqs=(64, 256), rounds: int = 8):
         fns = {
             backend: jax.jit(lambda x, b=backend: ops.laplacian(
                 f, x, method="collapsed", backend=b))
-            for backend in ("interpreter", "pallas")
+            for backend in BACKENDS
         }
         times = compare_times(fns, x, rounds=rounds)
+        counts = {
+            backend: scan_body_plan_counts(f, x, backend)
+            for backend in BACKENDS if backend != "interpreter"
+        }
         for backend, t in times.items():
+            segs, supers, interp = counts.get(backend, (0, 0, 0))
             rows.append({"name": f"attn_lap/{backend}/S{S}",
-                         "ms_per_call": f"{t*1e3:.2f}", "derived": ""})
+                         "ms_per_call": f"{t*1e3:.2f}",
+                         "derived": (f"hbm_segments={segs}" if segs else "")})
         speedup = times["interpreter"] / times["pallas"]
-        rows.append({"name": f"attn_lap/speedup/S{S}", "ms_per_call": "",
-                     "derived": f"pallas_vs_interpreter={speedup:.2f}x"})
+        vs_per_segment = times["pallas-per-segment"] / times["pallas"]
+        rows.append({
+            "name": f"attn_lap/speedup/S{S}", "ms_per_call": "",
+            "derived": (f"pallas_vs_interpreter={speedup:.2f}x "
+                        f"superblock_vs_per_segment={vs_per_segment:.2f}x")})
         for backend, t in times.items():
+            segs, supers, interp = counts.get(backend, (0, 0, 0))
             emit_bench("attention_laplacian", method="collapsed",
                        backend=backend, S=S, D=D, B=B, platform=platform,
                        ms_per_call=round(t * 1e3, 3),
-                       speedup_vs_interpreter=(
-                           round(speedup, 4) if backend == "pallas" else 1.0))
+                       hbm_segments_per_layer=segs,
+                       superblocks_per_layer=supers,
+                       interpreted_eqns=interp,
+                       speedup_vs_interpreter=round(
+                           times["interpreter"] / t, 4))
     return rows
 
 

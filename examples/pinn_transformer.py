@@ -11,11 +11,15 @@ automatically by the offload planner, no kernel calls in user code:
 
 The model lifts each coordinate of ``x in R^D`` to a token, runs a small
 decoder-only transformer (the *scanned* ``models/transformer.backbone`` with
-``attn_impl='reference'``, the canonical fusible attention graph), and pools
-to a scalar ``u(x)``. The recursive offload engine plans the ``lax.scan``
-layer stack's body once and fuses its attention and MLP segments on every
-iteration — hand-unrolling (``backbone_unrolled``) is no longer needed for
-fusion; see ``benchmarks/scan_depth.py`` for the unroll-vs-scan comparison.
+``attn_impl='reference'``, the canonical fusible attention graph, and
+``use_rope=False`` — PINN coordinates carry their own positional lift), and
+pools to a scalar ``u(x)``. The recursive offload engine plans the
+``lax.scan`` layer stack's body once and fuses each layer's WHOLE attention
+block — q/k/v projections, GQA attention, output projection — as one
+*superblock* kernel (plus the MLP segments) on every iteration —
+hand-unrolling (``backbone_unrolled``) is no longer needed for fusion; see
+``benchmarks/scan_depth.py`` for the unroll-vs-scan comparison and
+``benchmarks/attention_laplacian.py`` for superblock vs per-segment rows.
 
 Run:  PYTHONPATH=src python examples/pinn_transformer.py
 """
@@ -33,9 +37,9 @@ from repro.models import transformer
 def make_pinn(D: int, key, d_model: int = 32, num_layers: int = 2):
     cfg = ModelConfig(
         name="pinn-transformer", family="dense", num_layers=num_layers,
-        d_model=d_model, num_heads=2, num_kv_heads=2, d_ff=2 * d_model,
+        d_model=d_model, num_heads=2, num_kv_heads=1, d_ff=2 * d_model,
         vocab_size=8, act="gelu", dtype="float32", param_dtype="float32",
-        attn_impl="reference", remat=False,
+        attn_impl="reference", remat=False, use_rope=False,
     )
     kp, ke, kh = jax.random.split(key, 3)
     params = transformer.init(kp, cfg)
@@ -74,9 +78,10 @@ def main():
     for b, t in times.items():
         print(f"{b:12s} {t*1e3:10.2f}")
     print(f"\nmax |pallas - interpreter| = {err:.2e}")
-    print("(every attention block ran as one fused collapsed-jet attention "
-          "op under backend='pallas' — the Pallas kernel on accelerators, "
-          "its fused reference graph on CPU)")
+    print("(every attention block ran as ONE fused collapsed-jet superblock "
+          "— q/k/v projections + GQA attention + output projection — under "
+          "backend='pallas': the Pallas kernel on accelerators, its fused "
+          "reference graph on CPU)")
 
 
 if __name__ == "__main__":

@@ -23,6 +23,13 @@ class ModelConfig:
     qkv_bias: bool = False
     tied_embeddings: bool = False
     rope_theta: float = 10_000.0
+    # rotary embeddings between the q/k projections and the score dot. LM
+    # configs keep them on; differential-operator heads (transformer PINNs /
+    # operator learning, which lift continuous coordinates and carry their
+    # own positional lift) set False — that also lets the collapsed-Taylor
+    # offload planner fuse the whole block as ONE superblock kernel
+    # (q/k/v/o projections + GQA attention, see repro.core.offload).
+    use_rope: bool = True
     norm_eps: float = 1e-6
     act: str = "silu"  # mlp activation: silu (swiglu) | gelu
     sliding_window: Optional[int] = None  # local attention window, None = full

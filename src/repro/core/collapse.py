@@ -958,10 +958,14 @@ def interpret_with_plan(closed_jaxpr, K: int,
 
     Walks the eqns once: planned segments (``plan``: {eqn index: Segment},
     see :mod:`repro.core.offload`) get a fuse attempt first — on success the
-    segment's outputs are committed and its covered eqns skipped; everything
-    else takes the constant fast path or the per-primitive ``CRULES``, whose
-    control-flow/call rules recurse through :func:`current_interpreter` so a
-    plan-aware driver keeps planning inside sub-jaxprs.
+    segment's outputs are committed and its covered eqns skipped. A segment
+    may instead return ``(outputs, covered)`` when it fused a *smaller*
+    region than its own skip set (a superblock delegating its anchor to the
+    per-segment fallback); only the returned eqns are skipped then.
+    Everything else takes the constant fast path or the per-primitive
+    ``CRULES``, whose control-flow/call rules recurse through
+    :func:`current_interpreter` so a plan-aware driver keeps planning
+    inside sub-jaxprs.
     """
     jaxpr = closed_jaxpr.jaxpr
     env: Dict[Any, CollapsedJet] = {}
@@ -983,10 +987,12 @@ def interpret_with_plan(closed_jaxpr, K: int,
         if plan is not None:
             seg = plan.get(idx)
             if seg is not None:
-                outs_map = seg.try_fuse(read, K, jaxpr)
-                if outs_map is not None:
+                res = seg.try_fuse(read, K, jaxpr)
+                if res is not None:
+                    outs_map, covered = (res if isinstance(res, tuple)
+                                         else (res, seg.skip))
                     env.update(outs_map)
-                    skipped |= seg.skip
+                    skipped |= covered
                     continue
         jets_in = [read(v) for v in eqn.invars]
         name = eqn.primitive.name
@@ -1014,7 +1020,7 @@ def interpret_collapsed(closed_jaxpr, K: int, in_jets: Sequence[CollapsedJet]):
         return interpret_with_plan(closed_jaxpr, K, in_jets, None)
 
 
-BACKENDS = ("interpreter", "pallas")
+BACKENDS = ("interpreter", "pallas", "pallas-per-segment")
 
 
 def collapsed_fan(fun, x, directions, K: int, backend: str | None = None):
@@ -1028,15 +1034,21 @@ def collapsed_fan(fun, x, directions, K: int, backend: str | None = None):
     Propagates ``1 + (K-1)R + 1`` vectors instead of ``1 + K*R``.
 
     ``backend``: ``None``/"interpreter" runs every primitive through CRULES;
-    "pallas" routes MLP (affine+activation) and attention segments through
-    the fused collapsed-jet Pallas kernels via :mod:`repro.core.offload` —
-    recursively, inside ``scan``/``cond``/``while``/``pjit``/``remat``
-    bodies too — falling back to CRULES for everything else.
+    "pallas" routes MLP (affine+activation), attention, and whole-attention
+    *superblock* (q/k/v/o projections folded into the attention kernel)
+    segments through the fused collapsed-jet Pallas kernels via
+    :mod:`repro.core.offload` — recursively, inside ``scan``/``cond``/
+    ``while``/``pjit``/``remat`` bodies too — falling back to CRULES for
+    everything else. "pallas-per-segment" is the same engine with the
+    superblock matcher disabled (one kernel per segment — the
+    ablation/benchmark backend).
     """
     if backend in (None, "interpreter"):
         interp = interpret_collapsed
     elif backend == "pallas":
         from .offload import interpret_collapsed_offload as interp
+    elif backend == "pallas-per-segment":
+        from .offload import interpret_collapsed_offload_per_segment as interp
     else:
         raise ValueError(f"unknown backend {backend!r}; have {BACKENDS}")
     x = jnp.asarray(x)

@@ -44,13 +44,15 @@ The engine has three layers:
    live jet environment (propagated-jet slots, unsupported dtypes, and
    fully-constant segments fall back to ``CRULES``).
 
-Two matchers ship today:
+Three matchers ship today:
 
 * **jet_mlp** — ``dot_general -> add(bias) -> elementwise activation``
   chains (any leading batch rank — PINN ``(B, D)`` inputs and transformer
   ``(B, S, D)`` token stacks alike), fused into
   :func:`repro.kernels.jet_mlp.ops.collapsed_jet_layer_op`. The dot must
-  contract the lhs feature dim with a jet-constant 2-D weight; a following
+  contract the lhs feature dim with a jet-constant 2-D ``(Din, Dout)`` *or*
+  3-D ``(Din, H, dh)`` weight (the q/k/v projection layout — flattened to
+  ``(Din, H*dh)`` for the kernel and reshaped back); a following
   jet-constant ``(Dout,)`` bias add is folded in; the maximal literal-only
   elementwise subgraph consuming the affine output is *classified by
   probing* — evaluated on a fixed 1-D probe and compared against the
@@ -58,36 +60,65 @@ Two matchers ship today:
   activations and decomposed ones (exact ``gelu`` traces to a 5-eqn erf
   subgraph).
 
-* **jet_attention** — ``dot_general(q·kᵀ) [-> scale] [-> mask select] ->
-  softmax [-> astype] -> dot_general(·v)`` blocks, fused into
+* **jet_attention** — ``dot_general(q·kᵀ) [-> scale] [-> + bias] [-> mask
+  select] -> softmax [-> astype] -> dot_general(·v)`` blocks, fused into
   :func:`repro.kernels.jet_attention.ops.collapsed_jet_attention_op`. The
   score dot must contract the trailing feature dim with leading batch dims;
-  the scale must be scalar and jet-constant; a ``where``-style mask select
-  (flat ``select_n`` or the ``pjit[_where]`` jnp.where lowers to) is folded
-  into the kernel's mask input, with the iota-derived mask producers
-  hoisted; the maximal row-reduction subgraph between scores and the value
-  dot is classified by probing against row softmax; a trailing
-  ``convert_element_type`` (the ``p.astype(v.dtype)`` of mixed-precision
-  blocks) is folded so bf16/f16 transformers fuse too. The op lowers per
-  platform (Pallas kernel on accelerators, the equivalent fused reference
-  graph on CPU).
+  the scale must be scalar and jet-constant; an additive pre-softmax score
+  bias (ALiBi-style ``s + bias`` with a jet-constant bias broadcastable to
+  ``(Sq, Skv)``, leading dims 1) is folded into the kernel's bias input; a
+  ``where``-style mask select (flat ``select_n`` or the ``pjit[_where]``
+  jnp.where lowers to) is folded into the kernel's mask input, with the
+  iota-derived mask/bias producers hoisted; the maximal row-reduction
+  subgraph between scores and the value dot is classified by probing
+  against row softmax; a trailing ``convert_element_type`` (the
+  ``p.astype(v.dtype)`` of mixed-precision blocks) is folded so bf16/f16
+  transformers fuse too. The op lowers per platform (Pallas kernel on
+  accelerators, the equivalent fused reference graph on CPU).
+
+* **jet_attention_qkv** (the *superblock*) — a whole self-attention block:
+  the three/four projection dots feeding an attention block
+  (``h @ Wq/Wk/Wv`` with rank-3 ``(D, H, dh)`` weights, recognized by
+  *reusing the jet_mlp structural matcher*, through the GQA
+  broadcast/reshape and layout transposes), the attention core above
+  (scale/bias/mask/softmax), and the output projection
+  (``-> transpose -> dot(Wo)``), all fused into
+  :func:`repro.kernels.jet_attention.ops.collapsed_jet_qkv_attention_op` —
+  one HBM read of the pre-projection hidden bundle and one write of the
+  projected output per block, instead of a round-trip per segment. GQA is
+  native (k/v jets materialize once per kv group, never broadcast to
+  ``Hq``) and ``dv != dh`` is supported. Superblock candidates are planned
+  in a pre-pass of :func:`plan_segments` (anchored at the earliest
+  projection dot); when one is rejected — a projection weight is a
+  propagated jet (plan-time taint), the projections read different
+  activations, there is no foldable output projection — planning falls
+  back to *today's per-segment plan* (the attention + jet_mlp matchers
+  still claim their anchors) and the reason is recorded as a plan note,
+  surfaced by :func:`explain`. The same per-segment fallback applies at
+  run time if ``try_fuse`` rejects (the recorded ``fail_reason`` names the
+  offending slot). ``backend='pallas-per-segment'``
+  (:func:`interpret_collapsed_offload_per_segment`) disables the
+  superblock pre-pass entirely — the ablation/benchmark driver.
 
 Probing only touches jaxpr literals and fixed probe arrays, and runs under
 ``jax.ensure_compile_time_eval`` so it stays concrete inside ambient traces
 — a user ``jit`` around the operator, or the scan rule's symbolic-zero
 ``eval_shape`` where the recursive engine plans sub-jaxpr bodies. Whether a
-var is jet-constant (weights, masks, scales) is only known at
+var is jet-constant (weights, masks, scales, biases) is only known at
 interpretation time, so the plan records candidates and ``try_fuse``
 re-checks per segment against the live environment.
 
 :func:`explain` dumps the recursive plan for a function — per sub-jaxpr
-(labelled by the control-flow context it hangs off), the matched segments,
-whether each fused, and what fell back to the interpreter — and is the
-assertion surface for "did my network actually fuse inside the scan".
+(labelled by the control-flow context it hangs off), the matched segments
+(superblocks labelled ``jet_attention_qkv``, distinct from per-segment
+plans), whether each fused (with the fallback reason when not), the plan
+notes, and what fell back to the interpreter — and is the assertion
+surface for "did my network actually fuse inside the scan".
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import weakref
 from collections import Counter
@@ -98,7 +129,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.jet_attention import ops as jet_attention_ops
-from repro.kernels.jet_attention.ops import collapsed_jet_attention_op
+from repro.kernels.jet_attention.ops import (collapsed_jet_attention_op,
+                                             collapsed_jet_qkv_attention_op)
 from repro.kernels.jet_mlp import ops as jet_mlp_ops
 from repro.kernels.jet_mlp.jet_mlp import ACTIVATION_FNS
 from repro.kernels.jet_mlp.ops import collapsed_jet_layer_op
@@ -175,6 +207,9 @@ class Segment:
     """
 
     kind = "segment"
+    # why the latest try_fuse fell back ("" when it fused) — best-effort
+    # introspection surfaced by explain's SegmentOutcome detail
+    fail_reason = ""
 
     anchor: int
     out_var: Any
@@ -206,11 +241,21 @@ def register_segment_matcher(fn: MatcherFn, *, index: Optional[int] = None):
     return fn
 
 
+class Plan(dict):
+    """A ``{anchor eqn index: Segment}`` plan, plus plan-time ``notes``
+    recording why superblock candidates fell back to per-segment plans
+    (taint slot, shape, matcher miss) — surfaced by :func:`explain`."""
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.notes: List[str] = []
+
+
 def plan_segments(closed_jaxpr,
-                  propagated: Optional[Sequence[bool]] = None
-                  ) -> Dict[int, Segment]:
+                  propagated: Optional[Sequence[bool]] = None,
+                  superblock: bool = True) -> Plan:
     """Scan a jaxpr for fusible segments (one per anchor eqn, first matcher
-    wins).
+    wins), preceded by the superblock pre-pass.
 
     ``propagated``: per-invar bools — True when that invar carries a
     propagated jet. Defaults to all-True (the top-level convention: every
@@ -218,6 +263,14 @@ def plan_segments(closed_jaxpr,
     signature so that e.g. scan-sliced weights — invars of the body — can
     serve as jet-constant structural slots, while scan-carried activations
     stay tainted.
+
+    ``superblock``: attempt whole-attention-block fusion (q/k/v/o
+    projections folded into the attention kernel) before the per-segment
+    matchers. A superblock is anchored at its *earliest* projection dot and
+    covers everything through the output projection; the per-segment
+    matchers still claim their own anchors inside it, so a run-time
+    superblock rejection degrades to the per-segment plan instead of the
+    bare interpreter. ``backend='pallas-per-segment'`` passes False here.
     """
     jaxpr = closed_jaxpr.jaxpr
     consumers: Dict[Any, List[int]] = {}
@@ -239,8 +292,21 @@ def plan_segments(closed_jaxpr,
     outvars = {v for v in jaxpr.outvars if not _is_literal(v)}
     ctx = PlanContext(jaxpr, consumers, producer_idx, outvars, tainted)
 
-    plan: Dict[int, Segment] = {}
+    plan = Plan()
+    if superblock:
+        for idx, eqn in enumerate(jaxpr.eqns):
+            if (eqn.primitive.name != "dot_general"
+                    or _score_dot_shaped(eqn) is None):
+                continue
+            seg, reason = _resolve_superblock(ctx, idx)
+            if seg is not None:
+                plan[seg.anchor] = seg
+            elif reason:
+                plan.notes.append(
+                    f"attention@eqn{idx}: per-segment plan ({reason})")
     for idx in range(len(jaxpr.eqns)):
+        if idx in plan:
+            continue
         for matcher in SEGMENT_MATCHERS:
             seg = matcher(ctx, idx)
             if seg is not None:
@@ -257,7 +323,8 @@ def plan_segments(closed_jaxpr,
 @dataclasses.dataclass
 class _PlanCacheEntry:
     ref: Any  # weakref to the jaxpr: plans die with the graph they describe
-    plans: Dict[Tuple[int, Tuple[bool, ...]], Dict[int, Segment]]
+    # keyed by (K, jet-constant signature, superblock enabled)
+    plans: Dict[Tuple[int, Tuple[bool, ...], bool], "Plan"]
 
 
 _PLAN_CACHE: Dict[int, _PlanCacheEntry] = {}
@@ -277,8 +344,26 @@ def clear_plan_cache() -> None:
     _PLAN_STATS.update(hits=0, misses=0)
 
 
+def _superblock_enabled() -> bool:
+    """Ambient superblock-planning flag (thread-local, like the interpreter
+    stack): True under ``backend='pallas'``, False under
+    ``backend='pallas-per-segment'``."""
+    stack = _dyn_stack("superblock")
+    return stack[-1] if stack else True
+
+
+@contextlib.contextmanager
+def _superblock_scope(enabled: bool):
+    stack = _dyn_stack("superblock")
+    stack.append(enabled)
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
 def _plan_for(closed_jaxpr, K: int,
-              in_jets: Sequence[CollapsedJet]) -> Dict[int, Segment]:
+              in_jets: Sequence[CollapsedJet]) -> Plan:
     """Cached plan for one (sub-)jaxpr under the live jet-constant
     signature; prewarms the autotuner for freshly planned segments.
 
@@ -286,9 +371,12 @@ def _plan_for(closed_jaxpr, K: int,
     the jaxpr is collected (a dead plan can never be reused — its Segments
     point at that jaxpr's vars), so eager per-call re-traces don't pile up
     retained graphs, while sub-jaxprs that JAX's own trace caches keep
-    alive (scan bodies, pjit bodies) stay planned across calls."""
+    alive (scan bodies, pjit bodies) stay planned across calls. The
+    ambient superblock flag is part of the key: 'pallas' and
+    'pallas-per-segment' runs never share plans."""
     jaxpr = closed_jaxpr.jaxpr
     sig = tuple(not j.is_constant() for j in in_jets)
+    superblock = _superblock_enabled()
     jid = id(jaxpr)
     entry = _PLAN_CACHE.get(jid)
     if entry is not None and entry.ref() is not jaxpr:  # stale id reuse
@@ -304,13 +392,13 @@ def _plan_for(closed_jaxpr, K: int,
             ref = (lambda j=jaxpr: j)
         entry = _PlanCacheEntry(ref, {})
         _PLAN_CACHE[jid] = entry
-    key = (K, sig)
+    key = (K, sig, superblock)
     plan = entry.plans.get(key)
     if plan is not None:
         _PLAN_STATS["hits"] += 1
         return plan
     _PLAN_STATS["misses"] += 1
-    plan = plan_segments(closed_jaxpr, propagated=sig)
+    plan = plan_segments(closed_jaxpr, propagated=sig, superblock=superblock)
     entry.plans[key] = plan
     if plan:
         r = _infer_r(in_jets)
@@ -387,7 +475,9 @@ def _run_hoist(seg: Segment, read, K: int, jaxpr):
 class MlpSegment(Segment):
     """An affine(+activation) region anchored at a feature-contracting
     dot_general (any leading batch rank: ``(B, Din)`` PINN inputs and
-    ``(B, S, Din)`` transformer token stacks alike)."""
+    ``(B, S, Din)`` transformer token stacks alike; rank-3 ``(Din, H, dh)``
+    weights — the q/k/v projection layout — are flattened to
+    ``(Din, H*dh)`` for the kernel and the output reshaped back)."""
 
     kind = "jet_mlp"
 
@@ -397,42 +487,58 @@ class MlpSegment(Segment):
     activation: str = "linear"
 
     def try_fuse(self, read, K, jaxpr):
+        self.fail_reason = ""
         lhs = read(self.lhs_var)
         wj = read(self.w_var)
         if lhs.is_constant() or not wj.is_constant():
+            self.fail_reason = ("propagated jet in the weight slot"
+                                if not wj.is_constant()
+                                else "jet-constant input (primal path)")
             return None
         w = wj.primal
+        head_shape = tuple(w.shape[1:])  # (Dout,) or (H, dh)
+        if w.ndim == 3:
+            w = w.reshape(w.shape[0], -1)
         dout = w.shape[1]
         if self.bias_var is None:
             b = jnp.zeros((dout,), dtype=w.dtype)
         else:
             bj = read(self.bias_var)
             if not bj.is_constant():
+                self.fail_reason = "propagated jet in the bias slot"
                 return None
             bp = jnp.asarray(bj.primal)
             if bp.size == dout:
                 b = bp.reshape((dout,)).astype(w.dtype)
-            else:  # scalar bias broadcast over Dout
-                b = jnp.broadcast_to(bp.reshape(()), (dout,)).astype(w.dtype)
+            else:  # scalar/trailing-dim bias broadcast over the head shape
+                core = (bp.reshape(bp.shape[-1:])
+                        if bp.size > 1 else bp.reshape(()))
+                b = jnp.broadcast_to(core, head_shape).reshape(
+                    (dout,)).astype(w.dtype)
         h0 = lhs.primal
         if h0.ndim < 1:
             return None
         if np.dtype(h0.dtype) not in _FUSIBLE_DTYPES:
             # the kernel accumulates in f32; silently degrading f64 (x64 mode)
             # would betray the 1e-5 interpreter-match contract — fall back.
+            self.fail_reason = f"unsupported dtype {h0.dtype}"
             return None
         lower = [None if is_zero(c) else c for c in lhs.lower]
         top = None if is_zero(lhs.top) else lhs.top
         t0, tl, tt = collapsed_jet_layer_op(
             h0, lower, top, w, b, K=K, activation=self.activation,
         )
+        if len(head_shape) > 1:  # restore the (H, dh) head axes
+            reshape = lambda c: c.reshape(c.shape[:-1] + head_shape)
+            t0, tt = reshape(t0), reshape(tt)
+            tl = [reshape(c) for c in tl]
         return {self.out_var: _cast_jet(CollapsedJet(t0, list(tl), tt),
                                         self.out_var)}
 
     def prewarm(self, K, R):
         h, w = self.lhs_var.aval, self.w_var.aval
         jet_mlp_ops.prewarm_blocks(tuple(h.shape[:-1]), int(h.shape[-1]),
-                                   int(w.shape[1]), R, K, h.dtype)
+                                   int(np.prod(w.shape[1:])), R, K, h.dtype)
 
     def describe(self):
         return self.activation
@@ -610,7 +716,10 @@ def match_mlp_segment(ctx: PlanContext, idx: int) -> Optional[MlpSegment]:
     if _is_literal(lhs) or _is_literal(rhs):
         return None
     nl = len(lhs.aval.shape)
-    if nl < 1 or len(rhs.aval.shape) != 2:
+    # rank-2 (Din, Dout) dense weights and rank-3 (Din, H, dh) projection
+    # weights (einsum 'bsd,dhk->bshk') both contract Din against the lhs
+    # feature dim — the kernel sees the flattened (Din, H*dh) matrix.
+    if nl < 1 or len(rhs.aval.shape) not in (2, 3):
         return None
     (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
     if lb or rb or tuple(lc) != (nl - 1,) or tuple(rc) != (0,):
@@ -673,18 +782,24 @@ class AttentionSegment(Segment):
     scale_var: Any = None  # None | var/Literal (scalar)
     scale_op: str = ""  # "mul" | "div"
     mask_var: Any = None  # None | var (True = attend)
+    bias_var: Any = None  # None | var (additive jet-constant score bias)
 
     def try_fuse(self, read, K, jaxpr):
+        self.fail_reason = ""
         q, k, v = read(self.q_var), read(self.k_var), read(self.v_var)
         if q.is_constant() and k.is_constant() and v.is_constant():
-            return None  # fully constant: cheaper on the primal path
+            # fully constant: cheaper on the primal path
+            self.fail_reason = "jet-constant q/k/v (primal path)"
+            return None
         if any(np.dtype(j.primal.dtype) not in _FUSIBLE_DTYPES
                for j in (q, k, v)):
+            self.fail_reason = f"unsupported dtype {q.primal.dtype}"
             return None
-        # the scale/mask producers may themselves be hoisted eqns (traced
-        # after the anchor), so hoist FIRST and resolve through its results
+        # the scale/mask/bias producers may themselves be hoisted eqns
+        # (traced after the anchor), so hoist FIRST and resolve through them
         extra = _run_hoist(self, read, K, jaxpr)
         if extra is None:
+            self.fail_reason = "hoisted eqns read propagated jets"
             return None
 
         def read2(var):
@@ -696,18 +811,31 @@ class AttentionSegment(Segment):
         if self.scale_var is not None:
             sj = read2(self.scale_var)
             if not sj.is_constant():
-                return None  # propagated-jet scale: not attention-shaped
+                # propagated-jet scale: not attention-shaped
+                self.fail_reason = "propagated jet in the scale slot"
+                return None
             sval = jnp.asarray(sj.primal).reshape(())
             scale = 1.0 / sval if self.scale_op == "div" else sval
         mask = None
         if self.mask_var is not None:
             mj = read2(self.mask_var)
             if not mj.is_constant():
+                self.fail_reason = "propagated jet in the mask slot"
                 return None
             m = jnp.asarray(mj.primal)
             if m.ndim > 2:  # leading size-1 dims, validated at plan time
                 m = m.reshape(m.shape[-2:])
             mask = m
+        bias = None
+        if self.bias_var is not None:
+            bj = read2(self.bias_var)
+            if not bj.is_constant():
+                self.fail_reason = "propagated jet in the bias slot"
+                return None
+            b = jnp.asarray(bj.primal)
+            if b.ndim > 2:  # leading size-1 dims, validated at plan time
+                b = b.reshape(b.shape[-2:])
+            bias = b
 
         def triple(j):
             lower = [None if is_zero(c) else c for c in j.lower]
@@ -716,6 +844,7 @@ class AttentionSegment(Segment):
 
         o0, ol, ot = collapsed_jet_attention_op(
             triple(q), triple(k), triple(v), K=K, mask=mask, scale=scale,
+            bias=bias,
         )
         out = {self.out_var: _cast_jet(CollapsedJet(o0, list(ol), ot),
                                        self.out_var)}
@@ -726,12 +855,14 @@ class AttentionSegment(Segment):
         q, v = self.q_var.aval, self.v_var.aval
         jet_attention_ops.prewarm_blocks(
             tuple(q.shape[:-2]), int(q.shape[-2]), int(v.shape[-2]),
-            int(q.shape[-1]), R, K, q.dtype)
+            int(q.shape[-1]), int(v.shape[-1]), R, K, q.dtype)
 
     def describe(self):
         bits = []
         if self.scale_var is not None:
             bits.append("scale")
+        if self.bias_var is not None:
+            bits.append("bias")
         if self.mask_var is not None:
             bits.append("mask")
         return "+".join(bits)
@@ -906,6 +1037,36 @@ def _probe_softmax(ctx: PlanContext, region, start_var, out_var) -> bool:
                                                  atol=_PROBE_TOL)
 
 
+def _resolve_shared_tile(ctx: PlanContext, v, sq: int, skv: int):
+    """Follow ``v`` back through pure trailing-aligned broadcasts (the
+    ``jnp`` rank promotion of ``s + bias``) and dtype casts to a var whose
+    value can be reinterpreted as a shared (Sq, Skv) score tile; returns
+    the resolved var or None."""
+    for _ in range(4):
+        if _mask_shape_ok(_var_shape(v), sq, skv):
+            return v
+        if _is_literal(v):
+            return None
+        idx = ctx.producer_idx.get(v)
+        if idx is None:
+            return None
+        eqn = ctx.jaxpr.eqns[idx]
+        name = eqn.primitive.name
+        if name == "broadcast_in_dim":
+            # only leading-axis insertion: the inner dims must land on the
+            # trailing output dims unchanged, else the (Sq, Skv) reading of
+            # the inner value would be wrong
+            out_rank = len(eqn.outvars[0].aval.shape)
+            in_rank = len(_var_shape(eqn.invars[0]))
+            if tuple(eqn.params["broadcast_dimensions"]) != tuple(
+                    range(out_rank - in_rank, out_rank)):
+                return None
+        elif name not in ("convert_element_type", "copy"):
+            return None
+        v = eqn.invars[0]
+    return None
+
+
 def _mask_shape_ok(shape: Tuple[int, ...], sq: int, skv: int) -> bool:
     """Mask avals we can reinterpret as a shared (Sq, Skv) mask: trailing
     dims broadcastable to (Sq, Skv), all leading dims of size 1."""
@@ -919,11 +1080,10 @@ def _mask_shape_ok(shape: Tuple[int, ...], sq: int, skv: int) -> bool:
     return True
 
 
-@register_segment_matcher
-def match_attention_segment(ctx: PlanContext,
-                            idx: int) -> Optional[AttentionSegment]:
-    jaxpr = ctx.jaxpr
-    eqn = jaxpr.eqns[idx]
+def _score_dot_shaped(eqn) -> Optional[int]:
+    """The number of leading batch dims when ``eqn`` is an attention-score-
+    shaped dot_general (both operands rank nb+2, trailing feature dims
+    contracted, all leading dims batched); None otherwise."""
     if eqn.primitive.name != "dot_general":
         return None
     q_var, k_var = eqn.invars
@@ -938,6 +1098,36 @@ def match_attention_segment(ctx: PlanContext,
     if (tuple(lc) != (nl - 1,) or tuple(rc) != (nl - 1,)
             or tuple(lb) != batch or tuple(rb) != batch):
         return None
+    return nb
+
+
+@dataclasses.dataclass
+class _AttnCore:
+    """The scale/bias/mask/softmax/value-dot structure around one score dot
+    — shared between the per-segment attention matcher and the superblock
+    resolver (which wraps it with projection chains and Wo)."""
+
+    q_var: Any
+    k_var: Any
+    v_var: Any
+    scale_var: Any
+    scale_op: str
+    bias_var: Any
+    mask_var: Any
+    out_var: Any  # the value dot's output
+    skip: Set[int]
+    hoist_roots: List[Any]
+
+
+def _match_attention_core(ctx: PlanContext, idx: int) -> Optional[_AttnCore]:
+    jaxpr = ctx.jaxpr
+    eqn = jaxpr.eqns[idx]
+    nb = _score_dot_shaped(eqn)
+    if nb is None:
+        return None
+    q_var, k_var = eqn.invars
+    nl = len(q_var.aval.shape)
+    batch = tuple(range(nb))
     s_var = eqn.outvars[0]
     sq, skv = s_var.aval.shape[-2:]
     skip = {idx}
@@ -959,9 +1149,27 @@ def match_attention_segment(ctx: PlanContext,
                 cur = seqn.outvars[0]
                 nxt = ctx.sole_consumer(cur)
 
+    # optional additive jet-constant score bias (ALiBi-style s + bias); the
+    # jnp rank promotion broadcasts the (Sq, Skv) bias to the full score
+    # shape, so resolve the add operand back through that broadcast
+    bias_var = None
+    hoist_roots: List[Any] = [scale_var]
+    if nxt is not None:
+        beqn = jaxpr.eqns[nxt]
+        if beqn.primitive.name == "add":
+            a, b = beqn.invars
+            other = b if a is cur else a
+            src = (None if other is cur or ctx.is_propagated(other)
+                   else _resolve_shared_tile(ctx, other, sq, skv))
+            if src is not None:
+                bias_var = src
+                skip.add(nxt)
+                hoist_roots.append(src)
+                cur = beqn.outvars[0]
+                nxt = ctx.sole_consumer(cur)
+
     # optional where-style mask select
     mask_var = None
-    hoist_roots: List[Any] = [scale_var]
     if nxt is not None:
         weqn = jaxpr.eqns[nxt]
         pos = _match_where(weqn)
@@ -1017,17 +1225,314 @@ def match_attention_segment(ctx: PlanContext,
     if v_idx is not None and v_idx > idx:
         return None
     skip.add(d2)
+    return _AttnCore(q_var=q_var, k_var=k_var, v_var=v_var,
+                     scale_var=scale_var, scale_op=scale_op,
+                     bias_var=bias_var, mask_var=mask_var,
+                     out_var=eqn2.outvars[0], skip=skip,
+                     hoist_roots=hoist_roots)
 
-    hoist = _hoist_closure(ctx, hoist_roots, idx)
-    skip |= set(hoist)
-    return AttentionSegment(anchor=idx, out_var=eqn2.outvars[0], skip=skip,
-                            hoist=hoist, q_var=q_var, k_var=k_var,
-                            v_var=v_var, scale_var=scale_var,
-                            scale_op=scale_op, mask_var=mask_var)
+
+@register_segment_matcher
+def match_attention_segment(ctx: PlanContext,
+                            idx: int) -> Optional[AttentionSegment]:
+    core = _match_attention_core(ctx, idx)
+    if core is None:
+        return None
+    hoist = _hoist_closure(ctx, core.hoist_roots, idx)
+    return AttentionSegment(anchor=idx, out_var=core.out_var,
+                            skip=core.skip | set(hoist), hoist=hoist,
+                            q_var=core.q_var, k_var=core.k_var,
+                            v_var=core.v_var, scale_var=core.scale_var,
+                            scale_op=core.scale_op, mask_var=core.mask_var,
+                            bias_var=core.bias_var)
 
 
 # ---------------------------------------------------------------------------
-# driver
+# jet_attention_qkv matcher (superblock): projections + attention + Wo
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class QKVAttentionSegment(Segment):
+    """A whole self-attention block — q/k/v projections, (GQA) attention,
+    output projection — anchored at its earliest projection dot."""
+
+    kind = "jet_attention_qkv"
+
+    hidden_var: Any = None  # the pre-projection (B, S, D) bundle
+    wq_var: Any = None  # (D, Hq, dh)
+    wk_var: Any = None  # (D, Hkv, dh)
+    wv_var: Any = None  # (D, Hkv, dv)
+    wo_var: Any = None  # (Hq, dv, Do)
+    scale_var: Any = None
+    scale_op: str = ""
+    mask_var: Any = None
+    bias_var: Any = None
+    heads: Tuple[int, int] = (1, 1)  # (Hq, Hkv)
+    # the anchor projection's MlpSegment: a run-time superblock rejection
+    # delegates to it, so the block degrades to exactly the per-segment
+    # plan (the other projections and the attention core keep their own
+    # plan entries) instead of dropping the anchor dot to the interpreter
+    fallback: Any = None
+
+    def _fall_back(self, read, K, jaxpr):
+        if self.fallback is None:
+            return None
+        out = self.fallback.try_fuse(read, K, jaxpr)
+        if out is None:
+            return None
+        # (outs, covered) form: the engine must skip only the fallback's
+        # eqns, not the whole superblock
+        return out, set(self.fallback.skip)
+
+    def try_fuse(self, read, K, jaxpr):
+        self.fail_reason = ""
+        h = read(self.hidden_var)
+        if h.is_constant():
+            self.fail_reason = "jet-constant hidden bundle (primal path)"
+            return self._fall_back(read, K, jaxpr)
+        if np.dtype(h.primal.dtype) not in _FUSIBLE_DTYPES:
+            self.fail_reason = f"unsupported dtype {h.primal.dtype}"
+            return self._fall_back(read, K, jaxpr)
+        extra = _run_hoist(self, read, K, jaxpr)
+        if extra is None:
+            self.fail_reason = "hoisted eqns read propagated jets"
+            return self._fall_back(read, K, jaxpr)
+
+        def read2(var):
+            if not _is_literal(var) and var in extra:
+                return extra[var]
+            return read(var)
+
+        weights = []
+        for name, var in (("Wq", self.wq_var), ("Wk", self.wk_var),
+                          ("Wv", self.wv_var), ("Wo", self.wo_var)):
+            wj = read2(var)
+            if not wj.is_constant():
+                self.fail_reason = f"propagated jet in the {name} slot"
+                return self._fall_back(read, K, jaxpr)
+            weights.append(wj.primal)
+        wq, wk, wv, wo = weights
+
+        scale = 1.0
+        if self.scale_var is not None:
+            sj = read2(self.scale_var)
+            if not sj.is_constant():
+                self.fail_reason = "propagated jet in the scale slot"
+                return self._fall_back(read, K, jaxpr)
+            sval = jnp.asarray(sj.primal).reshape(())
+            scale = 1.0 / sval if self.scale_op == "div" else sval
+        mask = None
+        if self.mask_var is not None:
+            mj = read2(self.mask_var)
+            if not mj.is_constant():
+                self.fail_reason = "propagated jet in the mask slot"
+                return self._fall_back(read, K, jaxpr)
+            m = jnp.asarray(mj.primal)
+            if m.ndim > 2:
+                m = m.reshape(m.shape[-2:])
+            mask = m
+        bias = None
+        if self.bias_var is not None:
+            bj = read2(self.bias_var)
+            if not bj.is_constant():
+                self.fail_reason = "propagated jet in the bias slot"
+                return self._fall_back(read, K, jaxpr)
+            b = jnp.asarray(bj.primal)
+            if b.ndim > 2:
+                b = b.reshape(b.shape[-2:])
+            bias = b
+
+        lower = [None if is_zero(c) else c for c in h.lower]
+        top = None if is_zero(h.top) else h.top
+        o0, ol, ot = collapsed_jet_qkv_attention_op(
+            (h.primal, lower, top), wq, wk, wv, wo, K=K, mask=mask,
+            scale=scale, bias=bias,
+        )
+        out = {self.out_var: _cast_jet(CollapsedJet(o0, list(ol), ot),
+                                       self.out_var)}
+        out.update(extra)
+        return out
+
+    def prewarm(self, K, R):
+        h = self.hidden_var.aval
+        wq, wk = self.wq_var.aval, self.wk_var.aval
+        wv, wo = self.wv_var.aval, self.wo_var.aval
+        jet_attention_ops.prewarm_qkv_blocks(
+            int(h.shape[0]), int(h.shape[1]), int(h.shape[2]),
+            int(wq.shape[1]), int(wk.shape[1]), int(wq.shape[2]),
+            int(wv.shape[2]), int(wo.shape[2]), R, K, h.dtype)
+
+    def describe(self):
+        bits = [f"Hq{self.heads[0]}/Hkv{self.heads[1]}"]
+        if self.scale_var is not None:
+            bits.append("scale")
+        if self.bias_var is not None:
+            bits.append("bias")
+        if self.mask_var is not None:
+            bits.append("mask")
+        return "+".join(bits)
+
+
+def _proj_chain(ctx: PlanContext, var):
+    """Resolve one attention input var ((B, H, S, d), feeding the score or
+    value dot) back to its projection of the hidden bundle:
+
+        transpose(0,2,1,3) <- [reshape <- broadcast_in_dim]  (the GQA
+        repeat, kv sides only) <- dot_general(hidden, W)
+
+    The projection dot itself is validated by *reusing the jet_mlp
+    structural matcher* (rank-3 weight, linear, bias-free, owning its
+    output). Every intermediate must be solely consumed by the next link.
+    Returns (hidden_var, w_var, G, chain eqn idxs, MlpSegment) or None —
+    the MlpSegment doubles as the superblock's run-time fallback plan for
+    its anchor projection.
+    """
+    jaxpr = ctx.jaxpr
+    if len(var.aval.shape) != 4:
+        return None
+    idxs: List[int] = []
+    pidx = ctx.producer_idx.get(var)
+    if pidx is None:
+        return None
+    eqn = jaxpr.eqns[pidx]
+    if (eqn.primitive.name != "transpose"
+            or tuple(eqn.params["permutation"]) != (0, 2, 1, 3)):
+        return None
+    idxs.append(pidx)
+    v = eqn.invars[0]  # (B, S, H, d)
+    if ctx.sole_consumer(v) != pidx:
+        return None
+    G = 1
+    pidx = ctx.producer_idx.get(v)
+    if pidx is None:
+        return None
+    eqn = jaxpr.eqns[pidx]
+    if eqn.primitive.name == "reshape":
+        rin = eqn.invars[0]
+        rs, os_ = tuple(_var_shape(rin)), tuple(v.aval.shape)
+        if (len(rs) == 5 and rs[:2] == os_[:2] and rs[4] == os_[3]
+                and rs[2] * rs[3] == os_[2] and not _is_literal(rin)):
+            if ctx.sole_consumer(rin) != pidx:
+                return None
+            idxs.append(pidx)
+            bidx = ctx.producer_idx.get(rin)
+            if bidx is None:
+                return None
+            beqn = jaxpr.eqns[bidx]
+            if (beqn.primitive.name != "broadcast_in_dim" or tuple(
+                    beqn.params["broadcast_dimensions"]) != (0, 1, 2, 4)):
+                return None
+            G = rs[3]
+            idxs.append(bidx)
+            v = beqn.invars[0]
+            if ctx.sole_consumer(v) != bidx:
+                return None
+            pidx = ctx.producer_idx.get(v)
+            if pidx is None:
+                return None
+            eqn = jaxpr.eqns[pidx]
+    if eqn.primitive.name != "dot_general":
+        return None
+    mseg = match_mlp_segment(ctx, pidx)
+    if (mseg is None or mseg.activation != "linear"
+            or mseg.bias_var is not None or mseg.out_var is not v
+            or len(mseg.w_var.aval.shape) != 3):
+        return None
+    idxs.append(pidx)
+    return mseg.lhs_var, mseg.w_var, G, idxs, mseg
+
+
+def _resolve_superblock(ctx: PlanContext, idx: int):
+    """Try to grow the attention block anchored at score dot ``idx`` into a
+    superblock. Returns ``(QKVAttentionSegment, None)`` on success, or
+    ``(None, reason)`` — the reason is non-None only when ``idx`` is a
+    genuine attention block that misses a superblock-specific requirement
+    (those fall back to the per-segment plan, and the reason becomes a plan
+    note)."""
+    core = _match_attention_core(ctx, idx)
+    if core is None:
+        return None, None
+    if len(core.q_var.aval.shape) != 4:
+        return None, "attention operands carry no head axis"
+    # the projected/transposed q/k/v must feed ONLY the attention dots:
+    # their producer chains are skipped when the superblock fuses, so any
+    # other consumer would read an unbound var (the per-segment attention
+    # matcher has no such constraint — it never skips its input producers)
+    if (ctx.sole_consumer(core.q_var) != idx
+            or ctx.sole_consumer(core.k_var) != idx
+            or ctx.sole_consumer(core.v_var) not in core.skip):
+        return None, "projected q/k/v escape the attention block"
+    qc = _proj_chain(ctx, core.q_var)
+    kc = _proj_chain(ctx, core.k_var)
+    vc = _proj_chain(ctx, core.v_var)
+    if qc is None or kc is None or vc is None:
+        missing = "/".join(n for n, c in zip("qkv", (qc, kc, vc))
+                           if c is None)
+        return None, f"{missing} projection chain not matched"
+    (h_q, wq, gq, qi, qm), (h_k, wk, gk, ki, km), (h_v, wv, gv, vi, vm) = \
+        qc, kc, vc
+    if not (h_q is h_k and h_q is h_v):
+        return None, "q/k/v projections read different activations"
+    if len(h_q.aval.shape) != 3:
+        return None, f"hidden bundle is rank {len(h_q.aval.shape)}, not " \
+                     f"(B, S, D)"
+    Hq = int(wq.aval.shape[1])
+    Hkv = int(wk.aval.shape[1])
+    if (gq != 1 or gk != gv or Hkv == 0 or Hq % Hkv or Hq // Hkv != gk
+            or int(wv.aval.shape[1]) != Hkv
+            or wq.aval.shape[2] != wk.aval.shape[2]):
+        return None, "projection shapes do not form a GQA block"
+    # the output projection: transpose (B,H,S,dv)->(B,S,H,dv), then a dot
+    # contracting (H, dv) with a rank-3 jet-constant Wo
+    t_idx = ctx.sole_consumer(core.out_var)
+    if t_idx is None:
+        return None, "no foldable output projection (Wo)"
+    teqn = ctx.jaxpr.eqns[t_idx]
+    if (teqn.primitive.name != "transpose"
+            or tuple(teqn.params["permutation"]) != (0, 2, 1, 3)):
+        return None, "no foldable output projection (Wo)"
+    o_idx = ctx.sole_consumer(teqn.outvars[0])
+    if o_idx is None:
+        return None, "no foldable output projection (Wo)"
+    oeqn = ctx.jaxpr.eqns[o_idx]
+    dv = int(wv.aval.shape[2])
+    if (oeqn.primitive.name != "dot_general"
+            or oeqn.invars[0] is not teqn.outvars[0]):
+        return None, "no foldable output projection (Wo)"
+    wo = oeqn.invars[1]
+    (lc, rc), (lb, rb) = oeqn.params["dimension_numbers"]
+    if (lb or rb or tuple(lc) != (2, 3) or tuple(rc) != (0, 1)
+            or _is_literal(wo) or len(wo.aval.shape) != 3
+            or tuple(wo.aval.shape[:2]) != (Hq, dv)):
+        return None, "no foldable output projection (Wo)"
+    # plan-time taint: a propagated projection weight can never fuse — keep
+    # today's per-segment plan instead of planning a doomed superblock
+    for name, w in (("Wq", wq), ("Wk", wk), ("Wv", wv), ("Wo", wo)):
+        if ctx.is_propagated(w):
+            return None, f"{name} carries a propagated jet (taint)"
+    skip = set(core.skip) | set(qi) | set(ki) | set(vi) | {t_idx, o_idx}
+    anchor = min(skip)
+    hoist = _hoist_closure(ctx, list(core.hoist_roots) + [wq, wk, wv, wo],
+                           anchor)
+    skip |= set(hoist)
+    # the anchor is always the earliest projection dot (everything else in
+    # the block consumes a projection); its MlpSegment becomes the run-time
+    # fallback so a rejected superblock degrades to exactly the per-segment
+    # plan — the other projections and the attention core keep their own
+    # plan entries (the matcher loop only skips the superblock's anchor).
+    fallback = {m.anchor: m for m in (qm, km, vm)}.get(anchor)
+    seg = QKVAttentionSegment(
+        anchor=anchor, out_var=oeqn.outvars[0], skip=skip, hoist=hoist,
+        hidden_var=h_q, wq_var=wq, wk_var=wk, wv_var=wv, wo_var=wo,
+        scale_var=core.scale_var, scale_op=core.scale_op,
+        mask_var=core.mask_var, bias_var=core.bias_var, heads=(Hq, Hkv),
+        fallback=fallback)
+    return seg, None
+
+
+# ---------------------------------------------------------------------------
+# drivers
 # ---------------------------------------------------------------------------
 
 
@@ -1042,16 +1547,36 @@ def interpret_collapsed_offload(closed_jaxpr, K: int,
     custom_jvp/vjp) re-enter it, so planning and fusion continue inside
     sub-jaxpr bodies.
     """
+    return _interpret_offload(closed_jaxpr, K, in_jets,
+                              interpret_collapsed_offload)
+
+
+def interpret_collapsed_offload_per_segment(closed_jaxpr, K: int,
+                                            in_jets: Sequence[CollapsedJet]):
+    """:func:`interpret_collapsed_offload` with the superblock pre-pass
+    disabled — exactly the per-segment plans of ``backend='pallas'`` before
+    superblocks existed. This is ``backend='pallas-per-segment'``, the
+    ablation driver the attention benchmarks compare against; plans are
+    cached under their own key, so mixing backends never cross-contaminates.
+    """
+    with _superblock_scope(False):
+        return _interpret_offload(closed_jaxpr, K, in_jets,
+                                  interpret_collapsed_offload_per_segment)
+
+
+def _interpret_offload(closed_jaxpr, K: int, in_jets, driver):
     plan = _plan_for(closed_jaxpr, K, in_jets)
     stack = _explain_stack()
     rec = stack[-1] if stack else None
+    run_plan = plan
     if rec is not None:
         sig = tuple(not j.is_constant() for j in in_jets)
         entry = rec._enter(closed_jaxpr.jaxpr, K, sig, current_via())
-        plan = {idx: _RecordedSegment(seg, entry)
-                for idx, seg in plan.items()}
-    with using_interpreter(interpret_collapsed_offload):
-        outs = interpret_with_plan(closed_jaxpr, K, in_jets, plan)
+        entry.notes = list(getattr(plan, "notes", ()))
+        run_plan = {idx: _RecordedSegment(seg, entry)
+                    for idx, seg in plan.items()}
+    with using_interpreter(driver):
+        outs = interpret_with_plan(closed_jaxpr, K, in_jets, run_plan)
     if rec is not None:
         entry._finish(closed_jaxpr.jaxpr, plan)
     return outs
@@ -1091,6 +1616,8 @@ class JaxprReport:
     segments: Dict[int, SegmentOutcome] = dataclasses.field(
         default_factory=dict)
     interpreted: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # plan-time notes: why attention blocks fell back to per-segment plans
+    notes: List[str] = dataclasses.field(default_factory=list)
 
     def fused(self, kind: Optional[str] = None) -> List[SegmentOutcome]:
         return [s for s in self.segments.values()
@@ -1149,6 +1676,8 @@ class PlanReport:
                 f"{e.visits} visit(s)")
             for oc in sorted(e.segments.values(), key=lambda s: s.anchor):
                 lines.append(f"    {oc}")
+            for note in e.notes:
+                lines.append(f"    note: {note}")
             if e.interpreted:
                 top = sorted(e.interpreted.items(),
                              key=lambda kv: (-kv[1], kv[0]))
@@ -1169,12 +1698,23 @@ class _RecordedSegment:
         return self._seg.skip
 
     def try_fuse(self, read, K, jaxpr):
-        out = self._seg.try_fuse(read, K, jaxpr)
+        res = self._seg.try_fuse(read, K, jaxpr)
         seg = self._seg
+        # a tuple means the segment itself did NOT fuse: it delegated to a
+        # smaller per-segment fallback (superblock -> anchor projection)
+        fused = res is not None and not isinstance(res, tuple)
+        detail = seg.describe()
+        if not fused:
+            why = getattr(seg, "fail_reason", "")
+            if isinstance(res, tuple):
+                why = (f"{why}; " if why else "") + \
+                    "degraded to the per-segment plan"
+            if why:
+                detail = f"{detail}; {why}" if detail else why
         self._entry.segments[seg.anchor] = SegmentOutcome(
             kind=seg.kind, anchor=seg.anchor, covered=len(seg.skip),
-            fused=out is not None, detail=seg.describe())
-        return out
+            fused=fused, detail=detail)
+        return res
 
 
 def _explain_stack() -> List[PlanReport]:
@@ -1184,17 +1724,26 @@ def _explain_stack() -> List[PlanReport]:
     return _dyn_stack("explain")
 
 
-def explain(f, *args, K: int = 2, directions=None) -> PlanReport:
-    """Dump the recursive offload plan for ``f`` under ``backend='pallas'``.
+def explain(f, *args, K: int = 2, directions=None,
+            backend: str = "pallas") -> PlanReport:
+    """Dump the recursive offload plan for ``f`` under ``backend``.
 
     Runs the offload interpreter *abstractly* (``jax.eval_shape`` — no
     kernel FLOPs) over a collapsed ``K``-jet of ``f(args[0], *args[1:])``,
     differentiated w.r.t. the first argument along ``directions`` (default:
     basis directions over the trailing axis, the Laplacian convention), and
-    reports per sub-jaxpr which segments matched, which fused, and what ran
-    on the interpreter — the assertion surface for "did my scanned backbone
-    actually fuse".
+    reports per sub-jaxpr which segments matched, which fused (with the
+    fallback reason when not), the plan notes (why attention blocks fell
+    back to per-segment plans), and what ran on the interpreter — the
+    assertion surface for "did my scanned backbone actually fuse".
+
+    ``backend``: 'pallas' (superblocks enabled) or 'pallas-per-segment'
+    (today's per-segment plans only).
     """
+    if backend not in ("pallas", "pallas-per-segment"):
+        raise ValueError(
+            f"explain() inspects offload plans; backend must be 'pallas' or "
+            f"'pallas-per-segment', got {backend!r}")
     if not args:
         raise TypeError("explain(f, *args) needs at least one argument")
     x = jnp.asarray(args[0]) if not hasattr(args[0], "aval") else args[0]
@@ -1212,7 +1761,7 @@ def explain(f, *args, K: int = 2, directions=None) -> PlanReport:
     stack.append(report)
     try:
         jax.eval_shape(
-            lambda xx, dd: collapsed_fan(fn, xx, dd, K, backend="pallas"),
+            lambda xx, dd: collapsed_fan(fn, xx, dd, K, backend=backend),
             x, directions)
     finally:
         stack.pop()

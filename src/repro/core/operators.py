@@ -18,12 +18,16 @@ and exact / stochastic variants. ``f`` maps ``(D,) -> ()``/``(C,)`` or a batch
 
 Every Taylor-mode operator also takes ``backend``: ``None``/"interpreter"
 runs the pure-jaxpr interpreter; "pallas" (method='collapsed' only) offloads
-MLP- and attention-shaped segments to the fused collapsed-jet Pallas kernels
-via :mod:`repro.core.offload` — no user-visible kernel calls needed. The
-offload engine is *recursive*: ``backend='pallas'`` is honored transitively
-inside ``scan``/``cond``/``while``/``pjit``/``remat`` bodies, so scanned
-layer stacks (``models/transformer.backbone``) fuse exactly like unrolled
-trunks. :func:`explain` dumps the resulting plan for inspection.
+MLP-, attention-, and whole-attention-*superblock*-shaped segments (q/k/v/o
+projections folded into the attention kernel, native GQA) to the fused
+collapsed-jet Pallas kernels via :mod:`repro.core.offload` — no
+user-visible kernel calls needed; "pallas-per-segment" (also
+method='collapsed' only) disables just the superblock matcher, one kernel
+per segment — the ablation the attention benchmarks compare against. The
+offload engine is *recursive*: the backend is honored transitively inside
+``scan``/``cond``/``while``/``pjit``/``remat`` bodies, so scanned layer
+stacks (``models/transformer.backbone``) fuse exactly like unrolled trunks.
+:func:`explain` dumps the resulting plan for inspection.
 """
 
 from __future__ import annotations
@@ -46,13 +50,17 @@ METHODS = ("nested", "standard", "collapsed", "rewrite")
 
 
 def _no_kernel_backend(method, backend):
-    """Non-collapsed methods cannot honor backend='pallas'; raise instead of
-    silently ignoring the knob."""
+    """Non-collapsed methods cannot honor the Pallas offload backends —
+    'pallas' (superblock fusion) and 'pallas-per-segment' alike implement
+    only the *collapsed* propagation; raise an actionable error instead of
+    silently ignoring the knob (or choking on an unknown backend string
+    deep inside the interpreter)."""
     if backend not in (None, "interpreter"):
         raise ValueError(
             f"backend={backend!r} requires method='collapsed' (the Pallas "
-            f"kernels implement the collapsed propagation), got "
-            f"method={method!r}")
+            f"kernels — per-segment and superblock offload alike — "
+            f"implement the collapsed propagation; valid backends are "
+            f"{BACKENDS}), got method={method!r}")
 
 
 def _broadcast_directions(dirs: jax.Array, x: jax.Array) -> jax.Array:
@@ -309,15 +317,19 @@ def linear_operator(
 # ---------------------------------------------------------------------------
 
 
-def explain(f: Callable, *args, K: int = 2, directions=None):
-    """Dump the recursive offload plan for ``f`` under ``backend='pallas'``:
-    per (sub-)jaxpr — including scan/cond/while bodies — which segments
-    matched, which fused, and what fell back to the CRULES interpreter.
-    Thin passthrough to :func:`repro.core.offload.explain` (lazy import so
-    interpreter-only users never pay the kernels' import cost)."""
+def explain(f: Callable, *args, K: int = 2, directions=None,
+            backend: str = "pallas"):
+    """Dump the recursive offload plan for ``f`` under ``backend`` ('pallas'
+    or the superblock-free 'pallas-per-segment'): per (sub-)jaxpr —
+    including scan/cond/while bodies — which segments matched, which fused
+    (superblocks labelled ``jet_attention_qkv``, with fallback reasons and
+    plan notes when an attention block stayed on per-segment plans), and
+    what fell back to the CRULES interpreter. Thin passthrough to
+    :func:`repro.core.offload.explain` (lazy import so interpreter-only
+    users never pay the kernels' import cost)."""
     from .offload import explain as _explain
 
-    return _explain(f, *args, K=K, directions=directions)
+    return _explain(f, *args, K=K, directions=directions, backend=backend)
 
 
 # ---------------------------------------------------------------------------

@@ -1,6 +1,6 @@
 """Block-size autotuner for the fused collapsed-jet Pallas kernels.
 
-Two kernels are tuned here:
+Three kernels are tuned here:
 
 * ``jet_mlp`` — grid ``(B/block_b, Dout/block_d, R/block_r)``; throughput is
   very sensitive to the block choice (VMEM residency of the W tile and the
@@ -9,17 +9,27 @@ Two kernels are tuned here:
   :func:`get_block_config` cover it.
 * ``jet_attention`` — grid ``(N, Sq/block_q, Skv/block_k)``; the lever is the
   VMEM residency of the per-coefficient online-softmax state vs. the size of
-  the ``(R, bQ, bK)`` score-series tiles.
+  the ``(R, bQ, bK)`` score-series tiles. Keys carry ``dv`` (the value head
+  dim) independently of ``dh`` — ``dv != dh`` blocks tune separately.
   :func:`attention_default_config` / :func:`attention_candidate_configs` /
   :func:`get_attention_block_config` cover it.
+* ``jet_attention_qkv`` — the superblock (q/k/v/o projections fused into the
+  attention kernel, grid ``(B, S/block_q, Hkv, S/block_k)``); keys are
+  ``(B, S, D, Hq, Hkv, dh, dv, Do, R)`` + K since the weight tiles and the
+  per-group ``G = Hq/Hkv`` query-head state share VMEM with the softmax
+  state. :func:`qkv_attention_default_config` /
+  :func:`qkv_attention_candidate_configs` /
+  :func:`get_qkv_attention_block_config` cover it.
 
-Both share one mechanism: a deterministic MXU-aligned heuristic used on CPU /
+All share one mechanism: a deterministic MXU-aligned heuristic used on CPU /
 interpret mode (where timing Pallas is meaningless) and as the timing
 fallback, plus a cached timing sweep on accelerators. Results are memoized
 in-process and persisted to a JSON cache file whose keys are *namespaced by
-kernel name* (``jet_mlp|…`` / ``jet_attention|…``) so the two kernels' block
-configs can never collide; legacy un-namespaced entries (written before the
-attention kernel existed, and necessarily jet_mlp's) are migrated on load.
+kernel name* (``jet_mlp|…`` / ``jet_attention|…`` / ``jet_attention_qkv|…``)
+so the kernels' block configs can never collide; legacy un-namespaced
+entries (written before the attention kernel existed, and necessarily
+jet_mlp's) are migrated on load, as are pre-``dv`` 5-dim ``jet_attention``
+keys (their only possible value head dim was ``dv = dh``).
 
 Cache location: ``$REPRO_AUTOTUNE_CACHE`` if set, else
 ``~/.cache/repro/autotune.json``.
@@ -57,7 +67,7 @@ class AttnBlockConfig(NamedTuple):
     block_k: int
 
 
-KERNELS = ("jet_mlp", "jet_attention")
+KERNELS = ("jet_mlp", "jet_attention", "jet_attention_qkv")
 
 _MEM_CACHE: Dict[str, tuple] = {}
 
@@ -74,14 +84,24 @@ def cache_path() -> str:
 
 
 def _migrate_key(key: str) -> str:
-    """Namespace a legacy (pre-jet_attention) cache key.
+    """Namespace/upgrade a legacy cache key.
 
-    Old keys look like ``"48x56x200x13|K2|float32|tpu"``; every entry written
-    back then belonged to the only kernel that existed, jet_mlp. Keys already
-    namespaced (``"<kernel>|…"``) pass through; unrecognizable keys are
-    dropped by the caller.
+    Two generations are migrated: un-namespaced keys like
+    ``"48x56x200x13|K2|float32|tpu"`` (written before the attention kernel
+    existed, necessarily jet_mlp's), and 5-dim ``jet_attention`` keys
+    ``"jet_attention|NxSqxSkvxdhxR|…"`` written before value head dims were
+    keyed — back then the kernel only supported ``dv = dh``, so ``dv`` is
+    inserted as a copy of ``dh``. Keys already in the current form pass
+    through; unrecognizable keys are dropped by the caller.
     """
-    head = key.split("|", 1)[0]
+    head, _, rest = key.partition("|")
+    if head == "jet_attention":
+        dims, sep, tail = rest.partition("|")
+        dims = dims.split("x")
+        if sep and len(dims) == 5 and all(d.isdigit() for d in dims):
+            dims = dims[:4] + [dims[3]] + dims[4:]  # insert dv = dh
+            return f"jet_attention|{'x'.join(dims)}|{tail}"
+        return key
     if head in KERNELS:
         return key
     if "x" in head and head.replace("x", "").isdigit():
@@ -133,9 +153,16 @@ def shape_key(B: int, Din: int, Dout: int, R: int, K: int, dtype,
     return _key(kernel, (B, Din, Dout, R), K, dtype, backend)
 
 
-def attention_shape_key(N: int, Sq: int, Skv: int, dh: int, R: int, K: int,
-                        dtype, backend: str) -> str:
-    return _key("jet_attention", (N, Sq, Skv, dh, R), K, dtype, backend)
+def attention_shape_key(N: int, Sq: int, Skv: int, dh: int, dv: int, R: int,
+                        K: int, dtype, backend: str) -> str:
+    return _key("jet_attention", (N, Sq, Skv, dh, dv, R), K, dtype, backend)
+
+
+def qkv_attention_shape_key(B: int, S: int, D: int, Hq: int, Hkv: int,
+                            dh: int, dv: int, do_: int, R: int, K: int,
+                            dtype, backend: str) -> str:
+    return _key("jet_attention_qkv", (B, S, D, Hq, Hkv, dh, dv, do_, R), K,
+                dtype, backend)
 
 
 def _pow2_le(n: int) -> int:
@@ -286,19 +313,19 @@ def put_config(B: int, Din: int, Dout: int, R: int, K: int, dtype,
 # ---------------------------------------------------------------------------
 
 
-def _attn_vmem_bytes(cfg: AttnBlockConfig, dh: int, R: int, K: int,
+def _attn_vmem_bytes(cfg: AttnBlockConfig, dh: int, dv: int, R: int, K: int,
                      itemsize: int = 4) -> int:
     """Working-set estimate for one jet-attention grid step: the q/k/v series
     tiles, the (R-stacked) score/exp series, and the online-softmax state."""
     bq, bk = cfg
     nser = 2 + (K - 1) * R  # primal + stacked lower coefficients + top
-    qkv = nser * (bq + 2 * bk) * dh
+    qkv = nser * ((bq + bk) * dh + bk * dv)
     scores = 2 * nser * bq * bk  # S and E series
-    state = nser * bq * (dh + 1) * 2  # u/l scratch + the dU/G temporaries
+    state = nser * bq * (dv + 1) * 2  # u/l scratch + the dU/G temporaries
     return (qkv + scores + state) * itemsize
 
 
-def attention_candidate_configs(Sq: int, Skv: int, dh: int, R: int,
+def attention_candidate_configs(Sq: int, Skv: int, dh: int, dv: int, R: int,
                                 K: int) -> Tuple[AttnBlockConfig, ...]:
     """MXU-aligned (bQ, bK) candidates, largest-first, VMEM-filtered."""
     q_cap = round_up(max(Sq, 1), _SUBLANE)
@@ -311,27 +338,30 @@ def attention_candidate_configs(Sq: int, Skv: int, dh: int, R: int,
             cfg = AttnBlockConfig(bq, bk)
             if bq % _SUBLANE or bk % _LANE:
                 continue
-            if _attn_vmem_bytes(cfg, round_up(dh, _LANE), R, K) > _VMEM_BUDGET:
+            if _attn_vmem_bytes(cfg, round_up(dh, _LANE),
+                                round_up(dv, _LANE), R, K) > _VMEM_BUDGET:
                 continue
             out.append(cfg)
     out.sort(key=lambda c: -c.block_q * c.block_k)
     return tuple(dict.fromkeys(out))
 
 
-def attention_default_config(Sq: int, Skv: int, dh: int, R: int,
+def attention_default_config(Sq: int, Skv: int, dh: int, dv: int, R: int,
                              K: int) -> AttnBlockConfig:
     """Deterministic MXU-aligned heuristic (no timing)."""
     bq = min(128, round_up(max(Sq, 1), _SUBLANE))
     bk = min(128, round_up(max(Skv, 1), _LANE))
     cfg = AttnBlockConfig(bq, bk)
-    while (_attn_vmem_bytes(cfg, round_up(dh, _LANE), R, K) > _VMEM_BUDGET
+    while (_attn_vmem_bytes(cfg, round_up(dh, _LANE), round_up(dv, _LANE),
+                            R, K) > _VMEM_BUDGET
            and cfg.block_q > _SUBLANE):
         cfg = cfg._replace(block_q=max(_SUBLANE, cfg.block_q // 2))
     return cfg
 
 
-def autotune_attention(N: int, Sq: int, Skv: int, dh: int, R: int, K: int,
-                       dtype, candidates: Optional[Sequence[AttnBlockConfig]]
+def autotune_attention(N: int, Sq: int, Skv: int, dh: int, dv: int, R: int,
+                       K: int, dtype,
+                       candidates: Optional[Sequence[AttnBlockConfig]]
                        = None) -> AttnBlockConfig:
     """Time the real fused attention kernel over aligned candidates."""
     import jax
@@ -340,9 +370,10 @@ def autotune_attention(N: int, Sq: int, Skv: int, dh: int, R: int, K: int,
     from repro.kernels.jet_attention.jet_attention import collapsed_jet_attention
 
     if candidates is None:
-        candidates = attention_candidate_configs(Sq, Skv, dh, R, K)
+        candidates = attention_candidate_configs(Sq, Skv, dh, dv, R, K)
     best_cfg, best_t = None, float("inf")
     dh_p = round_up(dh, _LANE)
+    dv_p = round_up(dv, _LANE)
     for cfg in candidates:
         bq, bk = cfg
         Sqp, Skp = round_up(Sq, bq), round_up(Skv, bk)
@@ -352,27 +383,29 @@ def autotune_attention(N: int, Sq: int, Skv: int, dh: int, R: int, K: int,
         ql = jnp.zeros((K - 1, R, N, Sqp, dh_p), dtype)
         k0 = jnp.zeros((N, Skp, dh_p), dtype)
         kl = jnp.zeros((K - 1, R, N, Skp, dh_p), dtype)
+        v0 = jnp.zeros((N, Skp, dv_p), dtype)
+        vl = jnp.zeros((K - 1, R, N, Skp, dv_p), dtype)
         try:
             fn = jax.jit(lambda m, a, al, b, bl, c, cl, _cfg=cfg:
                          collapsed_jet_attention(
                              m, a, al, a, b, bl, b, c, cl, c, K=K,
                              block_q=_cfg.block_q, block_k=_cfg.block_k))
-            t = _time_one(lambda: fn(mask, q0, ql, k0, kl, k0, kl))
+            t = _time_one(lambda: fn(mask, q0, ql, k0, kl, v0, vl))
         except Exception:  # unsupported block combo on this backend
             continue
         if t < best_t:
             best_cfg, best_t = cfg, t
-    return best_cfg or attention_default_config(Sq, Skv, dh, R, K)
+    return best_cfg or attention_default_config(Sq, Skv, dh, dv, R, K)
 
 
-def get_attention_block_config(N: int, Sq: int, Skv: int, dh: int, R: int,
-                               K: int, dtype,
+def get_attention_block_config(N: int, Sq: int, Skv: int, dh: int, dv: int,
+                               R: int, K: int, dtype,
                                interpret: bool = False) -> AttnBlockConfig:
     """Cached (bQ, bK) for a jet-attention shape (see get_block_config)."""
     import jax
 
     backend = "interpret" if interpret else jax.default_backend()
-    key = attention_shape_key(N, Sq, Skv, dh, R, K, np.dtype(dtype).name,
+    key = attention_shape_key(N, Sq, Skv, dh, dv, R, K, np.dtype(dtype).name,
                               backend)
     if key in _MEM_CACHE:
         return AttnBlockConfig(*_MEM_CACHE[key])
@@ -382,20 +415,171 @@ def get_attention_block_config(N: int, Sq: int, Skv: int, dh: int, R: int,
         _MEM_CACHE[key] = cfg
         return cfg
     if interpret or backend == "cpu":
-        cfg = attention_default_config(Sq, Skv, dh, R, K)
+        cfg = attention_default_config(Sq, Skv, dh, dv, R, K)
         _MEM_CACHE[key] = cfg  # heuristic: memoize but don't persist
         return cfg
-    cfg = autotune_attention(N, Sq, Skv, dh, R, K, dtype)
+    cfg = autotune_attention(N, Sq, Skv, dh, dv, R, K, dtype)
     _MEM_CACHE[key] = cfg
     disk[key] = list(cfg)
     save_cache(disk)
     return cfg
 
 
-def put_attention_config(N: int, Sq: int, Skv: int, dh: int, R: int, K: int,
-                         dtype, backend: str, cfg: AttnBlockConfig) -> None:
-    key = attention_shape_key(N, Sq, Skv, dh, R, K, np.dtype(dtype).name,
+def put_attention_config(N: int, Sq: int, Skv: int, dh: int, dv: int, R: int,
+                         K: int, dtype, backend: str,
+                         cfg: AttnBlockConfig) -> None:
+    key = attention_shape_key(N, Sq, Skv, dh, dv, R, K, np.dtype(dtype).name,
                               backend)
+    _MEM_CACHE[key] = AttnBlockConfig(*cfg)
+    disk = load_cache()
+    disk[key] = list(cfg)
+    save_cache(disk)
+
+
+# ---------------------------------------------------------------------------
+# jet_attention_qkv (superblock): (block_q, block_k) selection
+# ---------------------------------------------------------------------------
+
+
+def _qkv_vmem_bytes(cfg: AttnBlockConfig, D: int, Hq: int, Hkv: int, dh: int,
+                    dv: int, do_: int, R: int, K: int,
+                    itemsize: int = 4) -> int:
+    """Working-set estimate for one superblock grid step: the hidden-bundle
+    tiles, one kv group's weight tiles, the projected series for one query
+    head at a time, and the per-group softmax/output state. ``do_`` is the
+    output-projection dim (== D for residual blocks, but kept independent —
+    the Wo tile and the output accumulator scale with it)."""
+    bq, bk = cfg
+    G = max(Hq // max(Hkv, 1), 1)
+    nser = 2 + (K - 1) * R
+    hidden = nser * (bq + bk) * D
+    weights = G * D * dh + D * (dh + dv) + G * dv * do_
+    proj = nser * (bq * dh + bk * (dh + dv))
+    scores = 2 * nser * bq * bk
+    state = G * nser * bq * (dv + 1) + nser * bq * (dv + do_)
+    return (hidden + weights + proj + scores + state) * itemsize
+
+
+def qkv_attention_candidate_configs(S: int, D: int, Hq: int, Hkv: int,
+                                    dh: int, dv: int, do_: int, R: int,
+                                    K: int) -> Tuple[AttnBlockConfig, ...]:
+    """MXU-aligned (bQ, bK) candidates for the superblock, largest-first,
+    VMEM-filtered."""
+    q_cap = round_up(max(S, 1), _SUBLANE)
+    k_cap = round_up(max(S, 1), _LANE)
+    bqs = sorted({min(v, q_cap) for v in (8, 16, 32, 64, 128, 256)})
+    bks = sorted({min(v, k_cap) for v in (128, 256, 512)})
+    out = []
+    for bq in bqs:
+        for bk in bks:
+            cfg = AttnBlockConfig(bq, bk)
+            if bq % _SUBLANE or bk % _LANE:
+                continue
+            if _qkv_vmem_bytes(cfg, round_up(D, _LANE), Hq, Hkv,
+                               round_up(dh, _LANE), round_up(dv, _LANE),
+                               round_up(do_, _LANE), R, K) > _VMEM_BUDGET:
+                continue
+            out.append(cfg)
+    out.sort(key=lambda c: -c.block_q * c.block_k)
+    return tuple(dict.fromkeys(out))
+
+
+def qkv_attention_default_config(S: int, D: int, Hq: int, Hkv: int, dh: int,
+                                 dv: int, do_: int, R: int,
+                                 K: int) -> AttnBlockConfig:
+    """Deterministic MXU-aligned heuristic (no timing)."""
+    bq = min(128, round_up(max(S, 1), _SUBLANE))
+    bk = min(128, round_up(max(S, 1), _LANE))
+    cfg = AttnBlockConfig(bq, bk)
+    while (_qkv_vmem_bytes(cfg, round_up(D, _LANE), Hq, Hkv,
+                           round_up(dh, _LANE), round_up(dv, _LANE),
+                           round_up(do_, _LANE), R, K) > _VMEM_BUDGET
+           and cfg.block_q > _SUBLANE):
+        cfg = cfg._replace(block_q=max(_SUBLANE, cfg.block_q // 2))
+    return cfg
+
+
+def autotune_qkv_attention(B: int, S: int, D: int, Hq: int, Hkv: int,
+                           dh: int, dv: int, do_: int, R: int, K: int,
+                           dtype,
+                           candidates: Optional[Sequence[AttnBlockConfig]]
+                           = None) -> AttnBlockConfig:
+    """Time the real fused superblock kernel over aligned candidates."""
+    import jax
+    import jax.numpy as jnp
+    import math as _math
+
+    from repro.kernels.jet_attention.jet_attention import (
+        collapsed_jet_qkv_attention)
+
+    if candidates is None:
+        candidates = qkv_attention_candidate_configs(S, D, Hq, Hkv, dh, dv,
+                                                     do_, R, K)
+    best_cfg, best_t = None, float("inf")
+    G = max(Hq // max(Hkv, 1), 1)
+    D_p = round_up(D, _LANE)
+    dh_p = round_up(dh, _LANE)
+    dv_p = round_up(dv, _LANE)
+    do_p = round_up(do_, _LANE)
+    for cfg in candidates:
+        bq, bk = cfg
+        Sp = round_up(S, _math.lcm(bq, bk))
+        mask = jnp.ones((Sp, Sp), jnp.float32)
+        h0 = jnp.zeros((B, Sp, D_p), dtype)
+        hl = jnp.zeros((K - 1, R, B, Sp, D_p), dtype)
+        wq = jnp.zeros((Hkv, G, D_p, dh_p), dtype)
+        wk = jnp.zeros((Hkv, D_p, dh_p), dtype)
+        wv = jnp.zeros((Hkv, D_p, dv_p), dtype)
+        wo = jnp.zeros((Hkv, G, dv_p, do_p), dtype)
+        try:
+            fn = jax.jit(lambda m, a, al, q, k, v, o, _cfg=cfg:
+                         collapsed_jet_qkv_attention(
+                             m, a, al, a, q, k, v, o, K=K,
+                             block_q=_cfg.block_q, block_k=_cfg.block_k))
+            t = _time_one(lambda: fn(mask, h0, hl, wq, wk, wv, wo))
+        except Exception:  # unsupported block combo on this backend
+            continue
+        if t < best_t:
+            best_cfg, best_t = cfg, t
+    return best_cfg or qkv_attention_default_config(S, D, Hq, Hkv, dh, dv,
+                                                    do_, R, K)
+
+
+def get_qkv_attention_block_config(B: int, S: int, D: int, Hq: int, Hkv: int,
+                                   dh: int, dv: int, do_: int, R: int,
+                                   K: int, dtype,
+                                   interpret: bool = False
+                                   ) -> AttnBlockConfig:
+    """Cached (bQ, bK) for a superblock shape (see get_block_config)."""
+    import jax
+
+    backend = "interpret" if interpret else jax.default_backend()
+    key = qkv_attention_shape_key(B, S, D, Hq, Hkv, dh, dv, do_, R, K,
+                                  np.dtype(dtype).name, backend)
+    if key in _MEM_CACHE:
+        return AttnBlockConfig(*_MEM_CACHE[key])
+    disk = load_cache()
+    if key in disk:
+        cfg = AttnBlockConfig(*disk[key])
+        _MEM_CACHE[key] = cfg
+        return cfg
+    if interpret or backend == "cpu":
+        cfg = qkv_attention_default_config(S, D, Hq, Hkv, dh, dv, do_, R, K)
+        _MEM_CACHE[key] = cfg  # heuristic: memoize but don't persist
+        return cfg
+    cfg = autotune_qkv_attention(B, S, D, Hq, Hkv, dh, dv, do_, R, K, dtype)
+    _MEM_CACHE[key] = cfg
+    disk[key] = list(cfg)
+    save_cache(disk)
+    return cfg
+
+
+def put_qkv_attention_config(B: int, S: int, D: int, Hq: int, Hkv: int,
+                             dh: int, dv: int, do_: int, R: int, K: int,
+                             dtype, backend: str,
+                             cfg: AttnBlockConfig) -> None:
+    key = qkv_attention_shape_key(B, S, D, Hq, Hkv, dh, dv, do_, R, K,
+                                  np.dtype(dtype).name, backend)
     _MEM_CACHE[key] = AttnBlockConfig(*cfg)
     disk = load_cache()
     disk[key] = list(cfg)
@@ -421,7 +605,8 @@ def prewarm(kernel: str, dims: Sequence[int], K: int, dtype,
     the timing sweep runs at plan time, before the scan body is traced;
     the first loop iteration then hits a warm cache instead of time-sweeping
     mid-trace. ``dims``: (B, Din, Dout, R) for ``jet_mlp``;
-    (N, Sq, Skv, dh, R) for ``jet_attention``.
+    (N, Sq, Skv, dh, dv, R) for ``jet_attention``;
+    (B, S, D, Hq, Hkv, dh, dv, Do, R) for ``jet_attention_qkv``.
     """
     import jax
 
@@ -435,4 +620,7 @@ def prewarm(kernel: str, dims: Sequence[int], K: int, dtype,
     if kernel == "jet_attention":
         return get_attention_block_config(*dims, K, dtype,
                                           interpret=interpret)
+    if kernel == "jet_attention_qkv":
+        return get_qkv_attention_block_config(*dims, K, dtype,
+                                              interpret=interpret)
     raise ValueError(f"unknown kernel {kernel!r}; have {KERNELS}")

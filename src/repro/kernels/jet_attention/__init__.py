@@ -1,13 +1,20 @@
-"""Fused collapsed-K-jet attention (q·kᵀ → softmax → ·v in one pass).
+"""Fused collapsed-K-jet attention (q·kᵀ → softmax → ·v in one pass), and
+the *superblock* variant that also fuses the q/k/v/o projections (native
+GQA, ``dv != dh``) so a transformer block reads its hidden bundle from HBM
+once.
 
-``jet_attention.py`` is the Pallas kernel (FlashAttention-2-style streaming
-softmax with online-softmax state *per Taylor coefficient*), ``ref.py`` the
-pure-jnp unfused oracle, ``ops.py`` the padded/jit'd/differentiable boundary
-the offload dispatcher (:mod:`repro.core.offload`) calls into — lowering per
-platform: the kernel on accelerators, the oracle as one fused XLA graph on
-CPU — and ``series.py`` the symbolic-zero-aware collapsed-series algebra all
+``jet_attention.py`` holds the Pallas kernels (FlashAttention-2-style
+streaming softmax with online-softmax state *per Taylor coefficient*; the
+superblock adds in-VMEM projections and per-group query-head state),
+``ref.py`` the pure-jnp unfused oracles, ``ops.py`` the
+padded/jit'd/differentiable boundary the offload dispatcher
+(:mod:`repro.core.offload`) calls into — lowering per platform: the kernels
+on accelerators, the oracles as one fused XLA graph on CPU — and
+``series.py`` the symbolic-zero-aware collapsed-series algebra all
 executions share.
 """
 
-from .ops import collapsed_jet_attention_op  # noqa: F401
-from .ref import collapsed_jet_attention_ref  # noqa: F401
+from .ops import (collapsed_jet_attention_op,  # noqa: F401
+                  collapsed_jet_qkv_attention_op)
+from .ref import (collapsed_jet_attention_ref,  # noqa: F401
+                  collapsed_jet_qkv_attention_ref)

@@ -1,6 +1,9 @@
-"""Pallas TPU kernel: fused collapsed-K-jet attention (FlashAttention-2-style
+"""Pallas TPU kernels: fused collapsed-K-jet attention (FlashAttention-2-style
 streaming softmax propagating a collapsed Taylor bundle through
-``q·kᵀ → softmax → ·v`` in one pass).
+``q·kᵀ → softmax → ·v`` in one pass), plus the *superblock* variant that
+also computes the q/k/v projections (and the output projection) tile-by-tile
+in VMEM — one HBM read of the hidden bundle and one write of the projected
+output per transformer block, instead of a round-trip per segment.
 
 Collapsed Taylor mode for an attention block carries, per operand, the bundle
 ``(x0, lower[1..K-1] (R-stacked), top = sum_r x_{K,r})``. Unfused, the CRULES
@@ -31,12 +34,28 @@ coefficients — the interpreter's ``select_n`` rule, which makes a fully
 user-masked row normalize uniformly over its real keys, exactly like the
 reference), and ``-1`` = padding (score ``-inf``: contributes nothing under
 any row max, so ops.py's block padding never leaks into the normalizer).
+An optional jet-constant additive score bias (ALiBi-style) rides the grid
+the same way and shifts only the primal scores, before the mask fill.
 A KV block with no live entry skips its MXU work once every row of the
 q-tile has seen a live key (then its masked entries would contribute exact
 zeros); until then it is processed so that potentially-fully-masked rows
 keep interpreter semantics. Block sizes come from
 :mod:`repro.kernels.autotune` (namespaced ``jet_attention`` cache entries);
 callers pad via ops.py.
+
+The **superblock** kernel (:func:`collapsed_jet_qkv_attention`) extends the
+grid to ``(B, Sq/bQ, Hkv, Skv/bK)``: each step reads (bQ/bK)-row tiles of
+the *pre-projection* hidden bundle, applies the jet-constant ``Wq/Wk/Wv``
+weights coefficient-wise in VMEM (a jet-constant linear map commutes with
+the propagation), and runs the same streaming-softmax jet propagation. GQA
+is native: the grid iterates kv-head *groups*, the k/v jets of a group are
+projected once per tile and shared by its ``G = Hq/Hkv`` query heads (a
+static in-kernel loop with per-``g`` online-softmax state) — nothing is ever
+broadcast to ``Hq`` in HBM, and ``dv != dh`` is supported throughout. The
+output projection ``Wo`` is folded too: each group's heads contract their
+output series with their ``Wo`` slice and accumulate into the (revisited)
+output block across the ``Hkv`` grid axis, so the block writes exactly one
+``(B, S, Do)`` bundle to HBM.
 """
 
 from __future__ import annotations
@@ -47,7 +66,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .series import bilinear_series, exp_series, reciprocal_series
+from .series import bilinear_series, exp_series, map_series, reciprocal_series
 
 try:  # TPU-specific memory spaces; interpret mode works without them
     from jax.experimental.pallas import tpu as pltpu
@@ -123,10 +142,25 @@ def _masked_series(x0_ref, xl_ref, xt_ref, zero, K):
     return [x0_ref[0].astype(f32)] + lower + [top]
 
 
-def _kernel(mask_ref, q0_ref, ql_ref, qt_ref, k0_ref, kl_ref, kt_ref,
-            v0_ref, vl_ref, vt_ref, o0_ref, ol_ref, ot_ref,
-            m_s, l0_s, ll_s, lt_s, u0_s, ul_s, ut_s, *, nk: int, K: int,
-            qzero, kzero, vzero):
+def _mask_scores(S, mb, bias):
+    """Bias + tri-state mask on a score series (shared by both kernels)."""
+    if bias is not None:  # jet-constant: shifts only the primal scores
+        S[0] = S[0] + bias
+    S[0] = jnp.where(mb > 0, S[0], NEG_INF)
+    S[0] = jnp.where(mb < 0, -jnp.inf, S[0])  # padding: dead at any max
+    live01 = jnp.maximum(mb, 0.0)
+    S[1:] = [None if c is None else c * live01 for c in S[1:]]
+    return S
+
+
+def _kernel(mask_ref, *rest, nk: int, K: int, qzero, kzero, vzero,
+            has_bias: bool):
+    bias_ref = None
+    if has_bias:
+        bias_ref, *rest = rest
+    (q0_ref, ql_ref, qt_ref, k0_ref, kl_ref, kt_ref,
+     v0_ref, vl_ref, vt_ref, o0_ref, ol_ref, ot_ref,
+     m_s, l0_s, ll_s, lt_s, u0_s, ul_s, ut_s) = rest
     j = pl.program_id(2)
 
     @pl.when(j == 0)
@@ -149,10 +183,7 @@ def _kernel(mask_ref, q0_ref, ql_ref, qt_ref, k0_ref, kl_ref, kt_ref,
         V = _masked_series(v0_ref, vl_ref, vt_ref, vzero, K)
 
         S = bilinear_series(Q, Kc, K, _qk_prod)
-        S[0] = jnp.where(mb > 0, S[0], NEG_INF)
-        S[0] = jnp.where(mb < 0, -jnp.inf, S[0])  # padding: dead at any max
-        live01 = jnp.maximum(mb, 0.0)
-        S[1:] = [None if c is None else c * live01 for c in S[1:]]
+        S = _mask_scores(S, mb, None if bias_ref is None else bias_ref[...])
 
         m_prev = m_s[...]
         m_new = jnp.maximum(m_prev, S[0].max(axis=-1))
@@ -198,7 +229,7 @@ def _kernel(mask_ref, q0_ref, ql_ref, qt_ref, k0_ref, kl_ref, kt_ref,
 def collapsed_jet_attention(mask, q0, ql, qt, k0, kl, kt, v0, vl, vt, *,
                             K: int = 2, block_q: int = 128, block_k: int = 128,
                             interpret: bool = False,
-                            qzero=None, kzero=None, vzero=None):
+                            qzero=None, kzero=None, vzero=None, bias=None):
     """One fused collapsed-K-jet attention block.
 
     mask: (Sq, Skv) tri-state float (see module docstring), shared across N;
@@ -206,9 +237,11 @@ def collapsed_jet_attention(mask, q0, ql, qt, k0, kl, kt, v0, vl, vt, *,
     ``qzero``/``kzero``/``vzero`` are optional static (K+1)-tuples flagging
     symbolically-zero coefficient channels (index 0 = primal, 1..K-1 =
     lower, K = top); flagged channels must be zero-filled and their MXU work
-    is skipped. Sq/Skv must be pre-padded to the block sizes (ops.py handles
-    padding, scale folding, zero specs and block selection via the
-    autotuner). Returns (o0, ol (K-1, R, N, Sq, dh), ot) in q0's dtype.
+    is skipped. ``bias``: optional (Sq, Skv) jet-constant additive score
+    bias (ALiBi-style), shared across N like the mask. Sq/Skv must be
+    pre-padded to the block sizes (ops.py handles padding, scale folding,
+    zero specs and block selection via the autotuner). Returns
+    (o0, ol (K-1, R, N, Sq, dv), ot) in q0's dtype.
     """
     if K < 2:
         raise ValueError(f"collapsed jets need K >= 2, got {K}")
@@ -226,7 +259,7 @@ def collapsed_jet_attention(mask, q0, ql, qt, k0, kl, kt, v0, vl, vt, *,
     nk = grid[2]
 
     kernel = functools.partial(_kernel, nk=nk, K=K, qzero=qzero, kzero=kzero,
-                               vzero=vzero)
+                               vzero=vzero, has_bias=bias is not None)
 
     def series_specs(b, d, kv):
         idx = ((lambda n, i, j: (n, j, 0)) if kv
@@ -239,6 +272,8 @@ def collapsed_jet_attention(mask, q0, ql, qt, k0, kl, kt, v0, vl, vt, *,
             pl.BlockSpec((1, b, d), idx),
         ]
 
+    score_spec = pl.BlockSpec((block_q, block_k), lambda n, i, j: (i, j))
+    bias_ops = () if bias is None else (bias,)
     out_shapes = (
         jax.ShapeDtypeStruct((N, Sq, dv), q0.dtype),
         jax.ShapeDtypeStruct((K - 1, R, N, Sq, dv), q0.dtype),
@@ -248,7 +283,8 @@ def collapsed_jet_attention(mask, q0, ql, qt, k0, kl, kt, v0, vl, vt, *,
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_q, block_k), lambda n, i, j: (i, j)),
+            score_spec,
+            *((score_spec,) if bias is not None else ()),
             *series_specs(block_q, dh, kv=False),
             *series_specs(block_k, dh, kv=True),
             *series_specs(block_k, dv, kv=True),
@@ -265,10 +301,202 @@ def collapsed_jet_attention(mask, q0, ql, qt, k0, kl, kt, v0, vl, vt, *,
             _scratch((block_q, dv)),
         ],
         interpret=interpret,
-    )(mask, q0, ql, qt, k0, kl, kt, v0, vl, vt)
+    )(mask, *bias_ops, q0, ql, qt, k0, kl, kt, v0, vl, vt)
 
 
 def _scratch(shape):
     if pltpu is not None:
         return pltpu.VMEM(shape, jnp.float32)
     return pl.MemoryRef(shape, jnp.float32, pl.ANY)  # pragma: no cover
+
+
+# ---------------------------------------------------------------------------
+# superblock: q/k/v/o projections fused into the attention kernel
+# ---------------------------------------------------------------------------
+
+
+def _proj(c, w):
+    """Project one hidden-series coefficient tile through a (D, d) weight
+    tile: (.., b, D) x (D, d) -> (.., b, d)."""
+    return _dot(c, w, ((c.ndim - 1,), (0,)))
+
+
+def _qkv_kernel(mask_ref, *rest, nk: int, K: int, G: int, hzero,
+                has_bias: bool):
+    bias_ref = None
+    if has_bias:
+        bias_ref, *rest = rest
+    (h0q_ref, hlq_ref, htq_ref, h0k_ref, hlk_ref, htk_ref,
+     wq_ref, wk_ref, wv_ref, wo_ref, o0_ref, ol_ref, ot_ref,
+     m_s, l0_s, ll_s, lt_s, u0_s, ul_s, ut_s) = rest
+    h = pl.program_id(2)
+    j = pl.program_id(3)
+    f32 = jnp.float32
+
+    @pl.when(j == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        for ref in (l0_s, ll_s, lt_s, u0_s, ul_s, ut_s):
+            ref[...] = jnp.zeros_like(ref)
+
+    mb = mask_ref[...]
+    rows_started = jnp.all(m_s[...] > 0.5 * NEG_INF)
+    live = jnp.any(mb >= 0) & (jnp.any(mb > 0) | ~rows_started)
+
+    @pl.when(live)
+    def _compute():
+        Hq = _masked_series(h0q_ref, hlq_ref, htq_ref, hzero, K)
+        Hk = _masked_series(h0k_ref, hlk_ref, htk_ref, hzero, K)
+        # k/v jets are materialized ONCE per kv group and shared by its G
+        # query heads — the HBM-free analogue of the GQA broadcast.
+        wk = wk_ref[0].astype(f32)
+        wv = wv_ref[0].astype(f32)
+        Kc = map_series(Hk, lambda c: _proj(c, wk))
+        V = map_series(Hk, lambda c: _proj(c, wv))
+        bias = None if bias_ref is None else bias_ref[...]
+        for g in range(G):
+            wq = wq_ref[0, g].astype(f32)
+            Q = map_series(Hq, lambda c: _proj(c, wq))
+            S = bilinear_series(Q, Kc, K, _qk_prod)
+            S = _mask_scores(S, mb, bias)
+
+            m_prev = m_s[g]
+            m_new = jnp.maximum(m_prev, S[0].max(axis=-1))
+            corr = jnp.exp(m_prev - m_new)
+            e0 = jnp.exp(S[0] - m_new[:, None])
+            E = exp_series(e0, S, K)
+            dU = bilinear_series(E, V, K, _ev_prod)
+
+            l0_s[g] = l0_s[g] * corr + E[0].sum(axis=-1)
+            u0_s[g] = u0_s[g] * corr[:, None] + dU[0]
+            if E[K] is not None:
+                lt_s[g] = lt_s[g] * corr + E[K].sum(axis=-1)
+            if dU[K] is not None:
+                ut_s[g] = ut_s[g] * corr[:, None] + dU[K]
+            for q in range(1, K):
+                if E[q] is not None:
+                    ll_s[q - 1, :, g] = ll_s[q - 1, :, g] * corr[None, :] \
+                        + E[q].sum(axis=-1)
+                if dU[q] is not None:
+                    ul_s[q - 1, :, g] = ul_s[q - 1, :, g] * corr[None, :, None] \
+                        + dU[q]
+            m_s[g] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finish():
+        # contract every head's output series with its Wo slice and sum the
+        # group's contribution; the output block is revisited across the Hkv
+        # grid axis (its index map ignores h), so groups accumulate in VMEM
+        # and one (B, S, Do) bundle is written to HBM per block.
+        acc = None
+        for g in range(G):
+            l0 = jnp.maximum(l0_s[g], 1.0)
+            L = [l0] + [ll_s[q - 1, :, g] for q in range(1, K)] + [lt_s[g]]
+            U = [u0_s[g]] + [ul_s[q - 1, :, g] for q in range(1, K)] \
+                + [ut_s[g]]
+            Gs = reciprocal_series(L, K)
+            O = bilinear_series(U, Gs, K, _ug_prod)
+            wo = wo_ref[0, g].astype(jnp.float32)
+            contrib = [_proj(c, wo) for c in O]
+            acc = contrib if acc is None else [a + c for a, c in
+                                               zip(acc, contrib)]
+
+        @pl.when(h == 0)
+        def _write():
+            o0_ref[0, ...] = acc[0].astype(o0_ref.dtype)
+            ot_ref[0, ...] = acc[K].astype(ot_ref.dtype)
+            for q in range(1, K):
+                ol_ref[q - 1, :, 0, ...] = acc[q].astype(ol_ref.dtype)
+
+        @pl.when(h > 0)
+        def _accumulate():
+            o0_ref[0, ...] += acc[0].astype(o0_ref.dtype)
+            ot_ref[0, ...] += acc[K].astype(ot_ref.dtype)
+            for q in range(1, K):
+                ol_ref[q - 1, :, 0, ...] += acc[q].astype(ol_ref.dtype)
+
+
+def collapsed_jet_qkv_attention(mask, h0, hl, ht, wq, wk, wv, wo, *,
+                                K: int = 2, block_q: int = 128,
+                                block_k: int = 128, interpret: bool = False,
+                                hzero=None, bias=None):
+    """One fused *superblock*: q/k/v projections + GQA attention + output
+    projection of a self-attention block, from one hidden-bundle read.
+
+    mask/bias: (S, S) as in :func:`collapsed_jet_attention`, shared across
+    batch and heads; h0/ht: (B, S, D); hl: (K-1, R, B, S, D);
+    wq: (Hkv, G, D, dh) (pre-scaled — fold the softmax scale in);
+    wk: (Hkv, D, dh); wv: (Hkv, D, dv); wo: (Hkv, G, dv, Do). ``hzero`` is
+    the hidden bundle's static symbolic-zero spec (shared by q/k/v since all
+    three are projections of the same series). S must be pre-padded to a
+    common multiple of both block sizes (ops.py). Returns
+    (o0 (B, S, Do), ol (K-1, R, B, S, Do), ot) in h0's dtype, summed over
+    all ``Hkv * G`` heads.
+    """
+    if K < 2:
+        raise ValueError(f"collapsed jets need K >= 2, got {K}")
+    if hl.shape[0] != K - 1:
+        raise ValueError(f"hl leading dim {hl.shape[0]} != K-1 = {K - 1}")
+    hzero = tuple(hzero) if hzero is not None else (False,) * (K + 1)
+    B, S, D = h0.shape
+    R = hl.shape[1]
+    Hkv, G, _, dh = wq.shape
+    dv = wv.shape[2]
+    Do = wo.shape[3]
+    assert S % block_q == 0 and S % block_k == 0
+    grid = (B, S // block_q, Hkv, S // block_k)
+    nk = grid[3]
+
+    kernel = functools.partial(_qkv_kernel, nk=nk, K=K, G=G, hzero=hzero,
+                               has_bias=bias is not None)
+
+    def hidden_specs(b, kv):
+        idx = ((lambda n, i, h, j: (n, j, 0)) if kv
+               else (lambda n, i, h, j: (n, i, 0)))
+        lidx = ((lambda n, i, h, j: (0, 0, n, j, 0)) if kv
+                else (lambda n, i, h, j: (0, 0, n, i, 0)))
+        return [
+            pl.BlockSpec((1, b, D), idx),
+            pl.BlockSpec((K - 1, R, 1, b, D), lidx),
+            pl.BlockSpec((1, b, D), idx),
+        ]
+
+    score_spec = pl.BlockSpec((block_q, block_k), lambda n, i, h, j: (i, j))
+    out_idx = lambda n, i, h, j: (n, i, 0)
+    out_lidx = lambda n, i, h, j: (0, 0, n, i, 0)
+    bias_ops = () if bias is None else (bias,)
+    out_shapes = (
+        jax.ShapeDtypeStruct((B, S, Do), h0.dtype),
+        jax.ShapeDtypeStruct((K - 1, R, B, S, Do), h0.dtype),
+        jax.ShapeDtypeStruct((B, S, Do), h0.dtype),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            score_spec,
+            *((score_spec,) if bias is not None else ()),
+            *hidden_specs(block_q, kv=False),
+            *hidden_specs(block_k, kv=True),
+            pl.BlockSpec((1, G, D, dh), lambda n, i, h, j: (h, 0, 0, 0)),
+            pl.BlockSpec((1, D, dh), lambda n, i, h, j: (h, 0, 0)),
+            pl.BlockSpec((1, D, dv), lambda n, i, h, j: (h, 0, 0)),
+            pl.BlockSpec((1, G, dv, Do), lambda n, i, h, j: (h, 0, 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, block_q, Do), out_idx),
+            pl.BlockSpec((K - 1, R, 1, block_q, Do), out_lidx),
+            pl.BlockSpec((1, block_q, Do), out_idx),
+        ),
+        out_shape=out_shapes,
+        scratch_shapes=[
+            _scratch((G, block_q)),
+            _scratch((G, block_q)),
+            _scratch((K - 1, R, G, block_q)),
+            _scratch((G, block_q)),
+            _scratch((G, block_q, dv)),
+            _scratch((K - 1, R, G, block_q, dv)),
+            _scratch((G, block_q, dv)),
+        ],
+        interpret=interpret,
+    )(mask, *bias_ops, h0, hl, ht, h0, hl, ht, wq, wk, wv, wo)

@@ -1,17 +1,20 @@
-"""Jit'd wrappers for the fused collapsed-jet attention kernel.
+"""Jit'd wrappers for the fused collapsed-jet attention kernels.
 
 This is the boundary the offload dispatcher (:mod:`repro.core.offload`)
 calls into: batch-shape flattening, scale folding (a jet-constant softmax
-scale is linear, so it multiplies every q coefficient), symbolic-zero
-coefficient instantiation, padding to the autotuned ``(bQ, bK)`` blocks with
-the padding folded into the mask, and a custom VJP whose backward re-runs
-the unfused reference (:mod:`.ref`) under ``jax.vjp`` — exactly the graph
-XLA would differentiate, so ``backend='pallas'`` composes with ``jax.grad``
-training losses.
+scale is linear, so it multiplies every q coefficient — or, for the
+superblock, the ``Wq`` weight), symbolic-zero coefficient instantiation,
+padding to the autotuned blocks with the padding folded into the mask, and
+custom VJPs whose backwards re-run the unfused references (:mod:`.ref`)
+under ``jax.vjp`` — exactly the graphs XLA would differentiate, so
+``backend='pallas'`` composes with ``jax.grad`` training losses (including
+gradients w.r.t. the jet-constant q/k/v/o projection weights and additive
+score biases of the superblock).
 """
 
 from __future__ import annotations
 
+import math
 from functools import partial
 
 import jax
@@ -20,8 +23,8 @@ import numpy as np
 
 from repro.kernels import autotune
 
-from .jet_attention import collapsed_jet_attention
-from .ref import collapsed_jet_attention_ref
+from .jet_attention import collapsed_jet_attention, collapsed_jet_qkv_attention
+from .ref import collapsed_jet_attention_ref, collapsed_jet_qkv_attention_ref
 
 _LANE = 128
 _SUBLANE = 8
@@ -41,38 +44,41 @@ def _pad_axis(x, axis, mult):
     return jnp.pad(x, widths)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(10, 11, 12, 13, 14))
-def _fused(mask, q0, ql, qt, k0, kl, kt, v0, vl, vt, K, block_q, block_k,
-           interpret, zeros):
+@partial(jax.custom_vjp, nondiff_argnums=(11, 12, 13, 14, 15))
+def _fused(mask, bias, q0, ql, qt, k0, kl, kt, v0, vl, vt, K, block_q,
+           block_k, interpret, zeros):
     qzero, kzero, vzero = zeros
     return collapsed_jet_attention(
         mask, q0, ql, qt, k0, kl, kt, v0, vl, vt, K=K,
         block_q=block_q, block_k=block_k, interpret=interpret,
-        qzero=qzero, kzero=kzero, vzero=vzero,
+        qzero=qzero, kzero=kzero, vzero=vzero, bias=bias,
     )
 
 
-def _fused_fwd(mask, q0, ql, qt, k0, kl, kt, v0, vl, vt, K, block_q, block_k,
-               interpret, zeros):
-    out = _fused(mask, q0, ql, qt, k0, kl, kt, v0, vl, vt, K, block_q,
+def _fused_fwd(mask, bias, q0, ql, qt, k0, kl, kt, v0, vl, vt, K, block_q,
+               block_k, interpret, zeros):
+    out = _fused(mask, bias, q0, ql, qt, k0, kl, kt, v0, vl, vt, K, block_q,
                  block_k, interpret, zeros)
-    return out, (mask, q0, ql, qt, k0, kl, kt, v0, vl, vt)
+    return out, (mask, bias, q0, ql, qt, k0, kl, kt, v0, vl, vt)
 
 
 def _fused_bwd(K, block_q, block_k, interpret, zeros, res, g):
-    mask, *jets = res
-    _, vjp = jax.vjp(
-        lambda *a: collapsed_jet_attention_ref(
-            *a, K=K, mask=mask > 0, valid=mask >= 0), *jets
-    )
-    return (jnp.zeros_like(mask), *vjp(g))
+    mask, bias, *jets = res
+
+    def ref_fn(bias_, *a):
+        return collapsed_jet_attention_ref(
+            *a, K=K, mask=mask > 0, valid=mask >= 0, bias=bias_)
+
+    _, vjp = jax.vjp(ref_fn, bias, *jets)
+    dbias, *djets = vjp(g)
+    return (jnp.zeros_like(mask), dbias, *djets)
 
 
 _fused.defvjp(_fused_fwd, _fused_bwd)
 
 
-def prewarm_blocks(batch_shape, Sq: int, Skv: int, dh: int, R: int, K: int,
-                   dtype, interpret=None):
+def prewarm_blocks(batch_shape, Sq: int, Skv: int, dh: int, dv: int, R: int,
+                   K: int, dtype, interpret=None):
     """Resolve the autotuned (bQ, bK) for the shape
     :func:`collapsed_jet_attention_op` would request — same key derivation
     (flattened batch N, backend/interpret flag) so a later op call is a
@@ -80,13 +86,13 @@ def prewarm_blocks(batch_shape, Sq: int, Skv: int, dh: int, R: int, K: int,
     if interpret is None:
         interpret = _on_cpu()
     N = int(np.prod(batch_shape)) if batch_shape else 1
-    return autotune.prewarm("jet_attention", (N, Sq, Skv, dh, R), K, dtype,
-                            interpret=interpret)
+    return autotune.prewarm("jet_attention", (N, Sq, Skv, dh, dv, R), K,
+                            dtype, interpret=interpret)
 
 
 def collapsed_jet_attention_op(q, k, v, *, K: int = 2, mask=None, scale=1.0,
-                               block_q=None, block_k=None, interpret=None,
-                               lowering: str = "auto"):
+                               bias=None, block_q=None, block_k=None,
+                               interpret=None, lowering: str = "auto"):
     """Padding-safe fused collapsed-K-jet attention for arbitrary batch shapes.
 
     ``q``/``k``/``v`` are collapsed-jet triples ``(x0, lower, top)`` with
@@ -94,7 +100,10 @@ def collapsed_jet_attention_op(q, k, v, *, K: int = 2, mask=None, scale=1.0,
     each (R, *batch, S, d) or ``None`` (symbolically zero); ``top``:
     (*batch, S, d) or ``None``. ``mask``: (Sq, Skv) bool/0-1 (True = attend)
     or ``None`` for full attention; ``scale`` multiplies the scores and must
-    be jet-constant. Block sizes default to the autotuner's choice
+    be jet-constant; ``bias``: optional jet-constant additive score bias
+    (ALiBi-style), broadcastable to (Sq, Skv) and shared across the batch,
+    added to the primal scores before the mask fill. Block sizes default to
+    the autotuner's choice
     (:func:`repro.kernels.autotune.get_attention_block_config`).
 
     ``lowering`` picks the execution strategy: ``"kernel"`` runs the Pallas
@@ -134,6 +143,10 @@ def collapsed_jet_attention_op(q, k, v, *, K: int = 2, mask=None, scale=1.0,
               if c is not None), 1)
     dtype = q0.dtype
 
+    if bias is not None:
+        bias = jnp.broadcast_to(jnp.asarray(bias), (Sq, Skv))
+        bias = bias.astype(jnp.float32)
+
     if lowering == "reference":
         # one fused XLA graph, symbolic zeros preserved; no padding needed
         def flat(x0, low, top, S, d):
@@ -151,7 +164,7 @@ def collapsed_jet_attention_op(q, k, v, *, K: int = 2, mask=None, scale=1.0,
             mb = jnp.broadcast_to(jnp.asarray(mask), (Sq, Skv)).astype(bool)
         o0, ol, ot = collapsed_jet_attention_ref(
             q0f, qlf, qtf, *flat(k0, k_low, k_top, Skv, dh),
-            *flat(v0, v_low, v_top, Skv, dv), K=K, mask=mb)
+            *flat(v0, v_low, v_top, Skv, dv), K=K, mask=mb, bias=bias)
         return (o0.reshape(*batch_shape, Sq, dv),
                 [ol[j].reshape(R, *batch_shape, Sq, dv)
                  for j in range(K - 1)],
@@ -184,8 +197,8 @@ def collapsed_jet_attention_op(q, k, v, *, K: int = 2, mask=None, scale=1.0,
     q0, ql, qt = q0 * scale, ql * scale, qt * scale
 
     if block_q is None or block_k is None:
-        cfg = autotune.get_attention_block_config(N, Sq, Skv, dh, R, K, dtype,
-                                                  interpret=interpret)
+        cfg = autotune.get_attention_block_config(N, Sq, Skv, dh, dv, R, K,
+                                                  dtype, interpret=interpret)
         block_q = block_q or cfg.block_q
         block_k = block_k or cfg.block_k
 
@@ -199,6 +212,8 @@ def collapsed_jet_attention_op(q, k, v, *, K: int = 2, mask=None, scale=1.0,
     # never counts). Padded q rows are stripped below.
     pad_q, pad_k = (-Sq) % block_q, (-Skv) % block_k
     mask = jnp.pad(mask, ((0, pad_q), (0, pad_k)), constant_values=-1.0)
+    if bias is not None:  # padded entries are mask-invalid; 0 keeps them inert
+        bias = jnp.pad(bias, ((0, pad_q), (0, pad_k)))
 
     d_mult = 1 if interpret else _LANE
     q0p = _pad_axis(_pad_axis(q0, 1, block_q), 2, d_mult)
@@ -211,8 +226,8 @@ def collapsed_jet_attention_op(q, k, v, *, K: int = 2, mask=None, scale=1.0,
     vlp = _pad_axis(_pad_axis(vl, 3, block_k), 4, d_mult)
     vtp = _pad_axis(_pad_axis(vt, 1, block_k), 2, d_mult)
 
-    o0, ol, ot = _fused(mask, q0p, qlp, qtp, k0p, klp, ktp, v0p, vlp, vtp,
-                        K, block_q, block_k, interpret, zeros)
+    o0, ol, ot = _fused(mask, bias, q0p, qlp, qtp, k0p, klp, ktp, v0p, vlp,
+                        vtp, K, block_q, block_k, interpret, zeros)
     o0 = o0[:, :Sq, :dv].reshape(*batch_shape, Sq, dv)
     ot = ot[:, :Sq, :dv].reshape(*batch_shape, Sq, dv)
     out_lower = [
@@ -220,3 +235,177 @@ def collapsed_jet_attention_op(q, k, v, *, K: int = 2, mask=None, scale=1.0,
         for j in range(K - 1)
     ]
     return o0, out_lower, ot
+
+
+# ---------------------------------------------------------------------------
+# superblock: q/k/v/o projections fused into the attention kernel
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(9, 10, 11, 12, 13))
+def _qkv_fused(mask, bias, h0, hl, ht, wq, wk, wv, wo, K, block_q, block_k,
+               interpret, hzero):
+    """Pad, lay out for the kernel grid, run the superblock kernel, strip.
+
+    ``mask`` is the *unpadded* (S, S) 0/1 float mask; ``hl`` the dense
+    stacked (K-1, R, B, S, D) lower bundle; weights in their graph layouts
+    (wq (D, Hq, dh) pre-scaled, wk (D, Hkv, dh), wv (D, Hkv, dv),
+    wo (Hq, dv, Do)). Defined at the unpadded level so the backward pass
+    can re-run the unfused reference on the original operands.
+    """
+    B, S, D = h0.shape
+    R = hl.shape[1]
+    Hq, dh = wq.shape[1], wq.shape[2]
+    Hkv, dv = wk.shape[1], wv.shape[2]
+    Do = wo.shape[2]
+    G = Hq // Hkv
+
+    # one hidden array serves both the q-row and kv-column grids, so S is
+    # padded to a common multiple of both block sizes.
+    s_mult = math.lcm(block_q, block_k)
+    pad_s = (-S) % s_mult
+    mask = jnp.pad(mask, ((0, pad_s), (0, pad_s)), constant_values=-1.0)
+    if bias is not None:
+        bias = jnp.pad(bias, ((0, pad_s), (0, pad_s)))
+
+    d_mult = 1 if interpret else _LANE
+    h0p = _pad_axis(_pad_axis(h0, 1, s_mult), 2, d_mult)
+    hlp = _pad_axis(_pad_axis(hl, 3, s_mult), 4, d_mult)
+    htp = _pad_axis(_pad_axis(ht, 1, s_mult), 2, d_mult)
+
+    # kernel weight layouts: heads grouped (Hkv, G) with kv head h serving
+    # query heads [h*G, (h+1)*G) — jnp.repeat's grouping.
+    wqk = wq.reshape(D, Hkv, G, dh).transpose(1, 2, 0, 3)
+    wkk = wk.transpose(1, 0, 2)
+    wvk = wv.transpose(1, 0, 2)
+    wok = wo.reshape(Hkv, G, dv, Do)
+    wqk = _pad_axis(_pad_axis(wqk, 2, d_mult), 3, d_mult)
+    wkk = _pad_axis(_pad_axis(wkk, 1, d_mult), 2, d_mult)
+    wvk = _pad_axis(_pad_axis(wvk, 1, d_mult), 2, d_mult)
+    wok = _pad_axis(_pad_axis(wok, 2, d_mult), 3, d_mult)
+
+    o0, ol, ot = collapsed_jet_qkv_attention(
+        mask, h0p, hlp, htp, wqk, wkk, wvk, wok, K=K, block_q=block_q,
+        block_k=block_k, interpret=interpret, hzero=hzero, bias=bias)
+    return o0[:, :S, :Do], ol[:, :, :, :S, :Do], ot[:, :S, :Do]
+
+
+def _qkv_fused_fwd(mask, bias, h0, hl, ht, wq, wk, wv, wo, K, block_q,
+                   block_k, interpret, hzero):
+    out = _qkv_fused(mask, bias, h0, hl, ht, wq, wk, wv, wo, K, block_q,
+                     block_k, interpret, hzero)
+    return out, (mask, bias, h0, hl, ht, wq, wk, wv, wo)
+
+
+def _qkv_fused_bwd(K, block_q, block_k, interpret, hzero, res, g):
+    mask, bias, *args = res
+
+    def ref_fn(bias_, *a):
+        return collapsed_jet_qkv_attention_ref(*a, K=K, mask=mask > 0,
+                                               bias=bias_)
+
+    _, vjp = jax.vjp(ref_fn, bias, *args)
+    dbias, *dargs = vjp(g)
+    return (jnp.zeros_like(mask), dbias, *dargs)
+
+
+_qkv_fused.defvjp(_qkv_fused_fwd, _qkv_fused_bwd)
+
+
+def collapsed_jet_qkv_attention_op(h, wq, wk, wv, wo, *, K: int = 2,
+                                   mask=None, scale=1.0, bias=None,
+                                   block_q=None, block_k=None,
+                                   interpret=None, lowering: str = "auto"):
+    """Padding-safe fused superblock: q/k/v projections + GQA attention +
+    output projection from one hidden-bundle read.
+
+    ``h`` is the collapsed-jet triple ``(h0, lower, top)`` of the
+    pre-projection hidden states: ``h0``: (B, S, D); ``lower``: K-1 arrays,
+    each (R, B, S, D) or ``None``; ``top``: (B, S, D) or ``None``. Weights
+    are jet-constant, in their graph layouts: ``wq`` (D, Hq, dh), ``wk``
+    (D, Hkv, dh), ``wv`` (D, Hkv, dv), ``wo`` (Hq, dv, Do); ``Hq`` must be
+    a multiple of ``Hkv`` (``dv != dh`` is fine). ``scale`` is folded into
+    ``wq`` (projection and scale are both linear); ``mask``/``bias`` are
+    (S, S) score mask / additive bias shared across batch and heads.
+
+    ``lowering`` as in :func:`collapsed_jet_attention_op`; block sizes
+    default to the ``jet_attention_qkv`` autotuner namespace. Returns
+    ``(o0, [K-1 lower coeffs], ot)`` with shapes (B, S, Do), summed over
+    all heads — the graph value of the output-projection dot.
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    if lowering not in ("auto", "kernel", "reference"):
+        raise ValueError(f"unknown lowering {lowering!r}")
+    if lowering == "auto":
+        lowering = "reference" if _on_cpu() else "kernel"
+    h0, h_low, h_top = h
+    if len(h_low) != K - 1:
+        raise ValueError(
+            f"need K-1={K - 1} lower coefficients, got {len(h_low)}")
+    if h0.ndim != 3:
+        raise ValueError(f"superblock hidden must be (B, S, D), got "
+                         f"{h0.shape}")
+    if np.dtype(h0.dtype) == np.dtype(np.float64):
+        raise ValueError(
+            "the fused collapsed-jet attention kernel accumulates in float32 "
+            "and would silently lose float64 precision; use the interpreter "
+            "backend for x64 computations")
+    B, S, D = h0.shape
+    Hq, dh = wq.shape[1], wq.shape[2]
+    Hkv, dv = wk.shape[1], wv.shape[2]
+    if Hq % max(Hkv, 1) or wv.shape[1] != Hkv or wk.shape[2] != dh:
+        raise ValueError(
+            f"inconsistent GQA projections: wq {wq.shape}, wk {wk.shape}, "
+            f"wv {wv.shape}")
+    if wo.shape[:2] != (Hq, dv):
+        raise ValueError(f"wo {wo.shape} does not match (Hq={Hq}, dv={dv}, "
+                         f"Do)")
+    R = next((c.shape[0] for c in h_low if c is not None), 1)
+    dtype = h0.dtype
+
+    wq = wq * jnp.asarray(scale, dtype=wq.dtype)
+    if mask is not None:
+        mask = jnp.broadcast_to(jnp.asarray(mask), (S, S))
+    if bias is not None:
+        bias = jnp.broadcast_to(jnp.asarray(bias), (S, S))
+        bias = bias.astype(jnp.float32)
+
+    if lowering == "reference":
+        o0, ol, ot = collapsed_jet_qkv_attention_ref(
+            h0, h_low, h_top, wq, wk, wv, wo, K=K,
+            mask=None if mask is None else mask.astype(bool), bias=bias)
+        return o0, [ol[j] for j in range(K - 1)], ot
+
+    if block_q is None or block_k is None:
+        cfg = autotune.get_qkv_attention_block_config(
+            B, S, D, Hq, Hkv, dh, dv, int(wo.shape[2]), R, K, dtype,
+            interpret=interpret)
+        block_q = block_q or cfg.block_q
+        block_k = block_k or cfg.block_k
+
+    hzero = (False,) + tuple(c is None for c in h_low) + (h_top is None,)
+    hl = jnp.stack([
+        jnp.zeros((R, B, S, D), dtype) if c is None else c for c in h_low
+    ])
+    ht = jnp.zeros((B, S, D), dtype) if h_top is None else h_top
+    maskf = (jnp.ones((S, S), jnp.float32) if mask is None
+             else mask.astype(jnp.float32))
+
+    o0, ol, ot = _qkv_fused(maskf, bias, h0, hl, ht, wq, wk, wv, wo, K,
+                            block_q, block_k, interpret, hzero)
+    return o0, [ol[j] for j in range(K - 1)], ot
+
+
+def prewarm_qkv_blocks(B: int, S: int, D: int, Hq: int, Hkv: int, dh: int,
+                       dv: int, do_: int, R: int, K: int, dtype,
+                       interpret=None):
+    """Resolve the autotuned (bQ, bK) for the shape
+    :func:`collapsed_jet_qkv_attention_op` would request (same key
+    derivation, so a later op call is a cache hit). Called by the offload
+    engine's per-body prewarm."""
+    if interpret is None:
+        interpret = _on_cpu()
+    return autotune.prewarm("jet_attention_qkv",
+                            (B, S, D, Hq, Hkv, dh, dv, do_, R), K, dtype,
+                            interpret=interpret)

@@ -1,15 +1,23 @@
-"""Pure-jnp oracle for the fused collapsed-jet attention kernel.
+"""Pure-jnp oracles for the fused collapsed-jet attention kernels.
 
 ``collapsed_jet_attention_ref`` is the unfused semantics of
 ``kernels.jet_attention.collapsed_jet_attention``: it propagates a collapsed
-K-jet through ``softmax(q·kᵀ + mask)·v`` by materializing the full score /
-probability series — exactly the graph the CRULES interpreter executes
-(bilinear scores, Faa di Bruno through ``exp``, linear row-sum, reciprocal
-composition, bilinear against v), so it doubles as the backward-pass graph of
-the kernel's custom VJP (:mod:`.ops`).
+K-jet through ``softmax(q·kᵀ [+ bias] + mask)·v`` by materializing the full
+score / probability series — exactly the graph the CRULES interpreter
+executes (bilinear scores, Faa di Bruno through ``exp``, linear row-sum,
+reciprocal composition, bilinear against v), so it doubles as the
+backward-pass graph of the kernel's custom VJP (:mod:`.ops`).
 
-Inputs are pre-scaled: fold any ``1/sqrt(dh)`` into the q series before
-calling (scaling is linear, so it applies uniformly to every coefficient).
+``collapsed_jet_qkv_attention_ref`` is the *superblock* oracle: the same
+attention semantics fed by the q/k/v projection matmuls of a pre-projection
+hidden bundle (jet-constant weights act coefficient-wise — they are linear),
+with GQA key/value heads broadcast over their query groups and the output
+projection ``Wo`` applied coefficient-wise at the end. It is the unfused
+semantics of ``collapsed_jet_qkv_attention`` and the backward graph of its
+custom VJP.
+
+Inputs are pre-scaled: fold any ``1/sqrt(dh)`` into the q series (or the
+``Wq`` weight — projection and scale are both linear) before calling.
 """
 
 from __future__ import annotations
@@ -17,7 +25,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .series import bilinear_series, exp_series, reciprocal_series
+from .series import bilinear_series, exp_series, map_series, reciprocal_series
 
 NEG_INF = -1e30
 
@@ -52,7 +60,7 @@ def _ug_prod(u, g, su, sg, collapse):
 
 
 def collapsed_jet_attention_ref(q0, ql, qt, k0, kl, kt, v0, vl, vt, *,
-                                K: int = 2, mask=None, valid=None):
+                                K: int = 2, mask=None, valid=None, bias=None):
     """Reference semantics of ``collapsed_jet_attention`` (unfused).
 
     q0/qt: (N, Sq, dh); ql: (K-1, R, N, Sq, dh); k*/v* likewise over Skv;
@@ -61,7 +69,11 @@ def collapsed_jet_attention_ref(q0, ql, qt, k0, kl, kt, v0, vl, vt, *,
     fully-masked row normalizes uniformly over its real keys, like the
     interpreter's ``select_n``/softmax graph), an invalid one ``-inf`` (it
     contributes nothing regardless of the row max — ops.py's block padding).
-    Returns (o0 (N, Sq, dh), ol (K-1, R, N, Sq, dh), ot (N, Sq, dh)).
+    ``bias``: optional jet-constant additive score bias (ALiBi-style),
+    broadcastable against (Sq, Skv); applied to the primal scores *before*
+    the mask fill, matching the traced ``s + bias -> where(mask, ...)``
+    graph order. Returns (o0 (N, Sq, dh), ol (K-1, R, N, Sq, dh),
+    ot (N, Sq, dh)).
     """
     # coefficient containers may be lists holding ``None`` (symbolic zeros,
     # as handed over by the offload dispatcher) or dense stacked arrays; the
@@ -71,6 +83,9 @@ def collapsed_jet_attention_ref(q0, ql, qt, k0, kl, kt, v0, vl, vt, *,
     V = [v0, *[vl[j] for j in range(K - 1)], vt]
 
     S = bilinear_series(Q, Kc, K, _qk_prod)
+    if bias is not None:
+        # jet-constant: shifts only the primal scores
+        S[0] = S[0] + bias
     keep = None
     if mask is not None:
         S[0] = jnp.where(mask, S[0], NEG_INF)
@@ -109,3 +124,50 @@ def collapsed_jet_attention_ref(q0, ql, qt, k0, kl, kt, v0, vl, vt, *,
     ])
     top = jnp.zeros_like(O[0]) if O[K] is None else O[K]
     return O[0], lower, top
+
+
+def collapsed_jet_qkv_attention_ref(h0, hl, ht, wq, wk, wv, wo, *,
+                                    K: int = 2, mask=None, valid=None,
+                                    bias=None):
+    """Reference semantics of the *superblock* (unfused): project the hidden
+    bundle through q/k/v, run GQA attention, project through ``Wo``.
+
+    h0/ht: (B, S, D); hl: (K-1, R, B, S, D) (entries may be ``None``);
+    wq: (D, Hq, dh); wk: (D, Hkv, dh); wv: (D, Hkv, dv); wo: (Hq, dv, Do).
+    ``Hq`` must be a multiple of ``Hkv``; kv head ``h`` serves query heads
+    ``[h*G, (h+1)*G)``. ``wq`` is pre-scaled (fold the softmax scale in).
+    mask/valid/bias are shared across heads, see
+    :func:`collapsed_jet_attention_ref`. Returns (o0 (B, S, Do),
+    ol (K-1, R, B, S, Do), ot (B, S, Do)).
+    """
+    B, S, D = h0.shape
+    Hq, dh = wq.shape[1], wq.shape[2]
+    Hkv, dv = wk.shape[1], wv.shape[2]
+    Do = wo.shape[2]
+    G = Hq // Hkv
+    H = [h0, *[hl[j] for j in range(K - 1)], ht]
+
+    def proj(w, H_out):
+        """Coefficient-wise projection to the (N = B*H_out, S, d) layout of
+        the attention oracle, broadcasting kv heads over their query groups
+        (the unfused GQA semantics the kernel avoids materializing)."""
+        wf = w if w.shape[1] == H_out else jnp.repeat(w, G, axis=1)
+
+        def one(c):
+            y = jnp.einsum("...bsd,dhe->...bhse", c, wf)
+            return y.reshape(y.shape[:-4] + (B * H_out, S, wf.shape[2]))
+
+        return one
+
+    Q = map_series(H, proj(wq, Hq))
+    Kc = map_series(H, proj(wk, Hq))
+    V = map_series(H, proj(wv, Hq))
+    o0, ol, ot = collapsed_jet_attention_ref(
+        Q[0], Q[1:K], Q[K], Kc[0], Kc[1:K], Kc[K], V[0], V[1:K], V[K],
+        K=K, mask=mask, valid=valid, bias=bias)
+
+    def unproj(c):
+        c = c.reshape(c.shape[:-3] + (B, Hq, S, dv))
+        return jnp.einsum("...bhsv,hvd->...bsd", c, wo)
+
+    return unproj(o0), unproj(ol), unproj(ot)

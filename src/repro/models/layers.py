@@ -352,10 +352,17 @@ def attention_layer(params, x, cfg, *, positions, causal=True, window=None):
     offload planner fuses; differential-operator heads (transformer PINNs)
     trace with that setting. The recursive offload engine plans through
     ``lax.scan``, so this fuses both in unrolled trunks and inside the
-    scanned layer stack of ``models/transformer.backbone``."""
+    scanned layer stack of ``models/transformer.backbone``. With
+    ``cfg.use_rope=False`` (the PINN convention — coordinates carry their
+    own positional lift) the q/k/v projections feed the score dot directly
+    and the planner fuses projections + GQA attention + output projection
+    as ONE superblock kernel; with rope on, the block still fuses as
+    per-segment kernels (projections as jet_mlp, attention as
+    jet_attention)."""
     q, k, v = _proj_qkv(params, x, cfg)
-    q = rope(q, positions, cfg.rope_theta)
-    k = rope(k, positions, cfg.rope_theta)
+    if getattr(cfg, "use_rope", True):
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
     if getattr(cfg, "attn_impl", "flash") == "reference":
         out = attention_reference(q, k, v, causal=causal, window=window)
     elif cfg.use_pallas:
@@ -383,7 +390,7 @@ def attention_decode(params, x, cache, pos, cfg, *, window=None, use_rope=True):
     (per-slot positions). Returns (out, new_cache).
     """
     q, k, v = _proj_qkv(params, x, cfg)
-    if use_rope:
+    if use_rope and getattr(cfg, "use_rope", True):
         q = rope(q, pos[:, None], cfg.rope_theta)
         k = rope(k, pos[:, None], cfg.rope_theta)
     ck = cache_insert(cache["k"], k, pos)

@@ -125,10 +125,15 @@ def backbone(params, x, cfg, positions, *, unroll: bool = False):
     heads (transformer PINNs / operator learning with
     ``cfg.attn_impl='reference'``): the recursive offload engine
     (:mod:`repro.core.offload`) plans the scan body once per (K, signature)
-    and fuses its jet_attention / jet_mlp segments on every iteration under
-    ``operators.<op>(..., method='collapsed', backend='pallas')``.
-    ``unroll=True`` unrolls the stack in Python instead — O(depth) jaxpr
-    size; kept for unroll-vs-scan benchmarks (``benchmarks/scan_depth.py``).
+    and fuses its segments on every iteration under
+    ``operators.<op>(..., method='collapsed', backend='pallas')``. With
+    ``cfg.use_rope=False`` (the PINN convention) each layer's whole
+    attention block — q/k/v projections, (GQA, via ``cfg.num_kv_heads <
+    cfg.num_heads``) attention, output projection — fuses as ONE superblock
+    kernel; with rope on, it fuses per segment (jet_mlp projections +
+    jet_attention core). ``unroll=True`` unrolls the stack in Python
+    instead — O(depth) jaxpr size; kept for unroll-vs-scan benchmarks
+    (``benchmarks/scan_depth.py``).
     """
     blocks = _unrolled_blocks if unroll else _scan_blocks
     aux = jnp.zeros(())

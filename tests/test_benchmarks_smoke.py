@@ -23,16 +23,26 @@ def test_benchmark_module_imports(mod):
 
 
 def test_attention_laplacian_bench_smoke():
-    """The benchmark's transformer PINN agrees across backends at a tiny
-    shape (the full sweep is the by-hand benchmark, not a test)."""
-    from benchmarks.attention_laplacian import transformer_pinn
+    """The benchmark's GQA transformer PINN agrees across all three
+    backends at a tiny shape (the full sweep is the by-hand benchmark, not
+    a test), and the plan accounting shows the superblock collapsing the
+    per-segment plan's HBM boundaries."""
+    from benchmarks.attention_laplacian import (scan_body_plan_counts,
+                                                transformer_pinn)
     from repro.core import operators as ops
 
     f = transformer_pinn(S=8, D=3, d_model=16)
     x = jax.random.normal(jax.random.PRNGKey(0), (2, 3)) * 0.5
     ref = ops.laplacian(f, x, method="collapsed")
-    got = ops.laplacian(f, x, method="collapsed", backend="pallas")
-    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+    for backend in ("pallas", "pallas-per-segment"):
+        got = ops.laplacian(f, x, method="collapsed", backend=backend)
+        np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5,
+                                   err_msg=backend)
+    segs_sb, supers_sb, _ = scan_body_plan_counts(f, x, "pallas")
+    segs_ps, supers_ps, _ = scan_body_plan_counts(f, x,
+                                                  "pallas-per-segment")
+    assert supers_sb == 1 and supers_ps == 0
+    assert segs_sb < segs_ps and segs_ps >= 4
 
 
 def test_scan_depth_bench_smoke():

@@ -169,6 +169,24 @@ def test_attention_fully_masked_rows_through_offload():
     np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
 
 
+def test_attention_kernel_additive_bias():
+    """The (Sq, Skv) jet-constant additive score bias (ALiBi-style): kernel
+    lowering equals the reference lowering, with a mask on top."""
+    Sq, dh, R = 5, 4, 2
+    ks = jax.random.split(jax.random.PRNGKey(30), 2)
+    q0 = jax.random.normal(ks[0], (2, Sq, dh))
+    q1 = jax.random.normal(ks[1], (R, 2, Sq, dh))
+    d = jnp.arange(Sq)[:, None] - jnp.arange(Sq)[None, :]
+    bias = (-0.2 * jnp.abs(d)).astype(jnp.float32)
+    mask = jnp.arange(Sq)[None, :] <= jnp.arange(Sq)[:, None]
+    outs = [collapsed_jet_attention_op(
+        (q0, [q1], None), (q0, [q1], None), (q0, [q1], None), K=2,
+        mask=mask, bias=bias, interpret=True, lowering=low)
+        for low in ("kernel", "reference")]
+    for a, b in zip(jax.tree.leaves(outs[0]), jax.tree.leaves(outs[1])):
+        np.testing.assert_allclose(a, b, rtol=3e-4, atol=3e-4)
+
+
 def test_attention_kernel_rejects_float64():
     q0 = np.zeros((2, 4), np.float64)
     with pytest.raises(ValueError, match="float64"):
@@ -499,11 +517,50 @@ def test_reduce_prod_inside_offload_backend():
 
 def test_autotune_keys_are_namespaced_per_kernel():
     mlp_key = autotune.shape_key(8, 16, 32, 4, 2, "float32", "tpu")
-    attn_key = autotune.attention_shape_key(8, 16, 32, 4, 2, 2, "float32",
+    attn_key = autotune.attention_shape_key(8, 16, 32, 4, 4, 2, 2, "float32",
                                             "tpu")
+    qkv_key = autotune.qkv_attention_shape_key(8, 16, 32, 4, 2, 4, 4, 32, 2,
+                                               2, "float32", "tpu")
     assert mlp_key.startswith("jet_mlp|")
     assert attn_key.startswith("jet_attention|")
-    assert mlp_key != attn_key
+    assert qkv_key.startswith("jet_attention_qkv|")
+    assert len({mlp_key, attn_key, qkv_key}) == 3
+
+
+def test_attention_autotune_keys_carry_dv():
+    """dv != dh tunes separately from dv == dh (ROADMAP item)."""
+    a = autotune.attention_shape_key(8, 16, 16, 64, 64, 2, 2, "float32",
+                                     "tpu")
+    b = autotune.attention_shape_key(8, 16, 16, 64, 128, 2, 2, "float32",
+                                     "tpu")
+    assert a != b
+
+
+def test_attention_autotune_legacy_dv_migration(tmp_path, monkeypatch):
+    """Pre-dv 5-dim jet_attention keys migrate with dv = dh (the only value
+    head dim the kernel supported back then); 6-dim keys pass through."""
+    import json
+
+    backend = jax.default_backend()
+    path = tmp_path / "autotune.json"
+    legacy = {
+        f"jet_attention|4x256x256x64x3|K2|float32|{backend}": [64, 256],
+        "jet_attention|4x256x256x64x32x3|K2|float32|tpu": [32, 128],
+        "jet_attention|garbagexdims|K2|float32|tpu": [8, 128],
+    }
+    path.write_text(json.dumps(legacy))
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(path))
+    autotune.clear_memory_cache()
+    disk = autotune.load_cache()
+    assert disk[f"jet_attention|4x256x256x64x64x3|K2|float32|{backend}"] \
+        == [64, 256]
+    assert disk["jet_attention|4x256x256x64x32x3|K2|float32|tpu"] == [32, 128]
+    assert disk["jet_attention|garbagexdims|K2|float32|tpu"] == [8, 128]
+    # the migrated entry is found by the dv-keyed lookup path
+    cfg = autotune.get_attention_block_config(4, 256, 256, 64, 64, 3, 2,
+                                              jnp.float32)
+    assert tuple(cfg) == (64, 256)
+    autotune.clear_memory_cache()
 
 
 def test_autotune_legacy_cache_migration(tmp_path, monkeypatch):
@@ -535,35 +592,53 @@ def test_attention_autotune_cache_roundtrip(tmp_path, monkeypatch):
     monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "a.json"))
     autotune.clear_memory_cache()
     cfg = autotune.AttnBlockConfig(64, 256)
-    autotune.put_attention_config(4, 256, 256, 64, 3, 2, jnp.float32, "tpu",
-                                  cfg)
+    autotune.put_attention_config(4, 256, 256, 64, 32, 3, 2, jnp.float32,
+                                  "tpu", cfg)
+    autotune.put_qkv_attention_config(4, 256, 128, 8, 2, 64, 32, 128, 3, 2,
+                                      jnp.float32, "tpu",
+                                      autotune.AttnBlockConfig(32, 128))
     autotune.clear_memory_cache()
     disk = autotune.load_cache()
-    key = autotune.attention_shape_key(4, 256, 256, 64, 3, 2, "float32",
+    key = autotune.attention_shape_key(4, 256, 256, 64, 32, 3, 2, "float32",
                                        "tpu")
     assert disk[key] == [64, 256]
+    qkey = autotune.qkv_attention_shape_key(4, 256, 128, 8, 2, 64, 32, 128,
+                                            3, 2, "float32", "tpu")
+    assert disk[qkey] == [32, 128]
     autotune.clear_memory_cache()
 
 
 def test_attention_autotune_default_is_aligned():
-    for (Sq, Skv, dh, R) in [(10, 13, 5, 3), (256, 256, 64, 8), (7, 3, 2, 50)]:
+    for (Sq, Skv, dh, dv, R) in [(10, 13, 5, 7, 3), (256, 256, 64, 64, 8),
+                                 (7, 3, 2, 2, 50)]:
         for K in (2, 4):
-            cfg = autotune.attention_default_config(Sq, Skv, dh, R, K)
+            cfg = autotune.attention_default_config(Sq, Skv, dh, dv, R, K)
             assert cfg.block_q % 8 == 0, cfg
             assert cfg.block_k % 128 == 0, cfg
-            for c in autotune.attention_candidate_configs(Sq, Skv, dh, R, K):
+            for c in autotune.attention_candidate_configs(Sq, Skv, dh, dv, R,
+                                                          K):
                 assert c.block_q % 8 == 0 and c.block_k % 128 == 0, c
+            qcfg = autotune.qkv_attention_default_config(Sq, 16, 4, 2, dh,
+                                                         dv, 16, R, K)
+            assert qcfg.block_q % 8 == 0 and qcfg.block_k % 128 == 0, qcfg
 
 
 def test_attention_get_block_config_interpret_deterministic(tmp_path,
                                                             monkeypatch):
     monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "a.json"))
     autotune.clear_memory_cache()
-    a = autotune.get_attention_block_config(2, 100, 100, 16, 4, 2,
+    a = autotune.get_attention_block_config(2, 100, 100, 16, 16, 4, 2,
                                             jnp.float32, interpret=True)
-    b = autotune.get_attention_block_config(2, 100, 100, 16, 4, 2,
+    b = autotune.get_attention_block_config(2, 100, 100, 16, 16, 4, 2,
                                             jnp.float32, interpret=True)
     assert a == b
+    c = autotune.get_qkv_attention_block_config(2, 100, 32, 4, 2, 16, 16,
+                                                32, 4, 2, jnp.float32,
+                                                interpret=True)
+    d = autotune.get_qkv_attention_block_config(2, 100, 32, 4, 2, 16, 16,
+                                                32, 4, 2, jnp.float32,
+                                                interpret=True)
+    assert c == d
     # heuristic configs are memoized but not persisted
     assert autotune.load_cache() == {}
     autotune.clear_memory_cache()
