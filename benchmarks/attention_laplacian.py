@@ -1,10 +1,14 @@
 """Transformer-attention Laplacian: CRULES interpreter vs the fused Pallas
 paths — per-segment kernels vs the q/k/v/o *superblock*.
 
-The attention companion to fig1_laplacian: a transformer PINN (one token per
-lifted feature, canonical ``attn_impl='reference'`` graph, no rope — the
-PINN convention that lets the whole block fuse) whose Laplacian is computed
-in collapsed Taylor mode three ways:
+The attention companion to fig1_laplacian: a transformer PINN (one token
+per lifted feature, canonical ``attn_impl='reference'`` graph) whose
+Laplacian is computed in collapsed Taylor mode three ways — in BOTH trunk
+conventions: the PINN one (``use_rope=False``) and the LM one
+(``use_rope=True, qkv_bias=True``, emitted as the ``…/rope`` rows), whose
+rotary tables and projection biases now fold into the superblock kernel,
+so each layer is one kernel (``hbm_segments_per_layer = 1``) instead of
+the per-segment plan's four-plus:
 
 * ``interpreter`` — the per-primitive CRULES interpreter;
 * ``pallas-per-segment`` — one kernel per segment: q/k/v projections as
@@ -32,7 +36,11 @@ count* of its scan-body plan, derived from ``operators.explain``: the
 number of fused segments per layer — each one writes its output bundle to
 HBM and the next reads it back, so fewer segments = fewer round-trips of
 the collapsed bundle (the superblock's whole point; the counts are exact on
-any host, unlike the CPU timings).
+any host, unlike the CPU timings). ``hbm_segments_per_layer`` counts the
+*attention block's* segments (superblock / attention core /
+``+proj``-tagged projections): 1 when the block superblocks — including
+the rope+bias trunks of the ``…/rope`` rows — vs 4+ per-segment;
+``total_segments_per_layer`` adds the FFN's jet_mlp kernels.
 
 Each (backend, S) cell is emitted as a machine-readable ``BENCH`` json row
 (see benchmarks/common.emit_bench) with the host platform attached.
@@ -52,22 +60,28 @@ BACKENDS = ("interpreter", "pallas-per-segment", "pallas")
 
 
 def transformer_pinn(S: int, D: int, d_model: int = 32, num_layers: int = 1,
-                     num_heads: int = 2, num_kv_heads: int = 1, key=None):
+                     num_heads: int = 2, num_kv_heads: int = 1, key=None,
+                     use_rope: bool = False, qkv_bias: bool = False):
     """u(x): (B, D) -> (B,) with an S-token GQA transformer trunk.
     Coordinates are lifted to S tokens by a fixed random projection
     (operator-learning style: sequence length decoupled from the PDE
-    dimension); no rope, so the offload planner fuses each layer's whole
-    attention block as one superblock under ``backend='pallas'``."""
+    dimension). The offload planner fuses each layer's whole attention
+    block as one superblock under ``backend='pallas'`` in both trunk
+    conventions — ``use_rope=False`` (PINN) and the LM-style
+    ``use_rope=True, qkv_bias=True`` (rotary tables and projection biases
+    fold into the kernel's projection stage)."""
     cfg = ModelConfig(
         name="attn-pinn", family="dense", num_layers=num_layers,
         d_model=d_model, num_heads=num_heads, num_kv_heads=num_kv_heads,
         d_ff=2 * d_model, vocab_size=8, act="gelu", dtype="float32",
         param_dtype="float32", attn_impl="reference", remat=False,
-        use_rope=False,
+        use_rope=use_rope, qkv_bias=qkv_bias,
     )
     key = key if key is not None else jax.random.PRNGKey(0)
     kp, ke, kh = jax.random.split(key, 3)
     params = transformer.init(kp, cfg)
+    if qkv_bias:  # nonzero biases, so the fold is observable
+        params = jax.tree.map(lambda a: a + 0.02, params)
     lift = jax.random.normal(ke, (D, S, d_model)) * 0.3
     pos = jax.random.normal(kh, (S, d_model)) * 0.1
     head = jnp.ones((d_model,)) / d_model
@@ -83,55 +97,78 @@ def transformer_pinn(S: int, D: int, d_model: int = 32, num_layers: int = 1,
 
 
 def scan_body_plan_counts(f, x, backend: str):
-    """(fused segments, superblocks, interpreted eqns) of the scan-body plan
-    — the per-layer HBM-materialization accounting (one collapsed-bundle
-    write + read per fused segment boundary)."""
+    """(fused segments, attention-block segments, superblocks, interpreted
+    eqns) of the scan-body plan — the per-layer HBM-materialization
+    accounting (one collapsed-bundle write + read per fused segment
+    boundary). Attention-block segments are the superblocks, per-segment
+    attention cores, and ``+proj``-tagged jet_mlp projections: 1 per layer
+    when the block superblocks, 4+ on the per-segment plan."""
     rep = ops.explain(f, x, K=2, backend=backend)
     body = [e for e in rep.jaxprs if e.label == "scan body"]
     if not body:
-        return 0, 0, 0
+        return 0, 0, 0, 0
     fused = body[0].fused()
     supers = body[0].fused("jet_attention_qkv")
-    return len(fused), len(supers), sum(body[0].interpreted.values())
+    attn = [s for s in fused
+            if s.kind in ("jet_attention_qkv", "jet_attention")
+            or (s.kind == "jet_mlp" and "+proj" in s.detail)]
+    return (len(fused), len(attn), len(supers),
+            sum(body[0].interpreted.values()))
 
 
 def run(D: int = 4, B: int = 2, seqs=(64, 256), rounds: int = 8):
     platform = jax.default_backend()
     rows = []
+    # (row suffix, trunk convention): the PINN trunk and the LM-style
+    # rope+bias trunk — the latter used to break superblock formation and
+    # fall back to a per-segment plan (hbm_segments_per_layer >= 4); with
+    # the rope fold both report 1 under backend='pallas'
+    variants = (("", dict(use_rope=False)),
+                ("/rope", dict(use_rope=True, qkv_bias=True)))
     for S in seqs:
-        f = transformer_pinn(S, D)
-        x = jax.random.normal(jax.random.PRNGKey(S), (B, D)) * 0.5
-        fns = {
-            backend: jax.jit(lambda x, b=backend: ops.laplacian(
-                f, x, method="collapsed", backend=b))
-            for backend in BACKENDS
-        }
-        times = compare_times(fns, x, rounds=rounds)
-        counts = {
-            backend: scan_body_plan_counts(f, x, backend)
-            for backend in BACKENDS if backend != "interpreter"
-        }
-        for backend, t in times.items():
-            segs, supers, interp = counts.get(backend, (0, 0, 0))
-            rows.append({"name": f"attn_lap/{backend}/S{S}",
-                         "ms_per_call": f"{t*1e3:.2f}",
-                         "derived": (f"hbm_segments={segs}" if segs else "")})
-        speedup = times["interpreter"] / times["pallas"]
-        vs_per_segment = times["pallas-per-segment"] / times["pallas"]
-        rows.append({
-            "name": f"attn_lap/speedup/S{S}", "ms_per_call": "",
-            "derived": (f"pallas_vs_interpreter={speedup:.2f}x "
-                        f"superblock_vs_per_segment={vs_per_segment:.2f}x")})
-        for backend, t in times.items():
-            segs, supers, interp = counts.get(backend, (0, 0, 0))
-            emit_bench("attention_laplacian", method="collapsed",
-                       backend=backend, S=S, D=D, B=B, platform=platform,
-                       ms_per_call=round(t * 1e3, 3),
-                       hbm_segments_per_layer=segs,
-                       superblocks_per_layer=supers,
-                       interpreted_eqns=interp,
-                       speedup_vs_interpreter=round(
-                           times["interpreter"] / t, 4))
+        for suffix, trunk in variants:
+            f = transformer_pinn(S, D, **trunk)
+            x = jax.random.normal(jax.random.PRNGKey(S), (B, D)) * 0.5
+            fns = {
+                backend: jax.jit(lambda x, b=backend: ops.laplacian(
+                    f, x, method="collapsed", backend=b))
+                for backend in BACKENDS
+            }
+            times = compare_times(fns, x, rounds=rounds)
+            counts = {
+                backend: scan_body_plan_counts(f, x, backend)
+                for backend in BACKENDS if backend != "interpreter"
+            }
+            for backend, t in times.items():
+                segs, attn, supers, interp = counts.get(backend,
+                                                        (0, 0, 0, 0))
+                rows.append({
+                    "name": f"attn_lap/{backend}/S{S}{suffix}",
+                    "ms_per_call": f"{t*1e3:.2f}",
+                    "derived": (f"hbm_segments={segs} attn_segments={attn}"
+                                if segs else "")})
+            speedup = times["interpreter"] / times["pallas"]
+            vs_per_segment = times["pallas-per-segment"] / times["pallas"]
+            rows.append({
+                "name": f"attn_lap/speedup/S{S}{suffix}", "ms_per_call": "",
+                "derived": (
+                    f"pallas_vs_interpreter={speedup:.2f}x "
+                    f"superblock_vs_per_segment={vs_per_segment:.2f}x")})
+            for backend, t in times.items():
+                segs, attn, supers, interp = counts.get(backend,
+                                                        (0, 0, 0, 0))
+                emit_bench("attention_laplacian", method="collapsed",
+                           backend=backend, S=S, D=D, B=B,
+                           platform=platform,
+                           rope=trunk.get("use_rope", False),
+                           qkv_bias=trunk.get("qkv_bias", False),
+                           ms_per_call=round(t * 1e3, 3),
+                           hbm_segments_per_layer=attn,
+                           total_segments_per_layer=segs,
+                           superblocks_per_layer=supers,
+                           interpreted_eqns=interp,
+                           speedup_vs_interpreter=round(
+                               times["interpreter"] / t, 4))
     return rows
 
 

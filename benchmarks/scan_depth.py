@@ -2,8 +2,11 @@
 vs scanned CRULES.
 
 The recursive offload engine (core/offload.py) plans a ``lax.scan`` body once
-per (K, jet-constant signature) and fuses its jet_attention / jet_mlp
-segments on every iteration, so the scanned ``models/transformer.backbone``
+per (K, jet-constant signature) and fuses its segments — one
+jet_attention_qkv *superblock* per attention block (the default
+``use_rope=True`` trunk folds its rotary tables into the kernel) plus the
+jet_mlp FFN segments — on every iteration, so the scanned
+``models/transformer.backbone``
 — whose jaxpr is O(1) in depth — no longer pays the per-primitive CRULES
 interpreter inside the loop. This benchmark sweeps layer depth and times the
 collapsed-Laplacian of a transformer PINN three ways:

@@ -11,15 +11,20 @@ automatically by the offload planner, no kernel calls in user code:
 
 The model lifts each coordinate of ``x in R^D`` to a token, runs a small
 decoder-only transformer (the *scanned* ``models/transformer.backbone`` with
-``attn_impl='reference'``, the canonical fusible attention graph, and
-``use_rope=False`` — PINN coordinates carry their own positional lift), and
+``attn_impl='reference'``, the canonical fusible attention graph), and
 pools to a scalar ``u(x)``. The recursive offload engine plans the
 ``lax.scan`` layer stack's body once and fuses each layer's WHOLE attention
 block — q/k/v projections, GQA attention, output projection — as one
-*superblock* kernel (plus the MLP segments) on every iteration —
-hand-unrolling (``backbone_unrolled``) is no longer needed for fusion; see
+*superblock* kernel (plus the MLP segments) on every iteration. That holds
+for BOTH trunk conventions, demonstrated below: ``use_rope=False`` (PINN —
+coordinates carry their own positional lift) and the LM default
+``use_rope=True`` with ``qkv_bias=True`` — the jet-constant rotary tables
+and projection biases fold into the kernel's projection stage, so LM-style
+trunks stay one kernel per layer too. Hand-unrolling
+(``backbone_unrolled``) is no longer needed for fusion; see
 ``benchmarks/scan_depth.py`` for the unroll-vs-scan comparison and
-``benchmarks/attention_laplacian.py`` for superblock vs per-segment rows.
+``benchmarks/attention_laplacian.py`` for superblock vs per-segment rows
+(incl. the ``…/rope`` cells).
 
 Run:  PYTHONPATH=src python examples/pinn_transformer.py
 """
@@ -34,15 +39,19 @@ from repro.core import operators as ops
 from repro.models import transformer
 
 
-def make_pinn(D: int, key, d_model: int = 32, num_layers: int = 2):
+def make_pinn(D: int, key, d_model: int = 32, num_layers: int = 2,
+              use_rope: bool = False, qkv_bias: bool = False):
     cfg = ModelConfig(
         name="pinn-transformer", family="dense", num_layers=num_layers,
         d_model=d_model, num_heads=2, num_kv_heads=1, d_ff=2 * d_model,
         vocab_size=8, act="gelu", dtype="float32", param_dtype="float32",
-        attn_impl="reference", remat=False, use_rope=False,
+        attn_impl="reference", remat=False, use_rope=use_rope,
+        qkv_bias=qkv_bias,
     )
     kp, ke, kh = jax.random.split(key, 3)
     params = transformer.init(kp, cfg)
+    if qkv_bias:  # nonzero biases, so the superblock fold is observable
+        params = jax.tree.map(lambda a: a + 0.02, params)
     lift = jax.random.normal(ke, (D, d_model)) * 0.5  # coordinate embedding
     pos = jax.random.normal(kh, (D, d_model)) * 0.1
     head = jnp.ones((d_model,)) / d_model
@@ -58,30 +67,43 @@ def make_pinn(D: int, key, d_model: int = 32, num_layers: int = 2):
 
 def main():
     D, B = 6, 4
-    f = make_pinn(D, jax.random.PRNGKey(0))
-    x = jax.random.normal(jax.random.PRNGKey(1), (B, D)) * 0.5
+    trunks = {
+        "pinn (no rope)": dict(use_rope=False),
+        "lm (rope+bias)": dict(use_rope=True, qkv_bias=True),
+    }
+    for name, trunk in trunks.items():
+        f = make_pinn(D, jax.random.PRNGKey(0), **trunk)
+        x = jax.random.normal(jax.random.PRNGKey(1), (B, D)) * 0.5
 
-    print(f"Laplacian of a {D}-token transformer PINN (batch {B})\n")
-    times, results = {}, {}
-    for backend in ("interpreter", "pallas"):
-        fn = jax.jit(lambda x, b=backend: ops.laplacian(
-            f, x, method="collapsed", backend=b))
-        out = jax.block_until_ready(fn(x))
-        t0 = time.perf_counter()
-        for _ in range(5):
-            jax.block_until_ready(fn(x))
-        times[backend] = (time.perf_counter() - t0) / 5
-        results[backend] = out
+        print(f"Laplacian of a {D}-token transformer PINN (batch {B}, "
+              f"{name} trunk)\n")
+        times, results = {}, {}
+        for backend in ("interpreter", "pallas"):
+            fn = jax.jit(lambda x, b=backend: ops.laplacian(
+                f, x, method="collapsed", backend=b))
+            out = jax.block_until_ready(fn(x))
+            t0 = time.perf_counter()
+            for _ in range(5):
+                jax.block_until_ready(fn(x))
+            times[backend] = (time.perf_counter() - t0) / 5
+            results[backend] = out
 
-    err = float(jnp.abs(results["pallas"] - results["interpreter"]).max())
-    print(f"{'backend':12s} {'time [ms]':>10s}")
-    for b, t in times.items():
-        print(f"{b:12s} {t*1e3:10.2f}")
-    print(f"\nmax |pallas - interpreter| = {err:.2e}")
-    print("(every attention block ran as ONE fused collapsed-jet superblock "
-          "— q/k/v projections + GQA attention + output projection — under "
-          "backend='pallas': the Pallas kernel on accelerators, its fused "
-          "reference graph on CPU)")
+        rep = ops.explain(f, x, K=2)
+        supers = [s for e in rep.jaxprs
+                  for s in e.fused("jet_attention_qkv")]
+        err = float(jnp.abs(results["pallas"]
+                            - results["interpreter"]).max())
+        print(f"{'backend':12s} {'time [ms]':>10s}")
+        for b, t in times.items():
+            print(f"{b:12s} {t*1e3:10.2f}")
+        print(f"superblocks per layer: {len(supers)}"
+              + (f"  [{supers[0].detail}]" if supers else ""))
+        print(f"max |pallas - interpreter| = {err:.2e}\n")
+    print("(every attention block — including the LM-style rope + "
+          "projection-bias trunk — ran as ONE fused collapsed-jet "
+          "superblock: q/k/v projections + rotary tables + GQA attention + "
+          "output projection, under backend='pallas': the Pallas kernel on "
+          "accelerators, its fused reference graph on CPU)")
 
 
 if __name__ == "__main__":

@@ -26,9 +26,11 @@ class ModelConfig:
     # rotary embeddings between the q/k projections and the score dot. LM
     # configs keep them on; differential-operator heads (transformer PINNs /
     # operator learning, which lift continuous coordinates and carry their
-    # own positional lift) set False — that also lets the collapsed-Taylor
-    # offload planner fuse the whole block as ONE superblock kernel
-    # (q/k/v/o projections + GQA attention, see repro.core.offload).
+    # own positional lift) set False. Either way the collapsed-Taylor
+    # offload planner fuses the whole block as ONE superblock kernel
+    # (q/k/v/o projections + GQA attention, see repro.core.offload): the
+    # jet-constant rotary tables — and qkv_bias projection biases — fold
+    # into the kernel's projection stage.
     use_rope: bool = True
     norm_eps: float = 1e-6
     act: str = "silu"  # mlp activation: silu (swiglu) | gelu

@@ -658,16 +658,7 @@ def _scan(K, in_jets, eqn):
     body = params["jaxpr"]
     consts, carry, xs = in_jets[:nc], in_jets[nc : nc + ncar], in_jets[nc + ncar :]
 
-    def zpat(j):
-        return tuple(not is_zero(c) for c in j.lower) + (not is_zero(j.top),)
-
-    pattern = [zpat(j) for j in carry]
-    for _ in range(K + 2):
-        new_raw = _abstract_pattern(body, K, consts, carry, xs, pattern, ncar)
-        new_pat = [tuple(x or y for x, y in zip(p, q)) for p, q in zip(pattern, new_raw)]
-        if new_pat == pattern:
-            break
-        pattern = new_pat
+    pattern = _zero_fixed_point(body, K, consts, carry, xs, via="scan")
 
     r_axis = _infer_r(in_jets)
 
@@ -702,7 +693,7 @@ def _scan(K, in_jets, eqn):
             jets.append(CollapsedJet(primal, lower, top))
         return jets
 
-    xs_pats = [zpat(j) for j in xs]
+    xs_pats = [_zpat(j) for j in xs]
 
     def flatten_xs(jets):
         flat = []
@@ -742,7 +733,7 @@ def _scan(K, in_jets, eqn):
         xjets = unflatten_xs(xs_flat)
         outs = _recurse(body, K, list(consts) + cjets + xjets, via="scan")
         new_carry, ys = outs[:ncar], outs[ncar:]
-        ys_holder["pat"] = [zpat(y) for y in ys]
+        ys_holder["pat"] = [_zpat(y) for y in ys]
         ys_flat = []
         for y in ys:
             ys_flat.append(y.primal)
@@ -790,7 +781,32 @@ def _infer_r(jets) -> int:
     return 1
 
 
-def _abstract_pattern(body, K, consts, carry, xs, pattern, ncar):
+def _zpat(j) -> tuple:
+    """Per-leg liveness of a jet's coefficients (K-1 lower + top)."""
+    return tuple(not is_zero(c) for c in j.lower) + (not is_zero(j.top),)
+
+
+def _zero_fixed_point(body, K, consts, carry, xs, via):
+    """Union fixed point of the carry's symbolic-zero pattern under one
+    abstract body evaluation — shared by the scan and while rules.
+
+    The union is monotone (a leg only ever turns live), so convergence is
+    guaranteed within the total leg count — NOT within K rounds: a chain of
+    N carries shifting a live value needs N rounds to saturate."""
+    pattern = [_zpat(j) for j in carry]
+    for _ in range(sum(len(p) for p in pattern) + 1):
+        new_raw = _abstract_pattern(body, K, consts, carry, xs, pattern,
+                                    len(carry), via=via)
+        new_pat = [tuple(x or y for x, y in zip(p, q))
+                   for p, q in zip(pattern, new_raw)]
+        if new_pat == pattern:
+            break
+        pattern = new_pat
+    return pattern
+
+
+def _abstract_pattern(body, K, consts, carry, xs, pattern, ncar,
+                      via="scan"):
     r_axis = _infer_r(list(consts) + list(carry) + list(xs))
 
     def run(*flat_live):
@@ -806,7 +822,7 @@ def _abstract_pattern(body, K, consts, carry, xs, pattern, ncar):
             top = ZERO if is_zero(j.top) else next(it)
             primal = next(it)
             jets_in.append(CollapsedJet(primal, lower, top))
-        outs = _recurse(body, K, jets_in, via="scan")
+        outs = _recurse(body, K, jets_in, via=via)
         run.pattern = [
             tuple(not is_zero(c) for c in o.lower) + (not is_zero(o.top),)
             for o in outs[:ncar]
@@ -902,13 +918,20 @@ def _cond(K, in_jets, eqn):
 def _while(K, in_jets, eqn):
     """Collapsed-jet-of-while (the remaining CRULES control-flow gap).
 
-    The carry becomes a flat (primal, lower[R-stacked]..., top) bundle with
-    every coefficient materialized — a while body may flip a coefficient's
-    zero-ness on any iteration and the trip count is data-dependent, so
-    there is no bounded fixed point to exploit; materializing is the correct
-    (and simple) join. The loop condition is evaluated on primals only (its
-    output is boolean, hence jet-constant); differentiated cond consts are
-    rejected loudly. The body recurses through the *current* interpreter.
+    The carry becomes a flat (primal, lower[R-stacked]..., top) bundle —
+    but only the coefficients that can ever become nonzero are
+    materialized. The trip count is data-dependent, so no *value* can be
+    specialized per iteration — zero-*structure* can: run the body's
+    symbolic-zero propagation abstractly (like the scan rule's fixed
+    point) and union carry-in/carry-out patterns until stable. A leg ZERO
+    under the stable pattern stays ZERO for every trip count (including
+    zero trips, where the carry passes through), so mostly-constant
+    carries — loop counters, jet-constant state threaded beside the
+    differentiated activations — keep their ZERO legs instead of
+    densifying the whole bundle. The loop condition is evaluated on primals
+    only (its output is boolean, hence jet-constant); differentiated cond
+    consts are rejected loudly. The body recurses through the *current*
+    interpreter.
     """
     params = eqn.params
     ncc, nbc = params["cond_nconsts"], params["body_nconsts"]
@@ -924,11 +947,50 @@ def _while(K, in_jets, eqn):
             "collapsed jet of while_loop with differentiated cond constants")
     r_axis = _infer_r(in_jets)
 
+    # symbolic-zero fixed point over one abstract body evaluation (a while
+    # body returns exactly its carry, so the scan pattern runner applies
+    # with no xs and every output a carry)
+    pattern = _zero_fixed_point(body_jaxpr, K, bconsts, carry, [],
+                                via="while")
+
     def flatten(jets):
-        return _flatten_jets(jets, K, r_axis)
+        flat = []
+        for j, pat in zip(jets, pattern):
+            flat.append(j.primal)
+            for c, live in zip(j.lower, pat[:-1]):
+                if live:
+                    flat.append(instantiate(c, j.primal, r_axis))
+                elif not is_zero(c):  # the fixed point forbids this
+                    raise AssertionError(
+                        "while body produced a nonzero coefficient on a "
+                        "ZERO-pattern carry leg")
+            if pat[-1]:
+                flat.append(instantiate(j.top, j.primal))
+            elif not is_zero(j.top):
+                raise AssertionError(
+                    "while body produced a nonzero top on a ZERO-pattern "
+                    "carry leg")
+        return flat
 
     def unflatten(flat):
-        return _unflatten_jets(flat, len(carry), K)
+        jets, i = [], 0
+        for pat in pattern:
+            primal = flat[i]
+            i += 1
+            lower = []
+            for live in pat[:-1]:
+                if live:
+                    lower.append(flat[i])
+                    i += 1
+                else:
+                    lower.append(ZERO)
+            if pat[-1]:
+                top = flat[i]
+                i += 1
+            else:
+                top = ZERO
+            jets.append(CollapsedJet(primal, lower, top))
+        return jets
 
     def cond_fn(flat):
         prim = [CollapsedJet(j.primal, [ZERO] * (K - 1), ZERO)

@@ -53,7 +53,9 @@ Three matchers ship today:
   contract the lhs feature dim with a jet-constant 2-D ``(Din, Dout)`` *or*
   3-D ``(Din, H, dh)`` weight (the q/k/v projection layout — flattened to
   ``(Din, H*dh)`` for the kernel and reshaped back); a following
-  jet-constant ``(Dout,)`` bias add is folded in; the maximal literal-only
+  jet-constant bias add is folded in — ``(Dout,)`` vectors and the
+  head-shaped ``(H, dh)`` layout of ``cfg.qkv_bias`` alike; the maximal
+  literal-only
   elementwise subgraph consuming the affine output is *classified by
   probing* — evaluated on a fixed 1-D probe and compared against the
   kernel's supported activations, which recognizes both single-primitive
@@ -65,8 +67,10 @@ Three matchers ship today:
   :func:`repro.kernels.jet_attention.ops.collapsed_jet_attention_op`. The
   score dot must contract the trailing feature dim with leading batch dims;
   the scale must be scalar and jet-constant; an additive pre-softmax score
-  bias (ALiBi-style ``s + bias`` with a jet-constant bias broadcastable to
-  ``(Sq, Skv)``, leading dims 1) is folded into the kernel's bias input; a
+  bias (ALiBi-style ``s + bias`` with a jet-constant bias broadcastable
+  against the score shape — shared ``(Sq, Skv)`` tiles and per-head
+  ``(H, Sq, Skv)`` slope tables alike, the latter riding the kernel's
+  flattened batch grid axis) is folded into the kernel's bias input; a
   ``where``-style mask select (flat ``select_n`` or the ``pjit[_where]``
   jnp.where lowers to) is folded into the kernel's mask input, with the
   iota-derived mask/bias producers hoisted; the maximal row-reduction
@@ -79,24 +83,35 @@ Three matchers ship today:
 * **jet_attention_qkv** (the *superblock*) — a whole self-attention block:
   the three/four projection dots feeding an attention block
   (``h @ Wq/Wk/Wv`` with rank-3 ``(D, H, dh)`` weights, recognized by
-  *reusing the jet_mlp structural matcher*, through the GQA
-  broadcast/reshape and layout transposes), the attention core above
-  (scale/bias/mask/softmax), and the output projection
-  (``-> transpose -> dot(Wo)``), all fused into
+  *reusing the jet_mlp structural matcher* — including its head-shaped
+  ``cfg.qkv_bias`` fold, the bias lands on the primal lane only — through
+  the optional rotate-half *rope* subgraph, the GQA broadcast/reshape and
+  layout transposes), the attention core above (scale/bias/mask/softmax),
+  and the output projection (``-> transpose -> dot(Wo)``), all fused into
   :func:`repro.kernels.jet_attention.ops.collapsed_jet_qkv_attention_op` —
   one HBM read of the pre-projection hidden bundle and one write of the
   projected output per block, instead of a round-trip per segment. GQA is
   native (k/v jets materialize once per kv group, never broadcast to
-  ``Hq``) and ``dv != dh`` is supported. Superblock candidates are planned
-  in a pre-pass of :func:`plan_segments` (anchored at the earliest
-  projection dot); when one is rejected — a projection weight is a
-  propagated jet (plan-time taint), the projections read different
-  activations, there is no foldable output projection — planning falls
-  back to *today's per-segment plan* (the attention + jet_mlp matchers
-  still claim their anchors) and the reason is recorded as a plan note,
-  surfaced by :func:`explain`. The same per-segment fallback applies at
-  run time if ``try_fuse`` rejects (the recorded ``fail_reason`` names the
-  offending slot). ``backend='pallas-per-segment'``
+  ``Hq``) and ``dv != dh`` is supported. Rotary embeddings between the
+  projections and the score dot — the LM-trunk convention — fold into the
+  kernel's projection stage: rope is a jet-constant *linear* map per
+  position, so every Taylor coefficient rotates through the same cos/sin
+  tables; the matcher resolves the ``mul/rotate-half/add`` pattern against
+  jet-constant table producers, requires q and k to rotate through
+  *structurally equal* position tables, and rejects propagated-jet angles
+  at plan time with a note. The pre-softmax score bias may be per-head
+  (``(H, Sq, Skv)`` ALiBi-slope tables) in both the superblock and the
+  per-segment attention matcher. Superblock candidates are planned in a
+  pre-pass of :func:`plan_segments` (anchored at the earliest projection
+  dot); when one is rejected — a projection weight/bias or rope angle is
+  a propagated jet (plan-time taint), the projections read different
+  activations, q/k position tables differ, there is no foldable output
+  projection — planning falls back to *today's per-segment plan* (the
+  attention + jet_mlp matchers still claim their anchors) and the reason
+  is recorded as a plan note, surfaced by :func:`explain`. The same
+  per-segment fallback applies at run time if ``try_fuse`` rejects (the
+  recorded ``fail_reason`` names the offending slot).
+  ``backend='pallas-per-segment'``
   (:func:`interpret_collapsed_offload_per_segment`) disables the
   superblock pre-pass entirely — the ablation/benchmark driver.
 
@@ -509,10 +524,13 @@ class MlpSegment(Segment):
                 return None
             bp = jnp.asarray(bj.primal)
             if bp.size == dout:
+                # full-size bias — incl. the (H, dh) qkv_bias layout, whose
+                # row-major flattening matches the flattened (Din, H*dh)
+                # kernel weight
                 b = bp.reshape((dout,)).astype(w.dtype)
-            else:  # scalar/trailing-dim bias broadcast over the head shape
-                core = (bp.reshape(bp.shape[-1:])
-                        if bp.size > 1 else bp.reshape(()))
+            else:  # partially-broadcast bias (scalar, (dh,), (H, 1), ...)
+                lead = bp.ndim - len(head_shape)
+                core = bp.reshape(bp.shape[max(lead, 0):])
                 b = jnp.broadcast_to(core, head_shape).reshape(
                     (dout,)).astype(w.dtype)
         h0 = lhs.primal
@@ -541,6 +559,10 @@ class MlpSegment(Segment):
                                    int(np.prod(w.shape[1:])), R, K, h.dtype)
 
     def describe(self):
+        # rank-3 weights are attention projections — tagged so explain
+        # consumers (benchmarks) can attribute them to the attention block
+        if len(self.w_var.aval.shape) == 3:
+            return f"{self.activation}+proj"
         return self.activation
 
 
@@ -643,14 +665,20 @@ def _var_shape(v) -> Tuple[int, ...]:
     return tuple(np.shape(v.val)) if _is_literal(v) else tuple(v.aval.shape)
 
 
-def _bias_like(shape: Tuple[int, ...], dout: int) -> bool:
-    """A shape whose value can be reinterpreted as a (Dout,) bias: scalar, or
-    trailing dim in {1, Dout} with all leading dims of size 1 (jaxprs often
-    broadcast a (Dout,) bias only to (1, Dout) and rely on add's rank-equal
-    broadcasting)."""
+def _bias_like(shape: Tuple[int, ...], head_shape: Tuple[int, ...]) -> bool:
+    """A shape whose value can be reinterpreted as a bias over
+    ``head_shape`` — (Dout,) for dense weights, (H, dh) for rank-3
+    projection weights (the ``cfg.qkv_bias`` layout): right-aligned dims
+    each broadcastable (1 or equal), all extra leading dims of size 1
+    (jaxprs often broadcast a (Dout,) bias only to (1, Dout) and rely on
+    add's rank-equal broadcasting)."""
     if shape == ():
         return True
-    return shape[-1] in (1, dout) and all(s == 1 for s in shape[:-1])
+    n = len(head_shape)
+    if any(s != 1 for s in shape[:-n]):
+        return False
+    trail = shape[-n:]
+    return all(t in (1, h) for t, h in zip(trail[::-1], head_shape[::-1]))
 
 
 # producers that only reshape/retype a bias vector, preserving its values
@@ -658,9 +686,11 @@ _BIAS_PURE = ("broadcast_in_dim", "reshape", "squeeze", "convert_element_type",
               "copy")
 
 
-def _match_bias(ctx: PlanContext, y_var, dot_idx):
-    """Detect ``y + b`` with a (broadcast of a) jet-constant (Dout,) bias
-    following the dot.
+def _match_bias(ctx: PlanContext, y_var, dot_idx,
+                head_shape: Optional[Tuple[int, ...]] = None):
+    """Detect ``y + b`` with a (broadcast of a) jet-constant bias over
+    ``head_shape`` ((Dout,) dense / (H, dh) projection layout) following
+    the dot.
 
     The fused segment executes at the dot's position, so the bias source must
     be *available there*: a literal, a constvar/invar, or a value produced by
@@ -671,6 +701,8 @@ def _match_bias(ctx: PlanContext, y_var, dot_idx):
 
     Returns (bias_var, add_out_var, skip_idxs) or (None, y_var, empty)."""
     jaxpr, consumers, outvars = ctx.jaxpr, ctx.consumers, ctx.outvars
+    if head_shape is None:
+        head_shape = tuple(y_var.aval.shape)[-1:]
     add_idx = ctx.sole_consumer(y_var)
     if add_idx is None:
         return None, y_var, set()
@@ -681,14 +713,13 @@ def _match_bias(ctx: PlanContext, y_var, dot_idx):
     other = b if a is y_var else a
     if other is y_var:  # y + y: not a bias
         return None, y_var, set()
-    dout = tuple(y_var.aval.shape)[-1]
-    if not _bias_like(_var_shape(other), dout):
+    if not _bias_like(_var_shape(other), head_shape):
         return None, y_var, set()
 
     skip = {add_idx}
     cur, cur_consumer = other, add_idx
     while True:
-        if _is_literal(cur) or not _bias_like(_var_shape(cur), dout):
+        if _is_literal(cur) or not _bias_like(_var_shape(cur), head_shape):
             break
         idx = ctx.producer_idx.get(cur)
         if idx is None or idx < dot_idx:
@@ -701,7 +732,7 @@ def _match_bias(ctx: PlanContext, y_var, dot_idx):
                 and cur not in outvars):
             skip.add(idx)  # link feeds only the (skipped) chain
         cur, cur_consumer = be.invars[0], idx
-    if not (_is_literal(cur) or _bias_like(_var_shape(cur), dout)):
+    if not (_is_literal(cur) or _bias_like(_var_shape(cur), head_shape)):
         return None, y_var, set()
     return cur, eqn.outvars[0], skip
 
@@ -726,7 +757,8 @@ def match_mlp_segment(ctx: PlanContext, idx: int) -> Optional[MlpSegment]:
         return None
     y = eqn.outvars[0]
     skip = {idx}
-    bias_var, z_var, bias_skip = _match_bias(ctx, y, idx)
+    bias_var, z_var, bias_skip = _match_bias(ctx, y, idx,
+                                             tuple(rhs.aval.shape[1:]))
     skip |= bias_skip
     out_var, activation = z_var, "linear"
     if z_var not in ctx.outvars:
@@ -833,8 +865,10 @@ class AttentionSegment(Segment):
                 self.fail_reason = "propagated jet in the bias slot"
                 return None
             b = jnp.asarray(bj.primal)
-            if b.ndim > 2:  # leading size-1 dims, validated at plan time
-                b = b.reshape(b.shape[-2:])
+            if b.ndim > 2 and all(s == 1 for s in b.shape[:-2]):
+                b = b.reshape(b.shape[-2:])  # shared (Sq, Skv) tile
+            # per-head/per-batch tables keep their leading axes — the op
+            # broadcasts them onto the kernel's flattened batch grid
             bias = b
 
         def triple(j):
@@ -1037,34 +1071,47 @@ def _probe_softmax(ctx: PlanContext, region, start_var, out_var) -> bool:
                                                  atol=_PROBE_TOL)
 
 
-def _resolve_shared_tile(ctx: PlanContext, v, sq: int, skv: int):
+def _resolve_tile(ctx: PlanContext, v, ok):
     """Follow ``v`` back through pure trailing-aligned broadcasts (the
-    ``jnp`` rank promotion of ``s + bias``) and dtype casts to a var whose
-    value can be reinterpreted as a shared (Sq, Skv) score tile; returns
-    the resolved var or None."""
+    ``jnp`` rank promotion of ``s + bias``) and dtype casts to the
+    *deepest* var whose shape satisfies ``ok`` — digging past a
+    full-score-shape broadcast recovers the compact source (e.g. a
+    per-head (H, Sq, Skv) table behind its batch broadcast). Returns the
+    resolved var or None."""
+    best = None
     for _ in range(4):
-        if _mask_shape_ok(_var_shape(v), sq, skv):
-            return v
+        if ok(_var_shape(v)):
+            best = v
         if _is_literal(v):
-            return None
+            break
         idx = ctx.producer_idx.get(v)
         if idx is None:
-            return None
+            break
         eqn = ctx.jaxpr.eqns[idx]
         name = eqn.primitive.name
         if name == "broadcast_in_dim":
             # only leading-axis insertion: the inner dims must land on the
-            # trailing output dims unchanged, else the (Sq, Skv) reading of
-            # the inner value would be wrong
+            # trailing output dims unchanged, else the trailing-aligned
+            # reading of the inner value would be wrong
             out_rank = len(eqn.outvars[0].aval.shape)
             in_rank = len(_var_shape(eqn.invars[0]))
             if tuple(eqn.params["broadcast_dimensions"]) != tuple(
                     range(out_rank - in_rank, out_rank)):
-                return None
+                break
         elif name not in ("convert_element_type", "copy"):
-            return None
+            break
         v = eqn.invars[0]
-    return None
+    return best
+
+
+def _score_bias_ok(shape: Tuple[int, ...],
+                   score_shape: Tuple[int, ...]) -> bool:
+    """Bias shapes the kernels can fold: right-aligned broadcast against
+    the score shape (each aligned dim 1 or equal), extra leading dims of
+    size 1 — shared (Sq, Skv) tiles, per-head (H, Sq, Skv) ALiBi-slope
+    tables and per-batch variants alike. The same broadcast rule as the
+    projection-bias check, against the score dims."""
+    return _bias_like(shape, score_shape)
 
 
 def _mask_shape_ok(shape: Tuple[int, ...], sq: int, skv: int) -> bool:
@@ -1150,17 +1197,21 @@ def _match_attention_core(ctx: PlanContext, idx: int) -> Optional[_AttnCore]:
                 nxt = ctx.sole_consumer(cur)
 
     # optional additive jet-constant score bias (ALiBi-style s + bias); the
-    # jnp rank promotion broadcasts the (Sq, Skv) bias to the full score
-    # shape, so resolve the add operand back through that broadcast
+    # jnp rank promotion broadcasts the (Sq, Skv) — or per-head
+    # (H, Sq, Skv) — bias to the full score shape, so resolve the add
+    # operand back through that broadcast
     bias_var = None
     hoist_roots: List[Any] = [scale_var]
+    score_shape = tuple(s_var.aval.shape)
     if nxt is not None:
         beqn = jaxpr.eqns[nxt]
         if beqn.primitive.name == "add":
             a, b = beqn.invars
             other = b if a is cur else a
             src = (None if other is cur or ctx.is_propagated(other)
-                   else _resolve_shared_tile(ctx, other, sq, skv))
+                   else _resolve_tile(
+                       ctx, other,
+                       lambda sh: _score_bias_ok(sh, score_shape)))
             if src is not None:
                 bias_var = src
                 skip.add(nxt)
@@ -1268,6 +1319,14 @@ class QKVAttentionSegment(Segment):
     scale_op: str = ""
     mask_var: Any = None
     bias_var: Any = None
+    # jet-constant projection biases (cfg.qkv_bias): None or head-shaped
+    # vars resolved by the jet_mlp bias matcher; primal-lane-only semantics
+    qb_var: Any = None
+    kb_var: Any = None
+    vb_var: Any = None
+    # rotary embeddings: None or the (cos, sin) jet-constant per-position
+    # table vars resolved from the rotate-half subgraphs of the q/k chains
+    rope_vars: Any = None
     heads: Tuple[int, int] = (1, 1)  # (Hq, Hkv)
     # the anchor projection's MlpSegment: a run-time superblock rejection
     # delegates to it, so the block degrades to exactly the per-segment
@@ -1313,6 +1372,43 @@ class QKVAttentionSegment(Segment):
                 return self._fall_back(read, K, jaxpr)
             weights.append(wj.primal)
         wq, wk, wv, wo = weights
+        Hq, dh = int(wq.shape[1]), int(wq.shape[2])
+        Hkv, dv = int(wk.shape[1]), int(wv.shape[2])
+
+        qkv_bias = None
+        bias_slots = (("q", self.qb_var, (Hq, dh)),
+                      ("k", self.kb_var, (Hkv, dh)),
+                      ("v", self.vb_var, (Hkv, dv)))
+        if any(var is not None for _, var, _ in bias_slots):
+            legs = []
+            for name, var, hshape in bias_slots:
+                if var is None:
+                    legs.append(None)
+                    continue
+                bj = read2(var)
+                if not bj.is_constant():
+                    self.fail_reason = (f"propagated jet in the {name} "
+                                        f"projection-bias slot")
+                    return self._fall_back(read, K, jaxpr)
+                bp = jnp.asarray(bj.primal)
+                lead = bp.ndim - len(hshape)
+                core = bp.reshape(bp.shape[max(lead, 0):])
+                legs.append(jnp.broadcast_to(core, hshape))
+            qkv_bias = tuple(legs)
+
+        rope = None
+        if self.rope_vars is not None:
+            S = int(h.primal.shape[1])
+            tabs = []
+            for name, var in zip(("cos", "sin"), self.rope_vars):
+                tj = read2(var)
+                if not tj.is_constant():
+                    self.fail_reason = (f"propagated jet in the rope {name} "
+                                        f"table slot")
+                    return self._fall_back(read, K, jaxpr)
+                t = jnp.asarray(tj.primal)
+                tabs.append(t.reshape(S, t.shape[-1]))
+            rope = tuple(tabs)
 
         scale = 1.0
         if self.scale_var is not None:
@@ -1339,15 +1435,17 @@ class QKVAttentionSegment(Segment):
                 self.fail_reason = "propagated jet in the bias slot"
                 return self._fall_back(read, K, jaxpr)
             b = jnp.asarray(bj.primal)
-            if b.ndim > 2:
-                b = b.reshape(b.shape[-2:])
+            if b.ndim > 2 and all(s == 1 for s in b.shape[:-2]):
+                b = b.reshape(b.shape[-2:])  # shared (Sq, Skv) tile
+            # per-head tables keep their head axis; the op broadcasts them
+            # to the kernel's (Hq, S, S) layout (batch-1, plan-validated)
             bias = b
 
         lower = [None if is_zero(c) else c for c in h.lower]
         top = None if is_zero(h.top) else h.top
         o0, ol, ot = collapsed_jet_qkv_attention_op(
             (h.primal, lower, top), wq, wk, wv, wo, K=K, mask=mask,
-            scale=scale, bias=bias,
+            scale=scale, bias=bias, rope=rope, qkv_bias=qkv_bias,
         )
         out = {self.out_var: _cast_jet(CollapsedJet(o0, list(ol), ot),
                                        self.out_var)}
@@ -1361,10 +1459,18 @@ class QKVAttentionSegment(Segment):
         jet_attention_ops.prewarm_qkv_blocks(
             int(h.shape[0]), int(h.shape[1]), int(h.shape[2]),
             int(wq.shape[1]), int(wk.shape[1]), int(wq.shape[2]),
-            int(wv.shape[2]), int(wo.shape[2]), R, K, h.dtype)
+            int(wv.shape[2]), int(wo.shape[2]), R, K, h.dtype,
+            rope=self.rope_vars is not None,
+            qbias=any(v is not None
+                      for v in (self.qb_var, self.kb_var, self.vb_var)))
 
     def describe(self):
         bits = [f"Hq{self.heads[0]}/Hkv{self.heads[1]}"]
+        if self.rope_vars is not None:
+            bits.append("rope")
+        if any(v is not None for v in (self.qb_var, self.kb_var,
+                                       self.vb_var)):
+            bits.append("qkvbias")
         if self.scale_var is not None:
             bits.append("scale")
         if self.bias_var is not None:
@@ -1374,19 +1480,263 @@ class QKVAttentionSegment(Segment):
         return "+".join(bits)
 
 
-def _proj_chain(ctx: PlanContext, var):
+def _params_equal(pa, pb) -> bool:
+    """Best-effort eqn-param equality for structural graph comparison."""
+    if pa.keys() != pb.keys():
+        return False
+    for k in pa:
+        x, y = pa[k], pb[k]
+        if x is y:
+            continue
+        try:
+            eq = x == y
+        except Exception:
+            return False
+        if eq is NotImplemented or not np.all(eq):
+            return False
+    return True
+
+
+def _graphs_equal(ctx: PlanContext, va, vb, budget: int = 96) -> bool:
+    """Structural equality of two producer subgraphs: same primitives,
+    params and literal values, rooted at the same invars/constvars. Used to
+    prove the q- and k-side rope tables encode the same positions — rope
+    is traced once per operand, so identical tables appear as duplicated
+    (var-distinct but isomorphic) eqn chains."""
+    if va is vb:
+        return True
+    if _is_literal(va) or _is_literal(vb):
+        return (_is_literal(va) and _is_literal(vb)
+                and np.shape(va.val) == np.shape(vb.val)
+                and bool(np.all(np.asarray(va.val) == np.asarray(vb.val))))
+    ia, ib = ctx.producer_idx.get(va), ctx.producer_idx.get(vb)
+    if ia is None or ib is None:
+        return False  # distinct invars/constvars (va is vb handled above)
+    if budget <= 0:
+        return False
+    ea, eb = ctx.jaxpr.eqns[ia], ctx.jaxpr.eqns[ib]
+    if (ea.primitive is not eb.primitive
+            or len(ea.invars) != len(eb.invars)
+            or list(ea.outvars).index(va) != list(eb.outvars).index(vb)
+            or not _params_equal(ea.params, eb.params)):
+        return False
+    return all(_graphs_equal(ctx, x, y, budget - len(ea.invars))
+               for x, y in zip(ea.invars, eb.invars))
+
+
+def _resolve_rope_table(ctx: PlanContext, v, S: int, half: int):
+    """Follow ``v`` back through value-preserving (axis-inserting)
+    broadcasts, reshapes and dtype casts to the deepest var still readable
+    as the per-position (S, half) cos/sin table — trailing dims
+    (S, half) or (S, 1, half) with all leading dims of size 1. Returns the
+    resolved var or None."""
+    def ok(shape):
+        if len(shape) < 2 or shape[-1] != half:
+            return False
+        if shape[-2] == S:
+            return all(s == 1 for s in shape[:-2])
+        return (len(shape) >= 3 and shape[-2] == 1 and shape[-3] == S
+                and all(s == 1 for s in shape[:-3]))
+
+    best = None
+    for _ in range(8):
+        if _is_literal(v):
+            break
+        if ok(_var_shape(v)):
+            best = v
+        idx = ctx.producer_idx.get(v)
+        if idx is None:
+            break
+        eqn = ctx.jaxpr.eqns[idx]
+        name = eqn.primitive.name
+        if name == "broadcast_in_dim":
+            out_shape = tuple(eqn.outvars[0].aval.shape)
+            in_shape = tuple(_var_shape(eqn.invars[0]))
+            bd = tuple(eqn.params["broadcast_dimensions"])
+            if (any(out_shape[d] != s for d, s in zip(bd, in_shape)
+                    if s != 1)
+                    or any(out_shape[i] != 1 for i in range(len(out_shape))
+                           if i not in bd)):
+                break  # replicating broadcast: the value reading changes
+        elif name not in ("convert_element_type", "reshape", "copy"):
+            break
+        v = eqn.invars[0]
+    return best
+
+
+def _half_slice(ctx: PlanContext, v, half: int):
+    """Recognize ``v`` as one rotate-half half-slice: a full slice of its
+    source on every axis except the last, which takes [0:half) or
+    [half:2*half). Returns (slice eqn idx, source var, which half) or
+    None."""
+    idx = ctx.producer_idx.get(v)
+    if idx is None:
+        return None
+    eqn = ctx.jaxpr.eqns[idx]
+    if eqn.primitive.name != "slice":
+        return None
+    src = eqn.invars[0]
+    if _is_literal(src):
+        return None
+    sshape = tuple(src.aval.shape)
+    start = tuple(eqn.params["start_indices"])
+    limit = tuple(eqn.params["limit_indices"])
+    strides = eqn.params.get("strides")
+    if strides is not None and any(s != 1 for s in strides):
+        return None
+    if any(start[i] != 0 or limit[i] != sshape[i]
+           for i in range(len(sshape) - 1)):
+        return None
+    if sshape[-1] != 2 * half:
+        return None
+    if start[-1] == 0 and limit[-1] == half:
+        return idx, src, 0
+    if start[-1] == half and limit[-1] == 2 * half:
+        return idx, src, 1
+    return None
+
+
+def _match_rope(ctx: PlanContext, var):
+    """Match the rotate-half rotary application producing ``var`` (layout
+    (B, S, H, dh), between the q/k projection and the attention
+    transposes):
+
+        concat([x1*cos - x2*sin, x2*cos + x1*sin], axis=-1)
+
+    with ``x1``/``x2`` the half-slices of one inner var and ``cos``/``sin``
+    resolving (through broadcasts) to per-position (S, dh/2) tables — the
+    convention of :func:`repro.models.layers.rope`. Taint is NOT checked
+    here (plan-time rejection with a note happens in the superblock
+    resolver; run-time re-checks happen in try_fuse).
+
+    Returns ``(inner_var, cos_root, sin_root, idxs, table_operands)`` or
+    None — ``idxs`` are the rope application eqns (skipped when the
+    superblock fuses), ``table_operands`` the mul-side table vars whose
+    producer closures must be hoisted.
+    """
+    jaxpr = ctx.jaxpr
+    shape = tuple(var.aval.shape)
+    if len(shape) != 4 or shape[-1] % 2:
+        return None
+    S, dh = shape[1], shape[-1]
+    half = dh // 2
+    cidx = ctx.producer_idx.get(var)
+    if cidx is None:
+        return None
+    ceqn = jaxpr.eqns[cidx]
+    if (ceqn.primitive.name != "concatenate"
+            or ceqn.params["dimension"] != len(shape) - 1
+            or len(ceqn.invars) != 2):
+        return None
+
+    def owned(v, allowed) -> bool:
+        return (not _is_literal(v) and v not in ctx.outvars
+                and all(c in allowed for c in ctx.consumers.get(v, ())))
+
+    lo_v, hi_v = ceqn.invars
+    if not (owned(lo_v, {cidx}) and owned(hi_v, {cidx})):
+        return None
+    lo_idx, hi_idx = ctx.producer_idx.get(lo_v), ctx.producer_idx.get(hi_v)
+    if lo_idx is None or hi_idx is None:
+        return None
+    lo_eqn, hi_eqn = jaxpr.eqns[lo_idx], jaxpr.eqns[hi_idx]
+    if lo_eqn.primitive.name != "sub" or hi_eqn.primitive.name != "add":
+        return None
+
+    def decode(v):
+        """v = mul(half-slice, table) (either operand order) ->
+        (mul idx, slice idx, slice source, which half, table operand,
+        table root) or None."""
+        midx = ctx.producer_idx.get(v)
+        if midx is None:
+            return None
+        meqn = jaxpr.eqns[midx]
+        if meqn.primitive.name != "mul":
+            return None
+        a, b = meqn.invars
+        for x, t in ((a, b), (b, a)):
+            if _is_literal(x) or _is_literal(t):
+                continue
+            hs = _half_slice(ctx, x, half)
+            if hs is None:
+                continue
+            root = _resolve_rope_table(ctx, t, S, half)
+            if root is None:
+                continue
+            return midx, hs[0], hs[1], hs[2], t, root
+        return None
+
+    # sub(x1*cos, x2*sin) is order-fixed; the add is matched commutatively
+    # via the half indices
+    da, db = decode(lo_eqn.invars[0]), decode(lo_eqn.invars[1])
+    dc, dd = decode(hi_eqn.invars[0]), decode(hi_eqn.invars[1])
+    if None in (da, db, dc, dd):
+        return None
+    if da[3] != 0 or db[3] != 1:  # x1 * cos - x2 * sin
+        return None
+    cos_root, sin_root = da[5], db[5]
+    if dc[3] == 1 and dd[3] == 0:
+        d_cos, d_sin = dc, dd  # x2 * cos + x1 * sin
+    elif dc[3] == 0 and dd[3] == 1:
+        d_cos, d_sin = dd, dc
+    else:
+        return None
+
+    def same_root(ra, rb) -> bool:
+        return ra is rb or _graphs_equal(ctx, ra, rb)
+
+    if not (same_root(d_cos[5], cos_root) and same_root(d_sin[5], sin_root)):
+        return None
+    inner = da[2]
+    if any(d[2] is not inner for d in (db, dc, dd)):
+        return None
+    mul_idxs = {d[0] for d in (da, db, dc, dd)}
+    slice_idxs = {d[1] for d in (da, db, dc, dd)}
+    # the chain must own everything it skips
+    if not (owned(lo_eqn.invars[0], {lo_idx}) and owned(lo_eqn.invars[1],
+                                                        {lo_idx})
+            and owned(hi_eqn.invars[0], {hi_idx})
+            and owned(hi_eqn.invars[1], {hi_idx})):
+        return None
+    for d in (da, db, dc, dd):
+        x = jaxpr.eqns[d[1]].outvars[0]
+        if not owned(x, mul_idxs):
+            return None
+    if not owned(inner, slice_idxs):
+        return None
+    idxs = {cidx, lo_idx, hi_idx} | mul_idxs | slice_idxs
+    table_ops = tuple(d[4] for d in (da, db, dc, dd))
+    return inner, cos_root, sin_root, idxs, table_ops
+
+
+@dataclasses.dataclass
+class _ProjChain:
+    """One resolved q/k/v projection chain of a superblock candidate."""
+
+    hidden: Any
+    w_var: Any
+    bias_var: Any  # None | head-shaped jet-constant projection bias
+    G: int
+    rope: Any  # None | (cos_root, sin_root)
+    rope_operands: Tuple[Any, ...]  # mul-side table vars, hoist roots
+    idxs: List[int]
+    mseg: Any  # the anchor projection's MlpSegment (run-time fallback)
+
+
+def _proj_chain(ctx: PlanContext, var) -> Optional[_ProjChain]:
     """Resolve one attention input var ((B, H, S, d), feeding the score or
     value dot) back to its projection of the hidden bundle:
 
         transpose(0,2,1,3) <- [reshape <- broadcast_in_dim]  (the GQA
-        repeat, kv sides only) <- dot_general(hidden, W)
+        repeat, kv sides only) <- [rotate-half rope concat]
+        <- [+ bias] <- dot_general(hidden, W)
 
-    The projection dot itself is validated by *reusing the jet_mlp
-    structural matcher* (rank-3 weight, linear, bias-free, owning its
-    output). Every intermediate must be solely consumed by the next link.
-    Returns (hidden_var, w_var, G, chain eqn idxs, MlpSegment) or None —
-    the MlpSegment doubles as the superblock's run-time fallback plan for
-    its anchor projection.
+    The projection dot (and its optional head-shaped ``cfg.qkv_bias`` add)
+    is validated by *reusing the jet_mlp structural matcher* (rank-3
+    weight, linear, owning its output); the optional rotary application is
+    matched by :func:`_match_rope`. Every intermediate must be solely
+    consumed by the next link. The returned MlpSegment doubles as the
+    superblock's run-time fallback plan for its anchor projection.
     """
     jaxpr = ctx.jaxpr
     if len(var.aval.shape) != 4:
@@ -1432,15 +1782,42 @@ def _proj_chain(ctx: PlanContext, var):
             if pidx is None:
                 return None
             eqn = jaxpr.eqns[pidx]
-    if eqn.primitive.name != "dot_general":
+    rope = None
+    rope_ops: Tuple[Any, ...] = ()
+    if eqn.primitive.name == "concatenate":
+        rm = _match_rope(ctx, v)
+        if rm is None:
+            return None
+        v, cos_root, sin_root, ridxs, rope_ops = rm
+        rope = (cos_root, sin_root)
+        idxs.extend(sorted(ridxs))
+        pidx = ctx.producer_idx.get(v)
+        if pidx is None:
+            return None
+        eqn = jaxpr.eqns[pidx]
+    dot_idx = pidx
+    if eqn.primitive.name == "add":
+        # projection bias: the dot feeds the add; the jet_mlp matcher
+        # re-derives and validates the whole affine pattern below
+        dot_idx = next(
+            (i for i in (ctx.producer_idx.get(iv) for iv in eqn.invars
+                         if not _is_literal(iv))
+             if i is not None
+             and jaxpr.eqns[i].primitive.name == "dot_general"),
+            None)
+        if dot_idx is None:
+            return None
+    elif eqn.primitive.name != "dot_general":
         return None
-    mseg = match_mlp_segment(ctx, pidx)
+    mseg = match_mlp_segment(ctx, dot_idx)
     if (mseg is None or mseg.activation != "linear"
-            or mseg.bias_var is not None or mseg.out_var is not v
+            or mseg.out_var is not v
             or len(mseg.w_var.aval.shape) != 3):
         return None
-    idxs.append(pidx)
-    return mseg.lhs_var, mseg.w_var, G, idxs, mseg
+    idxs.extend(sorted(mseg.skip))
+    return _ProjChain(hidden=mseg.lhs_var, w_var=mseg.w_var,
+                      bias_var=mseg.bias_var, G=G, rope=rope,
+                      rope_operands=rope_ops, idxs=idxs, mseg=mseg)
 
 
 def _resolve_superblock(ctx: PlanContext, idx: int):
@@ -1470,8 +1847,9 @@ def _resolve_superblock(ctx: PlanContext, idx: int):
         missing = "/".join(n for n, c in zip("qkv", (qc, kc, vc))
                            if c is None)
         return None, f"{missing} projection chain not matched"
-    (h_q, wq, gq, qi, qm), (h_k, wk, gk, ki, km), (h_v, wv, gv, vi, vm) = \
-        qc, kc, vc
+    h_q, wq, qi, qm = qc.hidden, qc.w_var, qc.idxs, qc.mseg
+    h_k, wk, ki, km = kc.hidden, kc.w_var, kc.idxs, kc.mseg
+    h_v, wv, vi, vm = vc.hidden, vc.w_var, vc.idxs, vc.mseg
     if not (h_q is h_k and h_q is h_v):
         return None, "q/k/v projections read different activations"
     if len(h_q.aval.shape) != 3:
@@ -1479,10 +1857,43 @@ def _resolve_superblock(ctx: PlanContext, idx: int):
                      f"(B, S, D)"
     Hq = int(wq.aval.shape[1])
     Hkv = int(wk.aval.shape[1])
-    if (gq != 1 or gk != gv or Hkv == 0 or Hq % Hkv or Hq // Hkv != gk
-            or int(wv.aval.shape[1]) != Hkv
+    if (qc.G != 1 or kc.G != vc.G or Hkv == 0 or Hq % Hkv
+            or Hq // Hkv != kc.G or int(wv.aval.shape[1]) != Hkv
             or wq.aval.shape[2] != wk.aval.shape[2]):
         return None, "projection shapes do not form a GQA block"
+    # rotary embeddings: q and k must rotate through the SAME jet-constant
+    # position tables (rope is traced once per operand, so "same" means
+    # structurally equal producer graphs); v never rotates
+    if vc.rope is not None:
+        return None, "rope applied to the value projection"
+    if (qc.rope is None) != (kc.rope is None):
+        return None, "rope applied to only one of q/k"
+    rope_vars = None
+    if qc.rope is not None:
+        for name, t in (("q cos", qc.rope[0]), ("q sin", qc.rope[1]),
+                        ("k cos", kc.rope[0]), ("k sin", kc.rope[1])):
+            if ctx.is_propagated(t):
+                return None, (f"{name} rope table carries a propagated "
+                              f"jet (taint)")
+        if not (_graphs_equal(ctx, qc.rope[0], kc.rope[0])
+                and _graphs_equal(ctx, qc.rope[1], kc.rope[1])):
+            return None, "q/k rope position tables differ"
+        rope_vars = qc.rope
+    # plan-time taint on the projection biases (run-time re-checks in
+    # try_fuse): a propagated bias can never fold
+    for name, b in (("q projection bias", qc.bias_var),
+                    ("k projection bias", kc.bias_var),
+                    ("v projection bias", vc.bias_var)):
+        if b is not None and ctx.is_propagated(b):
+            return None, f"{name} carries a propagated jet (taint)"
+    # the superblock kernel's score-bias operand has a head axis but no
+    # batch axis: per-batch tables stay on the per-segment plan (whose
+    # kernel flattens batch and heads together)
+    if core.bias_var is not None:
+        sq, skv = (int(core.q_var.aval.shape[-2]),
+                   int(core.k_var.aval.shape[-2]))
+        if not _score_bias_ok(_var_shape(core.bias_var), (Hq, sq, skv)):
+            return None, "score bias varies over the batch"
     # the output projection: transpose (B,H,S,dv)->(B,S,H,dv), then a dot
     # contracting (H, dv) with a rank-3 jet-constant Wo
     t_idx = ctx.sole_consumer(core.out_var)
@@ -1513,8 +1924,13 @@ def _resolve_superblock(ctx: PlanContext, idx: int):
             return None, f"{name} carries a propagated jet (taint)"
     skip = set(core.skip) | set(qi) | set(ki) | set(vi) | {t_idx, o_idx}
     anchor = min(skip)
-    hoist = _hoist_closure(ctx, list(core.hoist_roots) + [wq, wk, wv, wo],
-                           anchor)
+    hoist_roots = (list(core.hoist_roots) + [wq, wk, wv, wo]
+                   + [b for b in (qc.bias_var, kc.bias_var, vc.bias_var)
+                      if b is not None]
+                   + list(qc.rope_operands) + list(kc.rope_operands))
+    if rope_vars is not None:
+        hoist_roots += list(rope_vars)
+    hoist = _hoist_closure(ctx, hoist_roots, anchor)
     skip |= set(hoist)
     # the anchor is always the earliest projection dot (everything else in
     # the block consumes a projection); its MlpSegment becomes the run-time
@@ -1526,8 +1942,9 @@ def _resolve_superblock(ctx: PlanContext, idx: int):
         anchor=anchor, out_var=oeqn.outvars[0], skip=skip, hoist=hoist,
         hidden_var=h_q, wq_var=wq, wk_var=wk, wv_var=wv, wo_var=wo,
         scale_var=core.scale_var, scale_op=core.scale_op,
-        mask_var=core.mask_var, bias_var=core.bias_var, heads=(Hq, Hkv),
-        fallback=fallback)
+        mask_var=core.mask_var, bias_var=core.bias_var,
+        qb_var=qc.bias_var, kb_var=kc.bias_var, vb_var=vc.bias_var,
+        rope_vars=rope_vars, heads=(Hq, Hkv), fallback=fallback)
     return seg, None
 
 

@@ -27,7 +27,19 @@ per segment — the ablation the attention benchmarks compare against. The
 offload engine is *recursive*: the backend is honored transitively inside
 ``scan``/``cond``/``while``/``pjit``/``remat`` bodies, so scanned layer
 stacks (``models/transformer.backbone``) fuse exactly like unrolled trunks.
-:func:`explain` dumps the resulting plan for inspection.
+
+Superblock coverage includes LM-style trunks: rotary embeddings between
+the q/k projections and the score dot (jet-constant rotate-half cos/sin
+tables fold into the kernel's projection stage — rope is linear per
+position, so every Taylor coefficient rotates identically), projection
+biases (``cfg.qkv_bias``, primal lane only), and per-head ALiBi-style
+score-bias tables — so the default ``use_rope=True`` transformer fuses as
+ONE kernel per layer, inside the scanned backbone too. Still rejected
+(with plan notes naming the reason): propagated-jet rope angles or
+position tables that differ between q and k (e.g. decode-style offset
+queries), learned position embeddings (not a rotate-half subgraph), and
+per-batch score biases in the superblock (the per-segment kernel still
+folds those). :func:`explain` dumps the resulting plan for inspection.
 """
 
 from __future__ import annotations

@@ -15,9 +15,12 @@ Three kernels are tuned here:
   :func:`get_attention_block_config` cover it.
 * ``jet_attention_qkv`` — the superblock (q/k/v/o projections fused into the
   attention kernel, grid ``(B, S/block_q, Hkv, S/block_k)``); keys are
-  ``(B, S, D, Hq, Hkv, dh, dv, Do, R)`` + K since the weight tiles and the
-  per-group ``G = Hq/Hkv`` query-head state share VMEM with the softmax
-  state. :func:`qkv_attention_default_config` /
+  ``(B, S, D, Hq, Hkv, dh, dv, Do, R, rope, qbias)`` + K since the weight
+  tiles and the per-group ``G = Hq/Hkv`` query-head state share VMEM with
+  the softmax state — and the rope / projection-bias variants carry extra
+  operands (the pre-rotated ``W @ R`` weight companions double the q/k
+  weight tiles, cos/sin tiles ride the grid), so they tune under their own
+  keys. :func:`qkv_attention_default_config` /
   :func:`qkv_attention_candidate_configs` /
   :func:`get_qkv_attention_block_config` cover it.
 
@@ -29,7 +32,10 @@ kernel name* (``jet_mlp|…`` / ``jet_attention|…`` / ``jet_attention_qkv|…`
 so the kernels' block configs can never collide; legacy un-namespaced
 entries (written before the attention kernel existed, and necessarily
 jet_mlp's) are migrated on load, as are pre-``dv`` 5-dim ``jet_attention``
-keys (their only possible value head dim was ``dv = dh``).
+keys (their only possible value head dim was ``dv = dh``) and
+pre-rope/bias 9-dim ``jet_attention_qkv`` keys (those entries could only
+have been tuned without rope or projection biases — both flags migrate
+to 0).
 
 Cache location: ``$REPRO_AUTOTUNE_CACHE`` if set, else
 ``~/.cache/repro/autotune.json``.
@@ -102,6 +108,13 @@ def _migrate_key(key: str) -> str:
             dims = dims[:4] + [dims[3]] + dims[4:]  # insert dv = dh
             return f"jet_attention|{'x'.join(dims)}|{tail}"
         return key
+    if head == "jet_attention_qkv":
+        dims, sep, tail = rest.partition("|")
+        dims = dims.split("x")
+        if sep and len(dims) == 9 and all(d.isdigit() for d in dims):
+            dims += ["0", "0"]  # pre-rope/bias entry: both flags off
+            return f"jet_attention_qkv|{'x'.join(dims)}|{tail}"
+        return key
     if head in KERNELS:
         return key
     if "x" in head and head.replace("x", "").isdigit():
@@ -159,10 +172,11 @@ def attention_shape_key(N: int, Sq: int, Skv: int, dh: int, dv: int, R: int,
 
 
 def qkv_attention_shape_key(B: int, S: int, D: int, Hq: int, Hkv: int,
-                            dh: int, dv: int, do_: int, R: int, K: int,
-                            dtype, backend: str) -> str:
-    return _key("jet_attention_qkv", (B, S, D, Hq, Hkv, dh, dv, do_, R), K,
-                dtype, backend)
+                            dh: int, dv: int, do_: int, R: int, rope: int,
+                            qbias: int, K: int, dtype, backend: str) -> str:
+    return _key("jet_attention_qkv",
+                (B, S, D, Hq, Hkv, dh, dv, do_, R, int(rope), int(qbias)),
+                K, dtype, backend)
 
 
 def _pow2_le(n: int) -> int:
@@ -442,13 +456,16 @@ def put_attention_config(N: int, Sq: int, Skv: int, dh: int, dv: int, R: int,
 
 
 def _qkv_vmem_bytes(cfg: AttnBlockConfig, D: int, Hq: int, Hkv: int, dh: int,
-                    dv: int, do_: int, R: int, K: int,
-                    itemsize: int = 4) -> int:
+                    dv: int, do_: int, R: int, K: int, rope: int = 0,
+                    qbias: int = 0, itemsize: int = 4) -> int:
     """Working-set estimate for one superblock grid step: the hidden-bundle
     tiles, one kv group's weight tiles, the projected series for one query
     head at a time, and the per-group softmax/output state. ``do_`` is the
     output-projection dim (== D for residual blocks, but kept independent —
-    the Wo tile and the output accumulator scale with it)."""
+    the Wo tile and the output accumulator scale with it). ``rope`` doubles
+    the q/k weight tiles (the pre-rotated ``W @ R`` companions), adds the
+    cos/sin grid tiles and a second projected series per coefficient;
+    ``qbias`` adds the (small) per-head bias vectors."""
     bq, bk = cfg
     G = max(Hq // max(Hkv, 1), 1)
     nser = 2 + (K - 1) * R
@@ -457,11 +474,18 @@ def _qkv_vmem_bytes(cfg: AttnBlockConfig, D: int, Hq: int, Hkv: int, dh: int,
     proj = nser * (bq * dh + bk * (dh + dv))
     scores = 2 * nser * bq * bk
     state = G * nser * bq * (dv + 1) + nser * bq * (dv + do_)
+    if rope:
+        weights += G * D * dh + D * dh  # wq_rot / wk_rot tiles
+        proj += nser * (bq + bk) * dh  # the pre-mix rotated series
+        state += 2 * (bq + bk) * dh  # cos/sin tiles
+    if qbias:
+        weights += (G + 1) * dh * (2 if rope else 1) + dv
     return (hidden + weights + proj + scores + state) * itemsize
 
 
 def qkv_attention_candidate_configs(S: int, D: int, Hq: int, Hkv: int,
                                     dh: int, dv: int, do_: int, R: int,
+                                    rope: int, qbias: int,
                                     K: int) -> Tuple[AttnBlockConfig, ...]:
     """MXU-aligned (bQ, bK) candidates for the superblock, largest-first,
     VMEM-filtered."""
@@ -477,7 +501,8 @@ def qkv_attention_candidate_configs(S: int, D: int, Hq: int, Hkv: int,
                 continue
             if _qkv_vmem_bytes(cfg, round_up(D, _LANE), Hq, Hkv,
                                round_up(dh, _LANE), round_up(dv, _LANE),
-                               round_up(do_, _LANE), R, K) > _VMEM_BUDGET:
+                               round_up(do_, _LANE), R, K, rope,
+                               qbias) > _VMEM_BUDGET:
                 continue
             out.append(cfg)
     out.sort(key=lambda c: -c.block_q * c.block_k)
@@ -485,26 +510,29 @@ def qkv_attention_candidate_configs(S: int, D: int, Hq: int, Hkv: int,
 
 
 def qkv_attention_default_config(S: int, D: int, Hq: int, Hkv: int, dh: int,
-                                 dv: int, do_: int, R: int,
-                                 K: int) -> AttnBlockConfig:
+                                 dv: int, do_: int, R: int, rope: int,
+                                 qbias: int, K: int) -> AttnBlockConfig:
     """Deterministic MXU-aligned heuristic (no timing)."""
     bq = min(128, round_up(max(S, 1), _SUBLANE))
     bk = min(128, round_up(max(S, 1), _LANE))
     cfg = AttnBlockConfig(bq, bk)
     while (_qkv_vmem_bytes(cfg, round_up(D, _LANE), Hq, Hkv,
                            round_up(dh, _LANE), round_up(dv, _LANE),
-                           round_up(do_, _LANE), R, K) > _VMEM_BUDGET
+                           round_up(do_, _LANE), R, K, rope,
+                           qbias) > _VMEM_BUDGET
            and cfg.block_q > _SUBLANE):
         cfg = cfg._replace(block_q=max(_SUBLANE, cfg.block_q // 2))
     return cfg
 
 
 def autotune_qkv_attention(B: int, S: int, D: int, Hq: int, Hkv: int,
-                           dh: int, dv: int, do_: int, R: int, K: int,
-                           dtype,
+                           dh: int, dv: int, do_: int, R: int, rope: int,
+                           qbias: int, K: int, dtype,
                            candidates: Optional[Sequence[AttnBlockConfig]]
                            = None) -> AttnBlockConfig:
-    """Time the real fused superblock kernel over aligned candidates."""
+    """Time the real fused superblock kernel over aligned candidates (with
+    the rope / projection-bias operands instantiated when flagged — they
+    change the per-step FLOPs and VMEM traffic being timed)."""
     import jax
     import jax.numpy as jnp
     import math as _math
@@ -514,7 +542,7 @@ def autotune_qkv_attention(B: int, S: int, D: int, Hq: int, Hkv: int,
 
     if candidates is None:
         candidates = qkv_attention_candidate_configs(S, D, Hq, Hkv, dh, dv,
-                                                     do_, R, K)
+                                                     do_, R, rope, qbias, K)
     best_cfg, best_t = None, float("inf")
     G = max(Hq // max(Hkv, 1), 1)
     D_p = round_up(D, _LANE)
@@ -531,31 +559,43 @@ def autotune_qkv_attention(B: int, S: int, D: int, Hq: int, Hkv: int,
         wk = jnp.zeros((Hkv, D_p, dh_p), dtype)
         wv = jnp.zeros((Hkv, D_p, dv_p), dtype)
         wo = jnp.zeros((Hkv, G, dv_p, do_p), dtype)
+        kw = {}
+        if rope:
+            tab = jnp.zeros((Sp, dh_p), dtype)
+            kw.update(rope=(tab, tab), wq_rot=wq, wk_rot=wk)
+        if qbias:
+            kw.update(qkv_bias=(jnp.zeros((Hkv, G, dh_p), dtype),
+                                jnp.zeros((Hkv, dh_p), dtype),
+                                jnp.zeros((Hkv, dv_p), dtype)))
+            if rope:
+                kw.update(qkv_bias_rot=(jnp.zeros((Hkv, G, dh_p), dtype),
+                                        jnp.zeros((Hkv, dh_p), dtype)))
         try:
-            fn = jax.jit(lambda m, a, al, q, k, v, o, _cfg=cfg:
+            fn = jax.jit(lambda m, a, al, q, k, v, o, _cfg=cfg, _kw=kw:
                          collapsed_jet_qkv_attention(
                              m, a, al, a, q, k, v, o, K=K,
-                             block_q=_cfg.block_q, block_k=_cfg.block_k))
+                             block_q=_cfg.block_q, block_k=_cfg.block_k,
+                             **_kw))
             t = _time_one(lambda: fn(mask, h0, hl, wq, wk, wv, wo))
         except Exception:  # unsupported block combo on this backend
             continue
         if t < best_t:
             best_cfg, best_t = cfg, t
     return best_cfg or qkv_attention_default_config(S, D, Hq, Hkv, dh, dv,
-                                                    do_, R, K)
+                                                    do_, R, rope, qbias, K)
 
 
 def get_qkv_attention_block_config(B: int, S: int, D: int, Hq: int, Hkv: int,
                                    dh: int, dv: int, do_: int, R: int,
-                                   K: int, dtype,
+                                   rope: int, qbias: int, K: int, dtype,
                                    interpret: bool = False
                                    ) -> AttnBlockConfig:
     """Cached (bQ, bK) for a superblock shape (see get_block_config)."""
     import jax
 
     backend = "interpret" if interpret else jax.default_backend()
-    key = qkv_attention_shape_key(B, S, D, Hq, Hkv, dh, dv, do_, R, K,
-                                  np.dtype(dtype).name, backend)
+    key = qkv_attention_shape_key(B, S, D, Hq, Hkv, dh, dv, do_, R, rope,
+                                  qbias, K, np.dtype(dtype).name, backend)
     if key in _MEM_CACHE:
         return AttnBlockConfig(*_MEM_CACHE[key])
     disk = load_cache()
@@ -564,10 +604,12 @@ def get_qkv_attention_block_config(B: int, S: int, D: int, Hq: int, Hkv: int,
         _MEM_CACHE[key] = cfg
         return cfg
     if interpret or backend == "cpu":
-        cfg = qkv_attention_default_config(S, D, Hq, Hkv, dh, dv, do_, R, K)
+        cfg = qkv_attention_default_config(S, D, Hq, Hkv, dh, dv, do_, R,
+                                           rope, qbias, K)
         _MEM_CACHE[key] = cfg  # heuristic: memoize but don't persist
         return cfg
-    cfg = autotune_qkv_attention(B, S, D, Hq, Hkv, dh, dv, do_, R, K, dtype)
+    cfg = autotune_qkv_attention(B, S, D, Hq, Hkv, dh, dv, do_, R, rope,
+                                 qbias, K, dtype)
     _MEM_CACHE[key] = cfg
     disk[key] = list(cfg)
     save_cache(disk)
@@ -575,11 +617,11 @@ def get_qkv_attention_block_config(B: int, S: int, D: int, Hq: int, Hkv: int,
 
 
 def put_qkv_attention_config(B: int, S: int, D: int, Hq: int, Hkv: int,
-                             dh: int, dv: int, do_: int, R: int, K: int,
-                             dtype, backend: str,
+                             dh: int, dv: int, do_: int, R: int, rope: int,
+                             qbias: int, K: int, dtype, backend: str,
                              cfg: AttnBlockConfig) -> None:
-    key = qkv_attention_shape_key(B, S, D, Hq, Hkv, dh, dv, do_, R, K,
-                                  np.dtype(dtype).name, backend)
+    key = qkv_attention_shape_key(B, S, D, Hq, Hkv, dh, dv, do_, R, rope,
+                                  qbias, K, np.dtype(dtype).name, backend)
     _MEM_CACHE[key] = AttnBlockConfig(*cfg)
     disk = load_cache()
     disk[key] = list(cfg)
@@ -606,7 +648,8 @@ def prewarm(kernel: str, dims: Sequence[int], K: int, dtype,
     the first loop iteration then hits a warm cache instead of time-sweeping
     mid-trace. ``dims``: (B, Din, Dout, R) for ``jet_mlp``;
     (N, Sq, Skv, dh, dv, R) for ``jet_attention``;
-    (B, S, D, Hq, Hkv, dh, dv, Do, R) for ``jet_attention_qkv``.
+    (B, S, D, Hq, Hkv, dh, dv, Do, R, rope, qbias) for
+    ``jet_attention_qkv``.
     """
     import jax
 

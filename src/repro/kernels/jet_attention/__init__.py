@@ -1,7 +1,8 @@
 """Fused collapsed-K-jet attention (q·kᵀ → softmax → ·v in one pass), and
 the *superblock* variant that also fuses the q/k/v/o projections (native
-GQA, ``dv != dh``) so a transformer block reads its hidden bundle from HBM
-once.
+GQA, ``dv != dh``, projection biases, and rotate-half rotary embeddings —
+LM-style trunks included) so a transformer block reads its hidden bundle
+from HBM once.
 
 ``jet_attention.py`` holds the Pallas kernels (FlashAttention-2-style
 streaming softmax with online-softmax state *per Taylor coefficient*; the

@@ -56,6 +56,18 @@ output projection ``Wo`` is folded too: each group's heads contract their
 output series with their ``Wo`` slice and accumulate into the (revisited)
 output block across the ``Hkv`` grid axis, so the block writes exactly one
 ``(B, S, Do)`` bundle to HBM.
+
+LM-style trunks fold in as well: jet-constant *projection biases*
+(``cfg.qkv_bias``) shift only the primal lane after each projection, and
+*rotary embeddings* — a per-position linear map, so every Taylor
+coefficient rotates identically — are applied right after the q/k
+projections, inside VMEM. The rotate-half permutation is pre-folded into a
+second weight matrix (``Wr = W @ R``, prepared by ops.py) so the in-kernel
+rotation is ``(h@W)*cos + (h@Wr)*sin`` against per-position cos/sin tiles
+riding the q-row/kv-column grid axes — two matmuls plus elementwise work,
+no lane-dim slicing. The pre-softmax score bias of both kernels may carry
+a head axis (per-head ALiBi slope tables) instead of being ``(Sq, Skv)``-
+shared.
 """
 
 from __future__ import annotations
@@ -66,7 +78,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .series import bilinear_series, exp_series, map_series, reciprocal_series
+from .series import bilinear_series, exp_series, reciprocal_series
 
 try:  # TPU-specific memory spaces; interpret mode works without them
     from jax.experimental.pallas import tpu as pltpu
@@ -154,7 +166,7 @@ def _mask_scores(S, mb, bias):
 
 
 def _kernel(mask_ref, *rest, nk: int, K: int, qzero, kzero, vzero,
-            has_bias: bool):
+            has_bias: bool, bias_per_n: bool = False):
     bias_ref = None
     if has_bias:
         bias_ref, *rest = rest
@@ -182,8 +194,12 @@ def _kernel(mask_ref, *rest, nk: int, K: int, qzero, kzero, vzero,
         Kc = _masked_series(k0_ref, kl_ref, kt_ref, kzero, K)
         V = _masked_series(v0_ref, vl_ref, vt_ref, vzero, K)
 
+        if bias_ref is None:
+            bias = None
+        else:  # per-N tables carry a leading (blocked) batch/head axis
+            bias = bias_ref[0] if bias_per_n else bias_ref[...]
         S = bilinear_series(Q, Kc, K, _qk_prod)
-        S = _mask_scores(S, mb, None if bias_ref is None else bias_ref[...])
+        S = _mask_scores(S, mb, bias)
 
         m_prev = m_s[...]
         m_new = jnp.maximum(m_prev, S[0].max(axis=-1))
@@ -237,10 +253,12 @@ def collapsed_jet_attention(mask, q0, ql, qt, k0, kl, kt, v0, vl, vt, *,
     ``qzero``/``kzero``/``vzero`` are optional static (K+1)-tuples flagging
     symbolically-zero coefficient channels (index 0 = primal, 1..K-1 =
     lower, K = top); flagged channels must be zero-filled and their MXU work
-    is skipped. ``bias``: optional (Sq, Skv) jet-constant additive score
-    bias (ALiBi-style), shared across N like the mask. Sq/Skv must be
-    pre-padded to the block sizes (ops.py handles padding, scale folding,
-    zero specs and block selection via the autotuner). Returns
+    is skipped. ``bias``: optional jet-constant additive score bias
+    (ALiBi-style) — (Sq, Skv) shared across N like the mask, or
+    (N, Sq, Skv) with a per-batch-element (per-head once the batch is
+    flattened) table riding the batch grid axis. Sq/Skv must be pre-padded
+    to the block sizes (ops.py handles padding, scale folding, zero specs
+    and block selection via the autotuner). Returns
     (o0, ol (K-1, R, N, Sq, dv), ot) in q0's dtype.
     """
     if K < 2:
@@ -258,8 +276,10 @@ def collapsed_jet_attention(mask, q0, ql, qt, k0, kl, kt, v0, vl, vt, *,
     grid = (N, Sq // block_q, Skv // block_k)
     nk = grid[2]
 
+    bias_per_n = bias is not None and bias.ndim == 3
     kernel = functools.partial(_kernel, nk=nk, K=K, qzero=qzero, kzero=kzero,
-                               vzero=vzero, has_bias=bias is not None)
+                               vzero=vzero, has_bias=bias is not None,
+                               bias_per_n=bias_per_n)
 
     def series_specs(b, d, kv):
         idx = ((lambda n, i, j: (n, j, 0)) if kv
@@ -273,6 +293,9 @@ def collapsed_jet_attention(mask, q0, ql, qt, k0, kl, kt, v0, vl, vt, *,
         ]
 
     score_spec = pl.BlockSpec((block_q, block_k), lambda n, i, j: (i, j))
+    bias_spec = (pl.BlockSpec((1, block_q, block_k),
+                              lambda n, i, j: (n, i, j))
+                 if bias_per_n else score_spec)
     bias_ops = () if bias is None else (bias,)
     out_shapes = (
         jax.ShapeDtypeStruct((N, Sq, dv), q0.dtype),
@@ -284,7 +307,7 @@ def collapsed_jet_attention(mask, q0, ql, qt, k0, kl, kt, v0, vl, vt, *,
         grid=grid,
         in_specs=[
             score_spec,
-            *((score_spec,) if bias is not None else ()),
+            *((bias_spec,) if bias is not None else ()),
             *series_specs(block_q, dh, kv=False),
             *series_specs(block_k, dh, kv=True),
             *series_specs(block_k, dv, kv=True),
@@ -321,13 +344,52 @@ def _proj(c, w):
     return _dot(c, w, ((c.ndim - 1,), (0,)))
 
 
+def _proj_series(H, w, wr, b, br, cos, sin):
+    """Project a hidden series through one (D, d) weight in VMEM, add the
+    jet-constant bias to the *primal* lane, and rotate through the rope
+    tables coefficient-wise (rope is linear per position, so every Taylor
+    coefficient rotates identically). The rotate-half permutation is folded
+    into the pre-rotated weight/bias (``x @ W @ R == x @ Wr``, prepared by
+    ops.py), so the rotation lowers to a second matmul plus elementwise
+    work — no lane-dim slicing or concatenation inside the kernel."""
+    out = []
+    for i, c in enumerate(H):
+        if c is None:
+            out.append(None)
+            continue
+        p = _proj(c, w)
+        if i == 0 and b is not None:
+            p = p + b
+        if wr is not None:
+            pr = _proj(c, wr)
+            if i == 0 and br is not None:
+                pr = pr + br
+            p = p * cos + pr * sin
+        out.append(p)
+    return out
+
+
 def _qkv_kernel(mask_ref, *rest, nk: int, K: int, G: int, hzero,
-                has_bias: bool):
+                has_bias: bool, bias_per_head: bool, has_rope: bool,
+                has_qkv_bias: bool):
     bias_ref = None
     if has_bias:
         bias_ref, *rest = rest
     (h0q_ref, hlq_ref, htq_ref, h0k_ref, hlk_ref, htk_ref,
-     wq_ref, wk_ref, wv_ref, wo_ref, o0_ref, ol_ref, ot_ref,
+     wq_ref, wk_ref, wv_ref, wo_ref, *rest) = rest
+    wqr_ref = wkr_ref = None
+    if has_rope:
+        wqr_ref, wkr_ref, *rest = rest
+    qb_ref = kb_ref = vb_ref = None
+    if has_qkv_bias:
+        qb_ref, kb_ref, vb_ref, *rest = rest
+    qbr_ref = kbr_ref = None
+    if has_rope and has_qkv_bias:
+        qbr_ref, kbr_ref, *rest = rest
+    cosq_ref = sinq_ref = cosk_ref = sink_ref = None
+    if has_rope:
+        cosq_ref, sinq_ref, cosk_ref, sink_ref, *rest = rest
+    (o0_ref, ol_ref, ot_ref,
      m_s, l0_s, ll_s, lt_s, u0_s, ul_s, ut_s) = rest
     h = pl.program_id(2)
     j = pl.program_id(3)
@@ -351,12 +413,27 @@ def _qkv_kernel(mask_ref, *rest, nk: int, K: int, G: int, hzero,
         # query heads — the HBM-free analogue of the GQA broadcast.
         wk = wk_ref[0].astype(f32)
         wv = wv_ref[0].astype(f32)
-        Kc = map_series(Hk, lambda c: _proj(c, wk))
-        V = map_series(Hk, lambda c: _proj(c, wv))
-        bias = None if bias_ref is None else bias_ref[...]
+        wkr = None if wkr_ref is None else wkr_ref[0].astype(f32)
+        kb = None if kb_ref is None else kb_ref[0].astype(f32)
+        vb = None if vb_ref is None else vb_ref[0].astype(f32)
+        kbr = None if kbr_ref is None else kbr_ref[0].astype(f32)
+        cosq = None if cosq_ref is None else cosq_ref[...].astype(f32)
+        sinq = None if sinq_ref is None else sinq_ref[...].astype(f32)
+        cosk = None if cosk_ref is None else cosk_ref[...].astype(f32)
+        sink = None if sink_ref is None else sink_ref[...].astype(f32)
+        Kc = _proj_series(Hk, wk, wkr, kb, kbr, cosk, sink)
+        V = _proj_series(Hk, wv, None, vb, None, None, None)
+        bias = None
+        if bias_ref is not None and not bias_per_head:
+            bias = bias_ref[...]
         for g in range(G):
             wq = wq_ref[0, g].astype(f32)
-            Q = map_series(Hq, lambda c: _proj(c, wq))
+            wqr = None if wqr_ref is None else wqr_ref[0, g].astype(f32)
+            qb = None if qb_ref is None else qb_ref[0, g].astype(f32)
+            qbr = None if qbr_ref is None else qbr_ref[0, g].astype(f32)
+            Q = _proj_series(Hq, wq, wqr, qb, qbr, cosq, sinq)
+            if bias_per_head:
+                bias = bias_ref[0, g]
             S = bilinear_series(Q, Kc, K, _qk_prod)
             S = _mask_scores(S, mb, bias)
 
@@ -419,17 +496,33 @@ def _qkv_kernel(mask_ref, *rest, nk: int, K: int, G: int, hzero,
 def collapsed_jet_qkv_attention(mask, h0, hl, ht, wq, wk, wv, wo, *,
                                 K: int = 2, block_q: int = 128,
                                 block_k: int = 128, interpret: bool = False,
-                                hzero=None, bias=None):
-    """One fused *superblock*: q/k/v projections + GQA attention + output
-    projection of a self-attention block, from one hidden-bundle read.
+                                hzero=None, bias=None, rope=None,
+                                wq_rot=None, wk_rot=None, qkv_bias=None,
+                                qkv_bias_rot=None):
+    """One fused *superblock*: q/k/v projections (+ biases + rope) + GQA
+    attention + output projection of a self-attention block, from one
+    hidden-bundle read.
 
-    mask/bias: (S, S) as in :func:`collapsed_jet_attention`, shared across
-    batch and heads; h0/ht: (B, S, D); hl: (K-1, R, B, S, D);
+    mask: (S, S) as in :func:`collapsed_jet_attention`, shared across batch
+    and heads; ``bias``: (S, S) shared, or (Hkv, G, S, S) per-head score
+    tables (ALiBi slopes). h0/ht: (B, S, D); hl: (K-1, R, B, S, D);
     wq: (Hkv, G, D, dh) (pre-scaled — fold the softmax scale in);
-    wk: (Hkv, D, dh); wv: (Hkv, D, dv); wo: (Hkv, G, dv, Do). ``hzero`` is
-    the hidden bundle's static symbolic-zero spec (shared by q/k/v since all
-    three are projections of the same series). S must be pre-padded to a
-    common multiple of both block sizes (ops.py). Returns
+    wk: (Hkv, D, dh); wv: (Hkv, D, dv); wo: (Hkv, G, dv, Do).
+
+    ``rope``: optional ``(cos, sin)`` per-position tables in *full-width*
+    rotate-half form — each (S, dh) with the (S, dh/2) half-tables
+    duplicated across both halves (ops.py builds them) — riding the q-row /
+    kv-column grid axes. When set, ``wq_rot``/``wk_rot`` must carry the
+    pre-rotated weights (``W @ R`` with R the rotate-half permutation) in
+    the same layouts as wq/wk, so the in-VMEM rotation is
+    ``(h@W)*cos + (h@Wr)*sin`` per coefficient. ``qkv_bias``: optional
+    ``(qb (Hkv, G, dh), kb (Hkv, dh), vb (Hkv, dv))`` projection biases
+    (primal lane only); with rope, ``qkv_bias_rot`` carries the rotated
+    ``(qbr, kbr)`` pair.
+
+    ``hzero`` is the hidden bundle's static symbolic-zero spec (shared by
+    q/k/v since all three are projections of the same series). S must be
+    pre-padded to a common multiple of both block sizes (ops.py). Returns
     (o0 (B, S, Do), ol (K-1, R, B, S, Do), ot) in h0's dtype, summed over
     all ``Hkv * G`` heads.
     """
@@ -446,9 +539,16 @@ def collapsed_jet_qkv_attention(mask, h0, hl, ht, wq, wk, wv, wo, *,
     assert S % block_q == 0 and S % block_k == 0
     grid = (B, S // block_q, Hkv, S // block_k)
     nk = grid[3]
+    has_rope = rope is not None
+    has_qkv_bias = qkv_bias is not None
+    bias_per_head = bias is not None and bias.ndim == 4
+    if has_rope and (wq_rot is None or wk_rot is None):
+        raise ValueError("rope needs the pre-rotated wq_rot/wk_rot weights")
 
-    kernel = functools.partial(_qkv_kernel, nk=nk, K=K, G=G, hzero=hzero,
-                               has_bias=bias is not None)
+    kernel = functools.partial(
+        _qkv_kernel, nk=nk, K=K, G=G, hzero=hzero, has_bias=bias is not None,
+        bias_per_head=bias_per_head, has_rope=has_rope,
+        has_qkv_bias=has_qkv_bias)
 
     def hidden_specs(b, kv):
         idx = ((lambda n, i, h, j: (n, j, 0)) if kv
@@ -462,9 +562,42 @@ def collapsed_jet_qkv_attention(mask, h0, hl, ht, wq, wk, wv, wo, *,
         ]
 
     score_spec = pl.BlockSpec((block_q, block_k), lambda n, i, h, j: (i, j))
+    head_bias_spec = pl.BlockSpec((1, G, block_q, block_k),
+                                  lambda n, i, h, j: (h, 0, i, j))
+    wq_spec = pl.BlockSpec((1, G, D, dh), lambda n, i, h, j: (h, 0, 0, 0))
+    wk_spec = pl.BlockSpec((1, D, dh), lambda n, i, h, j: (h, 0, 0))
+    qb_spec = pl.BlockSpec((1, G, dh), lambda n, i, h, j: (h, 0, 0))
+    kb_spec = pl.BlockSpec((1, dh), lambda n, i, h, j: (h, 0))
+    vb_spec = pl.BlockSpec((1, dv), lambda n, i, h, j: (h, 0))
+    rope_q_spec = pl.BlockSpec((block_q, dh), lambda n, i, h, j: (i, 0))
+    rope_k_spec = pl.BlockSpec((block_k, dh), lambda n, i, h, j: (j, 0))
     out_idx = lambda n, i, h, j: (n, i, 0)
     out_lidx = lambda n, i, h, j: (0, 0, n, i, 0)
-    bias_ops = () if bias is None else (bias,)
+
+    operands, in_specs = [mask], [score_spec]
+    if bias is not None:
+        operands.append(bias)
+        in_specs.append(head_bias_spec if bias_per_head else score_spec)
+    operands += [h0, hl, ht, h0, hl, ht, wq, wk, wv, wo]
+    in_specs += [*hidden_specs(block_q, kv=False),
+                 *hidden_specs(block_k, kv=True),
+                 wq_spec, wk_spec,
+                 pl.BlockSpec((1, D, dv), lambda n, i, h, j: (h, 0, 0)),
+                 pl.BlockSpec((1, G, dv, Do), lambda n, i, h, j: (h, 0, 0, 0))]
+    if has_rope:
+        operands += [wq_rot, wk_rot]
+        in_specs += [wq_spec, wk_spec]
+    if has_qkv_bias:
+        operands += list(qkv_bias)
+        in_specs += [qb_spec, kb_spec, vb_spec]
+        if has_rope:
+            operands += list(qkv_bias_rot)
+            in_specs += [qb_spec, kb_spec]
+    if has_rope:
+        cos, sin = rope
+        operands += [cos, sin, cos, sin]
+        in_specs += [rope_q_spec, rope_q_spec, rope_k_spec, rope_k_spec]
+
     out_shapes = (
         jax.ShapeDtypeStruct((B, S, Do), h0.dtype),
         jax.ShapeDtypeStruct((K - 1, R, B, S, Do), h0.dtype),
@@ -473,16 +606,7 @@ def collapsed_jet_qkv_attention(mask, h0, hl, ht, wq, wk, wv, wo, *,
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            score_spec,
-            *((score_spec,) if bias is not None else ()),
-            *hidden_specs(block_q, kv=False),
-            *hidden_specs(block_k, kv=True),
-            pl.BlockSpec((1, G, D, dh), lambda n, i, h, j: (h, 0, 0, 0)),
-            pl.BlockSpec((1, D, dh), lambda n, i, h, j: (h, 0, 0)),
-            pl.BlockSpec((1, D, dv), lambda n, i, h, j: (h, 0, 0)),
-            pl.BlockSpec((1, G, dv, Do), lambda n, i, h, j: (h, 0, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=(
             pl.BlockSpec((1, block_q, Do), out_idx),
             pl.BlockSpec((K - 1, R, 1, block_q, Do), out_lidx),
@@ -499,4 +623,4 @@ def collapsed_jet_qkv_attention(mask, h0, hl, ht, wq, wk, wv, wo, *,
             _scratch((G, block_q, dv)),
         ],
         interpret=interpret,
-    )(mask, *bias_ops, h0, hl, ht, h0, hl, ht, wq, wk, wv, wo)
+    )(*operands)

@@ -101,9 +101,12 @@ def collapsed_jet_attention_op(q, k, v, *, K: int = 2, mask=None, scale=1.0,
     (*batch, S, d) or ``None``. ``mask``: (Sq, Skv) bool/0-1 (True = attend)
     or ``None`` for full attention; ``scale`` multiplies the scores and must
     be jet-constant; ``bias``: optional jet-constant additive score bias
-    (ALiBi-style), broadcastable to (Sq, Skv) and shared across the batch,
-    added to the primal scores before the mask fill. Block sizes default to
-    the autotuner's choice
+    (ALiBi-style), added to the primal scores before the mask fill — either
+    broadcastable to (Sq, Skv) and shared across the batch, or carrying
+    non-trivial leading axes broadcastable to ``(*batch, Sq, Skv)`` (e.g. a
+    per-head (H, Sq, Skv) ALiBi-slope table), in which case it rides the
+    kernel's flattened batch grid axis. Block sizes default to the
+    autotuner's choice
     (:func:`repro.kernels.autotune.get_attention_block_config`).
 
     ``lowering`` picks the execution strategy: ``"kernel"`` runs the Pallas
@@ -144,7 +147,22 @@ def collapsed_jet_attention_op(q, k, v, *, K: int = 2, mask=None, scale=1.0,
     dtype = q0.dtype
 
     if bias is not None:
-        bias = jnp.broadcast_to(jnp.asarray(bias), (Sq, Skv))
+        bias = jnp.asarray(bias)
+        if bias.ndim > 2 and any(s != 1 for s in bias.shape[:-2]):
+            # per-head/per-batch table: ride the flattened batch axis
+            nb = len(batch_shape)
+            if bias.ndim > nb + 2:  # extra leading axes must be size 1
+                if any(s != 1 for s in bias.shape[:bias.ndim - nb - 2]):
+                    raise ValueError(
+                        f"score bias {bias.shape} is not broadcastable to "
+                        f"{batch_shape + (Sq, Skv)}")
+                bias = bias.reshape(bias.shape[bias.ndim - nb - 2:])
+            bias = jnp.broadcast_to(bias, batch_shape + (Sq, Skv))
+            bias = bias.reshape(N, Sq, Skv)
+        else:
+            if bias.ndim > 2:
+                bias = bias.reshape(bias.shape[-2:])
+            bias = jnp.broadcast_to(bias, (Sq, Skv))
         bias = bias.astype(jnp.float32)
 
     if lowering == "reference":
@@ -213,7 +231,8 @@ def collapsed_jet_attention_op(q, k, v, *, K: int = 2, mask=None, scale=1.0,
     pad_q, pad_k = (-Sq) % block_q, (-Skv) % block_k
     mask = jnp.pad(mask, ((0, pad_q), (0, pad_k)), constant_values=-1.0)
     if bias is not None:  # padded entries are mask-invalid; 0 keeps them inert
-        bias = jnp.pad(bias, ((0, pad_q), (0, pad_k)))
+        bias = jnp.pad(bias, [(0, 0)] * (bias.ndim - 2)
+                       + [(0, pad_q), (0, pad_k)])
 
     d_mult = 1 if interpret else _LANE
     q0p = _pad_axis(_pad_axis(q0, 1, block_q), 2, d_mult)
@@ -242,16 +261,27 @@ def collapsed_jet_attention_op(q, k, v, *, K: int = 2, mask=None, scale=1.0,
 # ---------------------------------------------------------------------------
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(9, 10, 11, 12, 13))
-def _qkv_fused(mask, bias, h0, hl, ht, wq, wk, wv, wo, K, block_q, block_k,
-               interpret, hzero):
+def _rot_half(a):
+    """Fold the rotate-half permutation into a weight/bias: ``a @ R`` along
+    the trailing head dim (``R[half+i, i] = -1``, ``R[i, half+i] = 1``), so
+    the kernel's rotation is a second matmul instead of lane-dim slicing."""
+    half = a.shape[-1] // 2
+    return jnp.concatenate([-a[..., half:], a[..., :half]], axis=-1)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(11, 12, 13, 14, 15))
+def _qkv_fused(mask, bias, h0, hl, ht, wq, wk, wv, wo, qkv_bias, rope, K,
+               block_q, block_k, interpret, hzero):
     """Pad, lay out for the kernel grid, run the superblock kernel, strip.
 
-    ``mask`` is the *unpadded* (S, S) 0/1 float mask; ``hl`` the dense
-    stacked (K-1, R, B, S, D) lower bundle; weights in their graph layouts
-    (wq (D, Hq, dh) pre-scaled, wk (D, Hkv, dh), wv (D, Hkv, dv),
-    wo (Hq, dv, Do)). Defined at the unpadded level so the backward pass
-    can re-run the unfused reference on the original operands.
+    ``mask`` is the *unpadded* (S, S) 0/1 float mask; ``bias`` (S, S) or a
+    per-head (Hq, S, S) table; ``hl`` the dense stacked (K-1, R, B, S, D)
+    lower bundle; weights in their graph layouts (wq (D, Hq, dh)
+    pre-scaled, wk (D, Hkv, dh), wv (D, Hkv, dv), wo (Hq, dv, Do));
+    ``qkv_bias``: None or (bq (Hq, dh), bk (Hkv, dh), bv (Hkv, dv)) with
+    the q bias pre-scaled like wq; ``rope``: None or (cos, sin) (S, dh/2)
+    half-tables. Defined at the unpadded level so the backward pass can
+    re-run the unfused reference on the original operands.
     """
     B, S, D = h0.shape
     R = hl.shape[1]
@@ -265,8 +295,13 @@ def _qkv_fused(mask, bias, h0, hl, ht, wq, wk, wv, wo, K, block_q, block_k,
     s_mult = math.lcm(block_q, block_k)
     pad_s = (-S) % s_mult
     mask = jnp.pad(mask, ((0, pad_s), (0, pad_s)), constant_values=-1.0)
+    biask = None
     if bias is not None:
-        bias = jnp.pad(bias, ((0, pad_s), (0, pad_s)))
+        if bias.ndim == 3:  # per-head (Hq, S, S) -> (Hkv, G, Sp, Sp)
+            biask = jnp.pad(bias, ((0, 0), (0, pad_s), (0, pad_s)))
+            biask = biask.reshape(Hkv, G, S + pad_s, S + pad_s)
+        else:
+            biask = jnp.pad(bias, ((0, pad_s), (0, pad_s)))
 
     d_mult = 1 if interpret else _LANE
     h0p = _pad_axis(_pad_axis(h0, 1, s_mult), 2, d_mult)
@@ -274,39 +309,68 @@ def _qkv_fused(mask, bias, h0, hl, ht, wq, wk, wv, wo, K, block_q, block_k,
     htp = _pad_axis(_pad_axis(ht, 1, s_mult), 2, d_mult)
 
     # kernel weight layouts: heads grouped (Hkv, G) with kv head h serving
-    # query heads [h*G, (h+1)*G) — jnp.repeat's grouping.
+    # query heads [h*G, (h+1)*G) — jnp.repeat's grouping. The rotated
+    # companions (W @ R, b @ R) are built at the unpadded width so the
+    # rotate-half halves stay adjacent, then padded like their originals.
     wqk = wq.reshape(D, Hkv, G, dh).transpose(1, 2, 0, 3)
     wkk = wk.transpose(1, 0, 2)
     wvk = wv.transpose(1, 0, 2)
     wok = wo.reshape(Hkv, G, dv, Do)
+    wqrk = wkrk = rope_k = None
+    if rope is not None:
+        cos, sin = rope
+        wqrk = _pad_axis(_pad_axis(_rot_half(wqk), 2, d_mult), 3, d_mult)
+        wkrk = _pad_axis(_pad_axis(_rot_half(wkk), 1, d_mult), 2, d_mult)
+        # full-width rotate-half tables: the (S, dh/2) halves duplicated
+        cos_f = jnp.concatenate([cos, cos], axis=-1).astype(h0.dtype)
+        sin_f = jnp.concatenate([sin, sin], axis=-1).astype(h0.dtype)
+        rope_k = (_pad_axis(_pad_axis(cos_f, 0, s_mult), 1, d_mult),
+                  _pad_axis(_pad_axis(sin_f, 0, s_mult), 1, d_mult))
     wqk = _pad_axis(_pad_axis(wqk, 2, d_mult), 3, d_mult)
     wkk = _pad_axis(_pad_axis(wkk, 1, d_mult), 2, d_mult)
     wvk = _pad_axis(_pad_axis(wvk, 1, d_mult), 2, d_mult)
     wok = _pad_axis(_pad_axis(wok, 2, d_mult), 3, d_mult)
+    qkvbk = rot_bk = None
+    if qkv_bias is not None:
+        qb, kb, vb = qkv_bias
+        qbk = qb.reshape(Hkv, G, dh)
+        if rope is not None:
+            rot_bk = (_pad_axis(_rot_half(qbk), 2, d_mult),
+                      _pad_axis(_rot_half(kb), 1, d_mult))
+        qkvbk = (_pad_axis(qbk, 2, d_mult), _pad_axis(kb, 1, d_mult),
+                 _pad_axis(vb, 1, d_mult))
 
     o0, ol, ot = collapsed_jet_qkv_attention(
         mask, h0p, hlp, htp, wqk, wkk, wvk, wok, K=K, block_q=block_q,
-        block_k=block_k, interpret=interpret, hzero=hzero, bias=bias)
+        block_k=block_k, interpret=interpret, hzero=hzero, bias=biask,
+        rope=rope_k, wq_rot=wqrk, wk_rot=wkrk, qkv_bias=qkvbk,
+        qkv_bias_rot=rot_bk)
     return o0[:, :S, :Do], ol[:, :, :, :S, :Do], ot[:, :S, :Do]
 
 
-def _qkv_fused_fwd(mask, bias, h0, hl, ht, wq, wk, wv, wo, K, block_q,
-                   block_k, interpret, hzero):
-    out = _qkv_fused(mask, bias, h0, hl, ht, wq, wk, wv, wo, K, block_q,
-                     block_k, interpret, hzero)
-    return out, (mask, bias, h0, hl, ht, wq, wk, wv, wo)
+def _qkv_fused_fwd(mask, bias, h0, hl, ht, wq, wk, wv, wo, qkv_bias, rope,
+                   K, block_q, block_k, interpret, hzero):
+    out = _qkv_fused(mask, bias, h0, hl, ht, wq, wk, wv, wo, qkv_bias, rope,
+                     K, block_q, block_k, interpret, hzero)
+    return out, (mask, bias, h0, hl, ht, wq, wk, wv, wo, qkv_bias, rope)
 
 
 def _qkv_fused_bwd(K, block_q, block_k, interpret, hzero, res, g):
-    mask, bias, *args = res
+    mask, bias, h0, hl, ht, wq, wk, wv, wo, qkv_bias, rope = res
 
-    def ref_fn(bias_, *a):
-        return collapsed_jet_qkv_attention_ref(*a, K=K, mask=mask > 0,
-                                               bias=bias_)
+    def ref_fn(bias_, qkv_bias_, rope_, *a):
+        return collapsed_jet_qkv_attention_ref(
+            *a, K=K, mask=mask > 0, bias=bias_, qkv_bias=qkv_bias_,
+            rope=rope_)
 
-    _, vjp = jax.vjp(ref_fn, bias, *args)
-    dbias, *dargs = vjp(g)
-    return (jnp.zeros_like(mask), dbias, *dargs)
+    # the rope tables are usually position constants, but their cotangents
+    # are cheap and real — and must match what differentiating the
+    # reference lowering directly would produce, so both lowerings agree
+    # under jax.grad
+    _, vjp = jax.vjp(ref_fn, bias, qkv_bias, rope, h0, hl, ht, wq, wk, wv,
+                     wo)
+    dbias, dqkvb, drope, *dargs = vjp(g)
+    return (jnp.zeros_like(mask), dbias, *dargs, dqkvb, drope)
 
 
 _qkv_fused.defvjp(_qkv_fused_fwd, _qkv_fused_bwd)
@@ -314,10 +378,12 @@ _qkv_fused.defvjp(_qkv_fused_fwd, _qkv_fused_bwd)
 
 def collapsed_jet_qkv_attention_op(h, wq, wk, wv, wo, *, K: int = 2,
                                    mask=None, scale=1.0, bias=None,
+                                   rope=None, qkv_bias=None,
                                    block_q=None, block_k=None,
                                    interpret=None, lowering: str = "auto"):
-    """Padding-safe fused superblock: q/k/v projections + GQA attention +
-    output projection from one hidden-bundle read.
+    """Padding-safe fused superblock: q/k/v projections (+ biases + rotary
+    embeddings) + GQA attention + output projection from one hidden-bundle
+    read.
 
     ``h`` is the collapsed-jet triple ``(h0, lower, top)`` of the
     pre-projection hidden states: ``h0``: (B, S, D); ``lower``: K-1 arrays,
@@ -325,13 +391,28 @@ def collapsed_jet_qkv_attention_op(h, wq, wk, wv, wo, *, K: int = 2,
     are jet-constant, in their graph layouts: ``wq`` (D, Hq, dh), ``wk``
     (D, Hkv, dh), ``wv`` (D, Hkv, dv), ``wo`` (Hq, dv, Do); ``Hq`` must be
     a multiple of ``Hkv`` (``dv != dh`` is fine). ``scale`` is folded into
-    ``wq`` (projection and scale are both linear); ``mask``/``bias`` are
-    (S, S) score mask / additive bias shared across batch and heads.
+    ``wq`` and the q-projection bias (projection, bias shift and scale are
+    all affine); ``mask`` is the (S, S) score mask shared across batch and
+    heads; ``bias`` is an additive score bias, (S, S)-broadcastable shared
+    or per-head (Hq, S, S) (ALiBi slope tables).
+
+    ``rope``: optional ``(cos, sin)`` per-position rotary tables, each
+    (S, dh/2) in the rotate-half convention of
+    :func:`repro.models.layers.rope`, applied to q and k after projection
+    (+ bias) — jet-constant and linear per position, so every Taylor
+    coefficient rotates identically and the tables are folded into the
+    kernel's projection stage (LM-style trunks stay one kernel per layer).
+    ``qkv_bias``: optional ``(bq (Hq, dh), bk (Hkv, dh), bv (Hkv, dv))``
+    jet-constant projection biases; legs may be ``None`` (zero-filled).
+    Biases shift the primal lane only; grads flow to them — and to the
+    rope tables — through the custom VJP (identical to differentiating the
+    reference lowering).
 
     ``lowering`` as in :func:`collapsed_jet_attention_op`; block sizes
-    default to the ``jet_attention_qkv`` autotuner namespace. Returns
-    ``(o0, [K-1 lower coeffs], ot)`` with shapes (B, S, Do), summed over
-    all heads — the graph value of the output-projection dot.
+    default to the ``jet_attention_qkv`` autotuner namespace (keyed on the
+    rope/bias flags — the rotated-weight matmuls change the VMEM working
+    set). Returns ``(o0, [K-1 lower coeffs], ot)`` with shapes (B, S, Do),
+    summed over all heads — the graph value of the output-projection dot.
     """
     if interpret is None:
         interpret = _on_cpu()
@@ -361,25 +442,62 @@ def collapsed_jet_qkv_attention_op(h, wq, wk, wv, wo, *, K: int = 2,
     if wo.shape[:2] != (Hq, dv):
         raise ValueError(f"wo {wo.shape} does not match (Hq={Hq}, dv={dv}, "
                          f"Do)")
+    if rope is not None:
+        if dh % 2:
+            raise ValueError(f"rope needs an even head dim, got dh={dh}")
+        cos, sin = (jnp.asarray(t, dtype=jnp.float32) for t in rope)
+        if cos.shape != (S, dh // 2) or sin.shape != (S, dh // 2):
+            raise ValueError(
+                f"rope tables must be (S={S}, dh/2={dh // 2}), got "
+                f"cos {cos.shape} / sin {sin.shape}")
+        rope = (cos, sin)
     R = next((c.shape[0] for c in h_low if c is not None), 1)
     dtype = h0.dtype
 
     wq = wq * jnp.asarray(scale, dtype=wq.dtype)
+    if qkv_bias is not None:
+        qb, kb, vb = qkv_bias
+        qb = (jnp.zeros((Hq, dh), dtype) if qb is None
+              else jnp.asarray(qb, dtype) * jnp.asarray(scale, dtype))
+        kb = jnp.zeros((Hkv, dh), dtype) if kb is None else \
+            jnp.asarray(kb, dtype)
+        vb = jnp.zeros((Hkv, dv), dtype) if vb is None else \
+            jnp.asarray(vb, dtype)
+        if qb.shape != (Hq, dh) or kb.shape != (Hkv, dh) or \
+                vb.shape != (Hkv, dv):
+            raise ValueError(
+                f"qkv_bias shapes must be ({Hq}, {dh})/({Hkv}, {dh})/"
+                f"({Hkv}, {dv}), got {qb.shape}/{kb.shape}/{vb.shape}")
+        qkv_bias = (qb, kb, vb)
     if mask is not None:
         mask = jnp.broadcast_to(jnp.asarray(mask), (S, S))
     if bias is not None:
-        bias = jnp.broadcast_to(jnp.asarray(bias), (S, S))
+        bias = jnp.asarray(bias)
+        if bias.ndim > 2 and any(s != 1 for s in bias.shape[:-2]):
+            if bias.ndim > 3 and any(s != 1 for s in bias.shape[:-3]):
+                raise ValueError(
+                    f"superblock score bias must be (S, S)-broadcastable "
+                    f"or per-head (Hq, S, S), got {bias.shape}")
+            if bias.ndim > 3:
+                bias = bias.reshape(bias.shape[-3:])
+            bias = jnp.broadcast_to(bias, (Hq, S, S))
+        else:
+            if bias.ndim > 2:
+                bias = bias.reshape(bias.shape[-2:])
+            bias = jnp.broadcast_to(bias, (S, S))
         bias = bias.astype(jnp.float32)
 
     if lowering == "reference":
         o0, ol, ot = collapsed_jet_qkv_attention_ref(
             h0, h_low, h_top, wq, wk, wv, wo, K=K,
-            mask=None if mask is None else mask.astype(bool), bias=bias)
+            mask=None if mask is None else mask.astype(bool), bias=bias,
+            rope=rope, qkv_bias=qkv_bias)
         return o0, [ol[j] for j in range(K - 1)], ot
 
     if block_q is None or block_k is None:
         cfg = autotune.get_qkv_attention_block_config(
-            B, S, D, Hq, Hkv, dh, dv, int(wo.shape[2]), R, K, dtype,
+            B, S, D, Hq, Hkv, dh, dv, int(wo.shape[2]), R,
+            int(rope is not None), int(qkv_bias is not None), K, dtype,
             interpret=interpret)
         block_q = block_q or cfg.block_q
         block_k = block_k or cfg.block_k
@@ -392,20 +510,24 @@ def collapsed_jet_qkv_attention_op(h, wq, wk, wv, wo, *, K: int = 2,
     maskf = (jnp.ones((S, S), jnp.float32) if mask is None
              else mask.astype(jnp.float32))
 
-    o0, ol, ot = _qkv_fused(maskf, bias, h0, hl, ht, wq, wk, wv, wo, K,
-                            block_q, block_k, interpret, hzero)
+    o0, ol, ot = _qkv_fused(maskf, bias, h0, hl, ht, wq, wk, wv, wo,
+                            qkv_bias, rope, K, block_q, block_k, interpret,
+                            hzero)
     return o0, [ol[j] for j in range(K - 1)], ot
 
 
 def prewarm_qkv_blocks(B: int, S: int, D: int, Hq: int, Hkv: int, dh: int,
                        dv: int, do_: int, R: int, K: int, dtype,
+                       rope: bool = False, qbias: bool = False,
                        interpret=None):
     """Resolve the autotuned (bQ, bK) for the shape
     :func:`collapsed_jet_qkv_attention_op` would request (same key
-    derivation, so a later op call is a cache hit). Called by the offload
-    engine's per-body prewarm."""
+    derivation — including the rope/projection-bias flags — so a later op
+    call is a cache hit). Called by the offload engine's per-body
+    prewarm."""
     if interpret is None:
         interpret = _on_cpu()
-    return autotune.prewarm("jet_attention_qkv",
-                            (B, S, D, Hq, Hkv, dh, dv, do_, R), K, dtype,
-                            interpret=interpret)
+    return autotune.prewarm(
+        "jet_attention_qkv",
+        (B, S, D, Hq, Hkv, dh, dv, do_, R, int(rope), int(qbias)), K, dtype,
+        interpret=interpret)

@@ -11,13 +11,17 @@ backward-pass graph of the kernel's custom VJP (:mod:`.ops`).
 ``collapsed_jet_qkv_attention_ref`` is the *superblock* oracle: the same
 attention semantics fed by the q/k/v projection matmuls of a pre-projection
 hidden bundle (jet-constant weights act coefficient-wise — they are linear),
-with GQA key/value heads broadcast over their query groups and the output
-projection ``Wo`` applied coefficient-wise at the end. It is the unfused
-semantics of ``collapsed_jet_qkv_attention`` and the backward graph of its
-custom VJP.
+with optional jet-constant projection biases (added to the *primal* lane
+only — a constant shifts no Taylor coefficient), optional rotary embeddings
+(rope is a per-position *linear* map on the head dim, so every coefficient
+rotates identically through the same cos/sin tables), GQA key/value heads
+broadcast over their query groups, and the output projection ``Wo`` applied
+coefficient-wise at the end. It is the unfused semantics of
+``collapsed_jet_qkv_attention`` and the backward graph of its custom VJP.
 
 Inputs are pre-scaled: fold any ``1/sqrt(dh)`` into the q series (or the
-``Wq`` weight — projection and scale are both linear) before calling.
+``Wq`` weight *and* q-projection bias — projection, bias shift and scale
+are all linear/affine) before calling.
 """
 
 from __future__ import annotations
@@ -25,7 +29,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .series import bilinear_series, exp_series, map_series, reciprocal_series
+from .series import bilinear_series, exp_series, reciprocal_series
 
 NEG_INF = -1e30
 
@@ -59,6 +63,20 @@ def _ug_prod(u, g, su, sg, collapse):
     return t.sum(axis=0) if collapse else t
 
 
+def apply_rope(c, cos, sin):
+    """Rotate-half rotary embedding on the trailing head dim.
+
+    ``c``: (..., S, d); ``cos``/``sin``: (S, d//2) per-position tables
+    (broadcast over every leading axis — batch, heads, the direction axis of
+    lower Taylor coefficients). Linear in ``c``, so applying it
+    coefficient-wise to a collapsed series is exact.
+    """
+    half = cos.shape[-1]
+    x1, x2 = c[..., :half], c[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                           axis=-1)
+
+
 def collapsed_jet_attention_ref(q0, ql, qt, k0, kl, kt, v0, vl, vt, *,
                                 K: int = 2, mask=None, valid=None, bias=None):
     """Reference semantics of ``collapsed_jet_attention`` (unfused).
@@ -70,10 +88,11 @@ def collapsed_jet_attention_ref(q0, ql, qt, k0, kl, kt, v0, vl, vt, *,
     interpreter's ``select_n``/softmax graph), an invalid one ``-inf`` (it
     contributes nothing regardless of the row max — ops.py's block padding).
     ``bias``: optional jet-constant additive score bias (ALiBi-style),
-    broadcastable against (Sq, Skv); applied to the primal scores *before*
-    the mask fill, matching the traced ``s + bias -> where(mask, ...)``
-    graph order. Returns (o0 (N, Sq, dh), ol (K-1, R, N, Sq, dh),
-    ot (N, Sq, dh)).
+    broadcastable against (Sq, Skv) — or, with a leading axis, against
+    (N, Sq, Skv) for per-head/per-batch bias tables; applied to the primal
+    scores *before* the mask fill, matching the traced
+    ``s + bias -> where(mask, ...)`` graph order. Returns (o0 (N, Sq, dh),
+    ol (K-1, R, N, Sq, dh), ot (N, Sq, dh)).
     """
     # coefficient containers may be lists holding ``None`` (symbolic zeros,
     # as handed over by the offload dispatcher) or dense stacked arrays; the
@@ -110,8 +129,11 @@ def collapsed_jet_attention_ref(q0, ql, qt, k0, kl, kt, v0, vl, vt, *,
     # any row with a real key has l0 >= 1 (its max entry contributes
     # exp(0) = 1), so this clamp only touches all-padding rows — whose zero
     # mass would otherwise overflow the reciprocal tower (1/l0^(K+1)) and
-    # NaN-poison the custom-VJP backward through 0 * inf.
-    L[0] = jnp.maximum(L[0], 1.0)
+    # NaN-poison the custom-VJP backward through 0 * inf. The clamp must be
+    # a where, NOT jnp.maximum: a single-live-key row (the first row of
+    # every causal mask) has l0 == 1.0 EXACTLY, and maximum's gradient at a
+    # tie splits 0.5/0.5 — halving dl0 through the custom-VJP backward.
+    L[0] = jnp.where(L[0] < 1.0, 1.0, L[0])
     G = reciprocal_series(L, K)
 
     U = bilinear_series(E, V, K, _ev_prod)
@@ -128,15 +150,27 @@ def collapsed_jet_attention_ref(q0, ql, qt, k0, kl, kt, v0, vl, vt, *,
 
 def collapsed_jet_qkv_attention_ref(h0, hl, ht, wq, wk, wv, wo, *,
                                     K: int = 2, mask=None, valid=None,
-                                    bias=None):
+                                    bias=None, rope=None, qkv_bias=None):
     """Reference semantics of the *superblock* (unfused): project the hidden
-    bundle through q/k/v, run GQA attention, project through ``Wo``.
+    bundle through q/k/v (bias on the primal lane, rope coefficient-wise),
+    run GQA attention, project through ``Wo``.
 
     h0/ht: (B, S, D); hl: (K-1, R, B, S, D) (entries may be ``None``);
     wq: (D, Hq, dh); wk: (D, Hkv, dh); wv: (D, Hkv, dv); wo: (Hq, dv, Do).
     ``Hq`` must be a multiple of ``Hkv``; kv head ``h`` serves query heads
-    ``[h*G, (h+1)*G)``. ``wq`` is pre-scaled (fold the softmax scale in).
-    mask/valid/bias are shared across heads, see
+    ``[h*G, (h+1)*G)``. ``wq`` is pre-scaled (fold the softmax scale in —
+    and into the q bias, see module docstring).
+
+    ``rope``: optional ``(cos, sin)`` per-position tables, each (S, dh//2),
+    applied to q and k with the rotate-half convention of
+    :func:`repro.models.layers.rope` *after* projection (+ bias) — the graph
+    order of LM-style trunks. ``qkv_bias``: optional
+    ``(bq (Hq, dh), bk (Hkv, dh), bv (Hkv, dv))`` jet-constant projection
+    biases (legs may be ``None``) — biases shift only the primal lane.
+    ``bias`` may be (Sq, Skv)-broadcastable or carry a leading head axis
+    (Hq, S, S) (per-head ALiBi tables), shared across the batch.
+
+    mask/valid are shared across heads, see
     :func:`collapsed_jet_attention_ref`. Returns (o0 (B, S, Do),
     ol (K-1, R, B, S, Do), ot (B, S, Do)).
     """
@@ -146,22 +180,49 @@ def collapsed_jet_qkv_attention_ref(h0, hl, ht, wq, wk, wv, wo, *,
     Do = wo.shape[2]
     G = Hq // Hkv
     H = [h0, *[hl[j] for j in range(K - 1)], ht]
+    bq_ = bk_ = bv_ = None
+    if qkv_bias is not None:
+        bq_, bk_, bv_ = qkv_bias
+    cos = sin = None
+    if rope is not None:
+        cos, sin = rope
 
-    def proj(w, H_out):
+    def proj(w, H_out, b=None, roped=False):
         """Coefficient-wise projection to the (N = B*H_out, S, d) layout of
         the attention oracle, broadcasting kv heads over their query groups
-        (the unfused GQA semantics the kernel avoids materializing)."""
+        (the unfused GQA semantics the kernel avoids materializing). The
+        jet-constant bias lands on the primal lane only; rope — linear per
+        position — rotates every coefficient."""
         wf = w if w.shape[1] == H_out else jnp.repeat(w, G, axis=1)
+        bf = None
+        if b is not None:
+            bf = b if b.shape[0] == H_out else jnp.repeat(b, G, axis=0)
 
-        def one(c):
-            y = jnp.einsum("...bsd,dhe->...bhse", c, wf)
-            return y.reshape(y.shape[:-4] + (B * H_out, S, wf.shape[2]))
+        def series(X):
+            out = []
+            for i, c in enumerate(X):
+                if c is None:
+                    out.append(None)
+                    continue
+                y = jnp.einsum("...bsd,dhe->...bhse", c, wf)
+                if i == 0 and bf is not None:
+                    y = y + bf[:, None, :]
+                y = y.reshape(y.shape[:-4] + (B * H_out, S, wf.shape[2]))
+                if roped:
+                    y = apply_rope(y, cos, sin)
+                out.append(y)
+            return out
 
-        return one
+        return series
 
-    Q = map_series(H, proj(wq, Hq))
-    Kc = map_series(H, proj(wk, Hq))
-    V = map_series(H, proj(wv, Hq))
+    Q = proj(wq, Hq, bq_, roped=rope is not None)(H)
+    Kc = proj(wk, Hq, bk_, roped=rope is not None)(H)
+    V = proj(wv, Hq, bv_)(H)
+    if bias is not None and jnp.ndim(bias) == 3:
+        # per-head (Hq, S, S) table, shared across batch: tile onto the
+        # flattened (B * Hq) attention batch axis
+        bias = jnp.broadcast_to(bias[None], (B, Hq, S, S)).reshape(
+            B * Hq, S, S)
     o0, ol, ot = collapsed_jet_attention_ref(
         Q[0], Q[1:K], Q[K], Kc[0], Kc[1:K], Kc[K], V[0], V[1:K], V[K],
         K=K, mask=mask, valid=valid, bias=bias)

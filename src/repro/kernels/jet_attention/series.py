@@ -41,18 +41,6 @@ def _add(acc, t):
     return t if acc is None else acc + t
 
 
-def map_series(X: Sequence, f: Callable) -> List:
-    """Apply a *linear* jet-constant map (a projection matmul, a scale) to
-    every coefficient of a collapsed series.
-
-    Linearity is what makes this sound: a jet-constant linear map commutes
-    with the Taylor propagation, so it acts coefficient-wise and preserves
-    symbolic zeros (``None`` passes through untouched). This is how the
-    superblock kernel applies the q/k/v projection weights to the hidden
-    bundle inside VMEM."""
-    return [None if c is None else f(c) for c in X]
-
-
 def bilinear_series(A: Sequence, B: Sequence, K: int, prod: ProdFn) -> List:
     """Collapsed Leibniz rule: the series of ``A * B`` for a bilinear product.
 

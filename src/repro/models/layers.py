@@ -352,13 +352,14 @@ def attention_layer(params, x, cfg, *, positions, causal=True, window=None):
     offload planner fuses; differential-operator heads (transformer PINNs)
     trace with that setting. The recursive offload engine plans through
     ``lax.scan``, so this fuses both in unrolled trunks and inside the
-    scanned layer stack of ``models/transformer.backbone``. With
-    ``cfg.use_rope=False`` (the PINN convention — coordinates carry their
-    own positional lift) the q/k/v projections feed the score dot directly
-    and the planner fuses projections + GQA attention + output projection
-    as ONE superblock kernel; with rope on, the block still fuses as
-    per-segment kernels (projections as jet_mlp, attention as
-    jet_attention)."""
+    scanned layer stack of ``models/transformer.backbone``. The planner
+    fuses projections + GQA attention + output projection as ONE
+    superblock kernel in both conventions: ``cfg.use_rope=False`` (PINN —
+    coordinates carry their own positional lift, q/k/v feed the score dot
+    directly) and the LM default ``cfg.use_rope=True`` (+
+    ``cfg.qkv_bias``) — the jet-constant rotary tables and projection
+    biases fold into the kernel's projection stage (rope is linear per
+    position, so every Taylor coefficient rotates identically)."""
     q, k, v = _proj_qkv(params, x, cfg)
     if getattr(cfg, "use_rope", True):
         q = rope(q, positions, cfg.rope_theta)

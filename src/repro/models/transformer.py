@@ -126,13 +126,14 @@ def backbone(params, x, cfg, positions, *, unroll: bool = False):
     ``cfg.attn_impl='reference'``): the recursive offload engine
     (:mod:`repro.core.offload`) plans the scan body once per (K, signature)
     and fuses its segments on every iteration under
-    ``operators.<op>(..., method='collapsed', backend='pallas')``. With
-    ``cfg.use_rope=False`` (the PINN convention) each layer's whole
-    attention block — q/k/v projections, (GQA, via ``cfg.num_kv_heads <
-    cfg.num_heads``) attention, output projection — fuses as ONE superblock
-    kernel; with rope on, it fuses per segment (jet_mlp projections +
-    jet_attention core). ``unroll=True`` unrolls the stack in Python
-    instead — O(depth) jaxpr size; kept for unroll-vs-scan benchmarks
+    ``operators.<op>(..., method='collapsed', backend='pallas')``. Each
+    layer's whole attention block — q/k/v projections (+ ``cfg.qkv_bias``
+    biases and rotary embeddings under the LM default
+    ``cfg.use_rope=True``), (GQA, via ``cfg.num_kv_heads <
+    cfg.num_heads``) attention, output projection — fuses as ONE
+    superblock kernel; ``cfg.use_rope=False`` (the PINN convention)
+    likewise. ``unroll=True`` unrolls the stack in Python instead —
+    O(depth) jaxpr size; kept for unroll-vs-scan benchmarks
     (``benchmarks/scan_depth.py``).
     """
     blocks = _unrolled_blocks if unroll else _scan_blocks

@@ -31,18 +31,25 @@ def test_attention_laplacian_bench_smoke():
                                                 transformer_pinn)
     from repro.core import operators as ops
 
-    f = transformer_pinn(S=8, D=3, d_model=16)
     x = jax.random.normal(jax.random.PRNGKey(0), (2, 3)) * 0.5
-    ref = ops.laplacian(f, x, method="collapsed")
-    for backend in ("pallas", "pallas-per-segment"):
-        got = ops.laplacian(f, x, method="collapsed", backend=backend)
-        np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5,
-                                   err_msg=backend)
-    segs_sb, supers_sb, _ = scan_body_plan_counts(f, x, "pallas")
-    segs_ps, supers_ps, _ = scan_body_plan_counts(f, x,
-                                                  "pallas-per-segment")
-    assert supers_sb == 1 and supers_ps == 0
-    assert segs_sb < segs_ps and segs_ps >= 4
+    for trunk in (dict(use_rope=False),
+                  dict(use_rope=True, qkv_bias=True)):  # the …/rope rows
+        f = transformer_pinn(S=8, D=3, d_model=16, **trunk)
+        ref = ops.laplacian(f, x, method="collapsed")
+        for backend in ("pallas", "pallas-per-segment"):
+            got = ops.laplacian(f, x, method="collapsed", backend=backend)
+            np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-5,
+                                       err_msg=f"{backend} {trunk}")
+        segs_sb, attn_sb, supers_sb, _ = scan_body_plan_counts(f, x,
+                                                               "pallas")
+        segs_ps, attn_ps, supers_ps, _ = scan_body_plan_counts(
+            f, x, "pallas-per-segment")
+        assert supers_sb == 1 and supers_ps == 0, trunk
+        # the acceptance accounting: the attention block is ONE HBM
+        # segment under the superblock — in the rope+bias trunk too —
+        # vs 4+ on the per-segment plan
+        assert attn_sb == 1 and attn_ps >= 4, trunk
+        assert segs_sb < segs_ps, trunk
 
 
 def test_scan_depth_bench_smoke():
@@ -64,5 +71,6 @@ def test_scan_depth_bench_smoke():
         rtol=1e-5, atol=1e-5)
     rep = offload.explain(f, x, K=2)
     body = [e for e in rep.jaxprs if e.label == "scan body"]
-    assert body and body[0].fused("jet_attention") and \
+    # the default (use_rope=True) trunk superblocks since the rope fold
+    assert body and body[0].fused("jet_attention_qkv") and \
         body[0].fused("jet_mlp")

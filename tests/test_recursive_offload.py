@@ -77,9 +77,11 @@ def test_scan_body_fuses_and_plans_once():
 
 def test_scanned_transformer_backbone_acceptance():
     """ISSUE acceptance: laplacian on the *scanned* transformer backbone
-    fuses both jet_attention and jet_mlp segments inside the scan body
-    (asserted via the explain report), matches the CRULES interpreter to
-    1e-5 on CPU interpret, and plans the scan body exactly once."""
+    fuses the whole attention block (one superblock per layer — the
+    default use_rope=True config folds its rotary tables into the kernel)
+    plus jet_mlp segments inside the scan body (asserted via the explain
+    report), matches the CRULES interpreter to 1e-5 on CPU interpret, and
+    plans the scan body exactly once."""
     from repro.configs.base import ModelConfig
     from repro.models import transformer
 
@@ -106,7 +108,8 @@ def test_scanned_transformer_backbone_acceptance():
     rep = offload.explain(f, x, K=2)
     body = _scan_entries(rep)
     assert len(body) == 1, str(rep)
-    assert len(body[0].fused("jet_attention")) == 1, str(rep)
+    supers = body[0].fused("jet_attention_qkv")
+    assert len(supers) == 1 and "rope" in supers[0].detail, str(rep)
     assert len(body[0].fused("jet_mlp")) >= 1, str(rep)
     # body planned once per (K, signature): with a cold cache, explain's
     # misses are exactly top + scan body
@@ -329,6 +332,79 @@ def test_fuse_inside_while_body():
     rep = offload.explain(f, x, K=2)
     body = [e for e in rep.jaxprs if e.label == "while body"]
     assert body and body[0].fused("jet_mlp"), str(rep)
+
+
+def test_while_recovers_zero_legs():
+    """Bounded-pattern ZERO-leg recovery: carry coefficients that stay
+    symbolically zero across one body evaluation keep their ZERO legs in
+    the materialized carry bundle (loop counters, jet-constant state) —
+    observable as fewer while-loop carry operands in the lowered graph —
+    and the numerics still match nested forward mode."""
+    D, R = 4, 3
+    W = jax.random.normal(jax.random.PRNGKey(30), (D, D)) * 0.4
+
+    def f(x):
+        def body(c):
+            i, h, s = c
+            return i + 1, jnp.tanh(h @ W), s * 1.1
+
+        _, h, s = jax.lax.while_loop(lambda c: c[0] < 3, body,
+                                     (0, x, jnp.float32(2.0)))
+        return (h ** 2).sum() * s
+
+    x = jax.random.normal(jax.random.PRNGKey(31), (D,)) * 0.5
+    closed = jax.make_jaxpr(
+        lambda x, d: collapsed_fan(f, x, d, 2))(x, jnp.eye(D))
+    wls = [e for e in closed.jaxpr.eqns if e.primitive.name == "while"]
+    assert wls, "no while in the lowered graph"
+    eqn = wls[0]
+    ncarry = (len(eqn.invars) - eqn.params["cond_nconsts"]
+              - eqn.params["body_nconsts"])
+    # K=2: i and s stay primal-only (1 each); h carries primal+lower+top
+    # (3) — 5 legs instead of the fully-densified 9
+    assert ncarry == 5, ncarry
+
+    _, _, top = collapsed_fan(f, x, jnp.eye(D), 2)
+    H = jax.jacfwd(jax.jacfwd(f))(x)  # while forbids reverse mode
+    np.testing.assert_allclose(top, jnp.trace(H), rtol=1e-4, atol=1e-5)
+
+    # a leg that STARTS zero but densifies inside the body is materialized
+    # (the union fixed point expands until stable)
+    def g(x):
+        def body(c):
+            i, h, s = c
+            return i + 1, jnp.tanh(h @ W), s + h.sum()
+
+        _, h, s = jax.lax.while_loop(lambda c: c[0] < 3, body,
+                                     (0, x, jnp.float32(0.0)))
+        return (h ** 2).sum() * s
+
+    _, _, top_g = collapsed_fan(g, x, jnp.eye(D), 2)
+    Hg = jax.jacfwd(jax.jacfwd(g))(x)
+    np.testing.assert_allclose(top_g, jnp.trace(Hg), rtol=1e-4, atol=1e-5)
+
+
+def test_while_zero_pattern_deep_carry_chain():
+    """The zero-pattern fixed point is bounded by the total leg count, not
+    K: a chain of carries shifting a differentiated value one slot per
+    round needs more than K+2 union rounds to saturate — this used to exit
+    unconverged and crash the flatten assertion at trace time."""
+    D = 3
+    W = jax.random.normal(jax.random.PRNGKey(40), (D, D)) * 0.4
+
+    def f(x):
+        def body(c):
+            i, h, a, b, d, e, g = c
+            return i + 1, jnp.tanh(h @ W), h.sum(), a, b, d, e
+
+        init = (0, x) + tuple(jnp.float32(0.0) for _ in range(5))
+        out = jax.lax.while_loop(lambda c: c[0] < 6, body, init)
+        return (out[1] ** 2).sum() + sum(out[2:]) ** 2
+
+    x = jax.random.normal(jax.random.PRNGKey(41), (D,)) * 0.5
+    _, _, top = collapsed_fan(f, x, jnp.eye(D), 2)
+    H = jax.jacfwd(jax.jacfwd(f))(x)
+    np.testing.assert_allclose(top, jnp.trace(H), rtol=1e-4, atol=1e-5)
 
 
 def test_taylor_while_rule():

@@ -1,0 +1,730 @@
+"""RoPE-fused superblocks: rotary embeddings and projection biases folded
+into the collapsed-jet QKV-attention kernel.
+
+Covers the op-level kernel-vs-unfused parity sweep (K x {MHA, GQA} x
+ragged x dv != dh, rope x qkv_bias x per-head ALiBi bias), grads through
+the rope'd op and backend, the rope matcher on models-built graphs (the
+scanned ``use_rope=True, qkv_bias=True`` GQA backbone forms ONE superblock
+per layer with zero per-segment attention fallbacks — the ISSUE
+acceptance), the plan-time rejections (propagated-jet rope angles, q/k
+position-table mismatch, rope on one side only — all with plan notes and
+faithful per-segment fallback numerics), the head-shaped ``cfg.qkv_bias``
+fold of the per-segment jet_mlp route, per-head bias tables in both
+kernels, and the rope/bias-keyed ``jet_attention_qkv`` autotune namespace
+(round-trip + legacy 9-dim key migration).
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import offload
+from repro.core import operators as ops
+from repro.kernels import autotune
+from repro.kernels.jet_attention.ops import collapsed_jet_qkv_attention_op
+from repro.kernels.jet_attention.ref import (apply_rope,
+                                             collapsed_jet_attention_ref)
+from repro.models import layers as L
+from repro.models import transformer
+
+
+def _rope_tables(S, dh, theta=10_000.0):
+    half = dh // 2
+    inv = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = jnp.arange(S, dtype=jnp.float32)[:, None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _alibi_per_head(S, H):
+    d = jnp.abs(jnp.arange(S)[:, None] - jnp.arange(S)[None, :])
+    slopes = 0.5 ** (1.0 + jnp.arange(H, dtype=jnp.float32))
+    return (-slopes[:, None, None] * d[None]).astype(jnp.float32)
+
+
+def _unfused_superblock(h0, hl, ht, wq, wk, wv, wo, K, mask=None, bias=None,
+                        scale=1.0, rope=None, qkv_bias=None):
+    """Hand-rolled unfused semantics: project every coefficient (+ bias on
+    the primal lane, rope coefficient-wise), broadcast GQA heads, run the
+    attention oracle, project through Wo."""
+    B, S, D = h0.shape
+    Hq, dh = wq.shape[1], wq.shape[2]
+    Hkv, dv = wk.shape[1], wv.shape[2]
+    G = Hq // Hkv
+    bq_ = bk_ = bv_ = None
+    if qkv_bias is not None:
+        bq_, bk_, bv_ = qkv_bias
+
+    def proj(series, w, b, roped):
+        wf = w if w.shape[1] == Hq else jnp.repeat(w, G, axis=1)
+        bf = None if b is None else (b if b.shape[0] == Hq
+                                     else jnp.repeat(b, G, axis=0))
+        out = []
+        for i, c in enumerate(series):
+            y = jnp.einsum("...bsd,dhe->...bhse", c, wf)
+            if i == 0 and bf is not None:
+                y = y + bf[:, None, :]
+            y = y.reshape(y.shape[:-4] + (B * Hq, S, wf.shape[2]))
+            if roped:
+                y = apply_rope(y, rope[0], rope[1])
+            out.append(y)
+        return out
+
+    H = [h0, *hl, ht]
+    # scoring scale folds into the q side of the affine+rope chain:
+    # s * rope(h@W + b) == rope(h@(sW) + s*b)
+    Q = proj(H, wq * scale, None if bq_ is None else bq_ * scale,
+             rope is not None)
+    Kc = proj(H, wk, bk_, rope is not None)
+    V = proj(H, wv, bv_, False)
+    if bias is not None and bias.ndim == 3:
+        bias = jnp.broadcast_to(bias[None], (B, Hq, S, S)).reshape(
+            B * Hq, S, S)
+    o0, ol, ot = collapsed_jet_attention_ref(
+        Q[0], Q[1:K], Q[K], Kc[0], Kc[1:K], Kc[K], V[0], V[1:K], V[K],
+        K=K, mask=mask, bias=bias)
+
+    def unproj(c):
+        c = c.reshape(c.shape[:-3] + (B, Hq, S, dv))
+        return jnp.einsum("...bhsv,hvd->...bsd", c, wo)
+
+    return unproj(o0), unproj(ol), unproj(ot)
+
+
+# ---------------------------------------------------------------------------
+# op level: kernel vs unfused reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("lowering", ["kernel", "reference"])
+@pytest.mark.parametrize("K", [2, 4])
+@pytest.mark.parametrize("Hq,Hkv,B,S,D,dh,dv,R", [
+    (2, 2, 2, 10, 6, 4, 4, 3),   # MHA, ragged (B, S)
+    (4, 2, 1, 9, 8, 4, 5, 2),    # GQA Hq/Hkv = 2, dv != dh
+])
+def test_rope_superblock_op_sweep(lowering, K, Hq, Hkv, B, S, D, dh, dv, R):
+    ks = jax.random.split(jax.random.PRNGKey(K * 100 + Hq * 10 + Hkv), 12)
+    rnd = lambda i, sh: jax.random.normal(ks[i], sh, jnp.float32) * 0.4
+    h0 = rnd(0, (B, S, D))
+    hl = [rnd(1 + j, (R, B, S, D)) for j in range(K - 1)]
+    ht = rnd(4, (B, S, D))
+    wq, wk = rnd(5, (D, Hq, dh)), rnd(6, (D, Hkv, dh))
+    wv, wo = rnd(7, (D, Hkv, dv)), rnd(8, (Hq, dv, D))
+    qkv_bias = (rnd(9, (Hq, dh)) * 0.5, rnd(10, (Hkv, dh)) * 0.5,
+                rnd(11, (Hkv, dv)) * 0.5)
+    rope = _rope_tables(S, dh)
+    mask = jnp.arange(S)[None, :] <= jnp.arange(S)[:, None]
+    scale = 1.0 / math.sqrt(dh)
+    kw = dict(K=K, mask=mask, scale=scale, rope=rope, qkv_bias=qkv_bias,
+              bias=_alibi_per_head(S, Hq))
+    want = _unfused_superblock(h0, hl, ht, wq, wk, wv, wo, **kw)
+    o0, ol, ot = collapsed_jet_qkv_attention_op(
+        (h0, hl, ht), wq, wk, wv, wo, interpret=True, lowering=lowering,
+        **kw)
+    for g, w in zip((o0, jnp.stack(ol), ot), want):
+        np.testing.assert_allclose(g, w, rtol=3e-4, atol=3e-4)
+
+
+def test_rope_op_partial_bias_and_symbolic_zeros():
+    """None qkv_bias legs are zero-filled; None hidden coefficients keep
+    their symbolic-zero skipping under rope."""
+    K, B, S, D, Hq, Hkv, dh, dv, R = 4, 2, 6, 4, 4, 2, 4, 3, 2
+    ks = jax.random.split(jax.random.PRNGKey(1), 7)
+    rnd = lambda i, sh: jax.random.normal(ks[i], sh, jnp.float32) * 0.4
+    h0, h1 = rnd(0, (B, S, D)), rnd(1, (R, B, S, D))
+    wq, wk = rnd(2, (D, Hq, dh)), rnd(3, (D, Hkv, dh))
+    wv, wo = rnd(4, (D, Hkv, dv)), rnd(5, (Hq, dv, D))
+    qb = rnd(6, (Hq, dh)) * 0.5
+    rope = _rope_tables(S, dh)
+    z, zt = jnp.zeros((R, B, S, D)), jnp.zeros((B, S, D))
+    for lowering in ("kernel", "reference"):
+        ref = collapsed_jet_qkv_attention_op(
+            (h0, [h1, z, z], zt), wq, wk, wv, wo, K=K, rope=rope,
+            qkv_bias=(qb, jnp.zeros((Hkv, dh)), jnp.zeros((Hkv, dv))),
+            interpret=True, lowering=lowering)
+        got = collapsed_jet_qkv_attention_op(
+            (h0, [h1, None, None], None), wq, wk, wv, wo, K=K, rope=rope,
+            qkv_bias=(qb, None, None), interpret=True, lowering=lowering)
+        for a, g in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
+            np.testing.assert_allclose(a, g, rtol=1e-5, atol=1e-5)
+
+
+def test_rope_op_validates_tables():
+    h0 = jnp.zeros((1, 4, 6))
+    wq = wk = jnp.zeros((6, 2, 4))
+    wv, wo = jnp.zeros((6, 2, 4)), jnp.zeros((2, 4, 6))
+    bad = (jnp.zeros((4, 3)), jnp.zeros((4, 3)))  # half != dh/2
+    with pytest.raises(ValueError, match="rope tables"):
+        collapsed_jet_qkv_attention_op((h0, [None], None), wq, wk, wv, wo,
+                                       K=2, rope=bad, interpret=True)
+    wq_odd = wk_odd = jnp.zeros((6, 2, 5))
+    with pytest.raises(ValueError, match="even head dim"):
+        collapsed_jet_qkv_attention_op(
+            (h0, [None], None), wq_odd, wk_odd, jnp.zeros((6, 2, 5)),
+            jnp.zeros((2, 5, 6)), K=2, rope=(jnp.zeros((4, 2)),) * 2,
+            interpret=True)
+
+
+def test_grad_through_rope_superblock_op():
+    """Kernel-path gradients w.r.t. hidden, weights and projection biases
+    equal reference-path gradients through the rope'd custom VJP."""
+    K, B, S, D, Hq, Hkv, dh, dv, R = 2, 2, 6, 4, 4, 2, 4, 4, 2
+    ks = jax.random.split(jax.random.PRNGKey(2), 9)
+    rnd = lambda i, sh: jax.random.normal(ks[i], sh, jnp.float32) * 0.4
+    h0, h1 = rnd(0, (B, S, D)), rnd(1, (R, B, S, D))
+    p0 = (rnd(2, (D, Hq, dh)), rnd(3, (D, Hkv, dh)), rnd(4, (D, Hkv, dv)),
+          rnd(5, (Hq, dv, D)))
+    b0 = (rnd(6, (Hq, dh)) * 0.5, rnd(7, (Hkv, dh)) * 0.5,
+          rnd(8, (Hkv, dv)) * 0.5)
+    rope = _rope_tables(S, dh)
+
+    def loss(h, params, qkvb, tabs, lowering):
+        o0, ol, ot = collapsed_jet_qkv_attention_op(
+            (h, [h1], None), *params, K=K, scale=0.7, rope=tabs,
+            qkv_bias=qkvb, interpret=True, lowering=lowering)
+        return (o0 ** 2).mean() + (ot ** 2).mean() + \
+            sum((c ** 2).mean() for c in ol)
+
+    # rope-table cotangents included: the kernel path's custom VJP must
+    # match differentiating the reference lowering directly (and be real,
+    # not silently zero)
+    gk = jax.grad(loss, argnums=(0, 1, 2, 3))(h0, p0, b0, rope, "kernel")
+    gr = jax.grad(loss, argnums=(0, 1, 2, 3))(h0, p0, b0, rope, "reference")
+    for a, b in zip(jax.tree.leaves(gk), jax.tree.leaves(gr)):
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=1e-6)
+    assert float(jnp.abs(gk[3][0]).max()) > 0  # d/dcos is nonzero
+
+
+# ---------------------------------------------------------------------------
+# the rope matcher on models-built graphs
+# ---------------------------------------------------------------------------
+
+
+def _lm_cfg(num_layers=2, d_model=16, num_heads=4, num_kv_heads=2, **kw):
+    return ModelConfig(
+        name="t", family="dense", num_layers=num_layers, d_model=d_model,
+        num_heads=num_heads, num_kv_heads=num_kv_heads, d_ff=2 * d_model,
+        vocab_size=8, act="tanh", dtype="float32", param_dtype="float32",
+        attn_impl="reference", remat=False, use_rope=True, **kw)
+
+
+def _backbone_fn(cfg, D=4, key=0):
+    params = transformer.init(jax.random.PRNGKey(key), cfg)
+    # nonzero biases, so the fold is observable in the numerics
+    params = jax.tree.map(lambda a: a + 0.05, params)
+    emb = jax.random.normal(jax.random.PRNGKey(key + 1),
+                            (D, cfg.d_model)) * 0.5
+
+    def f(x):
+        t = x[..., None] * emb[None]
+        h, _ = transformer.backbone(params, t, cfg, jnp.arange(D))
+        return jnp.mean(h, axis=(-1, -2))
+
+    return f
+
+
+def _scan_entries(rep):
+    return [e for e in rep.jaxprs if e.label == "scan body"]
+
+
+@pytest.mark.parametrize("K,op", [(2, "laplacian"), (4, "biharmonic")])
+@pytest.mark.parametrize("num_heads,num_kv_heads", [(2, 2), (4, 2)])
+def test_rope_backbone_parity(K, op, num_heads, num_kv_heads):
+    """Rope superblock parity vs the CRULES interpreter: K x {MHA, GQA} on
+    the scanned use_rope=True, qkv_bias=True backbone (ragged token/batch
+    shapes)."""
+    cfg = _lm_cfg(num_layers=1, d_model=12, num_heads=num_heads,
+                  num_kv_heads=num_kv_heads, qkv_bias=True)
+    if op == "laplacian":
+        f = _backbone_fn(cfg, D=5)
+        x = jax.random.normal(jax.random.PRNGKey(3), (3, 5)) * 0.5
+        ref = ops.laplacian(f, x, method="collapsed")
+        got = ops.laplacian(f, x, method="collapsed", backend="pallas")
+    else:
+        f = _backbone_fn(cfg, D=3)
+        x = jax.random.normal(jax.random.PRNGKey(3), (3,)) * 0.3
+        ref = ops.biharmonic(f, x, method="collapsed")
+        got = ops.biharmonic(f, x, method="collapsed", backend="pallas")
+    np.testing.assert_allclose(got, ref, rtol=2e-4, atol=1e-5)
+
+
+def test_rope_backbone_acceptance():
+    """ISSUE acceptance: the scanned use_rope=True, qkv_bias=True GQA
+    backbone reports ONE jet_attention_qkv superblock per layer — zero
+    per-segment attention fallbacks — under backend='pallas', and the
+    per-segment ablation still fuses the block piecewise."""
+    cfg = _lm_cfg(qkv_bias=True)
+    f = _backbone_fn(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 4)) * 0.5
+    offload.clear_plan_cache()
+    rep = offload.explain(f, x, K=2)
+    body = _scan_entries(rep)
+    assert len(body) == 1, str(rep)
+    supers = body[0].fused("jet_attention_qkv")
+    assert len(supers) == 1, str(rep)
+    assert "rope" in supers[0].detail, str(rep)
+    assert "qkvbias" in supers[0].detail, str(rep)
+    assert "Hq4/Hkv2" in supers[0].detail, str(rep)
+    assert len(body[0].fused("jet_attention")) == 0, str(rep)
+    assert rep.cache_misses == 2, str(rep)  # top + scan body, planned once
+
+    rep_ps = offload.explain(f, x, K=2, backend="pallas-per-segment")
+    body_ps = _scan_entries(rep_ps)
+    assert len(body_ps[0].fused("jet_attention_qkv")) == 0, str(rep_ps)
+    assert len(body_ps[0].fused("jet_attention")) == 1, str(rep_ps)
+    assert len(body_ps[0].fused("jet_mlp")) >= 4, str(rep_ps)
+
+    ref = ops.laplacian(f, x, method="collapsed")
+    got = ops.laplacian(f, x, method="collapsed", backend="pallas")
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-5)
+    got_ps = ops.laplacian(f, x, method="collapsed",
+                           backend="pallas-per-segment")
+    np.testing.assert_allclose(got_ps, ref, rtol=1e-4, atol=1e-5)
+
+
+def test_rope_superblock_executes_fused_kernel(monkeypatch):
+    """The rope'd superblock op actually executes with its rope/bias
+    operands — not a silent per-segment fallback."""
+    cfg = _lm_cfg(num_layers=1, qkv_bias=True)
+    f = _backbone_fn(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 4)) * 0.5
+    offload.clear_plan_cache()
+    calls = []
+    real_op = offload.collapsed_jet_qkv_attention_op
+    monkeypatch.setattr(
+        offload, "collapsed_jet_qkv_attention_op",
+        lambda *a, **kw: calls.append(
+            (kw.get("rope") is not None,
+             kw.get("qkv_bias") is not None)) or real_op(*a, **kw))
+    ref = ops.laplacian(f, x, method="collapsed")
+    got = ops.laplacian(f, x, method="collapsed", backend="pallas")
+    assert calls and all(r and b for r, b in calls), calls
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-5)
+
+
+def test_grad_through_rope_superblock_backend():
+    """jax.grad of a loss on the rope-superblock-fused Laplacian equals the
+    interpreter-backend gradient (grads flow into weights AND projection
+    biases through the fused segment)."""
+    D, dm, Hq, Hkv, dh, S = 3, 8, 2, 1, 4, 5
+    ks = jax.random.split(jax.random.PRNGKey(6), 8)
+    emb = jax.random.normal(ks[0], (D, dm)) * 0.5
+    x = jax.random.normal(ks[1], (2, D)) * 0.5
+    cos, sin = _rope_tables(S, dh)
+
+    def loss(params, backend=None):
+        Wq, Wk, Wv, Wo, bq, bk = params
+
+        def f(y):
+            t = jnp.einsum("bd,dm->bm", y, emb)[:, None, :] * jnp.ones(
+                (1, S, 1))
+            q = jnp.einsum("bsd,dhk->bshk", t, Wq) + bq
+            k = jnp.einsum("bsd,dhk->bshk", t, Wk) + bk
+            v = jnp.einsum("bsd,dhk->bshk", t, Wv)
+            pos = jnp.arange(S)
+            q = L.rope(q, pos)
+            k = L.rope(k, pos)
+            if Hq > Hkv:
+                k = jnp.repeat(k, Hq // Hkv, axis=2)
+                v = jnp.repeat(v, Hq // Hkv, axis=2)
+            qh, kh, vh = (jnp.moveaxis(a, 2, 1) for a in (q, k, v))
+            s = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / math.sqrt(dh)
+            m = jax.lax.stop_gradient(jnp.max(s, axis=-1, keepdims=True))
+            e = jnp.exp(s - m)
+            p = e / jnp.sum(e, axis=-1, keepdims=True)
+            o = jnp.einsum("bhqk,bhkd->bhqd", p, vh)
+            o = jnp.moveaxis(o, 1, 2)
+            return jnp.einsum("bshk,hkd->bsd", o, Wo).sum(axis=(-1, -2))
+
+        return jnp.mean(ops.laplacian(f, x, method="collapsed",
+                                      backend=backend) ** 2)
+
+    p0 = (jax.random.normal(ks[2], (dm, Hq, dh)) / np.sqrt(dm),
+          jax.random.normal(ks[3], (dm, Hkv, dh)) / np.sqrt(dm),
+          jax.random.normal(ks[4], (dm, Hkv, dh)) / np.sqrt(dm),
+          jax.random.normal(ks[5], (Hq, dh, dm)) / np.sqrt(dh),
+          jax.random.normal(ks[6], (Hq, dh)) * 0.3,
+          jax.random.normal(ks[7], (Hkv, dh)) * 0.3)
+    g_ref = jax.grad(loss)(p0)
+    g_pal = jax.grad(lambda p: loss(p, "pallas"))(p0)
+    for a, b in zip(jax.tree.leaves(g_ref), jax.tree.leaves(g_pal)):
+        np.testing.assert_allclose(b, a, rtol=3e-4, atol=1e-6)
+
+
+def test_grad_through_masked_superblock_backend():
+    """Regression: grads through a CAUSAL-masked fused attention block.
+
+    A single-live-key row (the first row of every causal mask) has
+    normalizer l0 == 1.0 exactly; the refs' all-padding clamp used
+    ``jnp.maximum(l0, 1.0)``, whose gradient at the tie splits 0.5/0.5 and
+    halved dl0 through the custom-VJP backward — masked superblock (and
+    per-segment) gradients were wrong before the where()-clamp fix."""
+    cfg = _lm_cfg(num_layers=1, qkv_bias=True)
+    D = 4
+    emb = jax.random.normal(jax.random.PRNGKey(22), (D, cfg.d_model)) * 0.5
+    x = jax.random.normal(jax.random.PRNGKey(23), (2, D)) * 0.5
+    params = transformer.init(jax.random.PRNGKey(24), cfg)
+    params = jax.tree.map(lambda a: a + 0.05, params)
+
+    def loss(p, backend=None):
+        def f(y):
+            t = y[..., None] * emb[None]
+            h, _ = transformer.backbone(p, t, cfg, jnp.arange(D))
+            return jnp.mean(h, axis=(-1, -2))
+
+        return jnp.mean(ops.laplacian(f, x, method="collapsed",
+                                      backend=backend) ** 2)
+
+    g_ref = jax.grad(loss)(params)
+    for backend in ("pallas", "pallas-per-segment"):
+        g_pal = jax.grad(lambda p: loss(p, backend))(params)
+        jax.tree.map(
+            lambda a, b: np.testing.assert_allclose(b, a, rtol=5e-4,
+                                                    atol=1e-6),
+            g_ref, g_pal)
+
+
+# ---------------------------------------------------------------------------
+# plan-time rejections (with notes) and faithful fallback
+# ---------------------------------------------------------------------------
+
+
+def _rope_block(Wq, Wk, Wv, Wo, dh, pos_q=None, pos_k=None):
+    """Hand-written rope'd MHA block with per-side position overrides."""
+
+    def block(t):
+        S = t.shape[1]
+        pq = jnp.arange(S) if pos_q is None else pos_q
+        pk = jnp.arange(S) if pos_k is None else pos_k
+        q = jnp.einsum("bsd,dhk->bshk", t, Wq)
+        k = jnp.einsum("bsd,dhk->bshk", t, Wk)
+        v = jnp.einsum("bsd,dhk->bshk", t, Wv)
+        q = L.rope(q, pq)
+        k = L.rope(k, pk)
+        qh, kh, vh = (jnp.moveaxis(a, 2, 1) for a in (q, k, v))
+        s = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / math.sqrt(dh)
+        m = jax.lax.stop_gradient(jnp.max(s, axis=-1, keepdims=True))
+        e = jnp.exp(s - m)
+        p = e / jnp.sum(e, axis=-1, keepdims=True)
+        o = jnp.einsum("bhqk,bhkd->bhqd", p, vh)
+        o = jnp.moveaxis(o, 1, 2)
+        return jnp.einsum("bshk,hkd->bsd", o, Wo)
+
+    return block
+
+
+def _mk_weights(key, dm, H, dh):
+    ks = jax.random.split(key, 4)
+    return (jax.random.normal(ks[0], (dm, H, dh)) / np.sqrt(dm),
+            jax.random.normal(ks[1], (dm, H, dh)) / np.sqrt(dm),
+            jax.random.normal(ks[2], (dm, H, dh)) / np.sqrt(dm),
+            jax.random.normal(ks[3], (H, dh, dm)) / np.sqrt(dh))
+
+
+def test_propagated_rope_angles_rejected_with_note():
+    """Positions that depend on x carry propagated jets into the cos/sin
+    tables: the superblock is rejected at plan time (note naming the rope
+    table), the attention core still fuses per-segment, numerics hold."""
+    D, dm, H, dh, S = 3, 6, 2, 4, 4
+    ks = jax.random.split(jax.random.PRNGKey(7), 2)
+    emb = jax.random.normal(ks[0], (D, dm)) * 0.5
+    Wq, Wk, Wv, Wo = _mk_weights(ks[1], dm, H, dh)
+
+    def f(x):
+        t = x[..., None] * emb[None]
+        t = jnp.broadcast_to(t[:, :1], (x.shape[0], S, dm)) * jnp.ones(
+            (1, S, 1))
+        pos = jnp.arange(S) + x.sum()  # propagated-jet angles
+        return _rope_block(Wq, Wk, Wv, Wo, dh, pos_q=pos,
+                           pos_k=pos)(t).sum(axis=(-1, -2))
+
+    x = jax.random.normal(jax.random.PRNGKey(8), (2, D)) * 0.3
+    plan = offload.plan_segments(jax.make_jaxpr(f)(x))
+    assert not any(s.kind == "jet_attention_qkv" for s in plan.values())
+    assert any("rope table carries a propagated jet" in n
+               for n in plan.notes), plan.notes
+    assert any(s.kind == "jet_attention" for s in plan.values())
+    ref = ops.laplacian(f, x, method="collapsed")
+    got = ops.laplacian(f, x, method="collapsed", backend="pallas")
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-5)
+
+
+def test_rope_position_mismatch_rejected_with_note():
+    """q and k rotated through different position tables (decode-style
+    offset queries): no superblock, note recorded, numerics faithful."""
+    D, dm, H, dh, S = 3, 6, 2, 4, 4
+    ks = jax.random.split(jax.random.PRNGKey(9), 2)
+    emb = jax.random.normal(ks[0], (D, dm)) * 0.5
+    Wq, Wk, Wv, Wo = _mk_weights(ks[1], dm, H, dh)
+
+    def f(x):
+        t = jnp.einsum("bd,dm->bm", x, emb)[:, None, :] * jnp.ones((1, S, 1))
+        return _rope_block(Wq, Wk, Wv, Wo, dh,
+                           pos_q=jnp.arange(S) + 2,
+                           pos_k=jnp.arange(S))(t).sum(axis=(-1, -2))
+
+    x = jax.random.normal(jax.random.PRNGKey(10), (2, D)) * 0.3
+    plan = offload.plan_segments(jax.make_jaxpr(f)(x))
+    assert not any(s.kind == "jet_attention_qkv" for s in plan.values())
+    assert any("position tables differ" in n for n in plan.notes), plan.notes
+    ref = ops.laplacian(f, x, method="collapsed")
+    got = ops.laplacian(f, x, method="collapsed", backend="pallas")
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-5)
+
+
+def test_rope_on_one_side_rejected_with_note():
+    D, dm, H, dh, S = 3, 6, 2, 4, 4
+    ks = jax.random.split(jax.random.PRNGKey(11), 2)
+    emb = jax.random.normal(ks[0], (D, dm)) * 0.5
+    Wq, Wk, Wv, Wo = _mk_weights(ks[1], dm, H, dh)
+
+    def f(x):
+        t = jnp.einsum("bd,dm->bm", x, emb)[:, None, :] * jnp.ones((1, S, 1))
+        q = jnp.einsum("bsd,dhk->bshk", t, Wq)
+        k = jnp.einsum("bsd,dhk->bshk", t, Wk)
+        v = jnp.einsum("bsd,dhk->bshk", t, Wv)
+        q = L.rope(q, jnp.arange(S))  # k stays un-rotated
+        qh, kh, vh = (jnp.moveaxis(a, 2, 1) for a in (q, k, v))
+        s = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / math.sqrt(dh)
+        m = jax.lax.stop_gradient(jnp.max(s, axis=-1, keepdims=True))
+        e = jnp.exp(s - m)
+        p = e / jnp.sum(e, axis=-1, keepdims=True)
+        o = jnp.einsum("bhqk,bhkd->bhqd", p, vh)
+        o = jnp.moveaxis(o, 1, 2)
+        return jnp.einsum("bshk,hkd->bsd", o, Wo).sum(axis=(-1, -2))
+
+    x = jax.random.normal(jax.random.PRNGKey(12), (2, D)) * 0.3
+    plan = offload.plan_segments(jax.make_jaxpr(f)(x))
+    assert not any(s.kind == "jet_attention_qkv" for s in plan.values())
+    assert any("only one of q/k" in n for n in plan.notes), plan.notes
+    ref = ops.laplacian(f, x, method="collapsed")
+    got = ops.laplacian(f, x, method="collapsed", backend="pallas")
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-5)
+
+
+def test_propagated_projection_bias_rejected_with_note():
+    D, dm, H, dh, S = 3, 6, 2, 4, 4
+    ks = jax.random.split(jax.random.PRNGKey(13), 3)
+    emb = jax.random.normal(ks[0], (D, dm)) * 0.5
+    Wq, Wk, Wv, Wo = _mk_weights(ks[1], dm, H, dh)
+    b0 = jax.random.normal(ks[2], (H, dh)) * 0.3
+
+    def f(x):
+        t = jnp.einsum("bd,dm->bm", x, emb)[:, None, :] * jnp.ones((1, S, 1))
+        bq = b0 * (1.0 + (x ** 2).sum())  # propagated bias
+        q = jnp.einsum("bsd,dhk->bshk", t, Wq) + bq
+        k = jnp.einsum("bsd,dhk->bshk", t, Wk)
+        v = jnp.einsum("bsd,dhk->bshk", t, Wv)
+        qh, kh, vh = (jnp.moveaxis(a, 2, 1) for a in (q, k, v))
+        s = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / math.sqrt(dh)
+        m = jax.lax.stop_gradient(jnp.max(s, axis=-1, keepdims=True))
+        e = jnp.exp(s - m)
+        p = e / jnp.sum(e, axis=-1, keepdims=True)
+        o = jnp.einsum("bhqk,bhkd->bhqd", p, vh)
+        o = jnp.moveaxis(o, 1, 2)
+        return jnp.einsum("bshk,hkd->bsd", o, Wo).sum(axis=(-1, -2))
+
+    x = jax.random.normal(jax.random.PRNGKey(14), (2, D)) * 0.3
+    plan = offload.plan_segments(jax.make_jaxpr(f)(x))
+    assert not any(s.kind == "jet_attention_qkv" for s in plan.values())
+    assert any("q projection bias carries a propagated jet" in n
+               for n in plan.notes), plan.notes
+    ref = ops.laplacian(f, x, method="collapsed")
+    got = ops.laplacian(f, x, method="collapsed", backend="pallas")
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# qkv_bias on the per-segment jet_mlp route
+# ---------------------------------------------------------------------------
+
+
+def test_head_shaped_bias_fuses_as_jet_mlp():
+    """A (H, dh) cfg.qkv_bias projection bias folds into the per-segment
+    jet_mlp kernel (the ROADMAP rejection this PR closes)."""
+    dm, H, dh = 6, 2, 4
+    ks = jax.random.split(jax.random.PRNGKey(15), 2)
+    W = jax.random.normal(ks[0], (dm, H, dh)) / np.sqrt(dm)
+    b = jax.random.normal(ks[1], (H, dh)) * 0.5
+
+    def f(x):
+        t = x[..., None] * jnp.ones((1, 3, dm))
+        y = jnp.einsum("bsd,dhk->bshk", t, W) + b
+        return jnp.tanh(y).sum(axis=(-1, -2, -3))
+
+    x = jax.random.normal(jax.random.PRNGKey(16), (2, 3)) * 0.5
+    plan = offload.plan_segments(jax.make_jaxpr(f)(x))
+    seg = next(s for s in plan.values()
+               if isinstance(s, offload.MlpSegment))
+    assert seg.bias_var is not None
+    assert seg.activation == "tanh"
+    ref = ops.laplacian(f, x, method="collapsed")
+    got = ops.laplacian(f, x, method="collapsed", backend="pallas")
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# per-head ALiBi bias tables (both kernels)
+# ---------------------------------------------------------------------------
+
+
+def test_per_head_bias_fuses_per_segment():
+    """A (H, Sq, Skv) per-head ALiBi table folds into the per-segment
+    attention kernel (rides the flattened batch axis) instead of
+    rejecting."""
+    D, dm, H, dh = 4, 8, 2, 4
+    ks = jax.random.split(jax.random.PRNGKey(17), 2)
+    emb = jax.random.normal(ks[0], (D, dm)) * 0.5
+    Wq, Wk, Wv, Wo = _mk_weights(ks[1], dm, H, dh)
+    bias = _alibi_per_head(D, H)
+
+    def f(x):
+        t = x[..., None] * emb[None]
+        q = jnp.einsum("bsd,dhk->bshk", t, Wq)
+        k = jnp.einsum("bsd,dhk->bshk", t, Wk)
+        v = jnp.einsum("bsd,dhk->bshk", t, Wv)
+        qh, kh, vh = (jnp.moveaxis(a, 2, 1) for a in (q, k, v))
+        s = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / math.sqrt(dh)
+        s = s + bias  # (H, Sq, Skv), broadcast over B
+        m = jax.lax.stop_gradient(jnp.max(s, axis=-1, keepdims=True))
+        e = jnp.exp(s - m)
+        p = e / jnp.sum(e, axis=-1, keepdims=True)
+        o = jnp.einsum("bhqk,bhkd->bhqd", p, vh)
+        # q/v escape the superblock shape on purpose (tanh head), so the
+        # per-segment attention matcher owns the block
+        return jnp.tanh(jnp.moveaxis(o, 1, 2)).sum(axis=(-1, -2, -3))
+
+    x = jax.random.normal(jax.random.PRNGKey(18), (2, D)) * 0.3
+    plan = offload.plan_segments(jax.make_jaxpr(f)(x))
+    segs = [s for s in plan.values()
+            if isinstance(s, offload.AttentionSegment)]
+    assert len(segs) == 1 and segs[0].bias_var is not None
+    ref = ops.laplacian(f, x, method="collapsed")
+    got = ops.laplacian(f, x, method="collapsed", backend="pallas")
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-5)
+
+
+def test_per_head_bias_fuses_in_superblock():
+    """The superblock folds per-head slope tables through its head-axis
+    bias operand; a per-BATCH bias falls back (note) but the per-segment
+    kernel still folds it."""
+    D, dm, Hq, Hkv, dh = 4, 8, 4, 2, 4
+    ks = jax.random.split(jax.random.PRNGKey(19), 5)
+    emb = jax.random.normal(ks[0], (D, dm)) * 0.5
+    Wq = jax.random.normal(ks[1], (dm, Hq, dh)) / np.sqrt(dm)
+    Wk = jax.random.normal(ks[2], (dm, Hkv, dh)) / np.sqrt(dm)
+    Wv = jax.random.normal(ks[3], (dm, Hkv, dh)) / np.sqrt(dm)
+    Wo = jax.random.normal(ks[4], (Hq, dh, dm)) / np.sqrt(dh)
+
+    def mk(bias):
+        def f(x):
+            t = x[..., None] * emb[None]
+            q = jnp.einsum("bsd,dhk->bshk", t, Wq)
+            k = jnp.einsum("bsd,dhk->bshk", t, Wk)
+            v = jnp.einsum("bsd,dhk->bshk", t, Wv)
+            k = jnp.repeat(k, Hq // Hkv, axis=2)
+            v = jnp.repeat(v, Hq // Hkv, axis=2)
+            qh, kh, vh = (jnp.moveaxis(a, 2, 1) for a in (q, k, v))
+            s = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / math.sqrt(dh)
+            s = s + bias
+            m = jax.lax.stop_gradient(jnp.max(s, axis=-1, keepdims=True))
+            e = jnp.exp(s - m)
+            p = e / jnp.sum(e, axis=-1, keepdims=True)
+            o = jnp.einsum("bhqk,bhkd->bhqd", p, vh)
+            o = jnp.moveaxis(o, 1, 2)
+            return jnp.einsum("bshk,hkd->bsd", o, Wo).sum(axis=(-1, -2))
+        return f
+
+    x = jax.random.normal(jax.random.PRNGKey(20), (2, D)) * 0.3
+
+    f = mk(_alibi_per_head(D, Hq))
+    plan = offload.plan_segments(jax.make_jaxpr(f)(x))
+    supers = [s for s in plan.values()
+              if isinstance(s, offload.QKVAttentionSegment)]
+    assert len(supers) == 1 and supers[0].bias_var is not None
+    assert "bias" in supers[0].describe()
+    ref = ops.laplacian(f, x, method="collapsed")
+    got = ops.laplacian(f, x, method="collapsed", backend="pallas")
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-5)
+
+    # per-batch table: superblock rejects (note), per-segment folds it
+    fb = mk(jnp.linspace(-0.5, 0.5, 2 * D * D).reshape(2, 1, D, D))
+    plan = offload.plan_segments(jax.make_jaxpr(fb)(x))
+    assert not any(s.kind == "jet_attention_qkv" for s in plan.values())
+    assert any("varies over the batch" in n for n in plan.notes), plan.notes
+    segs = [s for s in plan.values()
+            if isinstance(s, offload.AttentionSegment)]
+    assert segs and segs[0].bias_var is not None
+    ref = ops.laplacian(fb, x, method="collapsed")
+    got = ops.laplacian(fb, x, method="collapsed", backend="pallas")
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# autotune: rope/bias-keyed jet_attention_qkv namespace
+# ---------------------------------------------------------------------------
+
+
+def test_qkv_autotune_keys_carry_rope_and_bias_flags():
+    base = (4, 64, 32, 4, 2, 8, 8, 32, 3)
+    keys = {autotune.qkv_attention_shape_key(*base, r, b, 2, "float32",
+                                             "tpu")
+            for r in (0, 1) for b in (0, 1)}
+    assert len(keys) == 4  # every flag combination tunes separately
+
+
+def test_qkv_autotune_cache_roundtrip_and_legacy_migration(tmp_path,
+                                                           monkeypatch):
+    """Round-trip a rope/bias-keyed entry through the disk cache, and
+    migrate pre-rope 9-dim jet_attention_qkv keys (both flags off — the
+    only variant that existed)."""
+    import json
+
+    backend = jax.default_backend()
+    path = tmp_path / "autotune.json"
+    legacy = {
+        f"jet_attention_qkv|4x256x128x8x2x64x32x128x3|K2|float32|{backend}":
+            [32, 128],
+        "jet_attention_qkv|garbagexdims|K2|float32|tpu": [8, 128],
+    }
+    path.write_text(json.dumps(legacy))
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(path))
+    autotune.clear_memory_cache()
+    disk = autotune.load_cache()
+    migrated = (f"jet_attention_qkv|4x256x128x8x2x64x32x128x3x0x0|K2|"
+                f"float32|{backend}")
+    assert disk[migrated] == [32, 128]
+    assert disk["jet_attention_qkv|garbagexdims|K2|float32|tpu"] == [8, 128]
+    # the migrated entry is found by the flag-keyed lookup path
+    cfg = autotune.get_qkv_attention_block_config(
+        4, 256, 128, 8, 2, 64, 32, 128, 3, 0, 0, 2, jnp.float32)
+    assert tuple(cfg) == (32, 128)
+    # a rope+bias entry round-trips under its own key, distinct from the
+    # no-rope entry of the same shape
+    autotune.put_qkv_attention_config(4, 256, 128, 8, 2, 64, 32, 128, 3, 1,
+                                      1, 2, jnp.float32, backend,
+                                      autotune.AttnBlockConfig(16, 128))
+    autotune.clear_memory_cache()
+    cfg_rope = autotune.get_qkv_attention_block_config(
+        4, 256, 128, 8, 2, 64, 32, 128, 3, 1, 1, 2, jnp.float32)
+    assert tuple(cfg_rope) == (16, 128)
+    cfg_plain = autotune.get_qkv_attention_block_config(
+        4, 256, 128, 8, 2, 64, 32, 128, 3, 0, 0, 2, jnp.float32)
+    assert tuple(cfg_plain) == (32, 128)
+    autotune.clear_memory_cache()
+
+
+def test_rope_prewarm_carries_flags():
+    cfg = _lm_cfg(num_layers=2, qkv_bias=True)
+    f = _backbone_fn(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(21), (2, 4)) * 0.5
+    offload.clear_plan_cache()
+    autotune.PREWARMED.clear()
+    ops.laplacian(f, x, method="collapsed", backend="pallas")
+    warm = [p for p in autotune.PREWARMED if p[0] == "jet_attention_qkv"]
+    assert len(warm) == 1, autotune.PREWARMED
+    dims = warm[0][1]
+    assert dims[-2:] == (1, 1), dims  # rope + qkv_bias flags

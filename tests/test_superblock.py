@@ -730,7 +730,7 @@ def test_superblock_prewarm_resolves_blocks_at_plan_time():
     warm = [p for p in autotune.PREWARMED if p[0] == "jet_attention_qkv"]
     assert len(warm) == 1, autotune.PREWARMED  # once per planned body
     kernel, dims, K, dtype, backend = warm[0]
-    # (B, S, D, Hq, Hkv, dh, dv, Do, R)
-    assert dims == (2, 4, 16, 4, 2, 4, 4, 16, 4) and K == 2
+    # (B, S, D, Hq, Hkv, dh, dv, Do, R, rope, qbias)
+    assert dims == (2, 4, 16, 4, 2, 4, 4, 16, 4, 0, 0) and K == 2
     key = autotune.qkv_attention_shape_key(*dims, K, dtype, backend)
     assert key in autotune._MEM_CACHE
