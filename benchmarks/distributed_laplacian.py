@@ -1,0 +1,142 @@
+"""Weak-scaling of the mesh-sharded collapsed-jet offload: the fused
+``backend='pallas'`` transformer-PINN Laplacian run data-parallel over 1, 2,
+4, 8 devices with a FIXED per-device batch (so flat ms/call = perfect weak
+scaling), plus the cross-pod wire accounting of the compressed
+PDE-residual/gradient collectives.
+
+Per device count ``n`` the benchmark
+
+* shards the global ``(n * B_per, D)`` collocation batch over a 1-D 'data'
+  submesh via ``mesh_offload.shard_operator`` (each device plans and runs
+  the full recursive offload plan — superblocks included — on its local
+  rows only; see ``distributed/mesh_offload.py``);
+* checks parity against the unsharded CRULES interpreter on the global
+  batch (the acceptance gate: sharding must not change numerics);
+* reports the **per-device vs mesh-wide kernel-launch accounting** from the
+  mesh-aware ``operators.explain`` — segment counts in a plan are *local*
+  (the plan is traced once, every device executes it on its shard), and the
+  global launch count is local x data shards
+  (``PlanReport.local_fused_count`` / ``global_fused_count``);
+* emits the **bytes-on-the-wire** of one gradient reduction for the trunk's
+  parameter tree, fp32 (4 bytes/elem, what a plain psum moves) vs the int8
+  error-feedback compressed collective (1 byte/elem + one fp32 scale per
+  leaf — ``collectives.compressed_psum_ef``), and the compression ratio.
+
+Each ``n`` emits a machine-readable ``BENCH`` json row
+(benchmarks/common.emit_bench). Run standalone it forces 8 host devices;
+imported (tests/test_benchmarks_smoke.py) it leaves device config alone.
+
+CPU caveat: as with the other benchmarks, host-CPU "devices" share the same
+socket, so ms/call here checks dispatch/semantics, not bandwidth — the
+weak-scaling *counts and byte accounting* are exact on any host.
+"""
+
+from __future__ import annotations
+
+import os
+
+if __name__ == "__main__":  # before jax import; no-op when imported
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from benchmarks.attention_laplacian import transformer_pinn
+from benchmarks.common import best_time, emit, emit_bench
+from repro.configs.base import ModelConfig
+from repro.core import operators as ops
+from repro.distributed import sharding as shd
+from repro.distributed.mesh_offload import shard_operator
+from repro.models import transformer
+
+DEVICE_COUNTS = (1, 2, 4, 8)
+
+
+def submesh(n: int) -> Mesh:
+    """A 1-D 'data' mesh over the first ``n`` host devices."""
+    return Mesh(np.array(jax.devices()[:n]), ("data",))
+
+
+def trunk_params(d_model: int = 32, num_layers: int = 1):
+    """The parameter tree whose gradient the cross-pod collective reduces
+    (same trunk config as ``transformer_pinn``)."""
+    cfg = ModelConfig(
+        name="attn-pinn", family="dense", num_layers=num_layers,
+        d_model=d_model, num_heads=2, num_kv_heads=1, d_ff=2 * d_model,
+        vocab_size=8, act="gelu", dtype="float32", param_dtype="float32",
+        attn_impl="reference", remat=False,
+    )
+    return transformer.init(jax.random.PRNGKey(0), cfg)
+
+
+def wire_bytes(params):
+    """(fp32 bytes, int8-compressed bytes) of one all-reduce of ``params``:
+    plain psum moves 4 bytes/element; the compressed collective moves the
+    int8 payload plus one fp32 shared scale per leaf (the error-feedback
+    residual stays device-local — zero wire cost)."""
+    leaves = jax.tree.leaves(params)
+    size = sum(int(np.prod(l.shape)) for l in leaves)
+    return 4 * size, size + 4 * len(leaves)
+
+
+def run(B_per: int = 2, S: int = 16, D: int = 3, d_model: int = 16,
+        rounds: int = 5):
+    platform = jax.default_backend()
+    ndev = len(jax.devices())
+    f = transformer_pinn(S, D, d_model=d_model)
+    params = trunk_params(d_model=d_model)
+    fp32_b, int8_b = wire_bytes(params)
+    rows = []
+    for n in DEVICE_COUNTS:
+        if n > ndev:
+            continue
+        mesh = submesh(n)
+        B = B_per * n
+        x = jax.random.normal(jax.random.PRNGKey(0), (B, D)) * 0.5
+        lap = shard_operator(
+            partial(ops.laplacian, method="collapsed", backend="pallas"),
+            mesh)
+        fn = jax.jit(lambda xx: lap(f, xx))
+        # acceptance gate: sharded pallas == unsharded CRULES on the
+        # global batch
+        ref = ops.laplacian(f, x, method="collapsed")
+        np.testing.assert_allclose(np.asarray(fn(x)), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-5)
+        t = best_time(fn, x, repeats=rounds)
+        # mesh-aware plan accounting: local (per-device) vs global counts
+        with shd.activate(mesh):
+            rep = ops.explain(f, x, K=2, backend="pallas")
+        local = rep.local_fused_count()
+        glob = rep.global_fused_count()
+        sb_local = rep.local_fused_count("jet_attention_qkv")
+        sb_glob = rep.global_fused_count("jet_attention_qkv")
+        rows.append({
+            "name": f"dist_lap/pallas/n{n}",
+            "ms_per_call": f"{t*1e3:.2f}",
+            "derived": (f"B={B} superblocks/device={sb_local} "
+                        f"global_launches={glob} "
+                        f"wire_compression={fp32_b/int8_b:.2f}x")})
+        emit_bench("distributed_laplacian", method="collapsed",
+                   backend="pallas", platform=platform, devices=n,
+                   B_global=B, B_per_device=B_per, S=S, D=D,
+                   ms_per_call=round(t * 1e3, 3),
+                   fused_per_device=local, fused_global=glob,
+                   superblocks_per_device=sb_local,
+                   superblocks_global=sb_glob,
+                   plan_cache_misses=rep.cache_misses,
+                   grad_bytes_fp32=fp32_b, grad_bytes_int8=int8_b,
+                   wire_compression=round(fp32_b / int8_b, 3))
+    return rows
+
+
+def main():
+    emit(run(), ["name", "ms_per_call", "derived"])
+
+
+if __name__ == "__main__":
+    main()

@@ -590,6 +590,42 @@ def _stop_grad(K, in_jets, eqn):
     return [CollapsedJet(in_jets[0].primal, [ZERO] * (K - 1), ZERO)]
 
 
+@defcrule("sharding_constraint")
+def _sharding_constraint(K, in_jets, eqn):
+    """``lshard``/``with_sharding_constraint`` on a jet: the primal and top
+    lanes keep the original constraint; the R-stacked lower coefficients get
+    the spec extended with a replicated leading jet axis (the ``"jet"``
+    logical rule — the direction axis is never sharded, the batch axis of
+    the (R, B, …) bundle stays data-parallel). Constraints are placement
+    hints: when replaying one is invalid in the surrounding trace context
+    (manual axes inside ``shard_map``, a foreign sharding type), the
+    coefficient passes through unconstrained instead of failing the trace."""
+    (a,) = in_jets
+
+    def app(c):
+        try:
+            return _bind(eqn, c)[0]
+        except Exception:
+            return c
+
+    s = eqn.params.get("sharding")
+    spec, mesh = getattr(s, "spec", None), getattr(s, "mesh", None)
+
+    def app_stacked(c):
+        if spec is None or mesh is None:
+            return c
+        try:
+            ext = jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec(None, *tuple(spec)))
+            return jax.lax.with_sharding_constraint(c, ext)
+        except Exception:
+            return c
+
+    return [CollapsedJet(app(a.primal),
+                         [map_coeff(app_stacked, c) for c in a.lower],
+                         map_coeff(app, a.top))]
+
+
 @defcrule("eq", "ne", "lt", "le", "gt", "ge", "and", "or", "xor", "not",
           "is_finite", "sign", "floor", "ceil", "round", "argmax", "argmin")
 def _nondiff(K, in_jets, eqn):

@@ -29,13 +29,18 @@ The engine has three layers:
    propagated ones.
 
 2. **The plan cache** — plans are memoized per ``(sub-jaxpr id, K,
-   jet-constant signature)`` (:func:`plan_cache_info` /
+   jet-constant signature, mesh signature)`` (:func:`plan_cache_info` /
    :func:`clear_plan_cache`). A 48-layer scanned backbone plans its body
    once: the scan rule's symbolic-zero fixed point and the body re-trace
    all hit the cached plan. On a cache miss the engine also *prewarms* the
    autotuner (:func:`repro.kernels.autotune.prewarm` via each segment's
    ``prewarm``) so kernel block configs resolve before ``lax.scan`` traces
-   the body, never mid-trace.
+   the body, never mid-trace. The mesh signature is the axis layout of the
+   mesh activated via ``distributed.sharding.activate`` (``()`` without
+   one): sharded runs plan exactly once per mesh shape, and the prewarm
+   divides the leading batch dim by the data-axis extent so blocks are
+   tuned for the local shard shape each device executes
+   (``shard_map``-traced bodies already carry local shapes).
 
 3. **Fusing** — each planned :class:`Segment` records the eqns the kernel
    covers (``skip``), jet-constant eqns traced after the anchor that must
@@ -234,10 +239,13 @@ class Segment:
     def try_fuse(self, read, K: int, jaxpr) -> Optional[Dict[Any, CollapsedJet]]:
         raise NotImplementedError
 
-    def prewarm(self, K: int, R: int) -> None:
+    def prewarm(self, K: int, R: int, batch_div: int = 1) -> None:
         """Resolve the kernel's autotuned block config for this segment's
         static shapes ahead of execution (best-effort; see
-        :func:`repro.kernels.autotune.prewarm`)."""
+        :func:`repro.kernels.autotune.prewarm`). ``batch_div`` is the
+        data-parallel shard count of the activated mesh: the leading batch
+        dim is divided by it (when divisible) so blocks are tuned for the
+        *local shard* shape each device runs, not the global batch."""
 
     def describe(self) -> str:
         return ""
@@ -338,8 +346,8 @@ def plan_segments(closed_jaxpr,
 @dataclasses.dataclass
 class _PlanCacheEntry:
     ref: Any  # weakref to the jaxpr: plans die with the graph they describe
-    # keyed by (K, jet-constant signature, superblock enabled)
-    plans: Dict[Tuple[int, Tuple[bool, ...], bool], "Plan"]
+    # keyed by (K, jet-constant signature, superblock enabled, mesh signature)
+    plans: Dict[Tuple[int, Tuple[bool, ...], bool, tuple], "Plan"]
 
 
 _PLAN_CACHE: Dict[int, _PlanCacheEntry] = {}
@@ -350,13 +358,56 @@ _PLAN_STATS = {"hits": 0, "misses": 0}
 def plan_cache_info() -> Dict[str, int]:
     """{'hits', 'misses', 'size'} of the recursive plan cache. A scanned
     N-layer backbone shows 1 miss for the body per (K, signature) and N-ish
-    hits (the scan rule's fixed-point rounds + the body re-trace)."""
+    hits (the scan rule's fixed-point rounds + the body re-trace). Under an
+    activated mesh (``distributed.sharding.activate``) the key also carries
+    the mesh signature: re-planning happens exactly once per mesh shape, and
+    repeated sharded calls on the same mesh are all hits."""
     return dict(_PLAN_STATS, size=len(_PLAN_CACHE))
+
+
+def _mesh_signature() -> tuple:
+    """Hashable axis layout of the activated logical-axis mesh
+    (``(('pod', 2), ('data', 4), …)``; ``()`` without one). Part of the plan
+    cache key: the same jaxpr planned under different mesh shapes gets
+    distinct plans (their prewarmed local shard shapes differ), while every
+    call on one mesh shape reuses one plan."""
+    try:
+        from repro.distributed import sharding as _shd
+    except Exception:
+        return ()
+    mesh = _shd._mesh()
+    if mesh is None:
+        return ()
+    return tuple((str(a), int(mesh.shape[a])) for a in mesh.axis_names)
+
+
+def _data_shard_count(mesh_sig: tuple = None) -> int:
+    """Extent of the data-parallel ('pod', 'data') axes of the activated
+    mesh — the number of batch shards a global (R, B, S, D) bundle splits
+    into (1 without a mesh)."""
+    if mesh_sig is None:
+        mesh_sig = _mesh_signature()
+    n = 1
+    for name, size in mesh_sig:
+        if name in ("pod", "data"):
+            n *= size
+    return n
 
 
 def clear_plan_cache() -> None:
     _PLAN_CACHE.clear()
     _PLAN_STATS.update(hits=0, misses=0)
+
+
+def _local_batch(batch_shape: tuple, batch_div: int) -> tuple:
+    """Per-device batch dims of a data-parallel global batch: the leading
+    dim divided by the shard count when it divides evenly (uneven shards
+    never form — ``divisible_spec`` drops the axis — so an indivisible
+    batch means the global shape IS the local shape)."""
+    if (batch_div > 1 and batch_shape
+            and int(batch_shape[0]) % batch_div == 0):
+        return (int(batch_shape[0]) // batch_div,) + tuple(batch_shape[1:])
+    return tuple(batch_shape)
 
 
 def _superblock_enabled() -> bool:
@@ -388,10 +439,16 @@ def _plan_for(closed_jaxpr, K: int,
     retained graphs, while sub-jaxprs that JAX's own trace caches keep
     alive (scan bodies, pjit bodies) stay planned across calls. The
     ambient superblock flag is part of the key: 'pallas' and
-    'pallas-per-segment' runs never share plans."""
+    'pallas-per-segment' runs never share plans. So is the activated mesh's
+    axis layout (:func:`_mesh_signature`): planning happens exactly once per
+    mesh shape, and the prewarm below runs under the *local shard* batch
+    shape (global batch / data-axis extent) so autotuned blocks match what
+    one device actually executes. Code planned inside ``shard_map`` bodies
+    already carries local shapes in its avals and prewarms as-is."""
     jaxpr = closed_jaxpr.jaxpr
     sig = tuple(not j.is_constant() for j in in_jets)
     superblock = _superblock_enabled()
+    mesh_sig = _mesh_signature()
     jid = id(jaxpr)
     entry = _PLAN_CACHE.get(jid)
     if entry is not None and entry.ref() is not jaxpr:  # stale id reuse
@@ -407,7 +464,7 @@ def _plan_for(closed_jaxpr, K: int,
             ref = (lambda j=jaxpr: j)
         entry = _PlanCacheEntry(ref, {})
         _PLAN_CACHE[jid] = entry
-    key = (K, sig, superblock)
+    key = (K, sig, superblock, mesh_sig)
     plan = entry.plans.get(key)
     if plan is not None:
         _PLAN_STATS["hits"] += 1
@@ -417,9 +474,10 @@ def _plan_for(closed_jaxpr, K: int,
     entry.plans[key] = plan
     if plan:
         r = _infer_r(in_jets)
+        batch_div = _data_shard_count(mesh_sig)
         for seg in plan.values():
             try:
-                seg.prewarm(K, r)
+                seg.prewarm(K, r, batch_div=batch_div)
             except Exception:  # prewarm is best-effort, never fatal
                 pass
     return plan
@@ -553,9 +611,11 @@ class MlpSegment(Segment):
         return {self.out_var: _cast_jet(CollapsedJet(t0, list(tl), tt),
                                         self.out_var)}
 
-    def prewarm(self, K, R):
+    def prewarm(self, K, R, batch_div: int = 1):
         h, w = self.lhs_var.aval, self.w_var.aval
-        jet_mlp_ops.prewarm_blocks(tuple(h.shape[:-1]), int(h.shape[-1]),
+        jet_mlp_ops.prewarm_blocks(_local_batch(tuple(h.shape[:-1]),
+                                                batch_div),
+                                   int(h.shape[-1]),
                                    int(np.prod(w.shape[1:])), R, K, h.dtype)
 
     def describe(self):
@@ -885,11 +945,12 @@ class AttentionSegment(Segment):
         out.update(extra)
         return out
 
-    def prewarm(self, K, R):
+    def prewarm(self, K, R, batch_div: int = 1):
         q, v = self.q_var.aval, self.v_var.aval
         jet_attention_ops.prewarm_blocks(
-            tuple(q.shape[:-2]), int(q.shape[-2]), int(v.shape[-2]),
-            int(q.shape[-1]), int(v.shape[-1]), R, K, q.dtype)
+            _local_batch(tuple(q.shape[:-2]), batch_div), int(q.shape[-2]),
+            int(v.shape[-2]), int(q.shape[-1]), int(v.shape[-1]), R, K,
+            q.dtype)
 
     def describe(self):
         bits = []
@@ -1452,12 +1513,13 @@ class QKVAttentionSegment(Segment):
         out.update(extra)
         return out
 
-    def prewarm(self, K, R):
+    def prewarm(self, K, R, batch_div: int = 1):
         h = self.hidden_var.aval
         wq, wk = self.wq_var.aval, self.wk_var.aval
         wv, wo = self.wv_var.aval, self.wo_var.aval
+        (B_local,) = _local_batch((int(h.shape[0]),), batch_div)
         jet_attention_ops.prewarm_qkv_blocks(
-            int(h.shape[0]), int(h.shape[1]), int(h.shape[2]),
+            B_local, int(h.shape[1]), int(h.shape[2]),
             int(wq.shape[1]), int(wk.shape[1]), int(wq.shape[2]),
             int(wv.shape[2]), int(wo.shape[2]), R, K, h.dtype,
             rope=self.rope_vars is not None,
@@ -2055,11 +2117,24 @@ class JaxprReport:
 class PlanReport:
     """What :func:`explain` returns: one :class:`JaxprReport` per visited
     (sub-jaxpr, K, signature), in first-visit order, plus the plan-cache
-    traffic of the run."""
+    traffic of the run.
+
+    Mesh-aware fields (populated when a mesh is active via
+    ``distributed.sharding.activate`` at explain time; benign defaults
+    otherwise): ``mesh_axes`` is the activated mesh's axis layout,
+    ``data_shards`` the extent of its data-parallel ('pod', 'data') axes.
+    Segment counts in the report are **local** (per device): the plan is
+    traced once and every device executes it on its own batch shard. The
+    **global** count of kernel launches per evaluation is the local count
+    times ``data_shards`` — :meth:`global_fused_count` vs
+    :meth:`local_fused_count` (the weak-scaling accounting emitted by
+    ``benchmarks/distributed_laplacian.py``)."""
 
     jaxprs: List[JaxprReport] = dataclasses.field(default_factory=list)
     cache_hits: int = 0
     cache_misses: int = 0
+    mesh_axes: Tuple[Tuple[str, int], ...] = ()
+    data_shards: int = 1
     _index: Dict[Tuple[int, int, Tuple[bool, ...]], JaxprReport] = \
         dataclasses.field(default_factory=dict)
 
@@ -2080,11 +2155,25 @@ class PlanReport:
     def fused(self, kind: Optional[str] = None) -> List[SegmentOutcome]:
         return [s for e in self.jaxprs for s in e.fused(kind)]
 
+    def local_fused_count(self, kind: Optional[str] = None) -> int:
+        """Fused segments one device executes per evaluation (the plan is
+        per-shard: each device runs it on its local batch)."""
+        return len(self.fused(kind))
+
+    def global_fused_count(self, kind: Optional[str] = None) -> int:
+        """Kernel launches mesh-wide per evaluation: the local count times
+        the data-parallel shard count of the mesh active at explain time."""
+        return len(self.fused(kind)) * self.data_shards
+
     def __str__(self):
         lines = [f"offload plan: {len(self.jaxprs)} jaxpr(s), "
                  f"{len(self.fused())} fused segment(s), "
                  f"plan cache {self.cache_misses} miss / "
                  f"{self.cache_hits} hit"]
+        if self.mesh_axes:
+            axes = ", ".join(f"{a}={n}" for a, n in self.mesh_axes)
+            lines[0] += (f" [mesh {axes}: x{self.data_shards} data shards, "
+                         f"{self.global_fused_count()} global launches]")
         for e in self.jaxprs:
             prop = sum(e.signature)
             lines.append(
@@ -2156,6 +2245,11 @@ def explain(f, *args, K: int = 2, directions=None,
 
     ``backend``: 'pallas' (superblocks enabled) or 'pallas-per-segment'
     (today's per-segment plans only).
+
+    Mesh-aware: run under ``distributed.sharding.activate(mesh)`` to stamp
+    the report with the mesh layout — segment counts are then *local*
+    (per-device) counts, and :meth:`PlanReport.global_fused_count` scales
+    them by the data-parallel shard extent (see :class:`PlanReport`).
     """
     if backend not in ("pallas", "pallas-per-segment"):
         raise ValueError(
@@ -2172,7 +2266,8 @@ def explain(f, *args, K: int = 2, directions=None,
         directions = jnp.broadcast_to(
             eye.reshape((D,) + (1,) * (max(x.ndim, 1) - 1) + (D,)),
             (D,) + tuple(x.shape))
-    report = PlanReport()
+    report = PlanReport(mesh_axes=_mesh_signature())
+    report.data_shards = _data_shard_count(report.mesh_axes)
     before = plan_cache_info()
     stack = _explain_stack()
     stack.append(report)

@@ -4,6 +4,13 @@
 instead of fp32: per-shard absmax scales are all-gathered (tiny), payloads are
 quantized, summed via integer psum, and dequantized with the max scale. Used
 by the explicit-DP training mode; validated on 8 host devices in tests.
+
+``compressed_psum_ef`` is the error-feedback variant the trainer uses for the
+PDE-residual/gradient reductions: each shard keeps its local quantization
+residual and adds it back into the next step's payload (1-bit-Adam family),
+so the compressed reduction is unbiased over time. Bytes on the wire per
+reduced element: 1 (int8) vs 4 (fp32) — see
+``benchmarks/distributed_laplacian.py`` for the measured weak-scaling rows.
 """
 
 from __future__ import annotations
@@ -12,15 +19,41 @@ import jax
 import jax.numpy as jnp
 
 
+def _shared_scale(x32, axis_name: str):
+    """Mesh-wide absmax/127 scale (pmax over shards), guarded against the
+    all-zero case — an absmax of 0 would turn the dequantize into 0/0 NaN."""
+    amax = jnp.max(jnp.abs(x32))
+    amax = jax.lax.pmax(amax, axis_name)
+    return jnp.where(amax > 0, amax, 1.0) / 127.0
+
+
 def compressed_psum(x, axis_name: str):
     """All-reduce(mean) of x over `axis_name`, transmitting int8."""
     n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
-    scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32))), 1e-12) / 127.0
+    x32 = x.astype(jnp.float32)
     # agree on a shared scale (max over shards) so the integer sum is exact
-    scale = jax.lax.pmax(scale, axis_name)
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int32)
+    scale = _shared_scale(x32, axis_name)
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int32)
     total = jax.lax.psum(q, axis_name)
     return (total.astype(jnp.float32) * scale / n).astype(x.dtype)
+
+
+def compressed_psum_ef(x, err, axis_name: str):
+    """Error-feedback :func:`compressed_psum`: returns ``(mean, new_err)``.
+
+    ``err`` is this shard's float32 residual buffer from the previous step;
+    the payload quantized this step is ``x + err``, and ``new_err`` is what
+    the int8 round dropped locally. Over time the accumulated reduction is
+    exact (the residual can never grow beyond one quantization step).
+    """
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    x32 = x.astype(jnp.float32) + err
+    scale = _shared_scale(x32, axis_name)
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    new_err = x32 - q * scale
+    mean = (total.astype(jnp.float32) * scale / n).astype(x.dtype)
+    return mean, new_err
 
 
 def psum_mean(x, axis_name: str):

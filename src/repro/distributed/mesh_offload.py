@@ -1,0 +1,153 @@
+"""Mesh-sharded collapsed-jet offload: run the fused kernel stack on a mesh.
+
+Two parallelism axes compose with ``method='collapsed', backend='pallas'``:
+
+* **Data parallel** (:func:`shard_operator`) — PDE operators are
+  embarrassingly parallel over collocation points, so the collapsed
+  (R, B, S, D) jet bundle shards over the ('pod', 'data') mesh axes on its
+  *batch* dim (the leading jet axis R is never sharded — the ``"jet"``
+  logical rule). Each device runs the full recursive offload plan on its
+  local shard: one superblock kernel per layer per device, bit-identical to
+  evaluating the unsharded operator on that shard's rows. Planning happens
+  once per mesh shape (the plan-cache key carries the mesh signature; see
+  ``core/offload.py``) and prewarms under the local shard batch.
+
+* **Tensor parallel** (:func:`tp_qkv_attention`) — the QKV-attention
+  superblock partitions over the ``'model'`` axis along the kernel's
+  existing kv-head grid dimension: each device owns ``Hkv / tp`` kv groups
+  and the matching slices of Wq/Wk/Wv/Wo (the rank-3 (D, H, dh) projection
+  layouts shard on their head axis per ``sharding.param_logical_axes`` —
+  the ``("fsdp", "heads", "head_dim")`` / ``("heads", "head_dim", "fsdp")``
+  rules). Softmax is per-head, so head-sharding is exact; the only
+  collective is the output-side psum that completes the Wo accumulation
+  (the graph value of the output projection is a sum over heads).
+
+Cross-pod gradient reductions for training on top of these ride
+``collectives.compressed_psum`` — see ``train/trainer.py``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+try:  # moved in newer JAX
+    from jax.experimental.shard_map import shard_map
+except ImportError:  # pragma: no cover
+    from jax.shard_map import shard_map
+
+
+def _shard_map(fn, mesh, in_specs, out_specs):
+    """``shard_map`` with replication checking off.
+
+    ``pallas_call`` has no replication rule, so the rep checker rejects any
+    shard-mapped body that reaches the fused kernels. The flag was renamed
+    ``check_rep`` -> ``check_vma`` across JAX versions; try both.
+    """
+    try:
+        return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
+    except TypeError:  # pragma: no cover - newer JAX
+        return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)
+
+
+def data_axes_of(mesh, data_axes: Sequence[str] = ("pod", "data")):
+    """The data-parallel axes present on this mesh, in mesh order."""
+    return tuple(a for a in data_axes if a in mesh.axis_names)
+
+
+def shard_operator(op: Callable, mesh, *,
+                   data_axes: Sequence[str] = ("pod", "data")) -> Callable:
+    """Data-parallel wrapper for a ``core.operators`` differential operator.
+
+    ``op(f, x, **kw)`` must be batch-leading in ``x`` (dim 0 = collocation
+    points) and per-point in its output — true of ``laplacian`` /
+    ``biharmonic`` / friends. Returns ``wrapped(f, x, **kw)`` that runs
+    ``op`` under ``shard_map`` with ``x`` (and the output) sharded over the
+    mesh's ('pod', 'data') axes: each device plans and executes the fused
+    collapsed-jet kernels on its local rows only. ``f``'s closed-over
+    parameters are replicated (broadcast once by the partitioner).
+
+        mesh = compat_mesh((8,), ('data',))
+        lap = shard_operator(partial(ops.laplacian, method='collapsed',
+                                     backend='pallas'), mesh)
+        u_xx = jax.jit(lambda x: lap(f, x))(x_global)   # (B,) sharded
+
+    The global batch must divide by the data-axis extent (uneven shards are
+    unsupported throughout, see ``sharding.divisible_spec``).
+    """
+    axes = data_axes_of(mesh, data_axes)
+    spec = P(axes) if axes else P()
+
+    def wrapped(f, x, **kw):
+        local = _shard_map(lambda xs: op(f, xs, **kw), mesh,
+                           in_specs=spec, out_specs=spec)
+        return local(x)
+
+    return wrapped
+
+
+def dp_step_transform(mesh, *, compressed: bool = False,
+                      data_axes: Sequence[str] = ("pod", "data"),
+                      batch_spec=None) -> Callable:
+    """Build a ``Trainer(step_transform=...)`` wrapper: run the train step
+    under ``shard_map`` over the mesh's data axes (explicit data parallelism).
+
+    The wrapped step signature is ``(params, opt_state, batch, step)``:
+    params and the adam state stay replicated (``P()``), the batch shards its
+    leading dim over the data axes (``batch_spec`` overrides the default
+    ``P(axes)`` prefix for ragged batch trees), and — with ``compressed`` —
+    the error-feedback buffers shard their leading per-device axis so each
+    device keeps its own residual. Pair with
+    ``TrainConfig(reduce_axis=<axes>, compress_grads=True)`` so the step
+    completes the gradient average through
+    ``collectives.compressed_psum_ef`` (int8 on the wire).
+    """
+    axes = data_axes_of(mesh, data_axes)
+    bspec = P(axes) if batch_spec is None else batch_spec
+    ospec = {"adam": P(), "ef": P(axes)} if compressed else P()
+
+    def transform(step_fn):
+        return _shard_map(step_fn, mesh,
+                          in_specs=(P(), ospec, bspec, P()),
+                          out_specs=(P(), ospec, P()))
+
+    return transform
+
+
+def tp_qkv_attention(h, wq, wk, wv, wo, *, axis_name: str = "model",
+                     K: int = 2, **kw):
+    """Tensor-parallel collapsed-jet QKV-attention superblock (call inside
+    ``shard_map`` over ``axis_name``).
+
+    ``h`` is the replicated collapsed-jet triple ``(h0, lower, top)`` of
+    the pre-projection hidden states (see
+    ``kernels.jet_attention.ops.collapsed_jet_qkv_attention_op``); the
+    weights are this device's kv-group slices in their graph layouts —
+    ``wq`` (D, Hq/tp, dh), ``wk`` (D, Hkv/tp, dh), ``wv`` (D, Hkv/tp, dv),
+    ``wo`` (Hq/tp, dv, Do), i.e. the head ('model'-mapped) axis of the
+    rank-3 projection layouts sharded per ``sharding.param_logical_axes``.
+    ``Hkv`` must divide by the axis size (the kernel grids over kv groups,
+    so a shard owns whole groups and the grid just shrinks).
+
+    Each device runs ONE fused kernel over its local kv groups; softmax is
+    per-head so the local result is exact, and the returned bundle is
+    completed with an output-side psum over ``axis_name`` — the Wo
+    accumulation ``sum_h head_out_h @ Wo[h]`` distributes over the head
+    shards (every coefficient lane of the jet is a head-sum, so the psum
+    applies to primal, lower and top alike). ``kw`` passes through to the
+    superblock op (mask/scale/bias/rope/qkv_bias/...); note per-head
+    operands (ALiBi bias tables, qkv biases) must be sliced consistently
+    with the weights.
+    """
+    from repro.kernels.jet_attention.ops import collapsed_jet_qkv_attention_op
+
+    o0, ol, ot = collapsed_jet_qkv_attention_op(h, wq, wk, wv, wo, K=K, **kw)
+
+    def ps(c):
+        return None if c is None else jax.lax.psum(c, axis_name)
+
+    return ps(o0), [ps(c) for c in ol], ps(ot)

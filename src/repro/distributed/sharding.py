@@ -30,6 +30,14 @@ _state = threading.local()
 
 
 DEFAULT_RULES = {
+    # the leading direction axis R of a collapsed (R, B, S, D) jet bundle:
+    # NEVER mesh-sharded. The fused collapsed-jet kernels grid over R on every
+    # device (block_r), and the top/primal lanes have no R axis at all — a
+    # shard boundary through R would split single kernel invocations. Data
+    # parallelism shards the *batch* axis of the bundle instead (one
+    # superblock kernel per layer per device over the local collocation
+    # points); tensor parallelism shards kv-head grids via 'heads'.
+    "jet": None,
     "batch": ("pod", "data"),
     "seq": None,
     # residual-stream sequence axis at scan-block boundaries: mapping this to
@@ -79,7 +87,25 @@ def _mesh() -> Optional[Mesh]:
 
 @contextmanager
 def activate(mesh: Mesh, rules: Optional[dict] = None):
-    """Enable sharding annotations for code run inside this context."""
+    """Enable sharding annotations for code run inside this context.
+
+    Binds ``mesh`` (and ``DEFAULT_RULES`` merged with ``rules``) to a
+    thread-local slot that :func:`lshard` / :func:`param_spec` read; rules
+    naming mesh axes absent from this mesh are dropped (e.g. 'pod' on a
+    single-pod mesh), so one rule table serves every layout. The binding is
+    thread-local and re-entrant — a concurrent trace in another thread keeps
+    its own (or no) mesh.
+
+    The active mesh is also what makes the *collapsed-jet offload engine*
+    mesh-aware: ``core/offload.py`` folds the activated mesh's axis layout
+    into its plan-cache key (one plan per mesh shape — see
+    ``offload.plan_cache_info``) and prewarms kernel block configs under the
+    *local shard* batch shape (global batch / data-axis extent) instead of
+    the global one, so autotuned blocks match what each device actually
+    runs. Code traced *inside* ``shard_map`` already sees local shapes and
+    needs no activation for that; activate the mesh for the jit-on-mesh
+    (GSPMD) path and for :func:`lshard` constraints.
+    """
     merged = dict(DEFAULT_RULES)
     if rules:
         merged.update(rules)
@@ -133,10 +159,24 @@ def divisible_spec(spec: P, shape, mesh: Mesh) -> P:
 
 
 def lshard(x, names: Tuple[Optional[str], ...]):
-    """Constrain activation sharding by logical axis names (no-op w/o mesh)."""
+    """Constrain activation sharding by logical axis names (no-op w/o mesh).
+
+    Understands the leading jet axis of collapsed bundles: when ``x`` has
+    exactly one more dimension than ``names``, the extra *leading* axis is
+    taken to be the R direction axis of an (R, …) stacked jet coefficient
+    and bound to the ``"jet"`` rule (replicated — see ``DEFAULT_RULES``),
+    with ``names`` binding the trailing primal dims. Model code annotated
+    for primal shapes therefore keeps its data-parallel constraints when the
+    collapsed interpreter replays it coefficient-wise on (R, B, S, D)
+    bundles — the batch axis stays sharded over ('pod', 'data'), R stays
+    whole on every device.
+    """
     mesh = _mesh()
     if mesh is None:
         return x
+    ndim = getattr(x, "ndim", len(getattr(x, "shape", ())))
+    if ndim == len(names) + 1:
+        names = ("jet",) + tuple(names)
     spec = divisible_spec(logical_spec(names), x.shape, mesh)
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
 
@@ -223,13 +263,23 @@ def param_shardings(mesh: Mesh, params, rules: Optional[dict] = None):
 
 
 def auto_spec(shape, mesh: Mesh, batch_dim: Optional[int] = 1,
-              batch_axes=("pod", "data"), model_axis="model") -> P:
+              batch_axes=("pod", "data"), model_axis="model",
+              jet_dim: Optional[int] = None) -> P:
     """Heuristic sharding for state pytrees (KV caches, recurrent states):
     shard `batch_dim` over the data axes if divisible, then the largest
-    remaining dim over the model axis."""
+    remaining dim over the model axis.
+
+    ``jet_dim`` marks the direction axis R of a collapsed jet bundle — that
+    dim is excluded from the model-axis candidates (it must stay whole on
+    every device; the fused kernels grid over it). For the canonical
+    (R, B, S, D) bundle layout use ``auto_spec(shape, mesh, batch_dim=1,
+    jet_dim=0)`` — equivalently :func:`bundle_spec`."""
     axes = set(mesh.axis_names)
     batch_axes = tuple(a for a in batch_axes if a in axes)
     spec: list = [None] * len(shape)
+    if jet_dim is not None and jet_dim == batch_dim:
+        raise ValueError(f"jet_dim and batch_dim both {jet_dim}: the jet "
+                         f"axis is never sharded")
     if (
         batch_dim is not None
         and batch_dim < len(shape)
@@ -243,12 +293,20 @@ def auto_spec(shape, mesh: Mesh, batch_dim: Optional[int] = 1,
         cands = [
             (shape[i], i)
             for i in range(len(shape))
-            if spec[i] is None and shape[i] % m == 0 and shape[i] >= m
+            if spec[i] is None and i != jet_dim
+            and shape[i] % m == 0 and shape[i] >= m
         ]
         if cands:
             _, i = max(cands)
             spec[i] = model_axis
     return P(*spec)
+
+
+def bundle_spec(shape, mesh: Mesh) -> P:
+    """Sharding spec for a collapsed (R, B, …) jet-bundle coefficient:
+    batch over the data axes, the jet axis replicated (see the ``"jet"``
+    rule), trailing feature dims eligible for the model axis."""
+    return auto_spec(shape, mesh, batch_dim=1, jet_dim=0)
 
 
 def state_shardings(mesh: Mesh, state, batch_shardable: bool = True):

@@ -37,6 +37,18 @@ pre-rope/bias 9-dim ``jet_attention_qkv`` keys (those entries could only
 have been tuned without rope or projection biases — both flags migrate
 to 0).
 
+Keys also carry the *device kind* (``…|tpu|TPU_v5_lite`` — the sanitized
+``Device.device_kind`` of the default backend) in addition to the platform:
+a cache file persisted on one host can never poison block choices on a
+different accelerator generation, or on CPU-interpret CI hosts shared with
+TPU/GPU jobs, or across the heterogeneous hosts of a multi-host mesh.
+Legacy kind-less keys are migrated on load by tagging them with the current
+host's device kind when their platform field matches the running backend
+(a single-platform cache file was necessarily tuned on that host's device
+family); entries from *other* platforms are dropped — their device kind is
+unknowable, and keeping them un-tagged is exactly the poisoning this key
+component exists to prevent.
+
 Cache location: ``$REPRO_AUTOTUNE_CACHE`` if set, else
 ``~/.cache/repro/autotune.json``.
 
@@ -50,6 +62,7 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import time
 from typing import Dict, NamedTuple, Optional, Sequence, Tuple
 
@@ -89,16 +102,56 @@ def cache_path() -> str:
     return os.path.expanduser("~/.cache/repro/autotune.json")
 
 
+def device_kind() -> str:
+    """Sanitized ``Device.device_kind`` of the default backend ("TPU_v5_lite",
+    "NVIDIA_H100", "cpu", …) — the per-accelerator-generation key component.
+    "unknown" when no backend is initializable (key builders stay usable in
+    deviceless tooling)."""
+    try:
+        import jax
+
+        kind = str(jax.devices()[0].device_kind)
+    except Exception:
+        kind = ""
+    kind = re.sub(r"[\s|]+", "_", kind.strip())
+    return kind or "unknown"
+
+
+def _migrate_kind(key: str) -> str:
+    """Tag a kind-less (pre-device-kind) key with the running host's device
+    kind — only when its platform field matches the running backend (the
+    single-platform cache file was necessarily tuned on this host's device
+    family). Other platforms' legacy entries are dropped: their device kind
+    is unknowable. Current-form keys pass through."""
+    parts = key.split("|")
+    if len(parts) == 6:  # kernel|dims|K|dtype|platform|kind: current form
+        return key
+    if len(parts) != 5:
+        return ""
+    try:
+        import jax
+
+        current = jax.default_backend()
+    except Exception:
+        return ""
+    if parts[4] not in (current, "interpret"):
+        return ""
+    return "|".join(parts + [device_kind()])
+
+
 def _migrate_key(key: str) -> str:
     """Namespace/upgrade a legacy cache key.
 
-    Two generations are migrated: un-namespaced keys like
+    Three generations are migrated: un-namespaced keys like
     ``"48x56x200x13|K2|float32|tpu"`` (written before the attention kernel
-    existed, necessarily jet_mlp's), and 5-dim ``jet_attention`` keys
+    existed, necessarily jet_mlp's); 5-dim ``jet_attention`` keys
     ``"jet_attention|NxSqxSkvxdhxR|…"`` written before value head dims were
     keyed — back then the kernel only supported ``dv = dh``, so ``dv`` is
-    inserted as a copy of ``dh``. Keys already in the current form pass
-    through; unrecognizable keys are dropped by the caller.
+    inserted as a copy of ``dh`` (and pre-rope/bias 9-dim
+    ``jet_attention_qkv`` keys gain both flags as 0); and kind-less keys
+    written before the device kind was keyed (see :func:`_migrate_kind`).
+    Keys already in the current form pass through; unrecognizable keys are
+    dropped by the caller.
     """
     head, _, rest = key.partition("|")
     if head == "jet_attention":
@@ -106,20 +159,19 @@ def _migrate_key(key: str) -> str:
         dims = dims.split("x")
         if sep and len(dims) == 5 and all(d.isdigit() for d in dims):
             dims = dims[:4] + [dims[3]] + dims[4:]  # insert dv = dh
-            return f"jet_attention|{'x'.join(dims)}|{tail}"
-        return key
-    if head == "jet_attention_qkv":
+            key = f"jet_attention|{'x'.join(dims)}|{tail}"
+    elif head == "jet_attention_qkv":
         dims, sep, tail = rest.partition("|")
         dims = dims.split("x")
         if sep and len(dims) == 9 and all(d.isdigit() for d in dims):
             dims += ["0", "0"]  # pre-rope/bias entry: both flags off
-            return f"jet_attention_qkv|{'x'.join(dims)}|{tail}"
-        return key
-    if head in KERNELS:
-        return key
-    if "x" in head and head.replace("x", "").isdigit():
-        return f"jet_mlp|{key}"
-    return ""
+            key = f"jet_attention_qkv|{'x'.join(dims)}|{tail}"
+    elif head not in KERNELS:
+        if "x" in head and head.replace("x", "").isdigit():
+            key = f"jet_mlp|{key}"  # un-namespaced: necessarily jet_mlp
+        else:
+            return ""
+    return _migrate_kind(key)
 
 
 def load_cache() -> Dict[str, list]:
@@ -157,26 +209,33 @@ def clear_memory_cache() -> None:
     _MEM_CACHE.clear()
 
 
-def _key(kernel: str, dims, K: int, dtype, backend: str) -> str:
-    return f"{kernel}|{'x'.join(str(d) for d in dims)}|K{K}|{dtype}|{backend}"
+def _key(kernel: str, dims, K: int, dtype, backend: str,
+         kind: Optional[str] = None) -> str:
+    kind = device_kind() if kind is None else kind
+    return (f"{kernel}|{'x'.join(str(d) for d in dims)}|K{K}|{dtype}"
+            f"|{backend}|{kind}")
 
 
 def shape_key(B: int, Din: int, Dout: int, R: int, K: int, dtype,
-              backend: str, kernel: str = "jet_mlp") -> str:
-    return _key(kernel, (B, Din, Dout, R), K, dtype, backend)
+              backend: str, kernel: str = "jet_mlp",
+              kind: Optional[str] = None) -> str:
+    return _key(kernel, (B, Din, Dout, R), K, dtype, backend, kind)
 
 
 def attention_shape_key(N: int, Sq: int, Skv: int, dh: int, dv: int, R: int,
-                        K: int, dtype, backend: str) -> str:
-    return _key("jet_attention", (N, Sq, Skv, dh, dv, R), K, dtype, backend)
+                        K: int, dtype, backend: str,
+                        kind: Optional[str] = None) -> str:
+    return _key("jet_attention", (N, Sq, Skv, dh, dv, R), K, dtype, backend,
+                kind)
 
 
 def qkv_attention_shape_key(B: int, S: int, D: int, Hq: int, Hkv: int,
                             dh: int, dv: int, do_: int, R: int, rope: int,
-                            qbias: int, K: int, dtype, backend: str) -> str:
+                            qbias: int, K: int, dtype, backend: str,
+                            kind: Optional[str] = None) -> str:
     return _key("jet_attention_qkv",
                 (B, S, D, Hq, Hkv, dh, dv, do_, R, int(rope), int(qbias)),
-                K, dtype, backend)
+                K, dtype, backend, kind)
 
 
 def _pow2_le(n: int) -> int:

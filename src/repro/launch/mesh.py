@@ -8,17 +8,22 @@ from __future__ import annotations
 
 import jax
 
+from repro.distributed.sharding import compat_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return compat_mesh(shape, axes)
 
 
-def make_host_mesh():
-    """Whatever devices exist (tests/benches): a 1-D data mesh."""
+def make_host_mesh(pods: int = None):
+    """Whatever devices exist (tests/benches): a 1-D data mesh, or with
+    ``pods`` a ('pod', 'data') mesh — pods x (n/pods) — for exercising the
+    cross-pod compressed-collective path on host devices."""
     n = len(jax.devices())
-    return jax.make_mesh((n,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    if pods and pods > 1:
+        if n % pods:
+            raise ValueError(f"{n} devices don't divide into {pods} pods")
+        return compat_mesh((pods, n // pods), ("pod", "data"))
+    return compat_mesh((n,), ("data",))

@@ -40,6 +40,11 @@ def main():
                     help="use the (16,16)/(2,16,16) v5e mesh (needs 256/512 chips)")
     ap.add_argument("--grad-accum", type=int, default=1)
     ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--compressed-collectives", action="store_true",
+                    help="explicit-DP shard_map step: int8 error-feedback "
+                         "compressed gradient psum across ('pod','data')")
+    ap.add_argument("--pods", type=int, default=None,
+                    help="split host devices into a ('pod','data') mesh")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--coordinator", default=None)
     ap.add_argument("--num-processes", type=int, default=1)
@@ -53,7 +58,7 @@ def main():
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = get_model(cfg)
     mesh = (make_production_mesh(multi_pod=args.multi_pod)
-            if args.production_mesh else make_host_mesh())
+            if args.production_mesh else make_host_mesh(pods=args.pods))
 
     with shd.activate(mesh):
         params = model.init(jax.random.PRNGKey(0), cfg)
@@ -68,12 +73,37 @@ def main():
             data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
             return jax.device_put(b, {"tokens": NamedSharding(mesh, P(data_axes))})
 
+        data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
         tcfg = TrainConfig(peak_lr=1e-3, warmup_steps=20, total_steps=args.steps,
                            grad_accum=args.grad_accum,
-                           compress_grads=args.compress_grads,
+                           compress_grads=(args.compress_grads
+                                           or args.compressed_collectives),
+                           reduce_axis=(data_axes
+                                        if args.compressed_collectives else None),
                            ckpt_dir=args.ckpt_dir)
+        step_transform = None
+        if args.compressed_collectives:
+            # explicit DP: the step runs under shard_map, gradients cross the
+            # pod links as int8 (compressed_psum_ef) instead of fp32 GSPMD
+            # all-reduces. Params stay replicated; batch shards its leading
+            # dim; EF residuals shard per-device. Batch specs come from a
+            # sample batch: leaves whose leading dim doesn't divide the data
+            # extent (e.g. small boundary-point sets) stay replicated.
+            from repro.distributed.mesh_offload import dp_step_transform
+            extent = 1
+            for a in data_axes:
+                extent *= int(mesh.shape[a])
+            batch_spec = jax.tree.map(
+                lambda a: (P(data_axes) if a.ndim and a.shape[0] % extent == 0
+                           else P()),
+                batch_fn(0))
+            step_transform = dp_step_transform(mesh, compressed=True,
+                                               data_axes=data_axes,
+                                               batch_spec=batch_spec)
         trainer = Trainer(lambda p, b: model.loss(p, b, cfg), params, tcfg,
-                          mesh=mesh, param_shardings=p_shard, batch_fn=batch_fn)
+                          mesh=mesh,
+                          param_shardings=(None if step_transform else p_shard),
+                          batch_fn=batch_fn, step_transform=step_transform)
         if args.ckpt_dir and trainer.maybe_restore():
             print(f"resumed from step {trainer.step}")
         trainer.run(args.steps, log_every=max(args.steps // 10, 1))

@@ -23,9 +23,19 @@ def ef_init(params):
 
 
 def quantize_int8(x):
-    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
-    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
-    return q, scale
+    """Per-tensor absmax int8 quantization: ``(q, scale)`` with
+    ``x ~= q * scale``.
+
+    The scale is computed in float32 and guarded against all-zero leaves:
+    an absmax of 0 would otherwise produce a 0/0 -> NaN that error feedback
+    then accumulates forever. (A fixed 1e-12 floor is NOT enough — it
+    underflows to exactly 0.0 in float16 inputs.) Zero leaves quantize to
+    all-zero payloads with a dummy scale of 1/127.
+    """
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.where(amax > 0, amax, 1.0) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
 
 
 def dequantize_int8(q, scale):

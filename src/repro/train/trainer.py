@@ -29,6 +29,7 @@ import jax.numpy as jnp
 
 from repro import checkpoint as ckpt_lib
 from repro.distributed import sharding as shd
+from repro.distributed.collectives import compressed_psum_ef, psum_mean
 from repro.optim import adamw_init, adamw_update, warmup_cosine
 from repro.optim.compression import compress_decompress, ef_init
 
@@ -44,6 +45,13 @@ class TrainConfig:
     moment_dtype: str = "float32"  # bfloat16 halves optimizer HBM
     accum_dtype: str = "float32"  # grad-accumulation buffer dtype
     compress_grads: bool = False
+    # Mesh axis name (or tuple of names) to psum gradients/loss over. Set this
+    # when the train step runs inside shard_map (explicit data parallelism):
+    # with compress_grads the reduction rides the int8 error-feedback
+    # compressed collective (collectives.compressed_psum_ef) instead of a
+    # local compress + fp32 psum, cutting cross-pod bytes ~4x. Leave None for
+    # the jit-on-mesh (GSPMD) path where XLA inserts the reductions.
+    reduce_axis: Any = None
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 200
     straggler_factor: float = 3.0
@@ -95,7 +103,24 @@ def build_train_step(loss_fn: Callable, tcfg: TrainConfig, grad_shardings=None):
         else:
             grads, l, metrics = grads_of(params, batch)
 
-        if tcfg.compress_grads:
+        if tcfg.reduce_axis is not None:
+            # Explicit DP under shard_map: complete the gradient average
+            # across the data axis here. The error-feedback state carries a
+            # leading per-device axis (sharded P(axis) by the caller, local
+            # extent 1) so each device keeps its own residual.
+            l = psum_mean(l, tcfg.reduce_axis)
+            if tcfg.compress_grads:
+                _tup = lambda t: isinstance(t, tuple)
+                pairs = jax.tree.map(
+                    lambda g, e: compressed_psum_ef(g, e[0], tcfg.reduce_axis),
+                    grads, opt_state["ef"])
+                grads = jax.tree.map(lambda p: p[0], pairs, is_leaf=_tup)
+                opt_state_ef = jax.tree.map(lambda p: p[1][None], pairs,
+                                            is_leaf=_tup)
+            else:
+                grads = jax.tree.map(
+                    lambda g: psum_mean(g, tcfg.reduce_axis), grads)
+        elif tcfg.compress_grads:
             grads, opt_state_ef = compress_decompress(grads, opt_state["ef"])
         lr = warmup_cosine(step, peak_lr=tcfg.peak_lr, warmup_steps=tcfg.warmup_steps,
                            total_steps=tcfg.total_steps)
@@ -112,10 +137,17 @@ def build_train_step(loss_fn: Callable, tcfg: TrainConfig, grad_shardings=None):
     return train_step
 
 
-def init_opt_state(params, tcfg: TrainConfig):
+def init_opt_state(params, tcfg: TrainConfig, ef_devices: int = 1):
+    """``ef_devices``: with ``reduce_axis`` set, the error-feedback residual
+    is per-device state — it gets a leading axis of this extent (the data-axis
+    device count) so shard_map can shard it ``P(axis)`` (local extent 1)."""
     state = {"adam": adamw_init(params, moment_dtype=jnp.dtype(tcfg.moment_dtype))}
     if tcfg.compress_grads:
-        state["ef"] = ef_init(params)
+        ef = ef_init(params)
+        if tcfg.reduce_axis is not None:
+            ef = jax.tree.map(
+                lambda e: jnp.zeros((ef_devices,) + e.shape, e.dtype), ef)
+        state["ef"] = ef
     return state
 
 
@@ -123,12 +155,24 @@ class Trainer:
     """Single-controller fault-tolerant loop."""
 
     def __init__(self, loss_fn, params, tcfg: TrainConfig, mesh=None,
-                 param_shardings=None, batch_fn: Callable[[int], Any] = None):
+                 param_shardings=None, batch_fn: Callable[[int], Any] = None,
+                 step_transform: Callable = None):
+        """``step_transform``: optional wrapper applied to the built train
+        step before jit — e.g. ``mesh_offload.dp_step_transform`` to run the
+        step under shard_map with compressed gradient collectives. When set,
+        the transform owns the sharding (plain jit, no in_shardings)."""
         self.tcfg = tcfg
         self.mesh = mesh
         self.batch_fn = batch_fn
         self.params = params
-        self.opt_state = init_opt_state(params, tcfg)
+        ef_devices = 1
+        if tcfg.reduce_axis is not None and mesh is not None:
+            axes = (tcfg.reduce_axis if isinstance(tcfg.reduce_axis, tuple)
+                    else (tcfg.reduce_axis,))
+            for a in axes:
+                if a in mesh.axis_names:
+                    ef_devices *= int(mesh.shape[a])
+        self.opt_state = init_opt_state(params, tcfg, ef_devices=ef_devices)
         self.step = 0
         self._preempted = False
         self._step_ewma = None
@@ -136,7 +180,10 @@ class Trainer:
 
         step_fn = build_train_step(loss_fn, tcfg)
         donate = (0, 1)
-        if mesh is not None and param_shardings is not None:
+        if step_transform is not None:
+            self._jit_step = jax.jit(step_transform(step_fn),
+                                     donate_argnums=donate)
+        elif mesh is not None and param_shardings is not None:
             self._jit_step = jax.jit(
                 step_fn,
                 donate_argnums=donate,

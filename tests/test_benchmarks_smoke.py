@@ -13,6 +13,7 @@ import pytest
     "benchmarks.common",
     "benchmarks.fig1_laplacian",
     "benchmarks.attention_laplacian",
+    "benchmarks.distributed_laplacian",
     "benchmarks.rewrite_flops",
     "benchmarks.scan_depth",
     "benchmarks.table1_operators",
@@ -74,3 +75,19 @@ def test_scan_depth_bench_smoke():
     # the default (use_rope=True) trunk superblocks since the rope fold
     assert body and body[0].fused("jet_attention_qkv") and \
         body[0].fused("jet_mlp")
+
+
+def test_distributed_laplacian_bench_smoke():
+    """The weak-scaling benchmark runs on whatever devices exist (n=1 in
+    the tier-1 loop — the 8-device sweep is the by-hand benchmark / the
+    `distributed`-marked suite): parity vs CRULES is asserted inside run(),
+    and the wire accounting shows the ~4x int8 compression."""
+    from benchmarks.distributed_laplacian import (run, submesh, trunk_params,
+                                                  wire_bytes)
+
+    fp32_b, int8_b = wire_bytes(trunk_params(d_model=16))
+    assert 3.5 < fp32_b / int8_b <= 4.0  # int8 payload + per-leaf scales
+    assert submesh(1).axis_names == ("data",)
+    rows = run(B_per=2, S=8, D=3, d_model=16, rounds=2)
+    assert rows and rows[0]["name"] == "dist_lap/pallas/n1"
+    assert "superblocks/device=1" in rows[0]["derived"]

@@ -1,0 +1,91 @@
+"""Int8 error-feedback gradient compression: quantize/dequantize round-trip
+properties, the all-zero-leaf guard, and EF accumulation over steps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.compression import (compress_decompress, dequantize_int8,
+                                     ef_init, quantize_int8)
+
+
+def test_quantize_zero_leaf_no_nan():
+    """An all-zero leaf must quantize to a zero payload with a finite scale
+    (a 0 absmax would make dequantize 0/0 -> NaN that error feedback then
+    accumulates forever)."""
+    for dtype in (jnp.float32, jnp.float16, jnp.bfloat16):
+        q, s = quantize_int8(jnp.zeros((4, 4), dtype))
+        assert np.isfinite(float(s)) and float(s) > 0
+        np.testing.assert_array_equal(np.asarray(q), 0)
+        np.testing.assert_array_equal(np.asarray(dequantize_int8(q, s)), 0.0)
+
+
+def test_quantize_tiny_float16_no_nan():
+    """Subnormal-small float16 inputs: a fixed 1e-12 scale floor underflows
+    to exactly 0.0 in half precision — the amax-based guard must not."""
+    x = jnp.full((8,), 6e-8, jnp.float16)  # near the fp16 subnormal range
+    q, s = quantize_int8(x)
+    deq = dequantize_int8(q, s)
+    assert np.all(np.isfinite(np.asarray(deq, np.float32)))
+
+
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize("scale_mag", [1e-6, 1.0, 1e4])
+def test_quantize_round_trip_bound(seed, scale_mag):
+    """|dequantize(quantize(x)) - x| <= scale/2 elementwise (round-to-
+    nearest within the clip range), and quantizing the dequantized value is
+    a fixed point."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * scale_mag
+    q, s = quantize_int8(x)
+    deq = np.asarray(dequantize_int8(q, s), np.float64)
+    np.testing.assert_array_less(np.abs(deq - np.asarray(x, np.float64)),
+                                 float(s) / 2 + 1e-30)
+    q2, s2 = quantize_int8(deq)
+    np.testing.assert_array_equal(np.asarray(q2), np.asarray(q))
+
+
+def test_quantize_payload_range():
+    x = jnp.asarray([-1e9, -1.0, 0.0, 1.0, 1e9], jnp.float32)
+    q, s = quantize_int8(x)
+    assert q.dtype == jnp.int8
+    assert int(jnp.max(jnp.abs(q.astype(jnp.int32)))) <= 127
+
+
+def test_compress_decompress_ef_accumulation():
+    """Error feedback makes the compressed gradient unbiased over steps: the
+    running sum of decompressed grads tracks the running sum of true grads
+    to within one quantization step (the residual never compounds)."""
+    params = {"w": jnp.zeros((16,)), "b": jnp.zeros((4,))}
+    ef = ef_init(params)
+    key = jax.random.PRNGKey(0)
+    true_sum = jax.tree.map(lambda p: jnp.zeros(p.shape), params)
+    sent_sum = jax.tree.map(lambda p: jnp.zeros(p.shape), params)
+    max_scale = 0.0
+    for step in range(20):
+        key, k1, k2 = jax.random.split(key, 3)
+        g = {"w": jax.random.normal(k1, (16,)),
+             "b": jax.random.normal(k2, (4,)) * 1e-3}
+        out, ef = compress_decompress(g, ef)
+        true_sum = jax.tree.map(jnp.add, true_sum, g)
+        sent_sum = jax.tree.map(jnp.add, sent_sum, out)
+        for leaf in jax.tree.leaves(g):
+            max_scale = max(max_scale,
+                            float(jnp.max(jnp.abs(leaf))) / 127.0)
+    for t, s_ in zip(jax.tree.leaves(true_sum), jax.tree.leaves(sent_sum)):
+        # residual = what EF still holds; bounded by one quantization step
+        np.testing.assert_array_less(np.abs(np.asarray(t - s_)),
+                                     max_scale + 1e-6)
+    # the residual buffers themselves stay bounded and finite
+    for e in jax.tree.leaves(ef):
+        assert np.all(np.isfinite(np.asarray(e)))
+
+
+def test_compress_decompress_zero_grads_stay_zero():
+    """Zero gradients with zero EF state round-trip to exactly zero (no NaN
+    pollution of the optimizer state)."""
+    params = {"w": jnp.zeros((8, 8))}
+    g, ef = compress_decompress(jax.tree.map(jnp.zeros_like, params),
+                                ef_init(params))
+    np.testing.assert_array_equal(np.asarray(g["w"]), 0.0)
+    np.testing.assert_array_equal(np.asarray(ef["w"]), 0.0)

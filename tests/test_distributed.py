@@ -128,3 +128,61 @@ def test_elastic_restore_across_meshes():
         print('ok')
     """)
     assert "ok" in out
+
+
+def test_lshard_jet_axis_prepend():
+    """lshard on an (R, B, D) stacked jet coefficient annotated with primal
+    (B, D) names binds the extra leading axis to the "jet" rule (never
+    sharded) and keeps the batch constraint on dim 1."""
+    mesh = shd.compat_mesh((1,), ("data",))
+    import jax.numpy as jnp
+
+    def constraint_spec(shape, names):
+        with shd.activate(mesh):
+            jaxpr = jax.make_jaxpr(lambda a: shd.lshard(a, names))(
+                jnp.zeros(shape))
+        eqns = [e for e in jaxpr.eqns
+                if e.primitive.name == "sharding_constraint"]
+        assert eqns, jaxpr
+        return tuple(eqns[0].params["sharding"].spec)
+
+    # jet axis replicated, batch -> data (pod absent from this mesh)
+    spec = constraint_spec((3, 4, 8), ("batch", "embed"))
+    assert spec[0] is None and spec[1] in ("data", ("data",)), spec
+    # exact-rank annotation unchanged by the jet logic
+    spec2 = constraint_spec((4, 8), ("batch", "embed"))
+    assert spec2[0] in ("data", ("data",)), spec2
+
+
+def test_auto_spec_jet_dim_excluded():
+    mesh = shd.compat_mesh((1, 1), ("data", "model"))
+    # (R, B, S, D): R=16 would win the model axis by size without jet_dim
+    spec = shd.auto_spec((16, 4, 8, 8), mesh, batch_dim=1, jet_dim=0)
+    assert spec[0] is None
+    assert spec == shd.bundle_spec((16, 4, 8, 8), mesh)
+    import pytest
+
+    with pytest.raises(ValueError):
+        shd.auto_spec((16, 4), mesh, batch_dim=0, jet_dim=0)
+
+
+def test_jet_rule_never_sharded():
+    assert shd.DEFAULT_RULES["jet"] is None
+
+
+def test_param_logical_axes_rank3_tp_threading():
+    """The rank-3 (D, H, dh) projection layouts used by the QKV superblock
+    thread their head axis to 'model' for tensor parallelism (and drop the
+    fsdp axes on a model-only mesh — the tp_qkv_attention convention)."""
+    assert shd.param_logical_axes("attn/wq/kernel", 3) == \
+        ("fsdp", "heads", "head_dim")
+    assert shd.param_logical_axes("attn/wo/kernel", 3) == \
+        ("heads", "head_dim", "fsdp")
+    mesh = shd.compat_mesh((1,), ("model",))
+    with shd.activate(mesh):
+        assert shd.logical_spec(
+            shd.param_logical_axes("attn/wq/kernel", 3)) == \
+            P(None, "model", None)
+        assert shd.logical_spec(
+            shd.param_logical_axes("attn/wo/kernel", 3)) == \
+            P("model", None, None)

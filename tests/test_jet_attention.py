@@ -570,10 +570,13 @@ def test_attention_autotune_legacy_dv_migration(tmp_path, monkeypatch):
     monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(path))
     autotune.clear_memory_cache()
     disk = autotune.load_cache()
-    assert disk[f"jet_attention|4x256x256x64x64x3|K2|float32|{backend}"] \
-        == [64, 256]
-    assert disk["jet_attention|4x256x256x64x32x3|K2|float32|tpu"] == [32, 128]
-    assert disk["jet_attention|garbagexdims|K2|float32|tpu"] == [8, 128]
+    kind = autotune.device_kind()
+    assert disk[f"jet_attention|4x256x256x64x64x3|K2|float32|{backend}"
+                f"|{kind}"] == [64, 256]
+    # kind-less entries from OTHER platforms are dropped, not kept untagged
+    # (their device kind is unknowable — keeping them would be exactly the
+    # cross-platform poisoning the kind component prevents)
+    assert not any("tpu" in k for k in disk)
     # the migrated entry is found by the dv-keyed lookup path
     cfg = autotune.get_attention_block_config(4, 256, 256, 64, 64, 3, 2,
                                               jnp.float32)
@@ -597,9 +600,12 @@ def test_autotune_legacy_cache_migration(tmp_path, monkeypatch):
     monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(path))
     autotune.clear_memory_cache()
     disk = autotune.load_cache()
-    assert disk[f"jet_mlp|48x56x200x13|K2|float32|{backend}"] == [64, 256, 4]
-    assert disk["jet_mlp|8x8x128x1|K2|float32|tpu"] == [8, 128, 1]
-    assert "garbage" not in disk and len(disk) == 2
+    kind = autotune.device_kind()
+    assert disk[f"jet_mlp|48x56x200x13|K2|float32|{backend}|{kind}"] \
+        == [64, 256, 4]
+    # kind-less same-platform entries gain the host's device kind; other
+    # platforms' entries are dropped (device kind unknowable)
+    assert "garbage" not in disk and len(disk) == 1
     # a migrated entry is found by the namespaced lookup path
     cfg = autotune.get_block_config(48, 56, 200, 13, 2, jnp.float32)
     assert tuple(cfg) == (64, 256, 4)
