@@ -1,0 +1,198 @@
+"""Chaos benchmark for the fault-tolerant derivative server.
+
+Two serving runs over the same deterministic mixed-operator request stream
+(laplacian / biharmonic / divergence / jet, heterogeneous sizes and K):
+
+* ``clean``   — no faults; throughput and latency baseline.
+* ``faulted`` — the full fault menu from :mod:`repro.testing.faults`
+  injected at once: kernel-raise (trips the offload degradation ladder),
+  NaN-inject (quarantine), slow-step + tight per-request deadlines
+  (TIMEOUT eviction), and a queue flood against a small bounded queue
+  (load shedding).
+
+Both runs emit a ``BENCH {json}`` row (throughput pts/s, p50/p99 latency,
+terminal-status counts). The faulted run *asserts its acceptance criteria
+in-run*: zero crashed batches, every faulted request in a terminal
+TIMEOUT/NONFINITE/REJECTED status, and every completed request allclose to
+the unfaulted CRULES reference — a failed chaos drill fails loudly, it does
+not emit a pretty row.
+
+Run:  PYTHONPATH=src python benchmarks/operator_serving.py
+"""
+
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# importable as benchmarks.operator_serving (the test loop) AND runnable as
+# a script from anywhere (PYTHONPATH-free: repo root + src self-inserted)
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (os.path.join(_ROOT, "src"), _ROOT):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from benchmarks.common import emit_bench  # noqa: E402
+
+from repro.core import offload  # noqa: E402
+from repro.core import operators as ops  # noqa: E402
+from repro.core.collapse import collapsed_fan  # noqa: E402
+from repro.serve.operator_engine import (TERMINAL, OperatorEngine,  # noqa: E402
+                                         OperatorRequest)
+from repro.testing import faults  # noqa: E402
+
+
+def build_fields(D=3, width=32, key=None):
+    """A scalar PINN-style field and a companion vector field (for
+    divergence traffic), both row-independent tanh MLPs."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    W1 = jax.random.normal(k1, (D, width)) / jnp.sqrt(D)
+    W2 = jax.random.normal(k2, (width, 1)) / jnp.sqrt(width)
+    WV = jax.random.normal(k3, (width, D)) / jnp.sqrt(width)
+    f = lambda x: (jnp.tanh(x @ W1) @ W2)[..., 0]
+    F = lambda x: jnp.tanh(x @ W1) @ WV
+    return f, F
+
+
+def request_mix(n, D, max_points, seed=0):
+    """Deterministic heterogeneous request stream (op, size, K vary)."""
+    rng = np.random.default_rng(seed)
+    mix = [("laplacian", 0), ("biharmonic", 0), ("divergence", 0),
+           ("jet", 2), ("jet", 4)]
+    reqs = []
+    for i in range(n):
+        op, K = mix[i % len(mix)]
+        npts = int(rng.integers(1, max_points + 1))
+        pts = rng.normal(size=(npts, D)).astype(np.float32) * 0.5
+        reqs.append(OperatorRequest(rid=i, op=op, points=pts, K=K))
+    return reqs
+
+
+def reference(f, F, req, pts):
+    """Unfaulted CRULES (interpreter-backend) result for one request."""
+    x = jnp.asarray(pts)
+    if req.op == "laplacian":
+        return np.asarray(ops.laplacian(f, x, method="collapsed"))
+    if req.op == "biharmonic":
+        return np.asarray(ops.biharmonic(f, x, method="collapsed"))
+    if req.op == "divergence":
+        return np.asarray(ops.divergence(F, x, method="collapsed"))
+    D = x.shape[-1]
+    eye = jnp.eye(D, dtype=x.dtype)
+    dirs = jnp.broadcast_to(eye.reshape(D, 1, D), (D,) + x.shape)
+    return np.asarray(collapsed_fan(f, x, dirs, req.K)[2])
+
+
+def _assert_parity(f, F, done, payloads, rtol=1e-4, atol=1e-5):
+    for rid, req in done.items():
+        if req.status != "DONE":
+            continue
+        ref = reference(f, F, req, payloads[rid])
+        np.testing.assert_allclose(
+            req.result, ref, rtol=rtol, atol=atol,
+            err_msg=f"request {rid} ({req.op}, K={req.K}) diverged from "
+                    f"the CRULES reference")
+
+
+def run(n_requests=20, D=3, max_points=40, chunk=8, max_slots=2,
+        backend="pallas"):
+    """Both serving runs; returns the emitted BENCH rows."""
+    f, F = build_fields(D=D)
+    rows = []
+    offload.reset_kernel_health()
+    old_cooldown = offload.set_breaker_cooldown(300.0)
+    try:
+        # --- clean run ---------------------------------------------------
+        engine = OperatorEngine(f, vector_field=F, backend=backend,
+                                max_slots=max_slots, chunk=chunk,
+                                max_queue=4 * n_requests)
+        reqs = request_mix(n_requests, D, max_points, seed=0)
+        payloads = {r.rid: np.asarray(r.points, np.float32) for r in reqs}
+        for r in reqs:
+            engine.submit(r)
+        done = engine.run_until_done()
+        _assert_parity(f, F, done, payloads)
+        s = engine.stats()
+        assert s["crashed_batches"] == 0
+        rows.append(dict(
+            bench="operator_serving", mode="clean", requests=n_requests,
+            completed=s["completed"], statuses=s["statuses"],
+            throughput_pts_per_s=s["throughput_pts_per_s"],
+            p50_ms=s["p50_ms"], p99_ms=s["p99_ms"],
+            batch_retries=s["batch_retries"],
+            crashed_batches=s["crashed_batches"]))
+
+        # --- faulted run -------------------------------------------------
+        offload.reset_kernel_health()
+        engine = OperatorEngine(f, vector_field=F, backend=backend,
+                                max_slots=max_slots, chunk=chunk,
+                                max_queue=n_requests)
+        reqs = request_mix(n_requests, D, max_points, seed=1)
+        payloads = {r.rid: np.asarray(r.points, np.float32) for r in reqs}
+        # targeted faults, all deterministic:
+        nan_rids = {1, 6}  # -> NONFINITE via quarantine
+        # tight-deadline victims: need >= 3 windows but get a deadline
+        # shorter than one (slowed) step -> guaranteed TIMEOUT
+        deadline_rids = {3, 8}
+        for r in reqs:
+            if r.rid in deadline_rids:
+                r.points = np.resize(np.asarray(r.points, np.float32),
+                                     (3 * chunk, D))
+                payloads[r.rid] = np.asarray(r.points, np.float32)
+                r.deadline_s = 0.01
+        flood = n_requests  # extra burst beyond the bounded queue
+        with faults.kernel_raise(n=2, where="step"), \
+                faults.kernel_raise(n=2, kinds=("mlp",)), \
+                faults.nan_inject(rids=nan_rids), \
+                faults.slow_step(seconds=0.03):
+            for r in reqs:
+                engine.submit(r)
+            extra = faults.queue_flood(
+                engine, flood,
+                lambda i: OperatorRequest(
+                    rid=1000 + i, op="laplacian",
+                    points=payloads[0][:1].repeat(2, axis=0)))
+            done = engine.run_until_done()
+        shed = [r for r in extra if r.status == "REJECTED"]
+        s = engine.stats()
+        # acceptance: the chaos run survives — zero crashed batches, every
+        # faulted request terminal, batch-mates unharmed and correct
+        assert s["crashed_batches"] == 0, s
+        assert s["batch_retries"] >= 1, s  # ladder actually exercised
+        assert shed and all(r.retry_after and r.retry_after > 0
+                            for r in shed)
+        for rid in nan_rids:
+            assert done[rid].status == "NONFINITE", (rid, done[rid].status)
+        for rid in deadline_rids:
+            assert done[rid].status == "TIMEOUT", (rid, done[rid].status)
+        for req in done.values():
+            assert req.status in TERMINAL, (req.rid, req.status)
+        _assert_parity(f, F, done, payloads)
+        rows.append(dict(
+            bench="operator_serving", mode="faulted", requests=n_requests,
+            flooded=flood, completed=s["completed"], statuses=s["statuses"],
+            throughput_pts_per_s=s["throughput_pts_per_s"],
+            p50_ms=s["p50_ms"], p99_ms=s["p99_ms"],
+            batch_retries=s["batch_retries"],
+            crashed_batches=s["crashed_batches"],
+            quarantined=s["quarantined"], timeouts=s["timeouts"],
+            load_shed=s["load_shed"],
+            breakers_open=[k for k, v in s["breakers"].items()
+                           if v["state"] != "closed"]))
+    finally:
+        offload.set_breaker_cooldown(old_cooldown)
+        offload.reset_kernel_health()
+    for row in rows:
+        emit_bench(**row)
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

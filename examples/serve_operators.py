@@ -1,0 +1,69 @@
+"""Derivative-serving demo: heterogeneous operator requests through the
+fault-tolerant continuous-batching operator engine.
+
+A mixed stream of laplacian / biharmonic / divergence / jet requests (with
+per-request K and payload sizes) shares one slot pool per (op, K, D)
+bucket; one request gets a NaN payload to show the per-slot quarantine and
+one gets a tight deadline to show TIMEOUT eviction — the rest complete
+normally, untouched by their faulted batch-mates.
+
+Run:  PYTHONPATH=src python examples/serve_operators.py --requests 12
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.operator_engine import OperatorEngine, OperatorRequest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--chunk", type=int, default=8)
+    ap.add_argument("--points", type=int, default=24)
+    ap.add_argument("--backend", default="pallas")
+    args = ap.parse_args()
+
+    D = 3
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    W1 = jax.random.normal(k1, (D, 32)) / jnp.sqrt(D)
+    W2 = jax.random.normal(k2, (32, 1)) / jnp.sqrt(32)
+    WV = jax.random.normal(k3, (32, D)) / jnp.sqrt(32)
+    f = lambda x: (jnp.tanh(x @ W1) @ W2)[..., 0]  # scalar field
+    F = lambda x: jnp.tanh(x @ W1) @ WV  # vector field (divergence)
+
+    engine = OperatorEngine(f, vector_field=F, backend=args.backend,
+                            max_slots=args.slots, chunk=args.chunk)
+    rng = np.random.default_rng(0)
+    mix = [("laplacian", 0), ("biharmonic", 0), ("divergence", 0),
+           ("jet", 4)]
+    for i in range(args.requests):
+        op, K = mix[i % len(mix)]
+        pts = rng.normal(size=(int(rng.integers(1, args.points + 1)),
+                               D)).astype(np.float32) * 0.5
+        req = OperatorRequest(rid=i, op=op, points=pts, K=K)
+        if i == 1:  # demo: quarantine fails only this request
+            pts[0, 0] = np.nan
+        if i == 2:  # demo: a deadline the request cannot make
+            req.deadline_s = 1e-4
+        engine.submit(req)
+
+    done = engine.run_until_done()
+    for rid in sorted(done):
+        req = done[rid]
+        head = (np.array2string(req.result[:3], precision=3)
+                if req.status == "DONE" else req.error[:60])
+        print(f"req {rid:2d} {req.op:<10} K={req.K or '-'} "
+              f"-> {req.status:<9} {head}")
+    stats = engine.stats()
+    print({k: stats[k] for k in ("steps", "points", "completed",
+                                 "quarantined", "timeouts", "p50_ms",
+                                 "p99_ms", "throughput_pts_per_s")})
+
+
+if __name__ == "__main__":
+    main()

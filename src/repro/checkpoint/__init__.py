@@ -1,7 +1,11 @@
 from .checkpoint import (  # noqa: F401
+    CheckpointError,
+    all_steps,
     latest_step,
     restore,
     save,
     save_async,
+    sweep_tmp,
+    verify,
     wait_for_saves,
 )

@@ -31,6 +31,13 @@ import jax.numpy as jnp
 import numpy as np
 
 
+class CheckpointError(RuntimeError):
+    """A checkpoint step is unreadable or does not match the restore target
+    (missing/truncated files, manifest key mismatch). Raised by ``restore``
+    so callers can walk back to an older step instead of crashing on a
+    partially-written directory."""
+
+
 def _flatten(tree) -> Dict[str, Any]:
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out = {}
@@ -115,15 +122,61 @@ def wait_for_saves():
             _pending_cv.wait()
 
 
-def latest_step(ckpt_dir: str) -> Optional[int]:
+def all_steps(ckpt_dir: str) -> list:
+    """Sorted step numbers present on disk (tmp dirs excluded)."""
     if not os.path.isdir(ckpt_dir):
-        return None
-    steps = [
+        return []
+    return sorted(
         int(d.split("_")[1])
         for d in os.listdir(ckpt_dir)
         if d.startswith("step_") and not d.endswith(".tmp")
-    ]
-    return max(steps) if steps else None
+    )
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def sweep_tmp(ckpt_dir: str) -> list:
+    """Remove stale ``step_*.tmp`` dirs left by a crashed writer; returns
+    the removed paths. Call at restore time (never concurrently with an
+    in-flight save — i.e. after ``wait_for_saves`` or at process start)."""
+    removed = []
+    if not os.path.isdir(ckpt_dir):
+        return removed
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and d.endswith(".tmp"):
+            path = os.path.join(ckpt_dir, d)
+            shutil.rmtree(path, ignore_errors=True)
+            removed.append(path)
+    return removed
+
+
+def verify(ckpt_dir: str, step: int):
+    """Check a checkpoint step is complete: metadata parses, every manifest
+    entry's file exists with the manifest shape/dtype (npy headers only — no
+    array data is read). Returns ``(ok, reason)``."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    meta_path = os.path.join(path, "metadata.json")
+    try:
+        with open(meta_path) as f:
+            meta = json.load(f)
+    except (OSError, ValueError) as e:
+        return False, f"unreadable metadata.json: {e}"
+    manifest = meta.get("manifest")
+    if not isinstance(manifest, dict) or not manifest:
+        return False, "metadata has no manifest"
+    for key, info in manifest.items():
+        fp = os.path.join(path, info.get("file", ""))
+        try:
+            arr = np.load(fp, mmap_mode="r")  # header-only read
+        except (OSError, ValueError) as e:
+            return False, f"array {key!r} unreadable: {e}"
+        if list(arr.shape) != list(info.get("shape", [])):
+            return False, (f"array {key!r} shape {list(arr.shape)} != "
+                           f"manifest {info.get('shape')}")
+    return True, ""
 
 
 def restore(ckpt_dir: str, step: int, like_tree, shardings=None):
@@ -131,14 +184,28 @@ def restore(ckpt_dir: str, step: int, like_tree, shardings=None):
     matching pytree of jax.sharding.Sharding) is given, device_put each array
     with it — this is where elastic re-sharding happens."""
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
-    with open(os.path.join(path, "metadata.json")) as f:
-        meta = json.load(f)
+    try:
+        with open(os.path.join(path, "metadata.json")) as f:
+            meta = json.load(f)
+    except (OSError, ValueError) as e:
+        raise CheckpointError(
+            f"checkpoint step {step}: unreadable metadata.json ({e})") from e
+    manifest = meta.get("manifest", {})
     flat_like = _flatten(like_tree)
     flat_shard = _flatten(shardings) if shardings is not None else {}
     loaded = {}
     for key, like in flat_like.items():
-        info = meta["manifest"][key]
-        arr = np.load(os.path.join(path, info["file"]))
+        info = manifest.get(key)
+        if info is None:
+            raise CheckpointError(
+                f"checkpoint step {step}: manifest missing key {key!r} "
+                f"(restore-target structure mismatch)")
+        try:
+            arr = np.load(os.path.join(path, info["file"]))
+        except (OSError, ValueError) as e:
+            raise CheckpointError(
+                f"checkpoint step {step}: array {key!r} unreadable "
+                f"({e})") from e
         if shardings is not None and key in flat_shard:
             loaded[key] = jax.device_put(arr, flat_shard[key])
         else:

@@ -140,6 +140,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import time
 import weakref
 from collections import Counter
 from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
@@ -151,6 +152,7 @@ import numpy as np
 from repro.kernels.jet_attention import ops as jet_attention_ops
 from repro.kernels.jet_attention.ops import (collapsed_jet_attention_op,
                                              collapsed_jet_qkv_attention_op)
+from repro.kernels.failures import classify_failure
 from repro.kernels.jet_mlp import ops as jet_mlp_ops
 from repro.kernels.jet_mlp.jet_mlp import ACTIVATION_FNS
 from repro.kernels.jet_mlp.ops import collapsed_jet_layer_op
@@ -183,6 +185,145 @@ _FUSIBLE_DTYPES = (np.dtype(np.float32), np.dtype(np.float16),
 
 def _is_literal(v) -> bool:
     return type(v).__name__ == "Literal"
+
+
+# ---------------------------------------------------------------------------
+# runtime degradation ladder: per-kernel-kind circuit breakers
+# ---------------------------------------------------------------------------
+#
+# Plan-time validation rejects segments the kernels *cannot* express; the
+# breakers below handle segments the kernels *should* run but whose launches
+# fail at runtime (out-of-VMEM, Mosaic/XLA internal errors). Each kernel
+# kind gets one breaker:
+#
+#   closed    — normal operation, kernel calls allowed
+#   open      — a classified runtime failure tripped it; try_fuse skips the
+#               kernel (superblocks delegate to their per-segment fallback,
+#               per-segment kernels return None -> CRULES interpretation)
+#               until the cool-down elapses
+#   half-open — cool-down elapsed; ONE probe call is let through. Success
+#               closes the breaker, another classified failure re-opens it.
+#
+# Breaker state is consulted at *trace* time (try_fuse runs while the plan
+# interprets the jaxpr), so long-lived jit caches pin whichever rung they
+# traced under. Callers that hold compiled artifacts across failures — the
+# operator serving engine — key them by :func:`breaker_epoch` and re-trace
+# when it moves. Failures that only surface *after* tracing (inside a jit'd
+# call) are reported via :func:`record_kernel_failure`, which walks the
+# ladder qkv-superblock -> attention -> mlp when the failing kind is
+# unknown.
+
+BREAKER_KINDS = ("jet_attention_qkv", "jet_attention", "jet_mlp")
+
+
+@dataclasses.dataclass
+class _Breaker:
+    state: str = "closed"  # closed | open | half-open
+    failures: int = 0
+    probes: int = 0
+    opened_at: float = 0.0
+    last_error: str = ""
+
+
+_BREAKERS: Dict[str, _Breaker] = {k: _Breaker() for k in BREAKER_KINDS}
+_BREAKER_COOLDOWN_S = 30.0
+_BREAKER_EPOCH = 0
+# module-level so tests can substitute a fake clock
+_breaker_clock = time.monotonic
+
+
+def breaker_epoch() -> int:
+    """Monotonic counter bumped on every breaker state change. Cache keys
+    derived from it (e.g. the serving engine's compiled step functions) go
+    stale exactly when a re-trace could produce a different plan."""
+    return _BREAKER_EPOCH
+
+
+def _bump_epoch():
+    global _BREAKER_EPOCH
+    _BREAKER_EPOCH += 1
+
+
+def set_breaker_cooldown(seconds: float) -> float:
+    """Set the open -> half-open cool-down; returns the previous value."""
+    global _BREAKER_COOLDOWN_S
+    old, _BREAKER_COOLDOWN_S = _BREAKER_COOLDOWN_S, float(seconds)
+    return old
+
+
+def reset_kernel_health():
+    """Close all breakers and clear their counters (test isolation)."""
+    for br in _BREAKERS.values():
+        br.state, br.failures, br.probes = "closed", 0, 0
+        br.opened_at, br.last_error = 0.0, ""
+    _bump_epoch()
+
+
+def kernel_health() -> Dict[str, Dict[str, Any]]:
+    """Snapshot of every breaker (state/failures/probes/last_error), plus
+    the remaining cool-down for open breakers."""
+    now = _breaker_clock()
+    out = {}
+    for kind, br in _BREAKERS.items():
+        d = dataclasses.asdict(br)
+        d["cooldown_remaining_s"] = (
+            max(0.0, _BREAKER_COOLDOWN_S - (now - br.opened_at))
+            if br.state == "open" else 0.0)
+        out[kind] = d
+    return out
+
+
+def _breaker_allows(kind: str) -> bool:
+    """Gate a kernel call: True when closed, or when an open breaker's
+    cool-down elapsed (transitions to half-open and admits one probe)."""
+    br = _BREAKERS[kind]
+    if br.state == "closed":
+        return True
+    if br.state == "open":
+        if _breaker_clock() - br.opened_at >= _BREAKER_COOLDOWN_S:
+            br.state = "half-open"
+            br.probes += 1
+            _bump_epoch()
+            return True
+        return False
+    return True  # half-open: the probe is in flight
+
+
+def _breaker_success(kind: str):
+    br = _BREAKERS[kind]
+    if br.state != "closed":
+        br.state = "closed"
+        br.last_error = ""
+        _bump_epoch()
+
+
+def _breaker_failure(kind: str, reason: str):
+    br = _BREAKERS[kind]
+    br.failures += 1
+    br.last_error = reason[:300]
+    br.state = "open"
+    br.opened_at = _breaker_clock()
+    _bump_epoch()
+
+
+def record_kernel_failure(exc: Optional[BaseException] = None,
+                          kind: Optional[str] = None) -> Optional[str]:
+    """Report a runtime kernel failure; returns the tripped kind or ``None``
+    when ``exc`` is not kernel-shaped (caller should re-raise).
+
+    With ``kind=None`` (failure surfaced from a jit'd call, origin unknown)
+    the ladder trips the highest still-closed rung first:
+    superblock -> attention -> mlp — each report degrades the plan one more
+    step toward CRULES.
+    """
+    label = classify_failure(exc) if exc is not None else "manual"
+    if label is None:
+        return None
+    if kind is None:
+        kind = next((k for k in BREAKER_KINDS
+                     if _BREAKERS[k].state != "open"), BREAKER_KINDS[-1])
+    _breaker_failure(kind, f"{label}: {exc}" if exc is not None else label)
+    return kind
 
 
 # ---------------------------------------------------------------------------
@@ -599,11 +740,21 @@ class MlpSegment(Segment):
             # would betray the 1e-5 interpreter-match contract — fall back.
             self.fail_reason = f"unsupported dtype {h0.dtype}"
             return None
+        if not _breaker_allows(self.kind):
+            self.fail_reason = "circuit breaker open (jet_mlp kernel)"
+            return None
         lower = [None if is_zero(c) else c for c in lhs.lower]
         top = None if is_zero(lhs.top) else lhs.top
-        t0, tl, tt = collapsed_jet_layer_op(
-            h0, lower, top, w, b, K=K, activation=self.activation,
-        )
+        try:
+            t0, tl, tt = collapsed_jet_layer_op(
+                h0, lower, top, w, b, K=K, activation=self.activation,
+            )
+        except Exception as e:  # noqa: BLE001 — classified below
+            if record_kernel_failure(e, kind=self.kind) is None:
+                raise
+            self.fail_reason = f"kernel failure, breaker tripped ({e})"
+            return None
+        _breaker_success(self.kind)
         if len(head_shape) > 1:  # restore the (H, dh) head axes
             reshape = lambda c: c.reshape(c.shape[:-1] + head_shape)
             t0, tt = reshape(t0), reshape(tt)
@@ -931,15 +1082,26 @@ class AttentionSegment(Segment):
             # broadcasts them onto the kernel's flattened batch grid
             bias = b
 
+        if not _breaker_allows(self.kind):
+            self.fail_reason = "circuit breaker open (jet_attention kernel)"
+            return None
+
         def triple(j):
             lower = [None if is_zero(c) else c for c in j.lower]
             top = None if is_zero(j.top) else j.top
             return (j.primal, lower, top)
 
-        o0, ol, ot = collapsed_jet_attention_op(
-            triple(q), triple(k), triple(v), K=K, mask=mask, scale=scale,
-            bias=bias,
-        )
+        try:
+            o0, ol, ot = collapsed_jet_attention_op(
+                triple(q), triple(k), triple(v), K=K, mask=mask, scale=scale,
+                bias=bias,
+            )
+        except Exception as e:  # noqa: BLE001 — classified below
+            if record_kernel_failure(e, kind=self.kind) is None:
+                raise
+            self.fail_reason = f"kernel failure, breaker tripped ({e})"
+            return None
+        _breaker_success(self.kind)
         out = {self.out_var: _cast_jet(CollapsedJet(o0, list(ol), ot),
                                        self.out_var)}
         out.update(extra)
@@ -1407,6 +1569,9 @@ class QKVAttentionSegment(Segment):
 
     def try_fuse(self, read, K, jaxpr):
         self.fail_reason = ""
+        if not _breaker_allows(self.kind):
+            self.fail_reason = "circuit breaker open (superblock kernel)"
+            return self._fall_back(read, K, jaxpr)
         h = read(self.hidden_var)
         if h.is_constant():
             self.fail_reason = "jet-constant hidden bundle (primal path)"
@@ -1504,10 +1669,17 @@ class QKVAttentionSegment(Segment):
 
         lower = [None if is_zero(c) else c for c in h.lower]
         top = None if is_zero(h.top) else h.top
-        o0, ol, ot = collapsed_jet_qkv_attention_op(
-            (h.primal, lower, top), wq, wk, wv, wo, K=K, mask=mask,
-            scale=scale, bias=bias, rope=rope, qkv_bias=qkv_bias,
-        )
+        try:
+            o0, ol, ot = collapsed_jet_qkv_attention_op(
+                (h.primal, lower, top), wq, wk, wv, wo, K=K, mask=mask,
+                scale=scale, bias=bias, rope=rope, qkv_bias=qkv_bias,
+            )
+        except Exception as e:  # noqa: BLE001 — classified below
+            if record_kernel_failure(e, kind=self.kind) is None:
+                raise
+            self.fail_reason = f"kernel failure, breaker tripped ({e})"
+            return self._fall_back(read, K, jaxpr)
+        _breaker_success(self.kind)
         out = {self.out_var: _cast_jet(CollapsedJet(o0, list(ol), ot),
                                        self.out_var)}
         out.update(extra)
@@ -2135,6 +2307,11 @@ class PlanReport:
     cache_misses: int = 0
     mesh_axes: Tuple[Tuple[str, int], ...] = ()
     data_shards: int = 1
+    # runtime-degradation-ladder state at explain time (kernel_health()
+    # snapshot): an open/half-open breaker explains why segments that pass
+    # plan-time validation still report "circuit breaker open" fallbacks
+    breakers: Dict[str, Dict[str, Any]] = dataclasses.field(
+        default_factory=dict)
     _index: Dict[Tuple[int, int, Tuple[bool, ...]], JaxprReport] = \
         dataclasses.field(default_factory=dict)
 
@@ -2174,6 +2351,14 @@ class PlanReport:
             axes = ", ".join(f"{a}={n}" for a, n in self.mesh_axes)
             lines[0] += (f" [mesh {axes}: x{self.data_shards} data shards, "
                          f"{self.global_fused_count()} global launches]")
+        for kind, br in self.breakers.items():
+            if br.get("state", "closed") == "closed":
+                continue
+            why = f" — {br['last_error']}" if br.get("last_error") else ""
+            lines.append(
+                f"breaker {kind}: {br['state']} "
+                f"({br['failures']} failure(s), {br['probes']} probe(s), "
+                f"{br['cooldown_remaining_s']:.1f}s cool-down left){why}")
         for e in self.jaxprs:
             prop = sum(e.signature)
             lines.append(
@@ -2280,4 +2465,5 @@ def explain(f, *args, K: int = 2, directions=None,
     after = plan_cache_info()
     report.cache_hits = after["hits"] - before["hits"]
     report.cache_misses = after["misses"] - before["misses"]
+    report.breakers = kernel_health()
     return report

@@ -169,6 +169,47 @@ def value_grad_laplacian(f: Callable, x: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Divergence of a vector field
+# ---------------------------------------------------------------------------
+
+
+def divergence(f: Callable, x: jax.Array, method: str = "collapsed",
+               backend: Optional[str] = None) -> jax.Array:
+    """Exact divergence ``sum_i d f_i / d x_i`` of a vector field
+    ``f: (..., D) -> (..., D)`` (rows independent, like every operator here).
+
+    First-order, but served through the same machinery as the jet operators
+    so heterogeneous operator traffic (the serving engine) shares one
+    propagation path: a collapsed 2-jet along basis directions already
+    carries the full Jacobian in its lower coefficients — ``lower[0][r]`` is
+    ``J @ e_r`` — and the divergence is their diagonal trace. The K=2 top
+    lane rides along unused; for a standalone divergence 'nested' (D JVPs)
+    is the lean choice, collapsed is the *shared-pass* choice.
+    """
+    D = x.shape[-1]
+    eye = jnp.eye(D, dtype=x.dtype)
+    if method == "nested":
+        _no_kernel_backend(method, backend)
+        cols = jax.vmap(
+            lambda e: jax.jvp(f, (x,), (jnp.broadcast_to(e, x.shape),))[1]
+        )(eye)  # (D, ..., D): column r = J @ e_r
+        return jnp.einsum("r...r->...", cols)
+    dirs = _broadcast_directions(eye, x)
+    if method == "standard":
+        _no_kernel_backend(method, backend)
+        _, coeffs = jet_fan(f, x, dirs, 2)
+        jac = coeffs[0]  # (R, ..., D)
+    elif method == "collapsed":
+        _, lower, _ = collapsed_fan(f, x, dirs, 2, backend=backend)
+        jac = lower[0]
+    else:  # 'rewrite' collapses only the top-order sum — no Jacobian lane
+        raise ValueError(
+            f"divergence supports methods ('nested', 'standard', "
+            f"'collapsed'), got {method!r}")
+    return jnp.einsum("r...r->...", jac)
+
+
+# ---------------------------------------------------------------------------
 # Weighted Laplacian (section 3.2, eq. 8): Tr(sigma sigma^T d^2 f)
 # ---------------------------------------------------------------------------
 

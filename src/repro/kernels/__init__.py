@@ -14,6 +14,10 @@
                       keys are namespaced by kernel name.
 ``flash_attention/`` — streaming (primal-only) attention used by the
                       serving/training stacks.
+``failures``        — runtime kernel-failure classification
+                      (RESOURCE_EXHAUSTED / XlaRuntimeError / injected
+                      faults) feeding the degradation-ladder circuit
+                      breakers in :mod:`repro.core.offload`.
 
 Users normally never call the jet kernels directly:
 ``operators.<op>(f, x, method="collapsed", backend="pallas")`` routes both
@@ -27,3 +31,6 @@ interpreter through :mod:`repro.core.partitions` /
 :mod:`repro.kernels.jet_attention.series`, so kernels and interpreter cannot
 drift apart.
 """
+
+from .failures import (InjectedKernelFault, classify_failure,  # noqa: F401,E402
+                       is_retryable)

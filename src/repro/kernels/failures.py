@@ -1,0 +1,92 @@
+"""Runtime kernel-failure classification for the degradation ladder.
+
+Accelerator kernels fail at *runtime* in ways plan-time validation cannot
+see: an out-of-VMEM launch (``RESOURCE_EXHAUSTED``), a Mosaic/XLA internal
+error, a driver hiccup. The serving stack must treat those as *degradable*
+(fall down the superblock -> per-segment -> CRULES ladder and retry) while
+still letting genuine programming errors (shape bugs, ``TypeError``\\ s)
+propagate loudly.
+
+:func:`classify_failure` is the single policy point: it maps an exception to
+a failure label (``"resource_exhausted"``, ``"xla_runtime"``,
+``"injected"``) or ``None`` for "not a kernel failure — re-raise". The
+circuit breakers in :mod:`repro.core.offload` and the retry loop in
+:mod:`repro.serve.operator_engine` both route through it.
+
+:class:`InjectedKernelFault` is the deterministic stand-in raised by the
+fault-injection harness (:mod:`repro.testing.faults`) so chaos tests can
+exercise the exact same classification path as a real ``XlaRuntimeError``
+without needing to provoke one on CI hardware.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+
+class InjectedKernelFault(RuntimeError):
+    """Synthetic kernel failure raised by the fault-injection harness.
+
+    Carries a realistic status message (e.g. ``"RESOURCE_EXHAUSTED: ..."``)
+    so message-pattern classification is exercised end-to-end.
+    """
+
+
+# Exception type names that mark a failure as coming from the XLA/Pallas
+# runtime rather than user code. Matched against the full MRO by name so we
+# never import jaxlib internals (their module paths move between releases).
+_RUNTIME_TYPE_NAMES = frozenset({
+    "XlaRuntimeError",
+    "JaxRuntimeError",
+    "InternalError",
+    "ResourceExhaustedError",
+    "DeadlineExceededError",
+    "UnavailableError",
+})
+
+# (substring, label) — checked case-insensitively, first match wins.
+_MESSAGE_PATTERNS = (
+    ("resource_exhausted", "resource_exhausted"),
+    ("out of memory", "resource_exhausted"),
+    ("vmem", "resource_exhausted"),
+    ("oom", "resource_exhausted"),
+    ("deadline_exceeded", "xla_runtime"),
+    ("mosaic", "xla_runtime"),
+    ("internal:", "xla_runtime"),
+    ("unavailable:", "xla_runtime"),
+)
+
+#: Labels worth retrying after degradation — the resource may free up, and
+#: the degraded plan avoids the failing launch shape entirely.
+RETRYABLE = frozenset({"resource_exhausted", "xla_runtime", "injected"})
+
+
+def _message_label(exc: BaseException) -> Optional[str]:
+    msg = str(exc).lower()
+    for pat, label in _MESSAGE_PATTERNS:
+        if pat in msg:
+            return label
+    return None
+
+
+def classify_failure(exc: BaseException) -> Optional[str]:
+    """Classify ``exc`` as a kernel runtime failure, or ``None``.
+
+    ``None`` means "not kernel-shaped": the caller must re-raise instead of
+    degrading, so programming errors never silently vanish into a fallback
+    plan. A non-``Exception`` (``KeyboardInterrupt``, ...) is never
+    classified.
+    """
+    if not isinstance(exc, Exception):
+        return None
+    if isinstance(exc, InjectedKernelFault):
+        return _message_label(exc) or "injected"
+    mro_names = {c.__name__ for c in type(exc).__mro__}
+    if mro_names & _RUNTIME_TYPE_NAMES:
+        return _message_label(exc) or "xla_runtime"
+    return None
+
+
+def is_retryable(label: Optional[str]) -> bool:
+    """Whether a :func:`classify_failure` label is worth a degraded retry."""
+    return label in RETRYABLE

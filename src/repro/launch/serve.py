@@ -1,7 +1,36 @@
-"""Production serving launcher: continuous-batching engine over the
+"""Production serving launcher: continuous-batching engines over the
 production mesh (or host devices with --smoke).
 
+Token-decode serving (the LM engine)::
+
     python -m repro.launch.serve --arch qwen2-1.5b --smoke --requests 16
+
+Derivative serving (the fault-tolerant operator engine)::
+
+    python -m repro.launch.serve --operator-server --requests 24
+    python -m repro.launch.serve --operator-server --chaos   # fault drill
+
+Operator-server quickstart
+--------------------------
+
+The operator server batches heterogeneous derivative requests (laplacian /
+biharmonic / divergence / jet with per-request K) against a served field.
+Every request ends in a terminal status:
+
+    DONE       result ready (``req.result``)
+    REJECTED   failed validation or load-shed (``req.retry_after`` set)
+    TIMEOUT    per-request deadline passed (queued or mid-flight)
+    NONFINITE  the evaluated bundle went NaN/Inf (quarantined per-slot)
+    ERROR      unclassified failure after the retry budget
+
+Robustness knobs (flags below map 1:1 onto ``OperatorEngine`` kwargs):
+``--max-queue`` bounds the admission queue (backpressure), ``--deadline-s``
+sets the default per-request deadline, ``--chunk``/``--slots`` size the
+continuous batch. Runtime kernel failures trip the degradation ladder in
+:mod:`repro.core.offload` (superblock -> per-segment -> CRULES) with
+cool-down recovery probes; ``--chaos`` runs the launcher under the full
+fault-injection menu from :mod:`repro.testing.faults` to drill exactly
+that path.
 """
 
 from __future__ import annotations
@@ -9,27 +38,18 @@ from __future__ import annotations
 import argparse
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import ARCHS, get_config, get_smoke_config
 from repro.distributed import sharding as shd
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import get_model
 from repro.serve.engine import Request, ServeEngine
+from repro.serve.operator_engine import OperatorEngine, OperatorRequest
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2-1.5b",
-                    choices=[a for a in ARCHS if a != "mlp-pinn"])
-    ap.add_argument("--smoke", action="store_true", default=True)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--max-len", type=int, default=128)
-    ap.add_argument("--requests", type=int, default=16)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--production-mesh", action="store_true")
-    ap.add_argument("--multi-pod", action="store_true")
-    args = ap.parse_args()
-
+def _serve_lm(args):
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = get_model(cfg)
     mesh = (make_production_mesh(multi_pod=args.multi_pod)
@@ -50,6 +70,90 @@ def main():
                                   max_new_tokens=args.max_new))
         engine.run_until_done()
         print(engine.stats())
+
+
+def _serve_operators(args):
+    # the served field: the mlp-pinn smoke config's scalar network, plus a
+    # companion vector field for divergence traffic
+    cfg = get_smoke_config("mlp-pinn")
+    from repro.models import mlp as mlp_model
+
+    params = mlp_model.init(jax.random.PRNGKey(0), cfg)
+    f = lambda x: mlp_model.apply(params, x, cfg)
+    D = cfg.mlp_sizes[0]
+    WV = jax.random.normal(jax.random.PRNGKey(7), (D, D)) / jnp.sqrt(D)
+    F = lambda x: jnp.tanh(x) @ WV
+
+    engine = OperatorEngine(
+        f, vector_field=F, backend=args.backend, max_slots=args.slots,
+        chunk=args.chunk, max_queue=args.max_queue,
+        default_deadline_s=args.deadline_s)
+    rng = np.random.default_rng(0)
+    mix = [("laplacian", 0), ("biharmonic", 0), ("divergence", 0),
+           ("jet", 4)]
+
+    def submit_all():
+        for i in range(args.requests):
+            op, K = mix[i % len(mix)]
+            pts = rng.normal(size=(int(rng.integers(1, args.points + 1)),
+                                   D)).astype(np.float32) * 0.5
+            engine.submit(OperatorRequest(rid=i, op=op, points=pts, K=K))
+
+    if args.chaos:
+        from repro.testing import faults
+
+        with faults.kernel_raise(n=2, where="step"), \
+                faults.nan_inject(rids={1}), \
+                faults.slow_step(seconds=0.02):
+            submit_all()
+            engine.run_until_done()
+    else:
+        submit_all()
+        engine.run_until_done()
+    stats = engine.stats()
+    print({k: v for k, v in stats.items() if k != "breakers"})
+    open_breakers = {k: v for k, v in stats["breakers"].items()
+                     if v["state"] != "closed"}
+    if open_breakers:
+        print("breakers:", open_breakers)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b",
+                    choices=[a for a in ARCHS if a != "mlp-pinn"])
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    # operator-server mode + robustness knobs
+    ap.add_argument("--operator-server", action="store_true",
+                    help="serve derivative-operator traffic instead of "
+                         "token decode")
+    ap.add_argument("--backend", default="pallas",
+                    choices=["pallas", "pallas-per-segment", "interpreter"])
+    ap.add_argument("--points", type=int, default=32,
+                    help="max collocation points per request")
+    ap.add_argument("--chunk", type=int, default=16,
+                    help="points per slot per step")
+    ap.add_argument("--max-queue", type=int, default=64,
+                    help="admission-queue bound (load-shed beyond it)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="default per-request deadline in seconds")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run under the fault-injection menu "
+                         "(kernel-raise, NaN-inject, slow-step)")
+    args = ap.parse_args()
+    if args.backend == "interpreter":
+        args.backend = None
+
+    if args.operator_server:
+        _serve_operators(args)
+    else:
+        _serve_lm(args)
 
 
 if __name__ == "__main__":

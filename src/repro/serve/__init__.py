@@ -1,1 +1,12 @@
+"""Serving engines: continuous batching for token decode and for
+derivative-operator traffic, with a shared metrics gauge schema.
+
+* :class:`ServeEngine` — vLLM-style slot-batched token decode.
+* :class:`OperatorEngine` — fault-tolerant derivative server (deadlines,
+  backpressure, non-finite quarantine, kernel degradation ladder); see
+  :mod:`repro.serve.operator_engine` for the request lifecycle.
+"""
+
 from .engine import Request, ServeEngine  # noqa: F401
+from .operator_engine import (OperatorEngine, OperatorRequest,  # noqa: F401
+                              TERMINAL)

@@ -33,6 +33,8 @@ class Request:
     eos_id: Optional[int] = None
     # filled by the engine:
     output: List[int] = dataclasses.field(default_factory=list)
+    status: str = "NEW"  # NEW -> QUEUED -> RUNNING -> DONE | REJECTED
+    error: str = ""
     submitted_at: float = 0.0
     finished_at: Optional[float] = None
 
@@ -72,9 +74,34 @@ class ServeEngine:
 
     # --- client API ---------------------------------------------------------
 
-    def submit(self, req: Request):
+    def submit(self, req: Request) -> str:
+        """Admit ``req`` or reject it with a terminal per-request status.
+
+        Invalid requests must fail *here*, not in the slot: an empty prompt
+        would crash ``_Slot.__init__`` and a prompt that cannot finish
+        within ``max_len`` would silently overflow its slot positions
+        (stale-KV masking keys on ``k_pos <= pos``). Returns the request's
+        status ("QUEUED" or "REJECTED"); rejected requests land in ``done``
+        with ``error`` set.
+        """
         req.submitted_at = time.perf_counter()
+        if not req.prompt:
+            return self._reject(req, "empty prompt")
+        need = len(req.prompt) + req.max_new_tokens
+        if need > self.max_len:
+            return self._reject(
+                req, f"prompt ({len(req.prompt)}) + max_new_tokens "
+                     f"({req.max_new_tokens}) = {need} exceeds the engine's "
+                     f"max_len ({self.max_len})")
+        req.status = "QUEUED"
         self.queue.append(req)
+        return req.status
+
+    def _reject(self, req: Request, why: str) -> str:
+        req.status, req.error = "REJECTED", why
+        req.finished_at = time.perf_counter()
+        self.done[req.rid] = req
+        return req.status
 
     def run_until_done(self, max_steps: int = 100_000):
         while (self.queue or any(self.slots)) and self.steps < max_steps:
@@ -103,6 +130,7 @@ class ServeEngine:
         for b in range(self.max_batch):
             if self.slots[b] is None and self.queue:
                 req = self.queue.pop(0)
+                req.status = "RUNNING"
                 self.slots[b] = _Slot(req)
                 self._reset_slot_state(b)
 
@@ -137,6 +165,7 @@ class ServeEngine:
             slot.generated += 1
             eos = slot.req.eos_id is not None and tok == slot.req.eos_id
             if eos or slot.generated >= slot.req.max_new_tokens:
+                slot.req.status = "DONE"
                 slot.req.finished_at = time.perf_counter()
                 self.done[slot.req.rid] = slot.req
                 self.slots[b] = None
@@ -144,11 +173,18 @@ class ServeEngine:
     # --- metrics -------------------------------------------------------------
 
     def stats(self):
+        from repro.serve.metrics import latency_summary
+
         lat = [r.finished_at - r.submitted_at for r in self.done.values()
-               if r.finished_at]
+               if r.finished_at and r.status == "DONE"]
         return {
             "steps": self.steps,
             "tokens": self.tokens_processed,
             "completed": len(self.done),
+            "rejected": sum(r.status == "REJECTED"
+                            for r in self.done.values()),
+            "queue_depth": len(self.queue),
+            "active_slots": sum(s is not None for s in self.slots),
             "mean_latency_s": float(np.mean(lat)) if lat else None,
+            **latency_summary(lat),
         }

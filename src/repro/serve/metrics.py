@@ -1,0 +1,32 @@
+"""Shared serving metrics: latency percentiles and queue-depth gauges.
+
+Both engines (token decode in :mod:`repro.serve.engine`, derivative traffic
+in :mod:`repro.serve.operator_engine`) report the same gauge set so one
+dashboard schema covers the fleet:
+
+* ``p50_ms`` / ``p99_ms`` / ``mean_ms`` — end-to-end request latency
+  (submit -> terminal status) over completed requests;
+* ``queue_depth`` — requests admitted but not yet slotted;
+* ``active_slots`` — slots currently serving a request.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+
+def latency_summary(latencies_s: Sequence[float]) -> Dict[str, Optional[float]]:
+    """p50/p99/mean in milliseconds over per-request latencies (seconds).
+
+    Empty input yields ``None`` gauges (a dashboard gap, not a fake zero).
+    """
+    if not len(latencies_s):
+        return {"p50_ms": None, "p99_ms": None, "mean_ms": None}
+    ms = np.asarray(latencies_s, dtype=np.float64) * 1e3
+    return {
+        "p50_ms": float(np.percentile(ms, 50)),
+        "p99_ms": float(np.percentile(ms, 99)),
+        "mean_ms": float(ms.mean()),
+    }

@@ -1,0 +1,457 @@
+"""Fault-tolerant continuous-batching derivative server.
+
+The decode engine (:mod:`repro.serve.engine`) batches *token* traffic; this
+engine batches *operator* traffic: clients submit collocation-point payloads
+against a served field and ask for a differential operator over them —
+``laplacian`` / ``biharmonic`` / ``divergence`` / ``jet`` (pure K-th-order
+directional trace), with a per-request ``K`` where the operator admits one.
+
+Batching model
+--------------
+
+Requests are bucketed by ``(op, K, D)`` — the static shape signature of one
+compiled step — and each bucket owns ``max_slots`` slots. Every engine step,
+each occupied slot contributes its next window of ``chunk`` points to a
+single jit'd evaluation of shape ``(max_slots * chunk, D)``; requests larger
+than one window stay resident across steps and requests join/leave at step
+granularity (vLLM-style continuous batching, at collocation-point
+granularity). All served fields are row-independent (the PINN convention),
+so co-batched requests cannot contaminate each other; short windows are
+padded by repeating the request's last point, empty slots by a constant.
+The kernel autotune cache and the offload plan cache are process-global, so
+every request in a bucket shares one compiled step and one tuned kernel
+configuration.
+
+Robustness layer
+----------------
+
+* **Admission control / backpressure** — ``submit`` validates the request
+  (operator, K, payload shape) and load-sheds when the bounded queue is
+  full: ``REJECTED`` with a ``retry_after`` estimate derived from the
+  step-time EWMA and the backlog.
+* **Deadlines** — a per-request relative deadline (or the engine default);
+  expired requests are evicted from queue or slot with status ``TIMEOUT``
+  at the next step boundary.
+* **Non-finite quarantine** — the jit'd step returns a per-slot
+  ``isfinite`` reduction alongside the results; a NaN/Inf bundle fails only
+  the offending request (``NONFINITE``), its batch-mates' windows commit
+  normally.
+* **Kernel degradation ladder** — a classified runtime kernel failure
+  (see :mod:`repro.kernels.failures`) trips the circuit breakers in
+  :mod:`repro.core.offload` via :func:`record_kernel_failure`, the step is
+  retried after exponential backoff with deterministic jitter, and the
+  compiled step is re-traced (step functions are cached per
+  ``breaker_epoch``) so the retry runs the degraded plan
+  (superblock -> per-segment -> CRULES). Unclassified errors terminate the
+  batch's requests with ``ERROR`` instead of crashing the engine.
+
+Request lifecycle::
+
+    NEW -> QUEUED -> RUNNING -> DONE
+                 \\-> REJECTED (validation / load shed, retry_after set)
+                 \\-> TIMEOUT  (deadline passed in queue or slot)
+                 \\-> NONFINITE (quarantined by the isfinite reduction)
+                 \\-> ERROR    (unclassified failure, retries exhausted)
+
+Quickstart::
+
+    engine = OperatorEngine(f, vector_field=F, backend="pallas")
+    engine.submit(OperatorRequest(rid=0, op="laplacian", points=xs))
+    engine.submit(OperatorRequest(rid=1, op="biharmonic", points=ys,
+                                  deadline_s=0.5))
+    done = engine.run_until_done()
+    done[0].result  # (N,) array, or status != "DONE" with .error set
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import offload
+from repro.core import operators as ops
+from repro.core.collapse import collapsed_fan
+
+QUEUED = "QUEUED"
+RUNNING = "RUNNING"
+DONE = "DONE"
+REJECTED = "REJECTED"
+TIMEOUT = "TIMEOUT"
+NONFINITE = "NONFINITE"
+ERROR = "ERROR"
+#: statuses a request can end in (everything except QUEUED/RUNNING)
+TERMINAL = frozenset({DONE, REJECTED, TIMEOUT, NONFINITE, ERROR})
+
+#: operator name -> fixed jet order (None: per-request K)
+OPERATORS: Dict[str, Optional[int]] = {
+    "laplacian": 2,
+    "biharmonic": 4,
+    "divergence": 2,
+    "jet": None,  # K in {2, 4}: pure K-th-order basis-directional trace
+}
+
+
+@dataclasses.dataclass
+class OperatorRequest:
+    rid: int
+    op: str
+    points: Any  # (N, D) array-like collocation payload
+    K: int = 0  # 0 -> the operator's default order
+    deadline_s: Optional[float] = None  # relative; None -> engine default
+    # filled by the engine:
+    status: str = "NEW"
+    error: str = ""
+    retry_after: Optional[float] = None  # set on load-shed REJECTED
+    result: Optional[np.ndarray] = None  # (N,) float32 when DONE
+    submitted_at: float = 0.0
+    finished_at: Optional[float] = None
+    deadline_at: Optional[float] = None
+
+
+class _Slot:
+    __slots__ = ("req", "offset")
+
+    def __init__(self, req: OperatorRequest):
+        self.req = req
+        self.offset = 0  # points already evaluated
+
+
+@dataclasses.dataclass
+class _Bucket:
+    key: Tuple[str, int, int]  # (op, K, D)
+    slots: List[Optional[_Slot]]
+
+
+class OperatorEngine:
+    """Continuous-batching derivative server over row-independent fields.
+
+    ``f``: the served scalar field ``(B, D) -> (B,)``; ``vector_field``
+    (optional) a ``(B, D) -> (B, D)`` field for ``divergence`` requests.
+    ``backend`` is the collapsed-jet execution backend ("pallas",
+    "pallas-per-segment", or None for the CRULES interpreter).
+    """
+
+    def __init__(self, f: Callable, *, vector_field: Optional[Callable] = None,
+                 backend: Optional[str] = "pallas", max_slots: int = 4,
+                 chunk: int = 32, max_queue: int = 64,
+                 default_deadline_s: Optional[float] = None,
+                 max_step_retries: int = 4, backoff_base_s: float = 0.02,
+                 backoff_cap_s: float = 0.5):
+        self.f = f
+        self.vector_field = vector_field
+        self.backend = backend
+        self.max_slots = max_slots
+        self.chunk = chunk
+        self.max_queue = max_queue
+        self.default_deadline_s = default_deadline_s
+        self.max_step_retries = max_step_retries
+        self.backoff_base_s = backoff_base_s
+        self.backoff_cap_s = backoff_cap_s
+
+        self.queue: List[OperatorRequest] = []
+        self.buckets: Dict[Tuple[str, int, int], _Bucket] = {}
+        self.done: Dict[int, OperatorRequest] = {}
+        # compiled step per (bucket key, breaker epoch): a breaker state
+        # change invalidates the trace (try_fuse consults breakers at trace
+        # time), so stale epochs are dropped and the bucket re-traces onto
+        # the current rung of the degradation ladder
+        self._compiled: Dict[Tuple[Tuple[str, int, int], int], Any] = {}
+        self.steps = 0
+        self.points_processed = 0
+        self.batch_retries = 0
+        self.crashed_batches = 0
+        self.quarantined = 0
+        self.timeouts = 0
+        self.load_shed = 0
+        self._busy_s = 0.0
+        self._step_ewma: Optional[float] = None
+
+    # --- client API ---------------------------------------------------------
+
+    def submit(self, req: OperatorRequest) -> str:
+        """Validate and enqueue ``req``; returns its status. Invalid or
+        load-shed requests land in ``done`` as ``REJECTED`` (with
+        ``retry_after`` set for shed ones)."""
+        now = time.perf_counter()
+        req.submitted_at = now
+        why = self._validate(req)
+        if why is not None:
+            return self._finish(req, REJECTED, error=why, now=now)
+        if len(self.queue) >= self.max_queue:
+            req.retry_after = self._retry_after()
+            self.load_shed += 1
+            return self._finish(
+                req, REJECTED, now=now,
+                error=f"queue full ({self.max_queue} deep); "
+                      f"retry after ~{req.retry_after:.3f}s")
+        pts = np.asarray(req.points, dtype=np.float32)
+        req.points = pts
+        req.result = np.full((pts.shape[0],), np.nan, np.float32)
+        ddl = (req.deadline_s if req.deadline_s is not None
+               else self.default_deadline_s)
+        req.deadline_at = None if ddl is None else now + ddl
+        req.status = QUEUED
+        self.queue.append(req)
+        return req.status
+
+    def run_until_done(self, max_steps: int = 100_000):
+        while (self.queue or self._active()) and self.steps < max_steps:
+            self.step()
+        return self.done
+
+    # --- admission / lifecycle ----------------------------------------------
+
+    def _validate(self, req: OperatorRequest) -> Optional[str]:
+        if req.op not in OPERATORS:
+            return (f"unknown operator {req.op!r} "
+                    f"(supported: {sorted(OPERATORS)})")
+        fixed_k = OPERATORS[req.op]
+        if fixed_k is None:
+            if req.K not in (2, 4):
+                return f"op 'jet' needs K in (2, 4), got K={req.K}"
+        elif req.K not in (0, fixed_k):
+            return f"op {req.op!r} has fixed order K={fixed_k}, got {req.K}"
+        if req.op == "divergence" and self.vector_field is None:
+            return "divergence needs a vector field; engine has none"
+        if req.deadline_s is not None and req.deadline_s <= 0:
+            return f"deadline_s must be positive, got {req.deadline_s}"
+        try:
+            pts = np.asarray(req.points, dtype=np.float32)
+        except (TypeError, ValueError) as e:
+            return f"points not array-convertible: {e}"
+        if pts.ndim != 2 or 0 in pts.shape:
+            return f"points must be non-empty (N, D), got shape {pts.shape}"
+        return None
+
+    def _bucket_key(self, req: OperatorRequest) -> Tuple[str, int, int]:
+        K = OPERATORS[req.op] or req.K
+        return (req.op, K, int(req.points.shape[1]))
+
+    def _finish(self, req: OperatorRequest, status: str, error: str = "",
+                now: Optional[float] = None) -> str:
+        req.status, req.error = status, error
+        req.finished_at = now if now is not None else time.perf_counter()
+        self.done[req.rid] = req
+        return status
+
+    def _active(self) -> int:
+        return sum(s is not None for b in self.buckets.values()
+                   for s in b.slots)
+
+    def _expire(self, now: float):
+        """Deadline pass: TIMEOUT queued requests and evict expired slots
+        (step-granularity eviction — a slot never blocks the batch)."""
+
+        def expired(r):
+            return r.deadline_at is not None and now >= r.deadline_at
+
+        keep = []
+        for req in self.queue:
+            if expired(req):
+                self.timeouts += 1
+                self._finish(req, TIMEOUT, now=now,
+                             error="deadline passed while queued")
+            else:
+                keep.append(req)
+        self.queue = keep
+        for bucket in self.buckets.values():
+            for i, slot in enumerate(bucket.slots):
+                if slot is not None and expired(slot.req):
+                    self.timeouts += 1
+                    self._finish(
+                        slot.req, TIMEOUT, now=now,
+                        error=f"deadline passed mid-flight "
+                              f"({slot.offset}/{len(slot.req.points)} "
+                              f"points done)")
+                    bucket.slots[i] = None
+
+    def _admit(self):
+        remaining = []
+        for req in self.queue:
+            key = self._bucket_key(req)
+            bucket = self.buckets.get(key)
+            if bucket is None:
+                bucket = self.buckets[key] = _Bucket(
+                    key, [None] * self.max_slots)
+            for i, s in enumerate(bucket.slots):
+                if s is None:
+                    bucket.slots[i] = _Slot(req)
+                    req.status = RUNNING
+                    break
+            else:
+                remaining.append(req)  # bucket full; stays queued
+        self.queue = remaining
+
+    # --- the jit'd bucket step ----------------------------------------------
+
+    def _build_compute(self, key: Tuple[str, int, int]):
+        op, K, D = key
+        f = self.vector_field if op == "divergence" else self.f
+        backend, slots = self.backend, self.max_slots
+
+        def compute(x):  # (max_slots * chunk, D)
+            if op == "laplacian":
+                out = ops.laplacian(f, x, method="collapsed", backend=backend)
+            elif op == "biharmonic":
+                out = ops.biharmonic(f, x, method="collapsed",
+                                     backend=backend)
+            elif op == "divergence":
+                out = ops.divergence(f, x, method="collapsed",
+                                     backend=backend)
+            else:  # "jet": sum_r <d^K f, e_r^(x)K>
+                eye = jnp.eye(D, dtype=x.dtype)
+                dirs = jnp.broadcast_to(
+                    eye.reshape(D, 1, D), (D,) + x.shape)
+                _, _, out = collapsed_fan(f, x, dirs, K, backend=backend)
+            # per-slot quarantine flag: a non-finite bundle fails only its
+            # own slot's request, never the batch
+            finite = jnp.isfinite(out).reshape(slots, -1).all(axis=1)
+            return out, finite
+
+        return compute
+
+    def _step_fn(self, key: Tuple[str, int, int]):
+        epoch = offload.breaker_epoch()
+        fn = self._compiled.get((key, epoch))
+        if fn is None:
+            # drop this bucket's stale-epoch traces (they pin the old rung)
+            self._compiled = {kk: v for kk, v in self._compiled.items()
+                              if kk[0] != key}
+            self._compiled[(key, epoch)] = fn = jax.jit(
+                self._build_compute(key))
+        return fn
+
+    def _execute(self, fn, x):
+        """Invoke one compiled bucket step. A dedicated seam so the fault
+        harness (:mod:`repro.testing.faults`) can wrap it: slow-step sleeps
+        here, runtime kernel-raise raises here."""
+        out, finite = fn(x)
+        return np.asarray(out), np.asarray(finite)
+
+    def _gather(self, bucket: _Bucket) -> np.ndarray:
+        _, _, D = bucket.key
+        x = np.full((self.max_slots * self.chunk, D), 0.5, np.float32)
+        for i, slot in enumerate(bucket.slots):
+            if slot is None:
+                continue
+            win = slot.req.points[slot.offset:slot.offset + self.chunk]
+            row = i * self.chunk
+            x[row:row + len(win)] = win
+            if len(win) < self.chunk:  # repeat-pad: finiteness-neutral
+                x[row + len(win):row + self.chunk] = win[-1]
+        return x
+
+    def _scatter(self, bucket: _Bucket, out: np.ndarray, finite: np.ndarray,
+                 now: float):
+        for i, slot in enumerate(bucket.slots):
+            if slot is None:
+                continue
+            req = slot.req
+            if not bool(finite[i]):
+                self.quarantined += 1
+                self._finish(
+                    req, NONFINITE, now=now,
+                    error="non-finite values in the evaluated derivative "
+                          "bundle (quarantined; batch-mates unaffected)")
+                bucket.slots[i] = None
+                continue
+            n = min(self.chunk, len(req.points) - slot.offset)
+            row = i * self.chunk
+            req.result[slot.offset:slot.offset + n] = out[row:row + n]
+            slot.offset += n
+            self.points_processed += n
+            if slot.offset >= len(req.points):
+                self._finish(req, DONE, now=now)
+                bucket.slots[i] = None
+
+    def _backoff(self, attempt: int) -> float:
+        """Exponential backoff with deterministic jitter (no RNG state: the
+        jitter is a hash fraction of the attempt, reproducible in tests)."""
+        base = min(self.backoff_cap_s, self.backoff_base_s * (2 ** attempt))
+        jitter = ((attempt * 2654435761) % 997) / 997.0  # [0, 1)
+        return base * (1.0 + jitter)
+
+    def _run_bucket(self, bucket: _Bucket, now: float):
+        for attempt in range(self.max_step_retries + 1):
+            fn = self._step_fn(bucket.key)  # re-keyed by breaker epoch
+            x = self._gather(bucket)
+            try:
+                out, finite = self._execute(fn, x)
+            except Exception as e:  # noqa: BLE001 — classified below
+                tripped = offload.record_kernel_failure(e)
+                if tripped is not None and attempt < self.max_step_retries:
+                    self.batch_retries += 1
+                    time.sleep(self._backoff(attempt))
+                    continue
+                # unclassified, or the whole ladder is exhausted: fail the
+                # batch's requests, keep the engine alive
+                self.crashed_batches += 1
+                for i, slot in enumerate(bucket.slots):
+                    if slot is not None:
+                        self._finish(slot.req, ERROR, now=now,
+                                     error=f"step failed after "
+                                           f"{attempt} retr(ies): {e}")
+                        bucket.slots[i] = None
+                return
+            self._scatter(bucket, out, finite, now)
+            return
+
+    def step(self) -> bool:
+        """One engine step: expire deadlines, admit from the queue, run every
+        occupied bucket. Returns whether any bucket ran."""
+        t0 = time.perf_counter()
+        self._expire(t0)
+        self._admit()
+        ran = False
+        for bucket in list(self.buckets.values()):
+            if not any(s is not None for s in bucket.slots):
+                continue
+            self._run_bucket(bucket, time.perf_counter())
+            ran = True
+        if ran:
+            self.steps += 1
+            dt = time.perf_counter() - t0
+            self._busy_s += dt
+            self._step_ewma = (dt if self._step_ewma is None
+                               else 0.8 * self._step_ewma + 0.2 * dt)
+        return ran
+
+    def _retry_after(self) -> float:
+        """Load-shed hint: backlog drained at one bucket-round per step."""
+        per_round = self.max_slots * max(len(self.buckets), 1)
+        rounds = math.ceil((len(self.queue) + 1) / per_round)
+        return max(0.005, rounds * (self._step_ewma or 0.01))
+
+    # --- metrics -------------------------------------------------------------
+
+    def stats(self):
+        from repro.serve.metrics import latency_summary
+
+        lat = [r.finished_at - r.submitted_at for r in self.done.values()
+               if r.finished_at and r.status == DONE]
+        statuses: Dict[str, int] = {}
+        for r in self.done.values():
+            statuses[r.status] = statuses.get(r.status, 0) + 1
+        return {
+            "steps": self.steps,
+            "points": self.points_processed,
+            "completed": statuses.get(DONE, 0),
+            "queue_depth": len(self.queue),
+            "active_slots": self._active(),
+            "statuses": statuses,
+            "throughput_pts_per_s": (self.points_processed / self._busy_s
+                                     if self._busy_s else None),
+            "batch_retries": self.batch_retries,
+            "crashed_batches": self.crashed_batches,
+            "quarantined": self.quarantined,
+            "timeouts": self.timeouts,
+            "load_shed": self.load_shed,
+            "breakers": offload.kernel_health(),
+            **latency_summary(lat),
+        }

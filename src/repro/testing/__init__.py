@@ -1,0 +1,8 @@
+"""Test-support utilities shipped with the package (importable from tests,
+benchmarks, and chaos drills alike).
+
+:mod:`repro.testing.faults` — deterministic fault injection for the
+serving/offload stack: kernel-raise, NaN-inject, slow-step, queue-flood.
+"""
+
+from . import faults  # noqa: F401

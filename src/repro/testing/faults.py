@@ -1,0 +1,177 @@
+"""Deterministic fault injection for the serving/offload stack.
+
+Chaos testing needs faults that are *reproducible*: every injector here is a
+context manager with an explicit trigger (call count, request id) and no
+randomness, so a failing chaos run replays exactly. Each yields a
+:class:`FaultStats` counter object and restores the patched seam on exit.
+
+* :func:`kernel_raise` — make the offload engine's kernel entry points
+  raise a classified kernel failure (``InjectedKernelFault`` with a
+  RESOURCE_EXHAUSTED-style message) for their first ``n`` calls. With
+  ``where="kernel"`` (default) the raise happens inside ``try_fuse`` — the
+  plan-level path, where the circuit breaker degrades the segment in place.
+  With ``where="step"`` it happens at the operator engine's compiled-step
+  seam — the runtime path, exercising ``record_kernel_failure`` + backoff +
+  re-trace.
+* :func:`nan_inject` — corrupt the payload of selected operator requests at
+  submit time (first point -> NaN) so the in-jit ``isfinite`` quarantine is
+  exercised end-to-end.
+* :func:`slow_step` — add a fixed sleep per engine step (deadline-eviction
+  pressure).
+* :func:`queue_flood` — driver helper: submit a burst of requests
+  back-to-back (admission-control pressure).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+from typing import Callable, Iterable, List, Optional
+
+import numpy as np
+
+from repro.kernels.failures import InjectedKernelFault
+
+_KERNEL_ATTRS = {
+    "mlp": "collapsed_jet_layer_op",
+    "attention": "collapsed_jet_attention_op",
+    "qkv": "collapsed_jet_qkv_attention_op",
+}
+
+_DEFAULT_MESSAGE = ("RESOURCE_EXHAUSTED: injected fault — VMEM allocation "
+                    "failed for kernel launch")
+
+
+@dataclasses.dataclass
+class FaultStats:
+    """Counters exposed by every injector: total seam ``calls`` seen and
+    ``injected`` faults actually fired."""
+
+    calls: int = 0
+    injected: int = 0
+
+
+@contextlib.contextmanager
+def kernel_raise(n: int = 1, kinds: Iterable[str] = ("mlp",),
+                 where: str = "kernel", message: str = _DEFAULT_MESSAGE):
+    """Raise a classified kernel failure on the first ``n`` calls.
+
+    ``kinds``: which kernel entry points to fault ("mlp", "attention",
+    "qkv") — only meaningful for ``where="kernel"``. ``where="step"``
+    patches :meth:`OperatorEngine._execute` instead, so the failure
+    surfaces *after* tracing like a real runtime launch failure.
+    """
+    stats = FaultStats()
+    if where == "kernel":
+        from repro.core import offload
+
+        originals = {}
+
+        def wrap(orig):
+            left = [n]
+
+            def inner(*a, **k):
+                stats.calls += 1
+                if left[0] > 0:
+                    left[0] -= 1
+                    stats.injected += 1
+                    raise InjectedKernelFault(message)
+                return orig(*a, **k)
+
+            return inner
+
+        try:
+            for kd in kinds:
+                attr = _KERNEL_ATTRS[kd]
+                originals[attr] = getattr(offload, attr)
+                setattr(offload, attr, wrap(originals[attr]))
+            yield stats
+        finally:
+            for attr, fn in originals.items():
+                setattr(offload, attr, fn)
+    elif where == "step":
+        from repro.serve import operator_engine as oe
+
+        orig = oe.OperatorEngine._execute
+        left = [n]
+
+        def _execute(self, fn, x):
+            stats.calls += 1
+            if left[0] > 0:
+                left[0] -= 1
+                stats.injected += 1
+                raise InjectedKernelFault(message)
+            return orig(self, fn, x)
+
+        oe.OperatorEngine._execute = _execute
+        try:
+            yield stats
+        finally:
+            oe.OperatorEngine._execute = orig
+    else:
+        raise ValueError(f"where must be 'kernel' or 'step', got {where!r}")
+
+
+@contextlib.contextmanager
+def nan_inject(rids: Optional[Iterable[int]] = None):
+    """Corrupt matching operator requests at submit (``points[0, 0] = NaN``).
+
+    ``rids=None`` corrupts every submitted request. The corruption happens
+    *before* validation/enqueue, so the NaN flows through the jit'd step and
+    must be caught by the per-slot quarantine, not by host-side screening.
+    """
+    from repro.serve import operator_engine as oe
+
+    targets = None if rids is None else set(rids)
+    orig = oe.OperatorEngine.submit
+    stats = FaultStats()
+
+    def submit(self, req):
+        stats.calls += 1
+        if targets is None or req.rid in targets:
+            pts = np.array(req.points, dtype=np.float32, copy=True)
+            if pts.ndim == 2 and pts.size:
+                pts[0, 0] = np.nan
+                req.points = pts
+                stats.injected += 1
+        return orig(self, req)
+
+    oe.OperatorEngine.submit = submit
+    try:
+        yield stats
+    finally:
+        oe.OperatorEngine.submit = orig
+
+
+@contextlib.contextmanager
+def slow_step(seconds: float = 0.05, every: int = 1):
+    """Sleep ``seconds`` before every ``every``-th compiled-step execution
+    (deadline pressure without touching numerics)."""
+    from repro.serve import operator_engine as oe
+
+    orig = oe.OperatorEngine._execute
+    stats = FaultStats()
+
+    def _execute(self, fn, x):
+        stats.calls += 1
+        if stats.calls % every == 0:
+            stats.injected += 1
+            time.sleep(seconds)
+        return orig(self, fn, x)
+
+    oe.OperatorEngine._execute = _execute
+    try:
+        yield stats
+    finally:
+        oe.OperatorEngine._execute = orig
+
+
+def queue_flood(engine, n: int,
+                make_request: Callable[[int], "object"]) -> List["object"]:
+    """Submit ``n`` requests back-to-back (admission-control pressure);
+    returns them — statuses show what was shed vs queued."""
+    reqs = [make_request(i) for i in range(n)]
+    for r in reqs:
+        engine.submit(r)
+    return reqs

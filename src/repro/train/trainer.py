@@ -55,6 +55,13 @@ class TrainConfig:
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 200
     straggler_factor: float = 3.0
+    # Non-finite step guard: params/opt-state are donated, so one NaN loss
+    # or gradient would poison the run irreversibly — the step detects a
+    # non-finite loss/global-grad-norm in-jit and returns its inputs
+    # unchanged (metrics["skipped_nonfinite"]=1). After this many
+    # *consecutive* skips the loop aborts: persistent NaNs are a bug or a
+    # dead run, not a transient batch.
+    nonfinite_budget: int = 25
     seed: int = 0
 
 
@@ -122,17 +129,33 @@ def build_train_step(loss_fn: Callable, tcfg: TrainConfig, grad_shardings=None):
                     lambda g: psum_mean(g, tcfg.reduce_axis), grads)
         elif tcfg.compress_grads:
             grads, opt_state_ef = compress_decompress(grads, opt_state["ef"])
+        # non-finite guard: with donated inputs a NaN update is
+        # unrecoverable, so decide finiteness in-jit and select the old
+        # state back when the step is poisoned (grads are zeroed first so
+        # NaNs cannot reach the optimizer moments either)
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        finite = jnp.isfinite(l) & jnp.isfinite(gnorm)
+        grads = jax.tree.map(
+            lambda g: jnp.where(finite, g, jnp.zeros_like(g)), grads)
         lr = warmup_cosine(step, peak_lr=tcfg.peak_lr, warmup_steps=tcfg.warmup_steps,
                            total_steps=tcfg.total_steps)
-        params, inner, om = adamw_update(
+        new_params, inner, om = adamw_update(
             grads, opt_state["adam"], params, lr,
             weight_decay=tcfg.weight_decay, max_grad_norm=tcfg.max_grad_norm,
         )
         new_opt = {"adam": inner}
         if tcfg.compress_grads:
             new_opt["ef"] = opt_state_ef
-        out_metrics = {"loss": l, "lr": lr, **om, **metrics}
-        return params, new_opt, out_metrics
+        keep = lambda new, old: jax.tree.map(
+            lambda n, o: jnp.where(finite, n, o), new, old)
+        new_params = keep(new_params, params)
+        new_opt = keep(new_opt, opt_state)
+        out_metrics = {"loss": l, "lr": lr,
+                       "skipped_nonfinite": 1.0 - finite.astype(jnp.float32),
+                       **om, **metrics}
+        return new_params, new_opt, out_metrics
 
     return train_step
 
@@ -177,6 +200,8 @@ class Trainer:
         self._preempted = False
         self._step_ewma = None
         self.straggler_events = []
+        self.skipped_nonfinite = 0  # total skipped steps this run
+        self._consecutive_nonfinite = 0
 
         step_fn = build_train_step(loss_fn, tcfg)
         donate = (0, 1)
@@ -204,18 +229,38 @@ class Trainer:
     def _on_sigterm(self, *_):
         self._preempted = True
 
-    def maybe_restore(self):
+    def maybe_restore(self, log_fn=print):
+        """Restore from the newest *complete* checkpoint step.
+
+        A crashed writer can leave a truncated ``metadata.json``, a missing
+        ``.npy``, or a stale ``step_*.tmp`` dir; restarting must never crash
+        on those. Stale tmp dirs are swept, each candidate step is verified
+        (manifest vs directory) before restore, and on a corrupt or
+        structure-mismatched checkpoint the search walks back to the next
+        older step.
+        """
         d = self.tcfg.ckpt_dir
         if not d:
             return False
-        last = ckpt_lib.latest_step(d)
-        if last is None:
-            return False
+        for path in ckpt_lib.sweep_tmp(d):
+            log_fn(f"swept stale checkpoint tmp dir: {path}")
         tree = {"params": self.params, "opt": self.opt_state}
-        restored, extra = ckpt_lib.restore(d, last, tree)
-        self.params, self.opt_state = restored["params"], restored["opt"]
-        self.step = int(extra.get("step", last))
-        return True
+        for last in reversed(ckpt_lib.all_steps(d)):
+            ok, why = ckpt_lib.verify(d, last)
+            if not ok:
+                log_fn(f"checkpoint step {last} incomplete ({why}); "
+                       f"walking back")
+                continue
+            try:
+                restored, extra = ckpt_lib.restore(d, last, tree)
+            except ckpt_lib.CheckpointError as e:
+                log_fn(f"checkpoint step {last} failed restore ({e}); "
+                       f"walking back")
+                continue
+            self.params, self.opt_state = restored["params"], restored["opt"]
+            self.step = int(extra.get("step", last))
+            return True
+        return False
 
     def save(self, synchronous=False):
         d = self.tcfg.ckpt_dir
@@ -248,6 +293,18 @@ class Trainer:
             jax.block_until_ready(metrics["loss"])
             self._monitor(time.perf_counter() - t0)
             self.step += 1
+            if float(metrics.get("skipped_nonfinite", 0.0)) > 0:
+                self.skipped_nonfinite += 1
+                self._consecutive_nonfinite += 1
+                if self._consecutive_nonfinite >= self.tcfg.nonfinite_budget:
+                    self.save(synchronous=True)  # params are still pre-NaN
+                    ckpt_lib.wait_for_saves()
+                    raise RuntimeError(
+                        f"aborting: {self._consecutive_nonfinite} "
+                        f"consecutive non-finite steps (budget "
+                        f"{self.tcfg.nonfinite_budget}) at step {self.step}")
+            else:
+                self._consecutive_nonfinite = 0
             if self.step % log_every == 0 or self.step == num_steps:
                 m = {k: float(v) for k, v in metrics.items()}
                 history.append({"step": self.step, **m})

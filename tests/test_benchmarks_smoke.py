@@ -14,6 +14,7 @@ import pytest
     "benchmarks.fig1_laplacian",
     "benchmarks.attention_laplacian",
     "benchmarks.distributed_laplacian",
+    "benchmarks.operator_serving",
     "benchmarks.rewrite_flops",
     "benchmarks.scan_depth",
     "benchmarks.table1_operators",
@@ -75,6 +76,23 @@ def test_scan_depth_bench_smoke():
     # the default (use_rope=True) trunk superblocks since the rope fold
     assert body and body[0].fused("jet_attention_qkv") and \
         body[0].fused("jet_mlp")
+
+
+@pytest.mark.serve
+def test_operator_serving_bench_smoke():
+    """The chaos benchmark's acceptance criteria are asserted inside
+    ``run()`` (zero crashed batches, faulted requests terminal, batch-mates
+    allclose to the CRULES reference) — a tiny interpreter-backend run here
+    keeps that drill in the test loop; the pallas sweep is by-hand."""
+    from benchmarks.operator_serving import run
+
+    rows = run(n_requests=10, max_points=12, chunk=4, max_slots=2,
+               backend=None)
+    assert [r["mode"] for r in rows] == ["clean", "faulted"]
+    assert all(r["crashed_batches"] == 0 for r in rows)
+    faulted = rows[1]
+    assert faulted["quarantined"] == 2 and faulted["timeouts"] == 2
+    assert faulted["load_shed"] > 0 and faulted["batch_retries"] >= 1
 
 
 def test_distributed_laplacian_bench_smoke():

@@ -1,0 +1,170 @@
+"""Fault-injection harness + kernel degradation ladder: a runtime kernel
+failure trips the right circuit breaker, the degraded plan stays numerically
+exact (it IS the CRULES path), and the breaker recovers through a half-open
+probe after the cool-down."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import offload
+from repro.core import operators as ops
+from repro.kernels.failures import (InjectedKernelFault, classify_failure,
+                                    is_retryable)
+from repro.serve.operator_engine import OperatorEngine, OperatorRequest
+from repro.testing import faults
+
+pytestmark = pytest.mark.serve
+
+D = 3
+
+
+@pytest.fixture(autouse=True)
+def _clean_breakers():
+    offload.reset_kernel_health()
+    old = offload.set_breaker_cooldown(300.0)
+    yield
+    offload.set_breaker_cooldown(old)
+    offload.reset_kernel_health()
+
+
+def _field(seed=0, width=16):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    W1 = jax.random.normal(k1, (D, width)) / jnp.sqrt(D)
+    W2 = jax.random.normal(k2, (width, 1)) / jnp.sqrt(width)
+    return lambda x: (jnp.tanh(x @ W1) @ W2)[..., 0]
+
+
+def test_classify_failure_labels():
+    assert classify_failure(InjectedKernelFault("bang")) == "injected"
+    assert classify_failure(
+        InjectedKernelFault("RESOURCE_EXHAUSTED: vmem")) == "resource_exhausted"
+    assert classify_failure(ValueError("shapes mismatch")) is None
+    assert classify_failure(None) is None
+    assert is_retryable("resource_exhausted") and is_retryable("injected")
+    assert not is_retryable(None)
+
+
+def test_kernel_raise_trips_breaker_and_degrades_exactly():
+    """An injected kernel failure inside try_fuse opens the jet_mlp breaker
+    and the plan falls back to CRULES — same numbers, no crash."""
+    f = _field(seed=0)
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, D)) * 0.5
+    ref = ops.laplacian(f, x, method="collapsed")  # interpreter reference
+    epoch0 = offload.breaker_epoch()
+    with faults.kernel_raise(n=1, kinds=("mlp",)) as st:
+        got = ops.laplacian(f, x, method="collapsed", backend="pallas")
+    assert st.injected == 1
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-6)
+    health = offload.kernel_health()
+    assert health["jet_mlp"]["state"] == "open"
+    assert health["jet_mlp"]["failures"] == 1
+    assert "injected" in health["jet_mlp"]["last_error"]
+    assert health["jet_mlp"]["cooldown_remaining_s"] > 0
+    assert offload.breaker_epoch() > epoch0  # jit caches re-key
+
+
+def test_breaker_half_open_probe_recovers():
+    """After the cool-down the next kernel call is admitted as a half-open
+    probe; a healthy kernel closes the breaker again."""
+    f = _field(seed=1)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, D)) * 0.5
+    ref = ops.laplacian(f, x, method="collapsed")
+    with faults.kernel_raise(n=1, kinds=("mlp",)):
+        ops.laplacian(f, x, method="collapsed", backend="pallas")
+    assert offload.kernel_health()["jet_mlp"]["state"] == "open"
+    # still inside the cool-down: the kernel is not probed (CRULES serves)
+    got = ops.laplacian(f, x, method="collapsed", backend="pallas")
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-6)
+    assert offload.kernel_health()["jet_mlp"]["state"] == "open"
+    # cool-down elapses -> half-open probe -> healthy kernel -> closed
+    offload.set_breaker_cooldown(0.0)
+    got = ops.laplacian(f, x, method="collapsed", backend="pallas")
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-6)
+    health = offload.kernel_health()["jet_mlp"]
+    assert health["state"] == "closed"
+    assert health["probes"] >= 1
+
+
+def test_explain_surfaces_breaker_state():
+    f = _field(seed=2)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, D)) * 0.5
+    rep = offload.explain(f, x, K=2)
+    assert rep.breakers["jet_mlp"]["state"] == "closed"
+    assert "breaker" not in str(rep)  # closed breakers stay quiet
+    offload.record_kernel_failure(
+        InjectedKernelFault("RESOURCE_EXHAUSTED: vmem"), kind="jet_mlp")
+    rep = offload.explain(f, x, K=2)
+    assert rep.breakers["jet_mlp"]["state"] == "open"
+    assert "breaker jet_mlp: open" in str(rep)
+
+
+def test_record_kernel_failure_ladder_order():
+    """Unattributed runtime failures degrade the ladder top-down:
+    superblock -> attention -> mlp, then re-open the last rung."""
+    exc = InjectedKernelFault("RESOURCE_EXHAUSTED: injected")
+    tripped = [offload.record_kernel_failure(exc) for _ in range(4)]
+    assert tripped == ["jet_attention_qkv", "jet_attention",
+                       "jet_mlp", "jet_mlp"]
+    assert all(v["state"] == "open"
+               for v in offload.kernel_health().values())
+    # non-kernel exceptions are not swallowed into the ladder
+    assert offload.record_kernel_failure(ValueError("boom")) is None
+
+
+def test_engine_step_fault_retries_with_backoff():
+    """A runtime failure at the compiled-step seam: the engine records it,
+    backs off, re-traces on the new breaker epoch, and completes."""
+    f = _field(seed=3)
+    eng = OperatorEngine(f, backend=None, max_slots=2, chunk=4,
+                         backoff_base_s=0.001, backoff_cap_s=0.005)
+    pts = np.random.default_rng(3).normal(size=(4, D)).astype(np.float32)
+    ref = np.asarray(ops.laplacian(f, jnp.asarray(pts), method="collapsed"))
+    with faults.kernel_raise(n=2, where="step") as st:
+        eng.submit(OperatorRequest(rid=0, op="laplacian", points=pts))
+        done = eng.run_until_done()
+    assert st.injected == 2
+    assert done[0].status == "DONE"
+    np.testing.assert_allclose(done[0].result, ref, rtol=1e-5, atol=1e-6)
+    s = eng.stats()
+    assert s["batch_retries"] == 2 and s["crashed_batches"] == 0
+
+
+def test_engine_unclassified_error_fails_batch_not_engine():
+    """A non-kernel exception is not retried: the batch's requests end
+    ERROR, the engine survives and serves the next request."""
+    f = _field(seed=4)
+    eng = OperatorEngine(f, backend=None, max_slots=2, chunk=4)
+    pts = np.random.default_rng(4).normal(size=(2, D)).astype(np.float32)
+    orig = OperatorEngine._execute
+    state = {"raised": False}
+
+    def poisoned(fn, x):
+        if not state["raised"]:
+            state["raised"] = True
+            raise ValueError("boom: not a kernel failure")
+        return orig(eng, fn, x)
+
+    eng._execute = poisoned
+    eng.submit(OperatorRequest(rid=0, op="laplacian", points=pts))
+    done = eng.run_until_done()
+    assert done[0].status == "ERROR" and "boom" in done[0].error
+    assert eng.crashed_batches == 1 and eng.batch_retries == 0
+    eng.submit(OperatorRequest(rid=1, op="laplacian", points=pts))
+    done = eng.run_until_done()
+    assert done[1].status == "DONE"
+
+
+def test_engine_exhausted_retries_end_in_error():
+    """When every retry re-faults (ladder exhausted or fault persistent),
+    the batch fails terminally instead of spinning forever."""
+    f = _field(seed=5)
+    eng = OperatorEngine(f, backend=None, max_slots=1, chunk=2,
+                         max_step_retries=2, backoff_base_s=0.001)
+    pts = np.zeros((2, D), np.float32)
+    with faults.kernel_raise(n=100, where="step"):
+        eng.submit(OperatorRequest(rid=0, op="laplacian", points=pts))
+        done = eng.run_until_done()
+    assert done[0].status == "ERROR"
+    assert eng.batch_retries == 2 and eng.crashed_batches == 1

@@ -1,0 +1,230 @@
+"""Operator serving engine: mixed-operator continuous batching must match
+direct operator calls, and the robustness layer (admission control,
+deadlines, non-finite quarantine) must fail *only* the faulted request."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import offload
+from repro.core import operators as ops
+from repro.core.collapse import collapsed_fan
+from repro.serve.operator_engine import (TERMINAL, OperatorEngine,
+                                         OperatorRequest)
+from repro.testing import faults
+
+pytestmark = pytest.mark.serve
+
+D = 3
+
+
+@pytest.fixture(autouse=True)
+def _clean_breakers():
+    """Breaker state is process-global (it keys jit caches via the epoch);
+    every test starts closed and restores the cool-down it changed."""
+    offload.reset_kernel_health()
+    old = offload.set_breaker_cooldown(300.0)
+    yield
+    offload.set_breaker_cooldown(old)
+    offload.reset_kernel_health()
+
+
+def _fields(seed=0, width=16):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    W1 = jax.random.normal(k1, (D, width)) / jnp.sqrt(D)
+    W2 = jax.random.normal(k2, (width, 1)) / jnp.sqrt(width)
+    WV = jax.random.normal(k3, (width, D)) / jnp.sqrt(width)
+    f = lambda x: (jnp.tanh(x @ W1) @ W2)[..., 0]
+    F = lambda x: jnp.tanh(x @ W1) @ WV
+    return f, F
+
+
+def _reference(f, F, req, pts):
+    x = jnp.asarray(pts)
+    if req.op == "laplacian":
+        return np.asarray(ops.laplacian(f, x, method="collapsed"))
+    if req.op == "biharmonic":
+        return np.asarray(ops.biharmonic(f, x, method="collapsed"))
+    if req.op == "divergence":
+        return np.asarray(ops.divergence(F, x, method="collapsed"))
+    eye = jnp.eye(D, dtype=x.dtype)
+    dirs = jnp.broadcast_to(eye.reshape(D, 1, D), (D,) + x.shape)
+    return np.asarray(collapsed_fan(f, x, dirs, req.K)[2])
+
+
+def _points(rng, n):
+    return rng.normal(size=(n, D)).astype(np.float32) * 0.5
+
+
+def test_mixed_operator_batch_parity_pallas():
+    """Heterogeneous traffic (per-request op, K, and size) through the
+    pallas-backed engine matches the direct CRULES operator calls."""
+    f, F = _fields()
+    eng = OperatorEngine(f, vector_field=F, backend="pallas",
+                         max_slots=2, chunk=4)
+    rng = np.random.default_rng(0)
+    mix = [("laplacian", 0), ("biharmonic", 0), ("divergence", 0),
+           ("jet", 2), ("jet", 4)]
+    reqs = [OperatorRequest(rid=i, op=op, points=_points(rng, 1 + (3 * i) % 9),
+                            K=K) for i, (op, K) in enumerate(mix)]
+    payloads = {r.rid: np.asarray(r.points, np.float32) for r in reqs}
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run_until_done()
+    for r in reqs:
+        assert done[r.rid].status == "DONE", (r.rid, done[r.rid].error)
+        np.testing.assert_allclose(
+            done[r.rid].result, _reference(f, F, r, payloads[r.rid]),
+            rtol=1e-4, atol=1e-5, err_msg=f"rid {r.rid} ({r.op}, K={r.K})")
+
+
+def test_continuous_batching_slot_churn():
+    """More requests than slots, sizes straddling the chunk: requests
+    join/leave at step granularity and every result is exact."""
+    f, F = _fields(seed=1)
+    eng = OperatorEngine(f, backend=None, max_slots=2, chunk=4)
+    rng = np.random.default_rng(1)
+    sizes = [1, 4, 5, 9, 3, 12, 2]
+    reqs = [OperatorRequest(rid=i, op="laplacian", points=_points(rng, n))
+            for i, n in enumerate(sizes)]
+    payloads = {r.rid: np.asarray(r.points, np.float32) for r in reqs}
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run_until_done()
+    for r in reqs:
+        assert done[r.rid].status == "DONE"
+        np.testing.assert_allclose(
+            done[r.rid].result, _reference(f, F, r, payloads[r.rid]),
+            rtol=1e-5, atol=1e-6)
+    s = eng.stats()
+    assert s["completed"] == len(sizes)
+    assert s["points"] == sum(sizes)
+    assert s["queue_depth"] == 0 and s["active_slots"] == 0
+
+
+def test_jet_k2_matches_laplacian():
+    f, _ = _fields(seed=2)
+    eng = OperatorEngine(f, backend=None, max_slots=2, chunk=4)
+    pts = _points(np.random.default_rng(2), 6)
+    eng.submit(OperatorRequest(rid=0, op="laplacian", points=pts))
+    eng.submit(OperatorRequest(rid=1, op="jet", points=pts, K=2))
+    done = eng.run_until_done()
+    np.testing.assert_allclose(done[1].result, done[0].result,
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_deadline_eviction():
+    """A slowed step plus a deadline shorter than one step: the victim is
+    evicted TIMEOUT at the next step boundary, batch-mates complete."""
+    f, _ = _fields(seed=3)
+    eng = OperatorEngine(f, backend=None, max_slots=2, chunk=4)
+    rng = np.random.default_rng(3)
+    victim = OperatorRequest(rid=0, op="laplacian", points=_points(rng, 12),
+                             deadline_s=0.01)
+    mate = OperatorRequest(rid=1, op="laplacian", points=_points(rng, 12))
+    with faults.slow_step(seconds=0.05) as st:
+        eng.submit(victim)
+        eng.submit(mate)
+        done = eng.run_until_done()
+    assert st.injected >= 1
+    assert done[0].status == "TIMEOUT" and "deadline" in done[0].error
+    assert done[1].status == "DONE"
+    assert eng.timeouts == 1
+
+
+def test_queued_deadline_timeout():
+    """A request whose deadline passes while it waits in the queue (bucket
+    saturated by a long-running mate) times out without ever running."""
+    f, _ = _fields(seed=4)
+    eng = OperatorEngine(f, backend=None, max_slots=1, chunk=2)
+    rng = np.random.default_rng(4)
+    hog = OperatorRequest(rid=0, op="laplacian", points=_points(rng, 8))
+    queued = OperatorRequest(rid=1, op="laplacian", points=_points(rng, 2),
+                             deadline_s=0.005)
+    with faults.slow_step(seconds=0.03):
+        eng.submit(hog)
+        eng.submit(queued)
+        done = eng.run_until_done()
+    assert done[0].status == "DONE"
+    assert done[1].status == "TIMEOUT" and "queued" in done[1].error
+
+
+def test_load_shed_sets_retry_after():
+    """Submissions beyond the bounded queue are REJECTED with a positive
+    retry_after hint; queued ones still complete."""
+    f, _ = _fields(seed=5)
+    eng = OperatorEngine(f, backend=None, max_slots=1, chunk=4, max_queue=2)
+    rng = np.random.default_rng(5)
+    reqs = faults.queue_flood(
+        eng, 5, lambda i: OperatorRequest(rid=i, op="laplacian",
+                                          points=_points(rng, 2)))
+    shed = [r for r in reqs if r.status == "REJECTED"]
+    assert len(shed) == 3 and eng.load_shed == 3
+    for r in shed:
+        assert r.retry_after is not None and r.retry_after > 0
+        assert "queue full" in r.error
+    done = eng.run_until_done()
+    assert all(done[r.rid].status == "DONE" for r in reqs[:2])
+
+
+def test_nan_quarantine_spares_batchmates():
+    """A NaN payload co-batched with a healthy request: only the offender
+    ends NONFINITE; its batch-mate's result is exact."""
+    f, F = _fields(seed=6)
+    eng = OperatorEngine(f, backend=None, max_slots=2, chunk=4)
+    rng = np.random.default_rng(6)
+    good = OperatorRequest(rid=0, op="laplacian", points=_points(rng, 4))
+    bad = OperatorRequest(rid=1, op="laplacian", points=_points(rng, 4))
+    payload = np.asarray(good.points, np.float32)
+    with faults.nan_inject(rids={1}) as st:
+        eng.submit(good)
+        eng.submit(bad)
+        done = eng.run_until_done()
+    assert st.injected == 1
+    assert done[1].status == "NONFINITE" and "quarantine" in done[1].error
+    assert eng.quarantined == 1
+    assert done[0].status == "DONE"
+    np.testing.assert_allclose(
+        done[0].result, _reference(f, F, good, payload),
+        rtol=1e-5, atol=1e-6)
+
+
+def test_submit_validation_rejections():
+    f, _ = _fields(seed=7)
+    eng = OperatorEngine(f, backend=None)  # no vector field
+    pts = np.zeros((2, D), np.float32)
+    cases = [
+        OperatorRequest(rid=0, op="curl", points=pts),
+        OperatorRequest(rid=1, op="jet", points=pts, K=3),
+        OperatorRequest(rid=2, op="laplacian", points=pts, K=4),
+        OperatorRequest(rid=3, op="divergence", points=pts),
+        OperatorRequest(rid=4, op="laplacian", points=np.zeros((0, D))),
+        OperatorRequest(rid=5, op="laplacian", points=np.zeros((D,))),
+        OperatorRequest(rid=6, op="laplacian", points=pts, deadline_s=-1.0),
+    ]
+    for req in cases:
+        assert eng.submit(req) == "REJECTED", req.rid
+        assert eng.done[req.rid].error, req.rid
+        assert req.retry_after is None, req.rid  # invalid, not shed
+    assert not eng.queue and eng.load_shed == 0
+    ok = OperatorRequest(rid=7, op="laplacian", points=pts)
+    assert eng.submit(ok) == "QUEUED"
+
+
+def test_stats_gauges():
+    f, _ = _fields(seed=8)
+    eng = OperatorEngine(f, backend=None, max_slots=2, chunk=4)
+    rng = np.random.default_rng(8)
+    for i in range(4):
+        eng.submit(OperatorRequest(rid=i, op="laplacian",
+                                   points=_points(rng, 3)))
+    done = eng.run_until_done()
+    assert all(r.status in TERMINAL for r in done.values())
+    s = eng.stats()
+    assert s["completed"] == 4 and s["statuses"] == {"DONE": 4}
+    assert s["p50_ms"] is not None and s["p99_ms"] >= s["p50_ms"] > 0
+    assert s["throughput_pts_per_s"] > 0
+    assert s["crashed_batches"] == 0 and s["batch_retries"] == 0
+    assert set(s["breakers"]) == set(offload.BREAKER_KINDS)
+    assert all(v["state"] == "closed" for v in s["breakers"].values())

@@ -59,3 +59,27 @@ def test_throughput_stats():
     s = eng.stats()
     assert s["completed"] == 6
     assert s["tokens"] >= 6 * 3
+    assert s["queue_depth"] == 0 and s["active_slots"] == 0
+    assert s["p50_ms"] is not None and s["p99_ms"] >= s["p50_ms"] > 0
+
+
+def test_submit_validation_rejects_bad_requests():
+    """An empty prompt would crash the slot; a prompt that cannot finish
+    within max_len would silently overflow its positions. Both must be
+    rejected at submit with a terminal status, not fail in-flight."""
+    params = T.init(jax.random.PRNGKey(0), CFG)
+    eng = ServeEngine(T, params, CFG, max_batch=2, max_len=16)
+    empty = Request(rid=0, prompt=[], max_new_tokens=4)
+    assert eng.submit(empty) == "REJECTED"
+    assert "empty prompt" in eng.done[0].error
+    over = Request(rid=1, prompt=[1] * 12, max_new_tokens=8)  # 20 > 16
+    assert eng.submit(over) == "REJECTED"
+    assert "exceeds" in eng.done[1].error
+    ok = Request(rid=2, prompt=[1, 2, 3], max_new_tokens=4)
+    assert eng.submit(ok) == "QUEUED"
+    done = eng.run_until_done()
+    assert done[2].status == "DONE" and len(done[2].output) == 4
+    s = eng.stats()
+    assert s["rejected"] == 2
+    # rejected requests never count into the latency percentiles
+    assert s["p50_ms"] is not None and s["mean_latency_s"] is not None

@@ -7,6 +7,7 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro import checkpoint as ckpt
 from repro.configs import get_smoke_config
@@ -112,6 +113,100 @@ def test_trainer_restart_is_exact():
 
     for a, b in zip(final_uninterrupted, final_restarted):
         np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-7)
+
+
+def test_nonfinite_step_is_skipped_in_jit():
+    """A NaN batch must leave params AND optimizer state bit-identical
+    (inputs are donated in production — a poisoned update is unrecoverable)
+    and flag metrics['skipped_nonfinite']; the next clean batch steps."""
+    params = {"w": jnp.array([1.0, -2.0, 3.0, 0.5])}
+    loss_fn = lambda p, b: (jnp.sum(p["w"] * b), {})
+    # warmup 1 step so lr is at peak by step 1 (lr=0 would hide the update)
+    tcfg = TrainConfig(peak_lr=0.1, warmup_steps=1, total_steps=10,
+                       max_grad_norm=None, weight_decay=0.0)
+    step = jax.jit(build_train_step(loss_fn, tcfg))
+    opt = init_opt_state(params, tcfg)
+    bad = jnp.array([1.0, jnp.nan, 1.0, 1.0])
+    p1, o1, m1 = step(params, opt, bad, jnp.ones((), jnp.int32))
+    assert float(m1["skipped_nonfinite"]) == 1.0
+    np.testing.assert_array_equal(p1["w"], params["w"])
+    for a, b in zip(jax.tree.leaves(opt), jax.tree.leaves(o1)):
+        np.testing.assert_array_equal(a, b)
+    good = jnp.ones(4)
+    p2, o2, m2 = step(p1, o1, good, jnp.ones((), jnp.int32))
+    assert float(m2["skipped_nonfinite"]) == 0.0
+    assert not np.allclose(np.asarray(p2["w"]), np.asarray(params["w"]))
+
+
+def test_trainer_aborts_after_nonfinite_budget():
+    """Persistent NaNs are a bug, not a transient batch: after
+    ``nonfinite_budget`` consecutive skipped steps the loop aborts (params
+    still finite — every poisoned update was skipped)."""
+    params = {"w": jnp.ones(2)}
+    loss_fn = lambda p, b: (jnp.sum(p["w"] * b), {})
+    tcfg = TrainConfig(max_grad_norm=None, weight_decay=0.0,
+                       nonfinite_budget=3, total_steps=10)
+    t = Trainer(loss_fn, params, tcfg,
+                batch_fn=lambda s: jnp.full(2, jnp.nan))
+    with pytest.raises(RuntimeError, match="consecutive non-finite"):
+        t.run(10, log_every=100)
+    assert t.skipped_nonfinite == 3
+    np.testing.assert_array_equal(np.asarray(t.params["w"]), 1.0)
+
+
+def test_maybe_restore_walks_back_past_corruption():
+    """Restart must survive a crashed writer: stale ``step_*.tmp`` dirs are
+    swept and a corrupt newest checkpoint walks back to the newest
+    *complete* step instead of crashing."""
+    params = {"w": jnp.arange(4.0)}
+    loss_fn = lambda p, b: (jnp.sum(p["w"] * b), {})
+    bf = lambda s: jnp.ones(4)
+    with tempfile.TemporaryDirectory() as d:
+        tcfg = TrainConfig(ckpt_dir=d)
+        t = Trainer(loss_fn, params, tcfg, batch_fn=bf)
+        t.step = 5
+        t.save(synchronous=True)
+        t.step = 9
+        t.save(synchronous=True)
+        # crash damage: truncated metadata in the newest step + a stale tmp
+        with open(os.path.join(d, "step_00000009", "metadata.json"),
+                  "w") as fh:
+            fh.write('{"step": 9, "mani')
+        os.makedirs(os.path.join(d, "step_00000011.tmp"))
+        t2 = Trainer(loss_fn, {"w": jnp.zeros(4)}, tcfg, batch_fn=bf)
+        logs = []
+        assert t2.maybe_restore(log_fn=logs.append)
+        assert t2.step == 5
+        np.testing.assert_array_equal(np.asarray(t2.params["w"]),
+                                      np.arange(4.0))
+        assert not os.path.exists(os.path.join(d, "step_00000011.tmp"))
+        assert any("swept" in m for m in logs)
+        assert any("walking back" in m for m in logs)
+        # nothing complete at all -> clean cold start
+        with open(os.path.join(d, "step_00000005", "metadata.json"),
+                  "w") as fh:
+            fh.write("")
+        t3 = Trainer(loss_fn, {"w": jnp.zeros(4)}, tcfg, batch_fn=bf)
+        assert not t3.maybe_restore(log_fn=logs.append)
+
+
+def test_checkpoint_verify_and_restore_errors():
+    tree = {"a": jnp.ones(3)}
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 1, tree)
+        ok, why = ckpt.verify(d, 1)
+        assert ok and why == ""
+        # structure mismatch: restore raises CheckpointError (the walk-back
+        # signal), never a bare KeyError/OSError
+        with pytest.raises(ckpt.CheckpointError, match="missing key"):
+            ckpt.restore(d, 1, {"a": jnp.ones(3), "b": jnp.ones(2)})
+        # a missing array file fails verify with the offending key named
+        os.remove(os.path.join(d, "step_00000001", "a.npy"))
+        ok, why = ckpt.verify(d, 1)
+        assert not ok and "'a'" in why
+        with pytest.raises(ckpt.CheckpointError):
+            ckpt.restore(d, 1, tree)
+        assert ckpt.all_steps(d) == [1]
 
 
 def test_grad_accum_matches_full_batch():
