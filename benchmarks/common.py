@@ -75,7 +75,42 @@ def emit(rows: List[Dict], header: List[str]):
         print(",".join(str(r.get(h, "")) for h in header))
 
 
+#: every row emit_bench printed this process, in order — the source for
+#: write_bench_json (the committed BENCH_<name>.json regression baselines)
+BENCH_ROWS: List[Dict] = []
+
+
 def emit_bench(bench: str, **fields):
     """Machine-readable one-line result: ``BENCH {json}`` (grep-able by CI
     dashboards; one row per (benchmark, method) cell)."""
-    print("BENCH " + json.dumps({"bench": bench, **fields}, sort_keys=True))
+    row = {"bench": bench, **fields}
+    BENCH_ROWS.append(row)
+    print("BENCH " + json.dumps(row, sort_keys=True))
+
+
+def write_bench_json(out_dir: str = ".") -> List[str]:
+    """Write the collected rows as one ``BENCH_<name>.json`` per benchmark
+    (sorted, indented — stable diffs for the committed baselines). Returns
+    the written paths."""
+    import collections
+    import os
+    import platform
+
+    import jax as _jax
+
+    groups: Dict[str, List[Dict]] = collections.defaultdict(list)
+    for row in BENCH_ROWS:
+        groups[str(row.get("bench", "unknown"))].append(row)
+    paths = []
+    for name, rows in sorted(groups.items()):
+        doc = {"bench": name,
+               "env": {"jax": _jax.__version__,
+                       "backend": _jax.default_backend(),
+                       "machine": platform.machine()},
+               "rows": rows}
+        path = os.path.join(out_dir, f"BENCH_{name}.json")
+        with open(path, "w") as fh:
+            json.dump(doc, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        paths.append(path)
+    return paths

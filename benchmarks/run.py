@@ -1,12 +1,21 @@
 """Benchmark orchestrator: one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV. Sub-benchmarks:
-  fig1_laplacian   — fig. 1 (Laplacian scaling, nested vs Taylor modes)
-  table1_operators — table 1 (per-datum/-sample slopes, 3 ops x 3 methods)
-  tableF2_theory   — table F2 (vector-count theory vs measured FLOP ratios)
-  tableG3_jax      — table G3 (jit comparison + nested-Laplacian biharmonic)
-  rewrite_flops    — appendix C/G9 (jit does not collapse; our rewrite does)
-  roofline         — deliverable (g), from results/dryrun
+  fig1_laplacian      — fig. 1 (Laplacian scaling, nested vs Taylor modes)
+  table1_operators    — table 1 (per-datum/-sample slopes, 3 ops x 3 methods)
+  tableF2_theory      — table F2 (vector-count theory vs measured FLOP ratios)
+  tableG3_jax         — table G3 (jit comparison + nested-Laplacian biharmonic)
+  rewrite_flops       — appendix C/G9 (jit does not collapse; our rewrite does)
+  roofline            — deliverable (g), from results/dryrun
+  attention_laplacian — transformer Laplacian: interpreter vs per-segment
+                        vs superblock (+ HBM segment counts)
+  scan_depth          — plan-once scaling across scanned backbone depths
+  cold_start          — operator-server TTFR, cold vs artifact-warmed boot
+
+``--bench-json [DIR]`` additionally writes every emitted BENCH row into
+``DIR/BENCH_<name>.json`` (default: the repo root) — the committed CPU
+regression baselines ride on ``python -m benchmarks.run cold_start
+attention_laplacian scan_depth --bench-json``.
 """
 
 from __future__ import annotations
@@ -14,9 +23,10 @@ from __future__ import annotations
 import sys
 import traceback
 
-from benchmarks import (fig1_laplacian, rewrite_flops, roofline,
+from benchmarks import (attention_laplacian, cold_start, fig1_laplacian,
+                        rewrite_flops, roofline, scan_depth,
                         table1_operators, tableF2_theory, tableG3_jax)
-from benchmarks.common import emit
+from benchmarks.common import emit, write_bench_json
 
 ALL = {
     "fig1_laplacian": fig1_laplacian.run,
@@ -25,20 +35,42 @@ ALL = {
     "tableG3_jax": tableG3_jax.run,
     "rewrite_flops": rewrite_flops.run,
     "roofline": roofline.run,
+    "attention_laplacian": attention_laplacian.run,
+    "scan_depth": scan_depth.run,
+    "cold_start": cold_start.run,
 }
 
-
 def main() -> None:
-    names = sys.argv[1:] or list(ALL)
+    import os
+
+    argv = sys.argv[1:]
+    json_dir = None
+    if "--bench-json" in argv:
+        i = argv.index("--bench-json")
+        argv.pop(i)
+        if i < len(argv) and argv[i] not in ALL:
+            json_dir = argv.pop(i)
+        else:  # default: the repo root (committed baselines live there)
+            json_dir = os.path.dirname(os.path.dirname(
+                os.path.abspath(__file__)))
+    names = argv or list(ALL)
     rows = []
+    failed = False
     for n in names:
         try:
             rows.extend(ALL[n]())
         except Exception as e:  # a failing benchmark must not hide the others
             traceback.print_exc()
+            failed = True
             rows.append({"name": n, "us_per_call": "",
                          "derived": f"ERROR:{type(e).__name__}"})
     emit(rows, ["name", "us_per_call", "derived"])
+    if json_dir is not None:
+        if failed:  # never commit a baseline with holes in it
+            print("--bench-json: skipped (a benchmark errored)")
+        else:
+            for path in write_bench_json(json_dir):
+                print(f"wrote {path}")
 
 
 if __name__ == "__main__":

@@ -149,6 +149,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import compile_cache
+from repro.kernels import lowering as kernel_lowering
 from repro.kernels.jet_attention import ops as jet_attention_ops
 from repro.kernels.jet_attention.ops import (collapsed_jet_attention_op,
                                              collapsed_jet_qkv_attention_op)
@@ -273,6 +275,13 @@ def kernel_health() -> Dict[str, Dict[str, Any]]:
     return out
 
 
+def breakers_closed() -> bool:
+    """True when every kernel breaker is closed — the only state in which
+    compiled-step artifacts may be persisted or loaded (an artifact
+    exported mid-degradation would bake the degraded plan to disk)."""
+    return all(br.state == "closed" for br in _BREAKERS.values())
+
+
 def _breaker_allows(kind: str) -> bool:
     """Gate a kernel call: True when closed, or when an open breaker's
     cool-down elapsed (transitions to half-open and admits one probe)."""
@@ -371,6 +380,10 @@ class Segment:
     # why the latest try_fuse fell back ("" when it fused) — best-effort
     # introspection surfaced by explain's SegmentOutcome detail
     fail_reason = ""
+    # the registry lowering target the latest try_fuse resolved for its
+    # kernel call ("" before any attempt) — surfaced by explain's
+    # SegmentOutcome.lowering
+    lowering_target = ""
 
     anchor: int
     out_var: Any
@@ -489,6 +502,7 @@ class _PlanCacheEntry:
     ref: Any  # weakref to the jaxpr: plans die with the graph they describe
     # keyed by (K, jet-constant signature, superblock enabled, mesh signature)
     plans: Dict[Tuple[int, Tuple[bool, ...], bool, tuple], "Plan"]
+    fingerprint: str = ""  # sha256 of the jaxpr pretty-print (disk key)
 
 
 _PLAN_CACHE: Dict[int, _PlanCacheEntry] = {}
@@ -538,6 +552,137 @@ def _data_shard_count(mesh_sig: tuple = None) -> int:
 def clear_plan_cache() -> None:
     _PLAN_CACHE.clear()
     _PLAN_STATS.update(hits=0, misses=0)
+
+
+# ---------------------------------------------------------------------------
+# plan serialization: the persistent offload-plan cache
+# ---------------------------------------------------------------------------
+#
+# Planning is probe-heavy (activation/softmax regions are classified by
+# numeric evaluation), so a fresh process re-pays it for every sub-jaxpr.
+# Plans are pure structure over their jaxpr — eqn indices, var references,
+# literals, and static config — so they serialize positionally: a var
+# becomes its index in the canonical enumeration (constvars, invars, each
+# eqn's outvars in program order), which any jaxpr with the same
+# pretty-print fingerprint reproduces exactly. Decode is paranoid: any
+# unknown tag, out-of-range index, or unregistered Segment class makes the
+# whole plan load return None and planning runs fresh.
+
+PLAN_SCHEMA = 1
+
+#: Segment classes the positional encoding round-trips. Custom matcher
+#: segments are NOT here — their plans stay in-memory only (and the disk
+#: key carries the matcher list, so a registry change never aliases).
+_SEGMENT_CLASSES: Dict[str, type] = {}
+
+
+def _jaxpr_fingerprint(jaxpr) -> str:
+    import hashlib
+
+    return hashlib.sha256(str(jaxpr).encode()).hexdigest()[:32]
+
+
+def _var_order(jaxpr) -> List[Any]:
+    order = list(jaxpr.constvars) + list(jaxpr.invars)
+    for eqn in jaxpr.eqns:
+        order.extend(eqn.outvars)
+    return order
+
+
+def _encode_value(v, var2idx):
+    if v is None or isinstance(v, (bool, int, float, str)):
+        return v
+    if _is_literal(v):
+        val = np.asarray(v.val)
+        return {"t": "lit", "v": val.tolist(), "dtype": str(val.dtype),
+                "shape": list(val.shape),
+                "weak": bool(getattr(v.aval, "weak_type", False))}
+    if isinstance(v, Segment):
+        return _encode_segment(v, var2idx)
+    if isinstance(v, tuple):
+        return {"t": "tuple", "v": [_encode_value(x, var2idx) for x in v]}
+    if isinstance(v, (set, frozenset)):
+        return {"t": "set", "v": sorted(_encode_value(x, var2idx)
+                                        for x in v)}
+    if isinstance(v, list):
+        return {"t": "list", "v": [_encode_value(x, var2idx) for x in v]}
+    idx = var2idx.get(v)
+    if idx is not None:
+        return {"t": "var", "i": idx}
+    raise TypeError(f"unencodable plan value: {type(v).__name__}")
+
+
+def _decode_value(d, idx2var):
+    if d is None or isinstance(d, (bool, int, float, str)):
+        return d
+    t = d["t"]
+    if t == "var":
+        return idx2var[d["i"]]
+    if t == "lit":
+        dtype = np.dtype(d["dtype"])
+        arr = np.asarray(d["v"], dtype).reshape(d["shape"])
+        val = arr if d["shape"] else dtype.type(arr[()])
+        aval = jax.core.ShapedArray(tuple(d["shape"]), dtype,
+                                    weak_type=bool(d["weak"]))
+        return jax.core.Literal(val, aval)
+    if t == "tuple":
+        return tuple(_decode_value(x, idx2var) for x in d["v"])
+    if t == "set":
+        return {_decode_value(x, idx2var) for x in d["v"]}
+    if t == "list":
+        return [_decode_value(x, idx2var) for x in d["v"]]
+    if t == "seg":
+        return _decode_segment(d, idx2var)
+    raise ValueError(f"unknown plan value tag {t!r}")
+
+
+def _encode_segment(seg, var2idx):
+    name = type(seg).__name__
+    if name not in _SEGMENT_CLASSES:
+        raise TypeError(f"unregistered segment class {name}")
+    fields = {f.name: _encode_value(getattr(seg, f.name), var2idx)
+              for f in dataclasses.fields(seg)}
+    return {"t": "seg", "cls": name, "fields": fields}
+
+
+def _decode_segment(d, idx2var):
+    cls = _SEGMENT_CLASSES[d["cls"]]
+    return cls(**{k: _decode_value(v, idx2var)
+                  for k, v in d["fields"].items()})
+
+
+def _encode_plan(plan: "Plan", jaxpr) -> Optional[dict]:
+    """JSON-ready form of a plan against its jaxpr, or None when a segment
+    holds something the positional encoding cannot express."""
+    try:
+        var2idx = {v: i for i, v in enumerate(_var_order(jaxpr))}
+        return {"schema": PLAN_SCHEMA,
+                "segments": {str(a): _encode_segment(s, var2idx)
+                             for a, s in plan.items()},
+                "notes": list(plan.notes)}
+    except Exception:
+        return None
+
+
+def _decode_plan(payload, jaxpr) -> Optional["Plan"]:
+    """Rebuild a plan from its serialized form; None on any mismatch or
+    corruption (the caller plans fresh)."""
+    try:
+        if (not isinstance(payload, dict)
+                or payload.get("schema") != PLAN_SCHEMA):
+            return None
+        idx2var = _var_order(jaxpr)
+        n_eqns = len(jaxpr.eqns)
+        plan = Plan()
+        for a, d in payload["segments"].items():
+            anchor = int(a)
+            if not 0 <= anchor < n_eqns:
+                return None
+            plan[anchor] = _decode_segment(d, idx2var)
+        plan.notes = [str(n) for n in payload.get("notes", [])]
+        return plan
+    except Exception:
+        return None
 
 
 def _local_batch(batch_shape: tuple, batch_div: int) -> tuple:
@@ -603,7 +748,7 @@ def _plan_for(closed_jaxpr, K: int,
                               lambda _, jid=jid: _PLAN_CACHE.pop(jid, None))
         except TypeError:  # non-weakrefable jaxpr class: pin it instead
             ref = (lambda j=jaxpr: j)
-        entry = _PlanCacheEntry(ref, {})
+        entry = _PlanCacheEntry(ref, {}, _jaxpr_fingerprint(jaxpr))
         _PLAN_CACHE[jid] = entry
     key = (K, sig, superblock, mesh_sig)
     plan = entry.plans.get(key)
@@ -611,7 +756,20 @@ def _plan_for(closed_jaxpr, K: int,
         _PLAN_STATS["hits"] += 1
         return plan
     _PLAN_STATS["misses"] += 1
-    plan = plan_segments(closed_jaxpr, propagated=sig, superblock=superblock)
+    # in-memory miss: consult the persistent plan cache before re-planning
+    # (probe evaluation is the expensive part). The disk key carries the
+    # matcher registry so custom-matcher sessions never alias stock plans.
+    matcher_sig = tuple(getattr(m, "__qualname__", str(m))
+                        for m in SEGMENT_MATCHERS)
+    disk_key = (PLAN_SCHEMA, K, sig, superblock, mesh_sig, matcher_sig)
+    plan = _decode_plan(
+        compile_cache.load_plan(entry.fingerprint, disk_key), jaxpr)
+    if plan is None:
+        plan = plan_segments(closed_jaxpr, propagated=sig,
+                             superblock=superblock)
+        payload = _encode_plan(plan, jaxpr)
+        if payload is not None:
+            compile_cache.store_plan(entry.fingerprint, disk_key, payload)
     entry.plans[key] = plan
     if plan:
         r = _infer_r(in_jets)
@@ -745,9 +903,11 @@ class MlpSegment(Segment):
             return None
         lower = [None if is_zero(c) else c for c in lhs.lower]
         top = None if is_zero(lhs.top) else lhs.top
+        self.lowering_target = kernel_lowering.resolve("jet_mlp").target
         try:
             t0, tl, tt = collapsed_jet_layer_op(
                 h0, lower, top, w, b, K=K, activation=self.activation,
+                lowering=self.lowering_target,
             )
         except Exception as e:  # noqa: BLE001 — classified below
             if record_kernel_failure(e, kind=self.kind) is None:
@@ -1091,10 +1251,11 @@ class AttentionSegment(Segment):
             top = None if is_zero(j.top) else j.top
             return (j.primal, lower, top)
 
+        self.lowering_target = kernel_lowering.resolve("jet_attention").target
         try:
             o0, ol, ot = collapsed_jet_attention_op(
                 triple(q), triple(k), triple(v), K=K, mask=mask, scale=scale,
-                bias=bias,
+                bias=bias, lowering=self.lowering_target,
             )
         except Exception as e:  # noqa: BLE001 — classified below
             if record_kernel_failure(e, kind=self.kind) is None:
@@ -1669,10 +1830,13 @@ class QKVAttentionSegment(Segment):
 
         lower = [None if is_zero(c) else c for c in h.lower]
         top = None if is_zero(h.top) else h.top
+        self.lowering_target = kernel_lowering.resolve(
+            "jet_attention_qkv").target
         try:
             o0, ol, ot = collapsed_jet_qkv_attention_op(
                 (h.primal, lower, top), wq, wk, wv, wo, K=K, mask=mask,
                 scale=scale, bias=bias, rope=rope, qkv_bias=qkv_bias,
+                lowering=self.lowering_target,
             )
         except Exception as e:  # noqa: BLE001 — classified below
             if record_kernel_failure(e, kind=self.kind) is None:
@@ -2182,6 +2346,13 @@ def _resolve_superblock(ctx: PlanContext, idx: int):
     return seg, None
 
 
+# the stock segment classes round-trip through the persistent plan cache;
+# anything else fails _encode_segment and keeps its plan in-memory only
+_SEGMENT_CLASSES.update(MlpSegment=MlpSegment,
+                        AttentionSegment=AttentionSegment,
+                        QKVAttentionSegment=QKVAttentionSegment)
+
+
 # ---------------------------------------------------------------------------
 # drivers
 # ---------------------------------------------------------------------------
@@ -2247,11 +2418,16 @@ class SegmentOutcome:
     covered: int  # eqns the kernel covers when fused
     fused: bool
     detail: str = ""
+    # registry lowering target the fuse attempt resolved
+    # (repro.kernels.lowering: "pallas-mosaic" | "pallas-triton" |
+    # "xla-reference" | "interpret"; "" when no kernel call was attempted)
+    lowering: str = ""
 
     def __str__(self):
         state = "fused" if self.fused else "fell back"
         d = f" [{self.detail}]" if self.detail else ""
-        return (f"{self.kind}@eqn{self.anchor}{d}: {state} "
+        via = f" via {self.lowering}" if self.fused and self.lowering else ""
+        return (f"{self.kind}@eqn{self.anchor}{d}: {state}{via} "
                 f"({self.covered} eqns)")
 
 
@@ -2404,7 +2580,8 @@ class _RecordedSegment:
                 detail = f"{detail}; {why}" if detail else why
         self._entry.segments[seg.anchor] = SegmentOutcome(
             kind=seg.kind, anchor=seg.anchor, covered=len(seg.skip),
-            fused=fused, detail=detail)
+            fused=fused, detail=detail,
+            lowering=getattr(seg, "lowering_target", ""))
         return res
 
 

@@ -194,12 +194,21 @@ def save_cache(entries: Dict[str, list]) -> None:
     path = cache_path()
     try:
         os.makedirs(os.path.dirname(path), exist_ok=True)
+        # Lost-update guard: two tuners that both loaded before either
+        # saved would each replace the file with only their own view,
+        # silently dropping the other's fresh entries. Re-read the file
+        # immediately before the replace and merge, ours winning on key
+        # collisions (we just measured them). A writer landing inside the
+        # read->replace window can still be dropped, but the window is now
+        # one dump, not an entire tuning sweep.
+        merged = load_cache()
+        merged.update(entries)
         # per-process tmp name: concurrent tuners on one host must not
         # interleave writes into a shared tmp file (last os.replace still
         # wins, which merely re-tunes the dropped key next run).
         tmp = f"{path}.{os.getpid()}.tmp"
         with open(tmp, "w") as f:
-            json.dump(entries, f, indent=0, sort_keys=True)
+            json.dump(merged, f, indent=0, sort_keys=True)
         os.replace(tmp, path)
     except OSError:  # read-only FS etc. — cache is best-effort
         pass

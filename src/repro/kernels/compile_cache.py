@@ -1,0 +1,294 @@
+"""Persistent compiled-artifact cache: kill the serving cold start.
+
+Nothing compiled used to survive process exit — every boot of the operator
+server re-traced and re-compiled each (op, K, D) bucket from scratch. This
+module persists three things under one schema-versioned directory
+(``REPRO_COMPILE_CACHE``, default ``~/.cache/repro/compile``):
+
+``exec/``
+    AOT-lowered executables, serialized via :mod:`jax.export`
+    (StableHLO + calling convention). Keyed by a SHA-256 of the caller's
+    tag + key parts + the *environment fingerprint* (cache schema version,
+    jax version, :func:`repro.kernels.autotune.device_kind`), so artifacts
+    shipped from one host are rejected — never mis-executed — on an
+    incompatible one. :func:`cached_jit` is the one-call wrapper: disk hit
+    returns the deserialized executable, miss exports + stores + returns
+    it, and functions :mod:`jax.export` cannot serialize degrade to plain
+    ``jax.jit``.
+
+``plans/``
+    Serialized offload plans (:mod:`repro.core.offload` encodes segments
+    positionally against the jaxpr), keyed per sub-jaxpr fingerprint x K x
+    jet signature x mesh signature, so recursive planning is a disk hit on
+    boot.
+
+``xla/``
+    JAX's own persistent compilation cache
+    (:func:`enable_persistent_xla_cache`), which short-circuits the
+    XLA-compile half of any computation traced identically across boots.
+    Cold and warm boots both run executables through the
+    deserialize-then-jit path, so their XLA cache keys match.
+
+Robustness contract (mirrors the autotune cache): a truncated blob, a
+version/device mismatch, an unreadable meta file, or a failed deserialize
+returns ``None``/falls back to a fresh compile — corruption never crashes
+and never poisons a boot.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+SCHEMA_VERSION = 1
+ENV_DIR = "REPRO_COMPILE_CACHE"
+
+_STATS = {"exec_hits": 0, "exec_misses": 0, "exec_unexportable": 0,
+          "plan_hits": 0, "plan_misses": 0, "rejected": 0}
+
+
+def cache_stats() -> Dict[str, int]:
+    """Process-lifetime hit/miss counters (``rejected`` counts stale or
+    corrupt entries that were ignored)."""
+    return dict(_STATS)
+
+
+def reset_cache_stats() -> None:
+    for k in _STATS:
+        _STATS[k] = 0
+
+
+_CACHE_DIR_OVERRIDE: Optional[str] = None
+
+
+def set_cache_dir(path: Optional[str]) -> Optional[str]:
+    """Process-wide cache directory override (beats :data:`ENV_DIR`) —
+    how ``--artifact-dir`` points a serving process at a shipped artifact
+    bundle. Returns the previous override; pass ``None`` to clear."""
+    global _CACHE_DIR_OVERRIDE
+    old, _CACHE_DIR_OVERRIDE = _CACHE_DIR_OVERRIDE, path
+    return old
+
+
+def cache_dir() -> str:
+    if _CACHE_DIR_OVERRIDE:
+        return _CACHE_DIR_OVERRIDE
+    d = os.environ.get(ENV_DIR, "").strip()
+    if d:
+        return d
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "compile")
+
+
+def clear_cache(directory: Optional[str] = None) -> None:
+    """Delete every persisted artifact (tests / cache-busting)."""
+    shutil.rmtree(directory or cache_dir(), ignore_errors=True)
+
+
+def env_fingerprint() -> Dict[str, Any]:
+    """What makes a compiled artifact portable: schema, jax version, device
+    kind. Any mismatch invalidates the entry (like the autotune cache's
+    cross-device-kind keying)."""
+    import jax
+
+    from repro.kernels import autotune
+
+    return {"schema": SCHEMA_VERSION, "jax": jax.__version__,
+            "device_kind": autotune.device_kind()}
+
+
+def _hash_key(tag: str, key_parts: Sequence[Any]) -> str:
+    payload = json.dumps(
+        {"tag": tag, "key": list(key_parts), "env": env_fingerprint()},
+        sort_keys=True, default=str)
+    return hashlib.sha256(payload.encode()).hexdigest()[:32]
+
+
+def _atomic_write(path: str, data: bytes) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    tmp = f"{path}.{os.getpid()}.tmp"  # per-process tmp, like autotune
+    with open(tmp, "wb") as f:
+        f.write(data)
+    os.replace(tmp, path)
+
+
+def _env_matches(doc: Any) -> bool:
+    return isinstance(doc, dict) and doc.get("env") == json.loads(
+        json.dumps(env_fingerprint(), default=str))
+
+
+# ---------------------------------------------------------------------------
+# executable artifacts (jax.export)
+# ---------------------------------------------------------------------------
+
+
+def _exec_paths(tag: str, key_parts: Sequence[Any]) -> Tuple[str, str]:
+    h = _hash_key(tag, key_parts)
+    base = os.path.join(cache_dir(), "exec")
+    return os.path.join(base, h + ".json"), os.path.join(base, h + ".bin")
+
+
+def store_executable(tag: str, key_parts: Sequence[Any], serialized: bytes,
+                     meta: Optional[Dict[str, Any]] = None) -> None:
+    """Persist one serialized executable (best-effort: read-only FS etc.
+    degrade to a no-op). The blob length is recorded in the meta doc so a
+    truncated ``.bin`` is detectable at load time."""
+    try:
+        meta_path, bin_path = _exec_paths(tag, key_parts)
+        doc = {"env": env_fingerprint(), "tag": tag,
+               "key": [str(p) for p in key_parts],
+               "blob_bytes": len(serialized)}
+        if meta:
+            doc["meta"] = meta
+        _atomic_write(bin_path, serialized)
+        _atomic_write(meta_path,
+                      json.dumps(doc, sort_keys=True, default=str).encode())
+    except OSError:
+        pass
+
+
+def load_executable(tag: str, key_parts: Sequence[Any]):
+    """The deserialized :class:`jax.export.Exported` for this key, or
+    ``None`` when missing, stale (env fingerprint mismatch), truncated, or
+    corrupt — never raises."""
+    meta_path, bin_path = _exec_paths(tag, key_parts)
+    try:
+        with open(meta_path) as f:
+            doc = json.load(f)
+        if not _env_matches(doc):
+            _STATS["rejected"] += 1
+            return None
+        with open(bin_path, "rb") as fb:
+            blob = fb.read()
+        if len(blob) != doc.get("blob_bytes"):
+            _STATS["rejected"] += 1  # truncated/partial write
+            return None
+        from jax import export
+
+        return export.deserialize(blob)
+    except FileNotFoundError:
+        return None
+    except Exception:
+        _STATS["rejected"] += 1
+        return None
+
+
+def cached_jit(tag: str, key_parts: Sequence[Any], fn, args_spec):
+    """AOT-compile ``fn`` with a disk round-trip; returns ``(callable,
+    source)``.
+
+    ``args_spec`` are :class:`jax.ShapeDtypeStruct` (or concrete) example
+    arguments. ``source`` is ``"warm"`` (loaded from disk), ``"cold"``
+    (freshly exported and stored), or ``"jit"`` (:mod:`jax.export` could
+    not serialize ``fn`` — plain ``jax.jit`` fallback, nothing persisted).
+
+    Both warm and cold paths wrap the *deserialized* executable's ``call``
+    in ``jax.jit``, so the persistent XLA compilation cache (``xla/``)
+    sees an identical computation on every boot: the first boot pays the
+    XLA compile and seeds the cache, later boots skip trace AND compile.
+    """
+    import jax
+
+    exp = load_executable(tag, key_parts)
+    if exp is not None:
+        _STATS["exec_hits"] += 1
+        return jax.jit(exp.call), "warm"
+    _STATS["exec_misses"] += 1
+    try:
+        from jax import export
+
+        exported = export.export(jax.jit(fn))(*args_spec)
+        blob = exported.serialize()
+        exp = export.deserialize(blob)
+    except Exception:
+        _STATS["exec_unexportable"] += 1
+        return jax.jit(fn), "jit"
+    store_executable(tag, key_parts, blob)
+    return jax.jit(exp.call), "cold"
+
+
+# ---------------------------------------------------------------------------
+# persistent XLA compilation cache
+# ---------------------------------------------------------------------------
+
+_XLA_CACHE_DIR: Optional[str] = None
+
+
+def enable_persistent_xla_cache(directory: Optional[str] = None) -> str:
+    """Point JAX's persistent compilation cache at ``directory`` (default
+    ``<cache_dir>/xla``) with no minimum compile-time/entry-size gating, so
+    even the small CPU executables of the test/serving loop persist.
+    Idempotent; returns the directory in use."""
+    global _XLA_CACHE_DIR
+    import jax
+
+    directory = directory or os.path.join(cache_dir(), "xla")
+    if _XLA_CACHE_DIR == directory:
+        return directory
+    os.makedirs(directory, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", directory)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    try:
+        # jax initializes the cache lazily on first compile and never
+        # re-reads the config after that — a compile before this call would
+        # silently pin the cache off. Force re-initialization.
+        from jax._src import compilation_cache as _cc
+
+        _cc.reset_cache()
+    except Exception:
+        pass
+    _XLA_CACHE_DIR = directory
+    return directory
+
+
+# ---------------------------------------------------------------------------
+# serialized offload plans
+# ---------------------------------------------------------------------------
+
+
+def _plan_path(fingerprint: str, key_parts: Sequence[Any]) -> str:
+    h = _hash_key("plan/" + fingerprint, key_parts)
+    return os.path.join(cache_dir(), "plans", h + ".json")
+
+
+def store_plan(fingerprint: str, key_parts: Sequence[Any],
+               payload: Any) -> None:
+    """Persist one encoded plan (the payload must be plain JSON data —
+    :mod:`repro.core.offload` owns the encoding). Best-effort."""
+    try:
+        doc = {"env": env_fingerprint(), "fingerprint": fingerprint,
+               "key": [str(p) for p in key_parts], "plan": payload}
+        _atomic_write(_plan_path(fingerprint, key_parts),
+                      json.dumps(doc, sort_keys=True, default=str).encode())
+    except (OSError, TypeError, ValueError):
+        pass
+
+
+def load_plan(fingerprint: str, key_parts: Sequence[Any]) -> Optional[Any]:
+    """The stored plan payload, or ``None`` when missing/stale/corrupt —
+    never raises (a bad entry means planning runs fresh)."""
+    path = _plan_path(fingerprint, key_parts)
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+        if not _env_matches(doc) or doc.get("fingerprint") != fingerprint:
+            _STATS["rejected"] += 1
+            _STATS["plan_misses"] += 1
+            return None
+        payload = doc.get("plan")
+        if payload is None:
+            _STATS["plan_misses"] += 1
+            return None
+        _STATS["plan_hits"] += 1
+        return payload
+    except FileNotFoundError:
+        _STATS["plan_misses"] += 1
+        return None
+    except Exception:
+        _STATS["rejected"] += 1
+        _STATS["plan_misses"] += 1
+        return None

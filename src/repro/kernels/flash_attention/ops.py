@@ -1,6 +1,9 @@
-"""Jit'd wrapper for the flash-attention Pallas kernel: padding, interpret
-switch, and a custom VJP whose backward is the O(S)-memory pure-JAX chunked
-implementation (models/layers.py) — the kernel accelerates the forward."""
+"""Jit'd wrapper for the flash-attention Pallas kernel: padding, the
+lowering dispatch (:mod:`repro.kernels.lowering` — Pallas forward on
+accelerators, the O(S)-memory pure-JAX chunked implementation as the
+``xla-reference`` target), and a custom VJP whose backward is always the
+pure-JAX chunked implementation (models/layers.py) — the kernel
+accelerates the forward."""
 
 from __future__ import annotations
 
@@ -9,11 +12,9 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import lowering as lowering_registry
+
 from .flash_attention import flash_attention_fwd
-
-
-def _on_cpu() -> bool:
-    return jax.default_backend() == "cpu"
 
 
 def _pad_seq(x, mult):
@@ -23,9 +24,8 @@ def _pad_seq(x, mult):
     return jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
-def _fa(q, k, v, causal, window, block_q, block_k):
-    interpret = _on_cpu()
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _fa(q, k, v, causal, window, block_q, block_k, interpret):
     Sq, Skv = q.shape[1], k.shape[1]
     bq = min(block_q, Sq)
     bk = min(block_k, Skv)
@@ -36,11 +36,12 @@ def _fa(q, k, v, causal, window, block_q, block_k):
     return out[:, :Sq]
 
 
-def _fa_fwd(q, k, v, causal, window, block_q, block_k):
-    return _fa(q, k, v, causal, window, block_q, block_k), (q, k, v)
+def _fa_fwd(q, k, v, causal, window, block_q, block_k, interpret):
+    return _fa(q, k, v, causal, window, block_q, block_k, interpret), \
+        (q, k, v)
 
 
-def _fa_bwd(causal, window, block_q, block_k, res, dout):
+def _fa_bwd(causal, window, block_q, block_k, interpret, res, dout):
     from repro.models.layers import flash_attention as fa_jax
 
     q, k, v = res
@@ -56,6 +57,17 @@ _fa.defvjp(_fa_fwd, _fa_bwd)
 
 
 def flash_attention(q, k, v, *, causal=True, window=None,
-                    block_q=128, block_k=128):
-    """Drop-in for models.layers.flash_attention with a Pallas forward."""
-    return _fa(q, k, v, causal, window, block_q, block_k)
+                    block_q=128, block_k=128, lowering: str = "auto"):
+    """Drop-in for models.layers.flash_attention with a Pallas forward.
+
+    ``lowering`` routes through the registry: ``"kernel"`` runs the Pallas
+    kernel (interpret-emulated on CPU), ``"reference"``/``"xla-reference"``
+    runs the pure-JAX chunked implementation as one XLA graph (the CPU
+    default under ``"auto"``), and registry target names select directly.
+    """
+    decision = lowering_registry.resolve("flash_attention", lowering)
+    if decision.mode == "reference":
+        from repro.models.layers import flash_attention as fa_jax
+
+        return fa_jax(q, k, v, causal=causal, window=window, chunk=block_k)
+    return _fa(q, k, v, causal, window, block_q, block_k, decision.interpret)

@@ -22,16 +22,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import autotune
+from repro.kernels import lowering as lowering_registry
 
 from .jet_attention import collapsed_jet_attention, collapsed_jet_qkv_attention
 from .ref import collapsed_jet_attention_ref, collapsed_jet_qkv_attention_ref
 
 _LANE = 128
 _SUBLANE = 8
-
-
-def _on_cpu() -> bool:
-    return jax.default_backend() == "cpu"
 
 
 def _pad_axis(x, axis, mult):
@@ -84,7 +81,8 @@ def prewarm_blocks(batch_shape, Sq: int, Skv: int, dh: int, dv: int, R: int,
     (flattened batch N, backend/interpret flag) so a later op call is a
     cache hit. Called by the offload engine's per-body prewarm."""
     if interpret is None:
-        interpret = _on_cpu()
+        interpret = lowering_registry.resolve("jet_attention",
+                                              "kernel").interpret
     N = int(np.prod(batch_shape)) if batch_shape else 1
     return autotune.prewarm("jet_attention", (N, Sq, Skv, dh, dv, R), K,
                             dtype, interpret=interpret)
@@ -109,22 +107,21 @@ def collapsed_jet_attention_op(q, k, v, *, K: int = 2, mask=None, scale=1.0,
     autotuner's choice
     (:func:`repro.kernels.autotune.get_attention_block_config`).
 
-    ``lowering`` picks the execution strategy: ``"kernel"`` runs the Pallas
-    kernel (emulated when ``interpret``), ``"reference"`` runs the unfused
-    oracle as one XLA graph with the same symbolic-zero skipping, and
-    ``"auto"`` — the offload dispatcher's setting — chooses the kernel on
-    accelerators and the reference graph on CPU, where XLA compiles it
-    tighter than grid-step kernel emulation ever runs.
+    ``lowering`` picks the execution strategy through the registry
+    (:mod:`repro.kernels.lowering`): ``"kernel"`` runs the Pallas kernel
+    (emulated when ``interpret``), ``"reference"`` runs the unfused oracle
+    as one XLA graph with the same symbolic-zero skipping, ``"auto"`` takes
+    the registry's best available target (hardware Pallas on accelerators,
+    the reference graph on CPU — where XLA compiles it tighter than
+    grid-step kernel emulation ever runs), and a registry target name
+    selects that target directly.
 
     Returns ``(o0, [K-1 lower coeffs], ot)`` with the kernel's padding
     stripped and the input batch shape restored.
     """
-    if interpret is None:
-        interpret = _on_cpu()
-    if lowering not in ("auto", "kernel", "reference"):
-        raise ValueError(f"unknown lowering {lowering!r}")
-    if lowering == "auto":
-        lowering = "reference" if _on_cpu() else "kernel"
+    decision = lowering_registry.resolve("jet_attention", lowering, interpret)
+    interpret = decision.interpret
+    lowering = decision.op_lowering
     q0, q_low, q_top = q
     k0, k_low, k_top = k
     v0, v_low, v_top = v
@@ -414,12 +411,10 @@ def collapsed_jet_qkv_attention_op(h, wq, wk, wv, wo, *, K: int = 2,
     set). Returns ``(o0, [K-1 lower coeffs], ot)`` with shapes (B, S, Do),
     summed over all heads — the graph value of the output-projection dot.
     """
-    if interpret is None:
-        interpret = _on_cpu()
-    if lowering not in ("auto", "kernel", "reference"):
-        raise ValueError(f"unknown lowering {lowering!r}")
-    if lowering == "auto":
-        lowering = "reference" if _on_cpu() else "kernel"
+    decision = lowering_registry.resolve("jet_attention_qkv", lowering,
+                                         interpret)
+    interpret = decision.interpret
+    lowering = decision.op_lowering
     h0, h_low, h_top = h
     if len(h_low) != K - 1:
         raise ValueError(
@@ -526,7 +521,8 @@ def prewarm_qkv_blocks(B: int, S: int, D: int, Hq: int, Hkv: int, dh: int,
     call is a cache hit). Called by the offload engine's per-body
     prewarm."""
     if interpret is None:
-        interpret = _on_cpu()
+        interpret = lowering_registry.resolve("jet_attention_qkv",
+                                              "kernel").interpret
     return autotune.prewarm(
         "jet_attention_qkv",
         (B, S, D, Hq, Hkv, dh, dv, do_, R, int(rope), int(qbias)), K, dtype,

@@ -4,7 +4,8 @@ This is the boundary the offload dispatcher (:mod:`repro.core.offload`)
 calls into: padding to MXU block shapes (blocks chosen by
 :mod:`repro.kernels.autotune`), symbolic-zero coefficient instantiation,
 batch-shape canonicalization, layer chaining (the full forward-Laplacian
-network), and the interpret-mode switch for CPU validation.
+network), and the lowering dispatch (kernel vs fused reference graph vs
+interpret-mode emulation) via :mod:`repro.kernels.lowering`.
 """
 
 from __future__ import annotations
@@ -16,14 +17,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import autotune
+from repro.kernels import lowering as lowering_registry
 
 from .jet_mlp import collapsed_jet_layer
+from .ref import collapsed_jet_layer_ref
 
 _LANE = 128
-
-
-def _on_cpu() -> bool:
-    return jax.default_backend() == "cpu"
 
 
 def _pad_to(x, axis, mult):
@@ -78,20 +77,28 @@ _fused_layer.defvjp(_fused_layer_fwd, _fused_layer_bwd)
 def collapsed_jet_layer_op(h0, lower, top, w, b, *, K: int = 2,
                            activation: str = "tanh",
                            block_b=None, block_d=None, block_r=None,
-                           interpret=None):
+                           interpret=None, lowering: str = "auto"):
     """Padding-safe fused collapsed-K-jet layer for arbitrary batch shapes.
 
     h0: (*batch, Din); ``lower``: sequence of K-1 coefficient arrays, each
     (R, *batch, Din) or ``None`` (symbolically zero); ``top``: (*batch, Din)
     or ``None``; w: (Din, Dout); b: (Dout,).
 
+    ``lowering`` picks the execution strategy through the registry
+    (:mod:`repro.kernels.lowering`): ``"kernel"`` runs the Pallas kernel
+    (emulated when ``interpret``), ``"reference"`` runs the unfused oracle
+    as one XLA graph, ``"auto"`` takes the registry's best available target
+    (hardware Pallas on accelerators, the reference graph on CPU — unless
+    ``interpret`` is pinned explicitly, which keeps the kernel path), and a
+    registry target name selects that target directly.
+
     Block sizes default to the autotuner's choice for this shape
     (:func:`repro.kernels.autotune.get_block_config`); explicit values
     override it. Returns ``(t0, [K-1 lower coeffs], tt)`` with the kernel's
     padding stripped and the input batch shape restored.
     """
-    if interpret is None:
-        interpret = _on_cpu()
+    decision = lowering_registry.resolve("jet_mlp", lowering, interpret)
+    interpret = decision.interpret
     if len(lower) != K - 1:
         raise ValueError(f"need K-1={K - 1} lower coefficients, got {len(lower)}")
 
@@ -107,13 +114,6 @@ def collapsed_jet_layer_op(h0, lower, top, w, b, *, K: int = 2,
     R = next((c.shape[0] for c in lower if c is not None), 1)
     dtype = h0.dtype
 
-    if block_b is None or block_d is None or block_r is None:
-        cfg = autotune.get_block_config(B, Din, Dout, R, K, dtype,
-                                        interpret=interpret)
-        block_b = block_b or cfg.block_b
-        block_d = block_d or cfg.block_d
-        block_r = block_r or cfg.block_r
-
     h0_2 = h0.reshape(B, Din)
     low = [
         jnp.zeros((R, B, Din), dtype) if c is None else c.reshape(R, B, Din)
@@ -121,6 +121,22 @@ def collapsed_jet_layer_op(h0, lower, top, w, b, *, K: int = 2,
     ]
     hl = jnp.stack(low)  # (K-1, R, B, Din)
     ht = jnp.zeros((B, Din), dtype) if top is None else top.reshape(B, Din)
+
+    if decision.mode == "reference":
+        # one fused XLA graph of the oracle semantics; no padding, no
+        # autotuned blocks — XLA's own tiling wins on CPU
+        t0, tl, tt = collapsed_jet_layer_ref(
+            h0_2, hl, ht, w, b.astype(w.dtype), K=K, activation=activation)
+        return (t0.reshape(*batch_shape, Dout),
+                [tl[q].reshape(R, *batch_shape, Dout) for q in range(K - 1)],
+                tt.reshape(*batch_shape, Dout))
+
+    if block_b is None or block_d is None or block_r is None:
+        cfg = autotune.get_block_config(B, Din, Dout, R, K, dtype,
+                                        interpret=interpret)
+        block_b = block_b or cfg.block_b
+        block_d = block_d or cfg.block_d
+        block_r = block_r or cfg.block_r
 
     # pad to block multiples; the contraction dim is padded to lane width so
     # every matmul tile is MXU-aligned (zeros are exact).
@@ -150,7 +166,7 @@ def prewarm_blocks(batch_shape, Din: int, Dout: int, R: int, K: int, dtype,
     (flattened batch, backend/interpret flag) so a later op call is a cache
     hit. Called by the offload engine's per-body prewarm."""
     if interpret is None:
-        interpret = _on_cpu()
+        interpret = lowering_registry.resolve("jet_mlp", "kernel").interpret
     B = int(np.prod(batch_shape)) if batch_shape else 1
     return autotune.prewarm("jet_mlp", (B, Din, Dout, R), K, dtype,
                             interpret=interpret)

@@ -1,0 +1,200 @@
+"""Multi-backend kernel lowering registry.
+
+The paper argues the collapsing rewrite "could — or should — be done by a
+machine learning compiler, without exposing complexity to users". The
+kernel wrappers (``jet_mlp/ops.py``, ``jet_attention/ops.py``,
+``flash_attention/ops.py``) used to each hand-roll an ``_on_cpu()``
+interpret-vs-Pallas decision; this module centralizes that choice behind
+*named lowering targets* with capability predicates, so the offload planner
+can name the lowering it picked per segment (:func:`repro.core.offload.explain`)
+and a future Triton kernel is a registry entry, not a per-file rewrite.
+
+Targets (preference order):
+
+``pallas-mosaic``
+    Pallas kernels lowered through Mosaic — TPUs.
+``pallas-triton``
+    Pallas kernels lowered through Triton — GPUs.
+``xla-reference``
+    The *fused reference graph* (each kernel's ``ref.py`` oracle compiled
+    as one XLA computation, symbolic zeros preserved). Available
+    everywhere; the default on CPU, where XLA compiles the reference
+    tighter than grid-step kernel emulation ever runs.
+``interpret``
+    Pallas kernels under ``interpret=True`` emulation. Available
+    everywhere; the validation lowering (it executes the exact kernel
+    grid/loop structure), never the performance one.
+
+Resolution
+----------
+
+:func:`resolve` maps a kernel name plus the wrapper-level ``lowering`` /
+``interpret`` arguments to a :class:`Lowering` decision:
+
+* ``REPRO_KERNEL_BACKEND=<target>`` forces any registry target globally —
+  the A/B switch (``xla-reference`` vs ``interpret`` vs the hardware
+  kernel on one host). Unknown names raise, listing the valid targets.
+* An explicit target name as ``lowering`` selects it directly (and raises
+  if the host cannot run it).
+* The legacy strings keep their wrapper semantics: ``"kernel"`` is the
+  Pallas kernel (emulated on CPU), ``"reference"`` is ``xla-reference``,
+  and ``"auto"`` takes the best available target — unless the caller
+  pinned ``interpret`` explicitly, which keeps the kernel path (the
+  contract interpret-mode CPU tests rely on).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Callable, Dict, Optional, Tuple
+
+ENV_VAR = "REPRO_KERNEL_BACKEND"
+
+#: kernels that route through the registry (each ships a fused reference)
+KERNELS = ("jet_mlp", "jet_attention", "jet_attention_qkv",
+           "flash_attention")
+
+
+def _platform() -> str:
+    import jax
+
+    try:
+        return jax.default_backend()
+    except Exception:
+        return "cpu"
+
+
+@dataclasses.dataclass(frozen=True)
+class LoweringTarget:
+    """One named lowering strategy in the registry."""
+
+    name: str
+    mode: str  # "kernel" (Pallas) | "reference" (fused XLA graph)
+    interpret: bool  # Pallas interpret flag when mode == "kernel"
+    description: str
+    available: Callable[[], bool]  # capability predicate for this host
+
+
+@dataclasses.dataclass(frozen=True)
+class Lowering:
+    """A resolved lowering decision for one kernel call site."""
+
+    target: str  # registry target name (what explain() reports)
+    mode: str  # "kernel" | "reference"
+    interpret: bool
+
+    @property
+    def op_lowering(self) -> str:
+        """The wrapper-level ``lowering=`` string this decision maps to."""
+        return "reference" if self.mode == "reference" else "kernel"
+
+
+TARGETS: Dict[str, LoweringTarget] = {
+    t.name: t
+    for t in (
+        LoweringTarget(
+            "pallas-mosaic", "kernel", False,
+            "Pallas kernels lowered through Mosaic (TPU)",
+            lambda: _platform() == "tpu"),
+        LoweringTarget(
+            "pallas-triton", "kernel", False,
+            "Pallas kernels lowered through Triton (GPU)",
+            lambda: _platform() in ("gpu", "cuda", "rocm")),
+        LoweringTarget(
+            "xla-reference", "reference", False,
+            "fused reference graph compiled as one XLA computation",
+            lambda: True),
+        LoweringTarget(
+            "interpret", "kernel", True,
+            "Pallas kernels under interpret-mode emulation",
+            lambda: True),
+    )
+}
+
+#: best-first resolution order for ``lowering="auto"``
+PREFERENCE: Tuple[str, ...] = ("pallas-mosaic", "pallas-triton",
+                               "xla-reference", "interpret")
+
+
+def forced_target() -> Optional[str]:
+    """The :data:`ENV_VAR` override, validated; ``None`` when unset."""
+    name = os.environ.get(ENV_VAR, "").strip()
+    if not name:
+        return None
+    if name not in TARGETS:
+        raise ValueError(
+            f"{ENV_VAR}={name!r} is not a known lowering target; valid "
+            f"targets: {', '.join(TARGETS)}")
+    return name
+
+
+def default_target() -> str:
+    """Best available target on this host (no override considered)."""
+    for name in PREFERENCE:
+        if TARGETS[name].available():
+            return name
+    return "interpret"
+
+
+def active_target() -> str:
+    """What ``lowering='auto'`` resolves to right now: the forced override
+    when set, the best available target otherwise. Part of compiled-artifact
+    cache keys, so A/B-forced runs never share executables."""
+    return forced_target() or default_target()
+
+
+def kernel_target() -> str:
+    """The Pallas-kernel target for this host (``interpret`` on hosts with
+    no hardware Pallas lowering) — what legacy ``lowering='kernel'`` means."""
+    for name in ("pallas-mosaic", "pallas-triton"):
+        if TARGETS[name].available():
+            return name
+    return "interpret"
+
+
+def _decide(name: str) -> Lowering:
+    t = TARGETS[name]
+    return Lowering(target=t.name, mode=t.mode, interpret=t.interpret)
+
+
+def resolve(kernel: str, lowering: str = "auto",
+            interpret: Optional[bool] = None) -> Lowering:
+    """Resolve a kernel wrapper's ``lowering``/``interpret`` arguments to a
+    :class:`Lowering` decision. See the module docstring for precedence."""
+    forced = forced_target()
+    if forced is not None:
+        return _decide(forced)
+    if lowering in TARGETS:
+        t = TARGETS[lowering]
+        if not t.available():
+            raise ValueError(
+                f"lowering target {lowering!r} is not available on this "
+                f"host (platform {_platform()!r}); available: "
+                + ", ".join(n for n in TARGETS if TARGETS[n].available()))
+        return _decide(lowering)
+    if lowering == "reference":
+        return _decide("xla-reference")
+    if lowering == "kernel":
+        it = (TARGETS[kernel_target()].interpret if interpret is None
+              else bool(interpret))
+        return Lowering("interpret" if it else kernel_target(), "kernel", it)
+    if lowering == "auto":
+        if interpret is not None:  # explicit pin: keep the kernel path
+            return Lowering("interpret" if interpret else kernel_target(),
+                            "kernel", bool(interpret))
+        return _decide(default_target())
+    raise ValueError(
+        f"unknown lowering {lowering!r} for kernel {kernel!r}: expected "
+        f"'auto', 'kernel', 'reference', or a registry target "
+        f"({', '.join(TARGETS)})")
+
+
+def matrix() -> str:
+    """Human-readable target/availability matrix (the README's table)."""
+    lines = [f"platform: {_platform()}"]
+    for name in PREFERENCE:
+        t = TARGETS[name]
+        avail = "available" if t.available() else "unavailable"
+        lines.append(f"  {name:15s} {avail:12s} {t.description}")
+    return "\n".join(lines)

@@ -30,7 +30,11 @@ continuous batch. Runtime kernel failures trip the degradation ladder in
 :mod:`repro.core.offload` (superblock -> per-segment -> CRULES) with
 cool-down recovery probes; ``--chaos`` runs the launcher under the full
 fault-injection menu from :mod:`repro.testing.faults` to drill exactly
-that path.
+that path. ``--artifact-dir`` + ``--warmup`` boot against the persistent
+compiled-artifact cache (:mod:`repro.kernels.compile_cache`): the first
+boot AOT-exports every serving bucket into the directory, later boots
+(or other hosts the directory is shipped to) reload them and skip the
+trace/compile cold start entirely.
 """
 
 from __future__ import annotations
@@ -87,7 +91,14 @@ def _serve_operators(args):
     engine = OperatorEngine(
         f, vector_field=F, backend=args.backend, max_slots=args.slots,
         chunk=args.chunk, max_queue=args.max_queue,
-        default_deadline_s=args.deadline_s)
+        default_deadline_s=args.deadline_s,
+        artifact_dir=args.artifact_dir, field_tag="serve-mlp-pinn")
+    if args.warmup:
+        buckets = engine.read_manifest() or [
+            ("laplacian", 2, D), ("biharmonic", 4, D),
+            ("divergence", 2, D), ("jet", 2, D), ("jet", 4, D)]
+        report = engine.warmup(buckets)
+        print("warmup:", report)
     rng = np.random.default_rng(0)
     mix = [("laplacian", 0), ("biharmonic", 0), ("divergence", 0),
            ("jet", 4)]
@@ -146,6 +157,15 @@ def main():
     ap.add_argument("--chaos", action="store_true",
                     help="run under the fault-injection menu "
                          "(kernel-raise, NaN-inject, slow-step)")
+    ap.add_argument("--artifact-dir", default=None,
+                    help="persistent compiled-artifact directory (AOT "
+                         "executables + offload plans + XLA cache); reuse "
+                         "across boots — or ship it — to kill the cold "
+                         "start")
+    ap.add_argument("--warmup", action="store_true",
+                    help="AOT-compile the manifest's (op, K, D) buckets "
+                         "(or the default serving mix) before admitting "
+                         "traffic")
     args = ap.parse_args()
     if args.backend == "interpreter":
         args.backend = None

@@ -66,9 +66,11 @@ Quickstart::
 from __future__ import annotations
 
 import dataclasses
+import json
 import math
+import os
 import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -77,6 +79,10 @@ import numpy as np
 from repro.core import offload
 from repro.core import operators as ops
 from repro.core.collapse import collapsed_fan
+from repro.kernels import compile_cache
+from repro.kernels import lowering as kernel_lowering
+
+MANIFEST_SCHEMA = 1
 
 QUEUED = "QUEUED"
 RUNNING = "RUNNING"
@@ -135,6 +141,16 @@ class OperatorEngine:
     (optional) a ``(B, D) -> (B, D)`` field for ``divergence`` requests.
     ``backend`` is the collapsed-jet execution backend ("pallas",
     "pallas-per-segment", or None for the CRULES interpreter).
+
+    ``artifact_dir`` opts into the persistent compiled-artifact cache
+    (:mod:`repro.kernels.compile_cache`): it becomes the process cache
+    directory (``exec/`` + ``plans/`` + JAX's own ``xla/`` cache), compiled
+    bucket steps are AOT round-tripped through :func:`cached_jit`, and
+    :meth:`warmup` / :meth:`write_manifest` make the directory a shippable
+    warm-boot bundle. ``field_tag`` names the served field inside artifact
+    keys — two engines serving different fields with identical bucket
+    geometry must never share executables, and the engine cannot fingerprint
+    a Python callable.
     """
 
     def __init__(self, f: Callable, *, vector_field: Optional[Callable] = None,
@@ -142,7 +158,9 @@ class OperatorEngine:
                  chunk: int = 32, max_queue: int = 64,
                  default_deadline_s: Optional[float] = None,
                  max_step_retries: int = 4, backoff_base_s: float = 0.02,
-                 backoff_cap_s: float = 0.5):
+                 backoff_cap_s: float = 0.5,
+                 artifact_dir: Optional[str] = None,
+                 field_tag: str = "default"):
         self.f = f
         self.vector_field = vector_field
         self.backend = backend
@@ -153,6 +171,14 @@ class OperatorEngine:
         self.max_step_retries = max_step_retries
         self.backoff_base_s = backoff_base_s
         self.backoff_cap_s = backoff_cap_s
+        self.artifact_dir = artifact_dir
+        self.field_tag = field_tag
+        # (op, K, D) -> "warm" | "cold" | "jit": where each bucket's step fn
+        # came from (surfaced by stats/warmup; "jit" = not artifact-backed)
+        self.artifact_sources: Dict[Tuple[str, int, int], str] = {}
+        if artifact_dir:
+            compile_cache.set_cache_dir(artifact_dir)
+            compile_cache.enable_persistent_xla_cache()
 
         self.queue: List[OperatorRequest] = []
         self.buckets: Dict[Tuple[str, int, int], _Bucket] = {}
@@ -316,6 +342,11 @@ class OperatorEngine:
 
         return compute
 
+    def _artifact_key(self, key: Tuple[str, int, int]) -> Tuple:
+        op, K, D = key
+        return (op, K, D, self.max_slots, self.chunk, str(self.backend),
+                self.field_tag, kernel_lowering.active_target())
+
     def _step_fn(self, key: Tuple[str, int, int]):
         epoch = offload.breaker_epoch()
         fn = self._compiled.get((key, epoch))
@@ -323,9 +354,90 @@ class OperatorEngine:
             # drop this bucket's stale-epoch traces (they pin the old rung)
             self._compiled = {kk: v for kk, v in self._compiled.items()
                               if kk[0] != key}
-            self._compiled[(key, epoch)] = fn = jax.jit(
-                self._build_compute(key))
+            compute = self._build_compute(key)
+            # Persist/load the compiled step only with every breaker closed:
+            # a step traced mid-degradation bakes the degraded plan, which
+            # must never outlive the breaker that caused it.
+            if self.artifact_dir and offload.breakers_closed():
+                spec = (jax.ShapeDtypeStruct(
+                    (self.max_slots * self.chunk, key[2]), jnp.float32),)
+                fn, source = compile_cache.cached_jit(
+                    "operator_step", self._artifact_key(key), compute, spec)
+                self.artifact_sources[key] = source
+            else:
+                fn = jax.jit(compute)
+                self.artifact_sources[key] = "jit"
+            self._compiled[(key, epoch)] = fn
         return fn
+
+    # --- warm boot: AOT warmup + the shippable manifest ---------------------
+
+    def manifest_path(self) -> Optional[str]:
+        if not self.artifact_dir:
+            return None
+        return os.path.join(self.artifact_dir, "manifest.json")
+
+    def write_manifest(self,
+                       buckets: Sequence[Tuple[str, int, int]]) -> None:
+        """Record which (op, K, D) buckets this artifact bundle was warmed
+        for, plus the engine geometry their executables assume — the next
+        boot warms exactly these without being told."""
+        path = self.manifest_path()
+        if path is None:
+            return
+        doc = {"schema": MANIFEST_SCHEMA, "max_slots": self.max_slots,
+               "chunk": self.chunk, "backend": str(self.backend),
+               "field_tag": self.field_tag,
+               "buckets": [[op, int(K), int(D)] for op, K, D in buckets]}
+        os.makedirs(self.artifact_dir, exist_ok=True)
+        tmp = f"{path}.{os.getpid()}.tmp"
+        with open(tmp, "w") as fh:
+            json.dump(doc, fh, indent=2, sort_keys=True)
+        os.replace(tmp, path)
+
+    def read_manifest(self) -> List[Tuple[str, int, int]]:
+        """The bucket list recorded by a previous :meth:`write_manifest`;
+        ``[]`` when missing, corrupt, or schema-incompatible."""
+        path = self.manifest_path()
+        if path is None:
+            return []
+        try:
+            with open(path) as fh:
+                doc = json.load(fh)
+            if doc.get("schema") != MANIFEST_SCHEMA:
+                return []
+            return [(str(op), int(K), int(D))
+                    for op, K, D in doc.get("buckets", [])]
+        except Exception:
+            return []
+
+    def warmup(self, buckets: Optional[Sequence[Tuple[str, int, int]]] = None
+               ) -> Dict[str, Dict[str, Any]]:
+        """Pre-compile (and execute once, to materialize XLA executables)
+        the step function of each listed (op, K, D) bucket, so the first
+        real request finds a hot path. ``buckets=None`` reads the shipped
+        manifest. Returns per-bucket ``{"source", "seconds"}`` — ``source``
+        is ``"warm"`` when the executable came off disk — and rewrites the
+        manifest to cover everything warmed."""
+        if buckets is None:
+            buckets = self.read_manifest()
+        report: Dict[str, Dict[str, Any]] = {}
+        warmed: List[Tuple[str, int, int]] = []
+        for op, K, D in buckets:
+            key = (str(op), int(K), int(D))
+            t0 = time.perf_counter()
+            fn = self._step_fn(key)
+            x = np.full((self.max_slots * self.chunk, key[2]), 0.5,
+                        np.float32)
+            out, _ = fn(x)
+            jax.block_until_ready(out)
+            report["/".join(map(str, key))] = {
+                "source": self.artifact_sources.get(key, "jit"),
+                "seconds": round(time.perf_counter() - t0, 4)}
+            warmed.append(key)
+        if warmed and self.artifact_dir:
+            self.write_manifest(warmed)
+        return report
 
     def _execute(self, fn, x):
         """Invoke one compiled bucket step. A dedicated seam so the fault
@@ -452,6 +564,9 @@ class OperatorEngine:
             "quarantined": self.quarantined,
             "timeouts": self.timeouts,
             "load_shed": self.load_shed,
+            "artifact_sources": {"/".join(map(str, k)): v
+                                 for k, v in self.artifact_sources.items()},
+            "artifact_cache": compile_cache.cache_stats(),
             "breakers": offload.kernel_health(),
             **latency_summary(lat),
         }

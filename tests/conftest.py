@@ -1,5 +1,14 @@
 import os
+import tempfile
 
 # Tests run single-device (the multi-pod dry-run manages its own device
 # count inside launch/dryrun.py; distributed tests spawn subprocesses).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# Isolate the persistent compiled-artifact/plan cache per test session so
+# runs never read a developer's warm ~/.cache (or poison it). Individual
+# tests that exercise warm/cold behaviour point REPRO_COMPILE_CACHE at
+# their own tmp_path.
+if "REPRO_COMPILE_CACHE" not in os.environ:
+    os.environ["REPRO_COMPILE_CACHE"] = tempfile.mkdtemp(
+        prefix="repro-compile-cache-")

@@ -19,6 +19,8 @@ import pytest
     "benchmarks.scan_depth",
     "benchmarks.table1_operators",
     "benchmarks.tableF2_theory",
+    "benchmarks.cold_start",
+    "benchmarks.run",
 ])
 def test_benchmark_module_imports(mod):
     assert importlib.import_module(mod) is not None
@@ -93,6 +95,27 @@ def test_operator_serving_bench_smoke():
     faulted = rows[1]
     assert faulted["quarantined"] == 2 and faulted["timeouts"] == 2
     assert faulted["load_shed"] > 0 and faulted["batch_retries"] >= 1
+
+
+@pytest.mark.serve
+def test_cold_start_bench_worker_smoke(tmp_path):
+    """One in-process cold boot + one warm boot of the cold-start
+    benchmark's worker against a shared artifact directory (the real
+    benchmark spawns fresh processes and asserts the >=2x TTFR win; the
+    test loop only keeps the artifact round-trip honest)."""
+    from benchmarks.cold_start import _worker
+    from repro.kernels import compile_cache
+
+    art = str(tmp_path / "artifacts")
+    buckets = [["laplacian", 2, 3], ["jet", 2, 3]]
+    try:
+        cold = _worker(art, buckets)
+        warm = _worker(art, buckets)
+    finally:
+        compile_cache.set_cache_dir(None)
+    assert all(s == "cold" for s in cold["sources"].values())
+    assert all(s == "warm" for s in warm["sources"].values())
+    assert cold["result"] == warm["result"]
 
 
 def test_distributed_laplacian_bench_smoke():

@@ -1,0 +1,255 @@
+"""The persistent compiled-artifact cache: executable round-trips,
+corruption/staleness robustness (poisoned entries fall back to a fresh
+compile — never crash, never poison a boot), the offload plan disk cache,
+the operator engine's warmup/manifest flow, and the autotune cache
+lost-update race fix."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import offload
+from repro.core import operators as ops
+from repro.kernels import autotune, compile_cache
+
+
+@pytest.fixture
+def cache_dir(tmp_path):
+    """Point the process cache at a private directory for one test."""
+    old = compile_cache.set_cache_dir(str(tmp_path))
+    compile_cache.reset_cache_stats()
+    yield tmp_path
+    compile_cache.set_cache_dir(old)
+
+
+def _fn(x):
+    return jnp.tanh(x) * 2.0 + 1.0
+
+
+_SPEC = (jax.ShapeDtypeStruct((4,), jnp.float32),)
+
+
+# ---------------------------------------------------------------------------
+# executable artifacts
+# ---------------------------------------------------------------------------
+
+
+def test_cached_jit_round_trip_is_bit_exact(cache_dir):
+    f1, src1 = compile_cache.cached_jit("t", ("a", 1), _fn, _SPEC)
+    assert src1 == "cold"
+    x = jnp.linspace(-1.0, 1.0, 4)
+    want = np.asarray(f1(x))
+    f2, src2 = compile_cache.cached_jit("t", ("a", 1), _fn, _SPEC)
+    assert src2 == "warm"
+    np.testing.assert_array_equal(np.asarray(f2(x)), want)
+    stats = compile_cache.cache_stats()
+    assert stats["exec_hits"] == 1 and stats["exec_misses"] == 1
+
+
+def test_cached_jit_keys_do_not_alias(cache_dir):
+    assert compile_cache.cached_jit("t", ("a", 1), _fn, _SPEC)[1] == "cold"
+    assert compile_cache.cached_jit("t", ("a", 2), _fn, _SPEC)[1] == "cold"
+    assert compile_cache.cached_jit("u", ("a", 1), _fn, _SPEC)[1] == "cold"
+
+
+def test_truncated_blob_falls_back_to_fresh_compile(cache_dir):
+    compile_cache.cached_jit("t", ("k",), _fn, _SPEC)
+    [bin_path] = [p for p in (cache_dir / "exec").iterdir()
+                  if p.suffix == ".bin"]
+    bin_path.write_bytes(bin_path.read_bytes()[:10])  # partial write
+    fn, src = compile_cache.cached_jit("t", ("k",), _fn, _SPEC)
+    assert src == "cold"  # recompiled, not crashed
+    assert compile_cache.cache_stats()["rejected"] >= 1
+    x = jnp.linspace(-1.0, 1.0, 4)
+    np.testing.assert_allclose(np.asarray(fn(x)), np.tanh(x) * 2 + 1,
+                               rtol=1e-6)
+
+
+def test_corrupt_meta_falls_back_to_fresh_compile(cache_dir):
+    compile_cache.cached_jit("t", ("k",), _fn, _SPEC)
+    [meta] = [p for p in (cache_dir / "exec").iterdir()
+              if p.suffix == ".json"]
+    meta.write_text("{definitely not json")
+    assert compile_cache.cached_jit("t", ("k",), _fn, _SPEC)[1] == "cold"
+    assert compile_cache.cache_stats()["rejected"] >= 1
+
+
+def test_schema_version_mismatch_rejects_entry(cache_dir):
+    compile_cache.cached_jit("t", ("k",), _fn, _SPEC)
+    [meta] = [p for p in (cache_dir / "exec").iterdir()
+              if p.suffix == ".json"]
+    doc = json.loads(meta.read_text())
+    doc["env"]["schema"] = compile_cache.SCHEMA_VERSION + 1  # future cache
+    meta.write_text(json.dumps(doc))
+    assert compile_cache.cached_jit("t", ("k",), _fn, _SPEC)[1] == "cold"
+    assert compile_cache.cache_stats()["rejected"] >= 1
+
+
+def test_unexportable_function_degrades_to_plain_jit(cache_dir):
+    def bad(x):  # forces a concrete value at trace time: export raises
+        return jnp.asarray(float(x[0]))
+
+    fn, src = compile_cache.cached_jit("t", ("bad",), bad, _SPEC)
+    assert src == "jit"
+    assert compile_cache.cache_stats()["exec_unexportable"] == 1
+    assert not (cache_dir / "exec").exists()  # nothing was persisted
+
+
+# ---------------------------------------------------------------------------
+# plan payloads
+# ---------------------------------------------------------------------------
+
+
+def test_plan_round_trip_and_key_separation(cache_dir):
+    compile_cache.store_plan("fp", ("k", 2), {"schema": 1, "segments": {}})
+    assert compile_cache.load_plan("fp", ("k", 2)) == \
+        {"schema": 1, "segments": {}}
+    assert compile_cache.load_plan("fp", ("k", 4)) is None
+    assert compile_cache.load_plan("other", ("k", 2)) is None
+
+
+def test_poisoned_plan_file_loads_as_none(cache_dir):
+    compile_cache.store_plan("fp", ("k",), {"schema": 1})
+    [p] = list((cache_dir / "plans").iterdir())
+    p.write_text("xx{")
+    assert compile_cache.load_plan("fp", ("k",)) is None
+    assert compile_cache.cache_stats()["rejected"] >= 1
+
+
+def _pinn():
+    from repro.configs import get_smoke_config
+    from repro.models import mlp as M
+
+    cfg = get_smoke_config("mlp-pinn")
+    p = M.init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (6, cfg.mlp_sizes[0]))
+    return (lambda y: M.apply(p, y, cfg)), x
+
+
+def test_offload_plans_round_trip_through_disk(cache_dir):
+    f, x = _pinn()
+    want = ops.laplacian(f, x, method="collapsed")
+    offload.clear_plan_cache()
+    compile_cache.reset_cache_stats()
+    got_cold = ops.laplacian(f, x, method="collapsed", backend="pallas")
+    s = compile_cache.cache_stats()
+    assert s["plan_misses"] >= 1 and s["plan_hits"] == 0
+    # drop the in-memory plans: the next planning pass must come off disk
+    offload.clear_plan_cache()
+    got_warm = ops.laplacian(f, x, method="collapsed", backend="pallas")
+    assert compile_cache.cache_stats()["plan_hits"] >= 1
+    np.testing.assert_allclose(got_cold, want, rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(got_cold, got_warm)  # decoded plan parity
+
+
+def test_poisoned_offload_plan_replans_fresh(cache_dir):
+    f, x = _pinn()
+    want = ops.laplacian(f, x, method="collapsed")
+    offload.clear_plan_cache()
+    ops.laplacian(f, x, method="collapsed", backend="pallas")
+    for p in (cache_dir / "plans").iterdir():
+        p.write_text("garbage")
+    offload.clear_plan_cache()
+    compile_cache.reset_cache_stats()
+    got = ops.laplacian(f, x, method="collapsed", backend="pallas")
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+    s = compile_cache.cache_stats()
+    assert s["rejected"] >= 1 and s["plan_hits"] == 0
+
+
+# ---------------------------------------------------------------------------
+# operator engine: warmup + manifest + breaker gating
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.serve
+def test_engine_warmup_manifest_and_warm_boot(tmp_path):
+    from benchmarks.operator_serving import build_fields
+    from repro.serve.operator_engine import OperatorEngine, OperatorRequest
+
+    f, F = build_fields()
+    art = str(tmp_path / "artifacts")
+    buckets = [("laplacian", 2, 3), ("jet", 2, 3)]
+    try:
+        eng = OperatorEngine(f, vector_field=F, backend="pallas",
+                             artifact_dir=art, field_tag="t")
+        rep = eng.warmup(buckets)
+        assert all(v["source"] == "cold" for v in rep.values())
+        assert eng.read_manifest() == buckets
+
+        # a fresh engine against the shipped directory: manifest-driven
+        # warmup, every bucket loaded off disk
+        eng2 = OperatorEngine(f, vector_field=F, backend="pallas",
+                              artifact_dir=art, field_tag="t")
+        rep2 = eng2.warmup()
+        assert set(rep2) == set(rep)
+        assert all(v["source"] == "warm" for v in rep2.values())
+
+        # and the deserialized executables actually serve
+        pts = np.linspace(0.0, 1.0, 30, dtype=np.float32).reshape(10, 3)
+        eng2.submit(OperatorRequest(rid=0, op="laplacian", points=pts))
+        done = eng2.run_until_done()
+        assert done[0].status == "DONE"
+        ref = ops.laplacian(f, jnp.asarray(pts), method="collapsed")
+        np.testing.assert_allclose(done[0].result, ref, rtol=1e-4,
+                                   atol=1e-5)
+    finally:
+        compile_cache.set_cache_dir(None)
+
+
+@pytest.mark.serve
+def test_engine_skips_artifacts_while_a_breaker_is_open(tmp_path,
+                                                        monkeypatch):
+    from benchmarks.operator_serving import build_fields
+    from repro.serve.operator_engine import OperatorEngine
+
+    f, F = build_fields()
+    art = str(tmp_path / "artifacts")
+    try:
+        eng = OperatorEngine(f, vector_field=F, backend="pallas",
+                             artifact_dir=art, field_tag="t")
+        # degraded ladder: a step traced now must NOT be persisted (it
+        # would bake the degraded plan into the shipped artifact bundle)
+        monkeypatch.setattr(offload, "breakers_closed", lambda: False)
+        rep = eng.warmup([("jet", 2, 3)])
+        assert rep["jet/2/3"]["source"] == "jit"
+        exec_dir = os.path.join(art, "exec")
+        assert not os.path.isdir(exec_dir) or not os.listdir(exec_dir)
+    finally:
+        compile_cache.set_cache_dir(None)
+
+
+# ---------------------------------------------------------------------------
+# autotune cache: the lost-update race
+# ---------------------------------------------------------------------------
+
+
+def test_autotune_save_merges_interleaved_writers(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE",
+                       str(tmp_path / "autotune.json"))
+    k1 = autotune.shape_key(8, 16, 32, 4, 2, "float32", "cpu", kind="cpu")
+    k2 = autotune.shape_key(8, 16, 64, 4, 2, "float32", "cpu", kind="cpu")
+    # two tuners both load before either saves (the lost-update schedule)
+    a = autotune.load_cache()
+    b = autotune.load_cache()
+    a[k1] = [16, 128, 4]
+    autotune.save_cache(a)
+    b[k2] = [32, 64, 2]
+    autotune.save_cache(b)  # b never saw k1; the merge must preserve it
+    disk = autotune.load_cache()
+    assert disk[k1] == [16, 128, 4]
+    assert disk[k2] == [32, 64, 2]
+
+
+def test_autotune_save_prefers_the_writers_fresh_entries(tmp_path,
+                                                         monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE",
+                       str(tmp_path / "autotune.json"))
+    k = autotune.shape_key(8, 16, 32, 4, 2, "float32", "cpu", kind="cpu")
+    autotune.save_cache({k: [16, 128, 4]})
+    autotune.save_cache({k: [32, 64, 2]})  # re-tuned: ours wins
+    assert autotune.load_cache()[k] == [32, 64, 2]

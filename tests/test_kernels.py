@@ -62,7 +62,8 @@ def test_flash_attention_kernel_sweep(B, Sq, Skv, Hq, Hkv, dh, causal, window, d
     k = jax.random.normal(jax.random.PRNGKey(1), (B, Skv, Hkv, dh), dtype)
     v = jax.random.normal(jax.random.PRNGKey(2), (B, Skv, Hkv, dh), dtype)
     ref = attention_reference(q, k, v, causal=causal, window=window)
-    got = fa_pallas(q, k, v, causal=causal, window=window, block_q=16, block_k=16)
+    got = fa_pallas(q, k, v, causal=causal, window=window, block_q=16,
+                    block_k=16, lowering="kernel")
     tol = 2e-4 if dtype == jnp.float32 else 2e-2
     np.testing.assert_allclose(ref.astype(jnp.float32), got.astype(jnp.float32),
                                rtol=tol, atol=tol)
@@ -73,7 +74,8 @@ def test_flash_attention_grad_matches_reference():
     q = jax.random.normal(jax.random.PRNGKey(0), (B, S, Hq, dh))
     k = jax.random.normal(jax.random.PRNGKey(1), (B, S, Hkv, dh))
     v = jax.random.normal(jax.random.PRNGKey(2), (B, S, Hkv, dh))
-    g1 = jax.grad(lambda q, k, v: (fa_pallas(q, k, v, block_q=8, block_k=8) ** 2).sum(),
+    g1 = jax.grad(lambda q, k, v: (fa_pallas(q, k, v, block_q=8, block_k=8,
+                                             lowering="kernel") ** 2).sum(),
                   argnums=(0, 1, 2))(q, k, v)
     g2 = jax.grad(lambda q, k, v: (attention_reference(q, k, v) ** 2).sum(),
                   argnums=(0, 1, 2))(q, k, v)

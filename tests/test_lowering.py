@@ -1,0 +1,137 @@
+"""The multi-backend lowering registry: target resolution semantics, the
+``REPRO_KERNEL_BACKEND`` A/B override, the unknown-target error contract,
+and ``explain()`` naming the chosen lowering for every fused segment."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import offload
+from repro.core import operators as ops
+from repro.kernels import lowering
+
+
+# ---------------------------------------------------------------------------
+# resolution semantics (tier-1 runs on CPU: no hardware Pallas lowering)
+# ---------------------------------------------------------------------------
+
+
+def test_registry_is_consistent():
+    assert set(lowering.PREFERENCE) == set(lowering.TARGETS)
+    m = lowering.matrix()
+    for name in lowering.TARGETS:
+        assert name in m
+
+
+def test_cpu_defaults():
+    assert lowering.default_target() == "xla-reference"
+    assert lowering.kernel_target() == "interpret"
+    assert lowering.active_target() == "xla-reference"
+
+
+def test_auto_resolves_to_reference_on_cpu():
+    d = lowering.resolve("jet_mlp")
+    assert (d.target, d.mode, d.interpret) == ("xla-reference",
+                                               "reference", False)
+    assert d.op_lowering == "reference"
+
+
+def test_legacy_kernel_string_keeps_the_kernel_path():
+    d = lowering.resolve("jet_mlp", "kernel")
+    assert (d.target, d.mode, d.interpret) == ("interpret", "kernel", True)
+    assert d.op_lowering == "kernel"
+
+
+def test_explicit_interpret_pin_keeps_the_kernel_path():
+    # interpret-mode CPU tests pass interpret=True with lowering='auto';
+    # that contract pins the Pallas kernel path, never the reference graph
+    d = lowering.resolve("jet_mlp", "auto", interpret=True)
+    assert d.mode == "kernel" and d.interpret
+
+
+def test_target_names_select_directly():
+    assert lowering.resolve("jet_attention", "reference").target == \
+        "xla-reference"
+    d = lowering.resolve("jet_attention_qkv", "interpret")
+    assert d.target == "interpret" and d.interpret
+
+
+def test_unavailable_target_raises_listing_available():
+    with pytest.raises(ValueError) as e:
+        lowering.resolve("jet_mlp", "pallas-mosaic")
+    msg = str(e.value)
+    assert "not available" in msg
+    assert "xla-reference" in msg and "interpret" in msg
+
+
+def test_unknown_lowering_raises_listing_targets():
+    with pytest.raises(ValueError) as e:
+        lowering.resolve("jet_mlp", "not-a-lowering")
+    msg = str(e.value)
+    for name in lowering.TARGETS:
+        assert name in msg
+
+
+# ---------------------------------------------------------------------------
+# the REPRO_KERNEL_BACKEND override
+# ---------------------------------------------------------------------------
+
+
+def test_forced_unknown_target_error_lists_valid_targets(monkeypatch):
+    monkeypatch.setenv(lowering.ENV_VAR, "bogus-backend")
+    with pytest.raises(ValueError) as e:
+        lowering.resolve("jet_mlp")
+    msg = str(e.value)
+    assert "bogus-backend" in msg
+    for name in lowering.TARGETS:
+        assert name in msg
+
+
+def test_forced_target_beats_every_call_site_argument(monkeypatch):
+    monkeypatch.setenv(lowering.ENV_VAR, "interpret")
+    assert lowering.resolve("jet_mlp", "reference").target == "interpret"
+    assert lowering.resolve("jet_mlp", "kernel").target == "interpret"
+    assert lowering.active_target() == "interpret"
+
+
+# ---------------------------------------------------------------------------
+# explain() surfaces the lowering per fused segment
+# ---------------------------------------------------------------------------
+
+
+def _pinn():
+    from repro.configs import get_smoke_config
+    from repro.models import mlp as M
+
+    cfg = get_smoke_config("mlp-pinn")
+    p = M.init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (6, cfg.mlp_sizes[0]))
+    return (lambda y: M.apply(p, y, cfg)), x
+
+
+def test_explain_reports_lowering_for_every_fused_segment():
+    f, x = _pinn()
+    offload.clear_plan_cache()
+    rep = offload.explain(f, x, K=2, backend="pallas")
+    fused = rep.fused()
+    assert fused
+    assert all(oc.lowering == "xla-reference" for oc in fused)
+    assert "via xla-reference" in str(rep)
+
+
+def test_explain_reports_the_forced_lowering(monkeypatch):
+    monkeypatch.setenv(lowering.ENV_VAR, "interpret")
+    f, x = _pinn()
+    offload.clear_plan_cache()
+    rep = offload.explain(f, x, K=2, backend="pallas")
+    fused = rep.fused()
+    assert fused and all(oc.lowering == "interpret" for oc in fused)
+
+
+def test_forced_interpret_matches_reference(monkeypatch):
+    f, x = _pinn()
+    want = ops.laplacian(f, x, method="collapsed")
+    monkeypatch.setenv(lowering.ENV_VAR, "interpret")
+    offload.clear_plan_cache()
+    got = ops.laplacian(f, x, method="collapsed", backend="pallas")
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
