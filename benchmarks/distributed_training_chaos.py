@@ -1,0 +1,271 @@
+"""Distributed-training chaos drill: kill-and-resume mesh training under the
+full fault menu.
+
+Three scenarios over the same deterministic data stream, all on a host mesh
+(forced to 8 devices when this file is the entry point):
+
+* ``reference`` — uninterrupted explicit-DP run with int8 error-feedback
+  compressed gradient collectives; the loss trajectory every other scenario
+  is judged against.
+* ``consensus`` — shard-targeted NaN gradients (one shard poisoned at chosen
+  steps) plus a trace-scoped corrupted-collective window. Asserts in-run:
+  the poisoned shard is quarantined at exactly the injected steps (counted
+  in ``skipped_shards``), healthy shards commit, the corrupted-collective
+  window skips mesh-wide (``skipped_nonfinite``) with zero quarantines, the
+  run never crashes, and the replicated params are bit-identical across
+  every device shard afterward.
+* ``kill_resume`` — the preemption path end to end: collective-timeout
+  faults early (bounded retries + backoff), a straggler window (watchdog
+  events), then a hard kill at step N (classified ``preempted`` ->
+  synchronous save + ``TrainingInterrupted``), then resume on a mesh of
+  HALF the devices (error-feedback residuals sum-fold, stale mesh-keyed
+  offload plans evicted). Asserts in-run: the save landed at the kill step
+  (zero steps lost), the resume restored it, and the resumed run's final
+  loss matches the uninterrupted reference within 1e-3.
+
+Every scenario emits ``BENCH {json}`` rows (final loss, skip/retry/watchdog
+counts, recovery seconds). A failed drill fails loudly — it does not emit a
+pretty row.
+
+Run:  python benchmarks/distributed_training_chaos.py
+"""
+
+import os
+import sys
+import time
+
+# importable as benchmarks.distributed_training_chaos (the test loop) AND
+# runnable as a script from anywhere. As the entry point, force an 8-device
+# host platform BEFORE jax initializes; as an import into a live jax
+# process, leave the backend alone and adapt to whatever devices exist.
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (os.path.join(_ROOT, "src"), _ROOT):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+if __name__ == "__main__" and "jax" not in sys.modules:
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            _flags + " --xla_force_host_platform_device_count=8").strip()
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from benchmarks.common import emit_bench  # noqa: E402
+
+from repro.distributed import sharding as shd  # noqa: E402
+from repro.distributed.mesh_offload import dp_step_transform  # noqa: E402
+from repro.testing import faults  # noqa: E402
+from repro.train.trainer import (TrainConfig, Trainer,  # noqa: E402
+                                 TrainingInterrupted)
+
+TOTAL_STEPS = 24
+KILL_STEP = 13
+GLOBAL_BATCH = 32  # divisible by 8 (full mesh) and 4 (shrunk mesh)
+D_IN, D_OUT = 3, 8
+LOSS_TOL = 1e-3
+
+
+def make_problem():
+    params = {"w": jax.random.normal(jax.random.PRNGKey(0),
+                                     (D_IN, D_OUT)) * 0.3,
+              "b": jnp.zeros((D_OUT,))}
+
+    def loss_fn(p, batch):
+        x, y = batch
+        pred = jnp.tanh(x @ p["w"] + p["b"]).sum(-1)
+        return jnp.mean((pred - y) ** 2), {}
+
+    def batch_fn(step):
+        k = jax.random.fold_in(jax.random.PRNGKey(7), step)
+        x = jax.random.normal(k, (GLOBAL_BATCH, D_IN))
+        return (np.asarray(x), np.asarray(jnp.sin(x).sum(-1)))
+
+    return params, loss_fn, batch_fn
+
+
+def make_trainer(params, loss_fn, batch_fn, n_devices, **tcfg_kw):
+    mesh = shd.compat_mesh((n_devices,), ("data",))
+    tcfg = TrainConfig(peak_lr=1e-2, warmup_steps=4, total_steps=TOTAL_STEPS,
+                       compress_grads=True, reduce_axis=("data",), **tcfg_kw)
+    trainer = Trainer(loss_fn, params, tcfg, mesh=mesh,
+                      step_transform=dp_step_transform(mesh, compressed=True),
+                      batch_fn=batch_fn)
+    return trainer
+
+
+def assert_params_replicated(params):
+    """Replicated (out_specs P()) arrays must be BIT-identical on every
+    device — a consensus bug shows up here as per-shard drift."""
+    for leaf in jax.tree.leaves(params):
+        shards = getattr(leaf, "addressable_shards", None)
+        if not shards or len(shards) < 2:
+            continue
+        ref = np.asarray(shards[0].data)
+        for s in shards[1:]:
+            got = np.asarray(s.data)
+            assert got.tobytes() == ref.tobytes(), (
+                f"replicated param diverged across shards "
+                f"(device {s.device}): max|d|="
+                f"{np.max(np.abs(got - ref))}")
+
+
+def run_reference(n_devices):
+    params, loss_fn, batch_fn = make_problem()
+    trainer = make_trainer(params, loss_fn, batch_fn, n_devices)
+    t0 = time.perf_counter()
+    hist = trainer.run(TOTAL_STEPS, log_every=1, log_fn=lambda s: None)
+    wall = time.perf_counter() - t0
+    assert len(hist) == TOTAL_STEPS and np.isfinite(hist[-1]["loss"])
+    assert sum(h["skipped_nonfinite"] for h in hist) == 0
+    assert sum(h["skipped_shards"] for h in hist) == 0
+    emit_bench(bench="distributed_training_chaos", mode="reference",
+               devices=n_devices, steps=TOTAL_STEPS,
+               final_loss=hist[-1]["loss"], wall_s=round(wall, 3))
+    return hist
+
+
+def run_consensus(n_devices):
+    """Per-shard NaN quarantine + mesh-wide corrupted-collective skip."""
+    params, loss_fn, batch_fn = make_problem()
+    bad_shard = min(2, n_devices - 1)
+    nan_steps = (5, 11) if n_devices > 1 else ()
+
+    # leg 1: poisoned shard quarantined, healthy shards commit
+    trainer = make_trainer(params, loss_fn, batch_fn, n_devices)
+    with faults.shard_nan_grads(trainer, shards=(bad_shard,),
+                                at_steps=nan_steps) as nan_stats:
+        hist = trainer.run(TOTAL_STEPS, log_every=1, log_fn=lambda s: None)
+    expected = {s + 1 for s in nan_steps}  # history steps are post-increment
+    for h in hist:
+        want = 1.0 if h["step"] in expected else 0.0
+        assert h["skipped_shards"] == want, (h, expected)
+        assert h["skipped_nonfinite"] == 0.0, h  # healthy shards committed
+        assert np.isfinite(h["loss"]), h
+    assert nan_stats.per_shard.get(bad_shard, 0) == len(nan_steps)
+    assert trainer.skipped_shard_steps == len(nan_steps)
+    assert_params_replicated(trainer.params)
+
+    # leg 2: corrupted compressed-collective payload — every shard receives
+    # the same post-psum garbage, so the consensus must skip MESH-WIDE with
+    # zero per-shard quarantines (no shard was individually at fault).
+    # Trace-scoped: install before the trainer traces, retrace to heal.
+    params2, loss_fn2, batch_fn2 = make_problem()
+    init_snapshot = jax.tree.map(np.asarray, params2)  # donated below
+    corrupt_window = 3
+    with faults.corrupt_collective(kind="nan") as cc_stats:
+        trainer2 = make_trainer(params2, loss_fn2, batch_fn2, n_devices)
+        hist_bad = trainer2.run(corrupt_window, log_every=1,
+                                log_fn=lambda s: None)
+    trainer2.retrace()  # drop the poisoned trace
+    assert cc_stats.injected > 0  # the wrap actually traced in
+    for h in hist_bad:
+        assert h["skipped_nonfinite"] == 1.0, h
+        assert h["skipped_shards"] == 0.0, h
+    # nothing committed during the corrupted window
+    for a, b in zip(jax.tree.leaves(trainer2.params),
+                    jax.tree.leaves(init_snapshot)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    hist_ok = trainer2.run(TOTAL_STEPS, log_every=1, log_fn=lambda s: None)
+    assert sum(h["skipped_nonfinite"] for h in hist_ok) == 0
+    assert np.isfinite(hist_ok[-1]["loss"])
+    assert_params_replicated(trainer2.params)
+
+    emit_bench(bench="distributed_training_chaos", mode="consensus",
+               devices=n_devices, steps=TOTAL_STEPS,
+               nan_injections=nan_stats.injected,
+               per_shard={str(k): v for k, v in nan_stats.per_shard.items()},
+               quarantined_shard_steps=trainer.skipped_shard_steps,
+               corrupted_collective_steps=len(hist_bad),
+               mesh_wide_skips=int(sum(h["skipped_nonfinite"]
+                                       for h in hist_bad)),
+               final_loss=hist[-1]["loss"],
+               params_replicated_identical=True)
+    return hist
+
+
+def run_kill_resume(n_devices, ref_hist, ckpt_dir):
+    """Retries + straggler + hard preemption at KILL_STEP, then elastic
+    resume on half the devices."""
+    params, loss_fn, batch_fn = make_problem()
+    trainer = make_trainer(params, loss_fn, batch_fn, n_devices,
+                           ckpt_dir=ckpt_dir, ckpt_every=5,
+                           watchdog_min_s=0.1, watchdog_factor=3.0,
+                           backoff_base_s=0.01, backoff_cap_s=0.05)
+    interrupted = None
+    t_kill = None
+    with faults.train_step_raise(trainer, n=2), \
+            faults.slow_train_step(trainer, seconds=0.3, every=9,
+                                   shard=0) as slow_stats, \
+            faults.kill_at_step(trainer, KILL_STEP, mode="hard"):
+        try:
+            trainer.run(TOTAL_STEPS, log_every=1, log_fn=lambda s: None)
+        except TrainingInterrupted as e:
+            interrupted = e
+            t_kill = time.perf_counter()
+    assert interrupted is not None, "hard kill never fired"
+    assert interrupted.label == "preempted"
+    assert interrupted.saved_step == KILL_STEP  # zero steps lost
+    assert trainer.step_retries == 2  # collective faults retried, not fatal
+    assert [lab for _, lab, _ in trainer.failure_events].count(
+        "collective") == 2
+    assert slow_stats.per_shard.get(0, 0) >= 1  # straggler actually slept
+    n_watchdog = len(trainer.watchdog_events)
+    assert_params_replicated(trainer.params)
+
+    # relaunch on HALF the devices (elastic shrink), resume from the save
+    shrunk = max(n_devices // 2, 1)
+    params2, loss_fn2, batch_fn2 = make_problem()
+    resumed = make_trainer(params2, loss_fn2, batch_fn2, shrunk,
+                           ckpt_dir=ckpt_dir, ckpt_every=5)
+    assert resumed.maybe_restore(log_fn=lambda s: None), "nothing to resume"
+    assert resumed.step == KILL_STEP
+    if shrunk != n_devices:
+        assert any("sum-folded" in note for note in resumed.provenance), \
+            resumed.provenance
+    from repro.core.offload import evict_mesh_plans
+    evicted = evict_mesh_plans()
+    hist2 = resumed.run(TOTAL_STEPS, log_every=1, log_fn=lambda s: None)
+    recovery_s = time.perf_counter() - t_kill
+    assert resumed.step == TOTAL_STEPS
+    assert sum(h["skipped_nonfinite"] for h in hist2) == 0
+    assert_params_replicated(resumed.params)
+    gap = abs(hist2[-1]["loss"] - ref_hist[-1]["loss"])
+    assert gap < LOSS_TOL, (
+        f"resumed final loss {hist2[-1]['loss']} vs reference "
+        f"{ref_hist[-1]['loss']} (|gap|={gap} >= {LOSS_TOL})")
+
+    emit_bench(bench="distributed_training_chaos", mode="kill_resume",
+               devices=n_devices, resumed_devices=shrunk,
+               kill_step=KILL_STEP, saved_step=interrupted.saved_step,
+               steps_lost=interrupted.saved_step - KILL_STEP,
+               step_retries=trainer.step_retries,
+               watchdog_events=n_watchdog,
+               straggler_sleeps=slow_stats.injected,
+               plans_evicted=evicted,
+               provenance=list(resumed.provenance),
+               recovery_s=round(recovery_s, 3),
+               final_loss=hist2[-1]["loss"],
+               reference_final_loss=ref_hist[-1]["loss"],
+               loss_gap=gap)
+    return hist2
+
+
+def run():
+    import tempfile
+
+    n_devices = jax.device_count()
+    ref_hist = run_reference(n_devices)
+    run_consensus(n_devices)
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        run_kill_resume(n_devices, ref_hist, ckpt_dir)
+    return []  # BENCH rows already emitted; no CSV table
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

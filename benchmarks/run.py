@@ -11,6 +11,9 @@ Prints ``name,us_per_call,derived`` CSV. Sub-benchmarks:
                         vs superblock (+ HBM segment counts)
   scan_depth          — plan-once scaling across scanned backbone depths
   cold_start          — operator-server TTFR, cold vs artifact-warmed boot
+  distributed_training_chaos — mesh-training chaos drill: shard-NaN
+                        consensus quarantine, corrupted collectives,
+                        kill-at-step-N + elastic resume on a shrunk mesh
 
 ``--bench-json [DIR]`` additionally writes every emitted BENCH row into
 ``DIR/BENCH_<name>.json`` (default: the repo root) — the committed CPU
@@ -23,7 +26,8 @@ from __future__ import annotations
 import sys
 import traceback
 
-from benchmarks import (attention_laplacian, cold_start, fig1_laplacian,
+from benchmarks import (attention_laplacian, cold_start,
+                        distributed_training_chaos, fig1_laplacian,
                         rewrite_flops, roofline, scan_depth,
                         table1_operators, tableF2_theory, tableG3_jax)
 from benchmarks.common import emit, write_bench_json
@@ -38,6 +42,7 @@ ALL = {
     "attention_laplacian": attention_laplacian.run,
     "scan_depth": scan_depth.run,
     "cold_start": cold_start.run,
+    "distributed_training_chaos": distributed_training_chaos.run,
 }
 
 def main() -> None:

@@ -170,19 +170,32 @@ def verify(ckpt_dir: str, step: int):
     for key, info in manifest.items():
         fp = os.path.join(path, info.get("file", ""))
         try:
-            arr = np.load(fp, mmap_mode="r")  # header-only read
-        except (OSError, ValueError) as e:
+            # header-only read, no mmap: verify runs on hot recovery paths
+            # (SIGTERM sync-save, restore walk-back) where mapping a file of
+            # unknown integrity is the riskier primitive
+            with open(fp, "rb") as fh:
+                version = np.lib.format.read_magic(fh)
+                shape, _, _ = np.lib.format._read_array_header(fh, version)
+        except (OSError, ValueError, AttributeError) as e:
             return False, f"array {key!r} unreadable: {e}"
-        if list(arr.shape) != list(info.get("shape", [])):
-            return False, (f"array {key!r} shape {list(arr.shape)} != "
+        if list(shape) != list(info.get("shape", [])):
+            return False, (f"array {key!r} shape {list(shape)} != "
                            f"manifest {info.get('shape')}")
     return True, ""
 
 
-def restore(ckpt_dir: str, step: int, like_tree, shardings=None):
+def restore(ckpt_dir: str, step: int, like_tree, shardings=None,
+            strict_shapes: bool = True):
     """Restore into the structure of ``like_tree``; if ``shardings`` (a
     matching pytree of jax.sharding.Sharding) is given, device_put each array
-    with it — this is where elastic re-sharding happens."""
+    with it — this is where elastic re-sharding happens.
+
+    ``strict_shapes`` (default True): a saved array whose shape differs from
+    the ``like_tree`` leaf raises :class:`CheckpointError` *here*, with the
+    key and both shapes — not three frames deep inside a donated jit call.
+    Pass ``strict_shapes=False`` only when the caller re-shards mismatched
+    leaves itself (``Trainer.maybe_restore`` does, for the ``ef_devices``-
+    leading error-feedback residuals after an elastic mesh rescale)."""
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
     try:
         with open(os.path.join(path, "metadata.json")) as f:
@@ -206,6 +219,21 @@ def restore(ckpt_dir: str, step: int, like_tree, shardings=None):
             raise CheckpointError(
                 f"checkpoint step {step}: array {key!r} unreadable "
                 f"({e})") from e
+        like_shape = tuple(getattr(like, "shape", ()) or ())
+        if strict_shapes and tuple(arr.shape) != like_shape:
+            hint = ""
+            if key.startswith("opt/ef") or "/ef/" in f"/{key}/":
+                hint = (" — this is per-device error-feedback state; its "
+                        "leading axis is the data-axis device count at save "
+                        "time (init_opt_state(ef_devices=...)). Restore "
+                        "through Trainer.maybe_restore (or pass "
+                        "strict_shapes=False and re-shard with "
+                        "train.trainer.elastic_ef) to resume on a "
+                        "different mesh shape.")
+            raise CheckpointError(
+                f"checkpoint step {step}: array {key!r} has saved shape "
+                f"{tuple(arr.shape)} but the restore target expects "
+                f"{like_shape}{hint}")
         if shardings is not None and key in flat_shard:
             loaded[key] = jax.device_put(arr, flat_shard[key])
         else:
@@ -216,4 +244,4 @@ def restore(ckpt_dir: str, step: int, like_tree, shardings=None):
     for kp, _ in flat_with_path:
         key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
         leaves.append(loaded[key])
-    return jax.tree_util.tree_unflatten(treedef, leaves), meta["extra"]
+    return jax.tree_util.tree_unflatten(treedef, leaves), meta.get("extra", {})

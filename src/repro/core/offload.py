@@ -554,6 +554,29 @@ def clear_plan_cache() -> None:
     _PLAN_STATS.update(hits=0, misses=0)
 
 
+def evict_mesh_plans(keep_sig: tuple = None) -> int:
+    """Drop cached plans whose mesh signature differs from ``keep_sig``
+    (default: the currently activated mesh); returns the eviction count.
+
+    The elastic-resume re-key: plans carry prewarmed *local shard* shapes,
+    so after a mesh shrink/grow every plan keyed to the old mesh shape is
+    wrong for the relaunched run — but mesh-free plans (``()`` signature)
+    and plans for the new shape stay warm. Entries left with no plans are
+    removed entirely."""
+    if keep_sig is None:
+        keep_sig = _mesh_signature()
+    evicted = 0
+    for cache_key in list(_PLAN_CACHE):
+        entry = _PLAN_CACHE[cache_key]
+        stale = [k for k in entry.plans if k[3] not in ((), keep_sig)]
+        evicted += len(stale)
+        for k in stale:
+            del entry.plans[k]
+        if not entry.plans:
+            del _PLAN_CACHE[cache_key]
+    return evicted
+
+
 # ---------------------------------------------------------------------------
 # plan serialization: the persistent offload-plan cache
 # ---------------------------------------------------------------------------

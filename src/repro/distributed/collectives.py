@@ -38,23 +38,49 @@ def compressed_psum(x, axis_name: str):
     return (total.astype(jnp.float32) * scale / n).astype(x.dtype)
 
 
-def compressed_psum_ef(x, err, axis_name: str):
+def compressed_psum_ef(x, err, axis_name: str, ok=None):
     """Error-feedback :func:`compressed_psum`: returns ``(mean, new_err)``.
 
     ``err`` is this shard's float32 residual buffer from the previous step;
     the payload quantized this step is ``x + err``, and ``new_err`` is what
     the int8 round dropped locally. Over time the accumulated reduction is
     exact (the residual can never grow beyond one quantization step).
+
+    ``ok`` (optional scalar bool, per shard) is the quarantine gate of the
+    cross-shard non-finite consensus (see ``train/trainer.py``): a shard
+    with ``ok=False`` contributes an all-zero payload to the integer psum,
+    is excluded from the mean's denominator, and keeps its residual buffer
+    untouched for the step. This must happen *before* quantization — a NaN
+    payload cast to int32 is platform-defined garbage that dequantizes to a
+    *finite* wrong gradient on every healthy shard, the silent-divergence
+    failure mode the consensus layer exists to stop.
     """
-    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
     x32 = x.astype(jnp.float32) + err
+    if ok is None:
+        n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    else:
+        x32 = jnp.where(ok, x32, 0.0)
+        n = jnp.maximum(jax.lax.psum(ok.astype(jnp.float32), axis_name), 1.0)
     scale = _shared_scale(x32, axis_name)
     q = jnp.clip(jnp.round(x32 / scale), -127, 127)
     total = jax.lax.psum(q.astype(jnp.int32), axis_name)
     new_err = x32 - q * scale
+    if ok is not None:
+        new_err = jnp.where(ok, new_err, err)  # quarantined: residual carries
     mean = (total.astype(jnp.float32) * scale / n).astype(x.dtype)
     return mean, new_err
 
 
 def psum_mean(x, axis_name: str):
     return jax.lax.pmean(x, axis_name)
+
+
+def masked_psum_mean(x, axis_name: str, ok):
+    """Mean of ``x`` over the shards where ``ok`` (scalar bool, per shard)
+    is True: quarantined shards contribute zero and are excluded from the
+    denominator. All-shards-quarantined returns 0 (the caller's consensus
+    gate skips the step before the value matters)."""
+    n_ok = jax.lax.psum(ok.astype(jnp.float32), axis_name)
+    total = jax.lax.psum(
+        jnp.where(ok, x.astype(jnp.float32), 0.0), axis_name)
+    return (total / jnp.maximum(n_ok, 1.0)).astype(x.dtype)

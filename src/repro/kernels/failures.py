@@ -45,7 +45,23 @@ _RUNTIME_TYPE_NAMES = frozenset({
 })
 
 # (substring, label) — checked case-insensitively, first match wins.
+# Order matters: the distributed families sit before the generic runtime
+# patterns so a "DEADLINE_EXCEEDED: collective permute ..." classifies as a
+# collective timeout (save-and-shrink the mesh) rather than a plain
+# xla_runtime (degrade the kernel ladder).
 _MESSAGE_PATTERNS = (
+    # --- distributed families (mesh training: trainer save-and-shrink) ---
+    ("all-reduce", "collective"),
+    ("allreduce", "collective"),
+    ("all-gather", "collective"),
+    ("collective", "collective"),
+    ("nccl", "collective"),
+    ("halted", "halted_device"),
+    ("device or resource busy", "halted_device"),
+    ("failed_precondition: device", "halted_device"),
+    ("preempt", "preempted"),
+    ("sigterm", "preempted"),
+    # --- kernel/runtime families (serving: degradation ladder) ---
     ("resource_exhausted", "resource_exhausted"),
     ("out of memory", "resource_exhausted"),
     ("vmem", "resource_exhausted"),
@@ -57,8 +73,14 @@ _MESSAGE_PATTERNS = (
 )
 
 #: Labels worth retrying after degradation — the resource may free up, and
-#: the degraded plan avoids the failing launch shape entirely.
-RETRYABLE = frozenset({"resource_exhausted", "xla_runtime", "injected"})
+#: the degraded plan avoids the failing launch shape entirely. The
+#: distributed ``collective`` / ``halted_device`` families are retryable too
+#: (a transient link flap or a recovering device heals under backoff);
+#: ``preempted`` is NOT — the host is going away, retrying burns the grace
+#: period the SIGTERM save needs, so the trainer goes straight to
+#: save-and-interrupt.
+RETRYABLE = frozenset({"resource_exhausted", "xla_runtime", "injected",
+                       "collective", "halted_device"})
 
 
 def _message_label(exc: BaseException) -> Optional[str]:

@@ -46,6 +46,16 @@ def main():
     ap.add_argument("--pods", type=int, default=None,
                     help="split host devices into a ('pod','data') mesh")
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true",
+                    help="require a restore from --ckpt-dir (exit 3 when no "
+                         "complete checkpoint exists). The relaunch half of "
+                         "the preemption path: the mesh may be SMALLER or "
+                         "LARGER than the one that saved — per-device "
+                         "error-feedback residuals re-shard automatically "
+                         "(sum-fold/zero-pad, provenance logged) and stale "
+                         "mesh-keyed offload plans are evicted. Without "
+                         "--resume a restore is still attempted "
+                         "opportunistically when --ckpt-dir is set.")
     ap.add_argument("--coordinator", default=None)
     ap.add_argument("--num-processes", type=int, default=1)
     ap.add_argument("--process-id", type=int, default=0)
@@ -104,9 +114,32 @@ def main():
                           mesh=mesh,
                           param_shardings=(None if step_transform else p_shard),
                           batch_fn=batch_fn, step_transform=step_transform)
-        if args.ckpt_dir and trainer.maybe_restore():
-            print(f"resumed from step {trainer.step}")
+        if args.ckpt_dir:
+            restored = trainer.maybe_restore()
+            if restored:
+                print(f"resumed from step {trainer.step}")
+                for note in trainer.provenance:
+                    print(f"provenance: {note}")
+                # the relaunched mesh may be a different shape than the one
+                # that planned the cached offloads — evict every plan keyed
+                # to another mesh signature so nothing replays stale local
+                # shard shapes (current-mesh and mesh-free plans stay warm)
+                from repro.core.offload import evict_mesh_plans
+                n_evicted = evict_mesh_plans()
+                if n_evicted:
+                    print(f"evicted {n_evicted} stale mesh-keyed offload "
+                          f"plan(s) after mesh change")
+            elif args.resume:
+                raise SystemExit(
+                    f"--resume: no complete checkpoint under "
+                    f"{args.ckpt_dir!r} (nothing to resume from)")
+        elif args.resume:
+            raise SystemExit("--resume requires --ckpt-dir")
         trainer.run(args.steps, log_every=max(args.steps // 10, 1))
+        if args.ckpt_dir:
+            # leave a resumable final state even when the step count never
+            # hit a ckpt_every boundary (no-op if this step already landed)
+            trainer.save(synchronous=True)
 
 
 if __name__ == "__main__":

@@ -1,9 +1,14 @@
-"""Deterministic fault injection for the serving/offload stack.
+"""Deterministic fault injection for the serving/offload/training stack.
 
 Chaos testing needs faults that are *reproducible*: every injector here is a
-context manager with an explicit trigger (call count, request id) and no
-randomness, so a failing chaos run replays exactly. Each yields a
-:class:`FaultStats` counter object and restores the patched seam on exit.
+context manager with an explicit trigger (call count, request id, step
+number, shard index) and no randomness, so a failing chaos run replays
+exactly. Each yields a :class:`FaultStats` counter object and restores the
+patched seam on exit — installation is unwound in reverse install order even
+when patching itself raises partway through (see :func:`_patch_all`), so a
+bad ``kinds`` entry can never leave an earlier seam patched.
+
+Serving-side injectors (PR 7):
 
 * :func:`kernel_raise` — make the offload engine's kernel entry points
   raise a classified kernel failure (``InjectedKernelFault`` with a
@@ -20,6 +25,25 @@ randomness, so a failing chaos run replays exactly. Each yields a
   pressure).
 * :func:`queue_flood` — driver helper: submit a burst of requests
   back-to-back (admission-control pressure).
+
+Training-side injectors (shard-targeted, for the distributed chaos drill):
+
+* :func:`shard_nan_grads` — NaN one shard's slice of the global batch at
+  chosen steps, so exactly that shard's local loss/grads go non-finite and
+  the cross-shard consensus must quarantine it (healthy shards commit).
+* :func:`slow_train_step` — straggler: sleep at the trainer's step seam.
+* :func:`train_step_raise` — raise a classified distributed failure
+  (collective-timeout message by default) at the step seam, BEFORE the jit
+  call consumes the donated buffers, exercising retry + backoff.
+* :func:`corrupt_collective` — trace-scoped: wrap the trainer module's
+  compressed collective so the *reduced* gradient is poisoned post-psum
+  (every shard sees the same garbage — the mesh-wide skip leg of the
+  consensus). Install before building/``retrace()``-ing the step; a jit
+  trace cached before install is NOT affected.
+* :func:`kill_at_step` — preemption at step N: ``mode="sigterm"`` flips the
+  trainer's graceful-preemption flag (finish the step, sync-save, stop);
+  ``mode="hard"`` raises a classified ``preempted`` failure (non-retryable
+  -> save-and-interrupt with the relaunch runbook).
 """
 
 from __future__ import annotations
@@ -27,7 +51,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import time
-from typing import Callable, Iterable, List, Optional
+from typing import Callable, Dict, Iterable, List, Optional
 
 import numpy as np
 
@@ -42,14 +66,61 @@ _KERNEL_ATTRS = {
 _DEFAULT_MESSAGE = ("RESOURCE_EXHAUSTED: injected fault — VMEM allocation "
                     "failed for kernel launch")
 
+_COLLECTIVE_MESSAGE = ("DEADLINE_EXCEEDED: injected fault — collective "
+                       "all-reduce timed out waiting for remote shard")
+
+_PREEMPT_MESSAGE = ("UNAVAILABLE: injected fault — host preempted "
+                    "(maintenance event), SIGTERM grace period started")
+
+_MISSING = object()
+
+
+@contextlib.contextmanager
+def _patch_all(patches):
+    """Install ``(obj, attr, new)`` patches in order; ALWAYS unwind in
+    reverse install order — including when a later installation raises, so a
+    partially-installed set never leaks past the context manager. ``obj``
+    may be a module, class, or instance; an attr the object didn't own
+    (e.g. an instance shadowing a class method) is removed again rather than
+    copied down."""
+    installed = []  # (obj, attr, old) in install order
+    try:
+        for obj, attr, new in patches:
+            old = obj.__dict__.get(attr, _MISSING)
+            setattr(obj, attr, new)
+            installed.append((obj, attr, old))
+        yield
+    finally:
+        for obj, attr, old in reversed(installed):
+            if old is _MISSING:
+                try:
+                    delattr(obj, attr)
+                except AttributeError:
+                    pass
+            else:
+                setattr(obj, attr, old)
+
 
 @dataclasses.dataclass
 class FaultStats:
-    """Counters exposed by every injector: total seam ``calls`` seen and
-    ``injected`` faults actually fired."""
+    """Counters exposed by every injector: total seam ``calls`` seen,
+    ``injected`` faults actually fired, and (for the shard-targeted
+    training injectors) ``per_shard`` injection counts keyed by shard
+    index."""
 
     calls: int = 0
     injected: int = 0
+    per_shard: Dict[int, int] = dataclasses.field(default_factory=dict)
+
+    def record_shard(self, shard: int, n: int = 1):
+        """Count ``n`` injections against ``shard`` (and in ``injected``)."""
+        self.injected += n
+        self.per_shard[shard] = self.per_shard.get(shard, 0) + n
+
+
+# --------------------------------------------------------------------------
+# serving-side injectors
+# --------------------------------------------------------------------------
 
 
 @contextlib.contextmanager
@@ -66,8 +137,6 @@ def kernel_raise(n: int = 1, kinds: Iterable[str] = ("mlp",),
     if where == "kernel":
         from repro.core import offload
 
-        originals = {}
-
         def wrap(orig):
             left = [n]
 
@@ -81,15 +150,11 @@ def kernel_raise(n: int = 1, kinds: Iterable[str] = ("mlp",),
 
             return inner
 
-        try:
-            for kd in kinds:
-                attr = _KERNEL_ATTRS[kd]
-                originals[attr] = getattr(offload, attr)
-                setattr(offload, attr, wrap(originals[attr]))
+        patches = [(offload, _KERNEL_ATTRS[kd],
+                    wrap(getattr(offload, _KERNEL_ATTRS[kd])))
+                   for kd in kinds]
+        with _patch_all(patches):
             yield stats
-        finally:
-            for attr, fn in originals.items():
-                setattr(offload, attr, fn)
     elif where == "step":
         from repro.serve import operator_engine as oe
 
@@ -104,11 +169,8 @@ def kernel_raise(n: int = 1, kinds: Iterable[str] = ("mlp",),
                 raise InjectedKernelFault(message)
             return orig(self, fn, x)
 
-        oe.OperatorEngine._execute = _execute
-        try:
+        with _patch_all([(oe.OperatorEngine, "_execute", _execute)]):
             yield stats
-        finally:
-            oe.OperatorEngine._execute = orig
     else:
         raise ValueError(f"where must be 'kernel' or 'step', got {where!r}")
 
@@ -137,11 +199,8 @@ def nan_inject(rids: Optional[Iterable[int]] = None):
                 stats.injected += 1
         return orig(self, req)
 
-    oe.OperatorEngine.submit = submit
-    try:
+    with _patch_all([(oe.OperatorEngine, "submit", submit)]):
         yield stats
-    finally:
-        oe.OperatorEngine.submit = orig
 
 
 @contextlib.contextmanager
@@ -160,11 +219,8 @@ def slow_step(seconds: float = 0.05, every: int = 1):
             time.sleep(seconds)
         return orig(self, fn, x)
 
-    oe.OperatorEngine._execute = _execute
-    try:
+    with _patch_all([(oe.OperatorEngine, "_execute", _execute)]):
         yield stats
-    finally:
-        oe.OperatorEngine._execute = orig
 
 
 def queue_flood(engine, n: int,
@@ -175,3 +231,170 @@ def queue_flood(engine, n: int,
     for r in reqs:
         engine.submit(r)
     return reqs
+
+
+# --------------------------------------------------------------------------
+# training-side injectors (shard-targeted)
+# --------------------------------------------------------------------------
+
+
+@contextlib.contextmanager
+def shard_nan_grads(trainer, shards: Iterable[int] = (0,),
+                    at_steps: Iterable[int] = (2,),
+                    n_shards: Optional[int] = None):
+    """NaN the targeted shards' slice of the global batch at the given steps.
+
+    Under explicit DP the global batch is split contiguously over the data
+    axes, so poisoning rows ``[s*per, (s+1)*per)`` makes exactly shard ``s``'s
+    local loss/gradients non-finite — the cross-shard consensus must
+    quarantine that shard (``metrics["skipped_shards"]``) while every healthy
+    shard commits. Host-side injection at the ``batch_fn`` seam: it works
+    against an already-cached jit trace (no retrace needed) and replays
+    deterministically. ``n_shards`` defaults to the trainer's data-axis
+    device count."""
+    total = n_shards if n_shards is not None else trainer._ef_devices
+    orig = trainer.batch_fn
+    stats = FaultStats()
+    steps = set(int(s) for s in at_steps)
+    targets = tuple(int(s) for s in shards)
+    for s in targets:
+        if not 0 <= s < total:
+            raise ValueError(f"shard {s} out of range for {total} shards")
+
+    def batch_fn(step):
+        stats.calls += 1
+        batch = orig(step)
+        if int(step) not in steps:
+            return batch
+
+        def corrupt(x):
+            x = np.array(x, copy=True)
+            per = x.shape[0] // total
+            for s in targets:
+                x[s * per:(s + 1) * per] = np.nan
+            return x
+
+        import jax
+        batch = jax.tree.map(corrupt, batch)
+        for s in targets:
+            stats.record_shard(s)
+        return batch
+
+    with _patch_all([(trainer, "batch_fn", batch_fn)]):
+        yield stats
+
+
+@contextlib.contextmanager
+def slow_train_step(trainer, seconds: float = 0.05, every: int = 1,
+                    shard: Optional[int] = None):
+    """Straggler injection: sleep before every ``every``-th step launch at
+    the trainer's :meth:`_execute_step` seam (watchdog/EWMA pressure without
+    touching numerics). ``shard`` only labels the ``per_shard`` counter —
+    in-process the whole mesh steps together, so a slow shard IS a slow
+    step."""
+    orig = trainer._execute_step
+    stats = FaultStats()
+
+    def _execute_step(params, opt_state, batch, step):
+        stats.calls += 1
+        if stats.calls % every == 0:
+            if shard is not None:
+                stats.record_shard(shard)
+            else:
+                stats.injected += 1
+            time.sleep(seconds)
+        return orig(params, opt_state, batch, step)
+
+    with _patch_all([(trainer, "_execute_step", _execute_step)]):
+        yield stats
+
+
+@contextlib.contextmanager
+def train_step_raise(trainer, n: int = 1, message: str = _COLLECTIVE_MESSAGE,
+                     shard: Optional[int] = None):
+    """Raise a classified distributed failure on the first ``n`` step
+    launches. The raise happens at the :meth:`_execute_step` seam *before*
+    the jit call, so the donated params/opt-state buffers are still alive
+    and the trainer's bounded retry + backoff path is safe to exercise. The
+    default message classifies as the retryable ``collective`` family; pass
+    a ``halted``/``preempt`` message to hit the other families."""
+    orig = trainer._execute_step
+    stats = FaultStats()
+    left = [n]
+
+    def _execute_step(params, opt_state, batch, step):
+        stats.calls += 1
+        if left[0] > 0:
+            left[0] -= 1
+            if shard is not None:
+                stats.record_shard(shard)
+            else:
+                stats.injected += 1
+            raise InjectedKernelFault(message)
+        return orig(params, opt_state, batch, step)
+
+    with _patch_all([(trainer, "_execute_step", _execute_step)]):
+        yield stats
+
+
+@contextlib.contextmanager
+def corrupt_collective(kind: str = "nan"):
+    """Poison the trainer's compressed gradient collective POST-reduction
+    (``kind``: "nan" or "inf") — every shard receives the same corrupted
+    mean, so the consensus must skip the step mesh-wide
+    (``skipped_nonfinite``) with zero per-shard quarantines.
+
+    Trace-scoped: the wrapper is baked in at trace time, so install this
+    BEFORE the trainer builds (or ``trainer.retrace()``) and retrace again
+    after exit to heal — a step cached before install is untouched.
+    ``stats.injected`` counts trace-time wrap sites, not steps run."""
+    import jax.numpy as jnp
+
+    from repro.train import trainer as trainer_mod
+
+    if kind not in ("nan", "inf"):
+        raise ValueError(f"kind must be 'nan' or 'inf', got {kind!r}")
+    bad = float("nan") if kind == "nan" else float("inf")
+    orig = trainer_mod.compressed_psum_ef
+    stats = FaultStats()
+
+    def corrupted(x, err, axis_name, ok=None):
+        stats.calls += 1
+        stats.injected += 1
+        mean, new_err = orig(x, err, axis_name, ok=ok)
+        return mean + jnp.asarray(bad, dtype=mean.dtype), new_err
+
+    with _patch_all([(trainer_mod, "compressed_psum_ef", corrupted)]):
+        yield stats
+
+
+@contextlib.contextmanager
+def kill_at_step(trainer, step: int, mode: str = "sigterm"):
+    """Preempt the trainer when it reaches ``step``.
+
+    ``mode="sigterm"`` flips the trainer's graceful-preemption flag exactly
+    as the real SIGTERM handler does — the in-flight step completes, the
+    loop sync-saves (draining the async writer first) and stops.
+    ``mode="hard"`` raises a classified ``preempted`` failure at the step
+    seam — non-retryable, so the trainer sync-saves and raises
+    :class:`~repro.train.trainer.TrainingInterrupted` with the relaunch
+    runbook. Both leave a checkpoint at the kill step for ``--resume``."""
+    if mode not in ("sigterm", "hard"):
+        raise ValueError(f"mode must be 'sigterm' or 'hard', got {mode!r}")
+    orig = trainer._execute_step
+    stats = FaultStats()
+    fired = [False]
+
+    def _execute_step(params, opt_state, batch, s):
+        stats.calls += 1
+        if not fired[0] and int(s) >= step:
+            fired[0] = True
+            stats.injected += 1
+            if mode == "sigterm":
+                trainer._on_sigterm()
+            else:
+                raise InjectedKernelFault(_PREEMPT_MESSAGE)
+        return orig(params, opt_state, batch, s)
+
+    with _patch_all([(trainer, "_execute_step", _execute_step)]):
+        yield stats

@@ -8,30 +8,58 @@ Features (designed for 1000+ nodes, exercised here on host devices):
 * checkpoint/restart: step-versioned atomic checkpoints (async writer),
   auto-resume from the latest step; deterministic data stream keyed by step
   so restarts are exact.
-* preemption handling: SIGTERM triggers a final synchronous save.
-* straggler monitor: per-step wall-time EWMA; steps slower than
-  ``straggler_factor`` x EWMA are logged with a re-dispatch hook (on real
-  fleets this triggers slice replacement; here it records the event).
-* elastic restore: checkpoints are mesh-agnostic; restore re-shards onto the
-  current mesh (scale up/down between runs).
+* preemption handling: SIGTERM triggers a final synchronous save (the
+  writer thread is drained first so the graceful save never races an
+  in-flight async write of the same step).
+* cross-shard non-finite consensus: under ``reduce_axis`` each shard's
+  finiteness verdict is taken *before* any collective and psum'd, so every
+  shard reaches the same skip/commit decision — a NaN shard is quarantined
+  (zero payload, EF residual carried) while its healthy batch-mates commit.
+* straggler/failure watchdog: a heartbeat thread arms a per-step deadline
+  derived from the step-time EWMA; classified collective/device failures
+  get bounded retries with backoff, then a synchronous save and a
+  :class:`TrainingInterrupted` telling the operator to relaunch with
+  ``--resume`` (possibly on fewer hosts) instead of a bare stack trace.
+* elastic restore: checkpoints are mesh-agnostic; restore re-shards onto
+  the current mesh (scale up/down between runs). Per-device error-feedback
+  residuals re-shard explicitly: sum-fold when the device count shrinks,
+  zero-pad when it grows, with a recorded provenance note.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import signal
+import threading
 import time
-from functools import partial
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro import checkpoint as ckpt_lib
-from repro.distributed import sharding as shd
-from repro.distributed.collectives import compressed_psum_ef, psum_mean
+from repro.distributed.collectives import (compressed_psum_ef,
+                                           masked_psum_mean, psum_mean)
+from repro.kernels.failures import classify_failure, is_retryable
 from repro.optim import adamw_init, adamw_update, warmup_cosine
 from repro.optim.compression import compress_decompress, ef_init
+
+
+class TrainingInterrupted(RuntimeError):
+    """A classified (retryable-family) runtime failure exhausted its retry
+    budget — or a non-retryable classified failure (preemption notice) hit —
+    and the loop saved what it could and stopped. Carries ``label`` (the
+    :func:`repro.kernels.failures.classify_failure` family), ``step``, and
+    ``saved_step`` (None when no checkpoint could be written). The message
+    is the relaunch runbook: resume from the saved step, optionally on a
+    smaller mesh (error-feedback state re-shards on restore)."""
+
+    def __init__(self, message: str, *, label: str, step: int,
+                 saved_step: Optional[int] = None):
+        super().__init__(message)
+        self.label = label
+        self.step = step
+        self.saved_step = saved_step
 
 
 @dataclasses.dataclass
@@ -60,8 +88,32 @@ class TrainConfig:
     # non-finite loss/global-grad-norm in-jit and returns its inputs
     # unchanged (metrics["skipped_nonfinite"]=1). After this many
     # *consecutive* skips the loop aborts: persistent NaNs are a bug or a
-    # dead run, not a transient batch.
+    # dead run, not a transient batch. Under ``reduce_axis`` the verdict is
+    # a cross-shard consensus: per-shard flags are taken BEFORE any
+    # collective and psum'd, a single bad shard is quarantined (its grads
+    # and error-feedback payload contribute zero for the step, counted in
+    # metrics["skipped_shards"]) while the healthy shards commit; only an
+    # all-shards-bad (or post-reduction non-finite) step is skipped
+    # mesh-wide. Every shard computes the identical verdict from psum'd
+    # values, so replicated params can never diverge on the decision.
     nonfinite_budget: int = 25
+    # Straggler/failure watchdog: a daemon thread arms a deadline around
+    # every step — max(watchdog_min_s, watchdog_factor x step EWMA) — and
+    # records an event (trainer.watchdog_events, optional on_stall callback)
+    # when a step overruns it. It cannot interrupt a hung XLA collective
+    # from Python; it exists to *classify* the stall (on real fleets the
+    # event triggers slice replacement / save-and-shrink from a sibling
+    # controller).
+    watchdog: bool = True
+    watchdog_factor: float = 10.0
+    watchdog_min_s: float = 30.0
+    # Classified runtime failures (kernels/failures.py: RESOURCE_EXHAUSTED,
+    # halted-device, collective-timeout families) retry with exponential
+    # backoff + deterministic jitter before the save-and-interrupt path,
+    # mirroring serve/operator_engine.py.
+    max_step_retries: int = 2
+    backoff_base_s: float = 0.05
+    backoff_cap_s: float = 1.0
     seed: int = 0
 
 
@@ -83,6 +135,11 @@ def build_train_step(loss_fn: Callable, tcfg: TrainConfig, grad_shardings=None):
     def grads_of(params, batch):
         (l, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
         return constrain(grads), l, metrics
+
+    def tree_gnorm(grads):
+        return jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
 
     def train_step(params, opt_state, batch, step):
         if tcfg.grad_accum > 1:
@@ -110,33 +167,54 @@ def build_train_step(loss_fn: Callable, tcfg: TrainConfig, grad_shardings=None):
         else:
             grads, l, metrics = grads_of(params, batch)
 
+        skipped_shards = jnp.zeros((), jnp.float32)
         if tcfg.reduce_axis is not None:
-            # Explicit DP under shard_map: complete the gradient average
-            # across the data axis here. The error-feedback state carries a
-            # leading per-device axis (sharded P(axis) by the caller, local
-            # extent 1) so each device keeps its own residual.
-            l = psum_mean(l, tcfg.reduce_axis)
+            # Explicit DP under shard_map. Cross-shard non-finite consensus:
+            # each shard takes its finiteness verdict on its LOCAL loss and
+            # gradients BEFORE anything crosses the wire. A NaN payload must
+            # never reach the integer psum — NaN cast to int32 is
+            # platform-defined garbage that dequantizes to a *finite* wrong
+            # gradient on every healthy shard, committing silent divergence.
+            # The quarantined shard contributes zero to every reduction (its
+            # error-feedback residual carries unchanged), the mean is taken
+            # over the healthy shards only, and the per-shard flags are
+            # psum'd so every shard computes the identical verdict.
+            shard_ok = jnp.isfinite(l) & jnp.isfinite(tree_gnorm(grads))
+            n_shards = jax.lax.psum(jnp.ones((), jnp.float32),
+                                    tcfg.reduce_axis)
+            n_ok = jax.lax.psum(shard_ok.astype(jnp.float32),
+                                tcfg.reduce_axis)
+            skipped_shards = n_shards - n_ok
+            l = masked_psum_mean(l, tcfg.reduce_axis, shard_ok)
             if tcfg.compress_grads:
                 _tup = lambda t: isinstance(t, tuple)
                 pairs = jax.tree.map(
-                    lambda g, e: compressed_psum_ef(g, e[0], tcfg.reduce_axis),
+                    lambda g, e: compressed_psum_ef(g, e[0], tcfg.reduce_axis,
+                                                    ok=shard_ok),
                     grads, opt_state["ef"])
                 grads = jax.tree.map(lambda p: p[0], pairs, is_leaf=_tup)
                 opt_state_ef = jax.tree.map(lambda p: p[1][None], pairs,
                                             is_leaf=_tup)
             else:
                 grads = jax.tree.map(
-                    lambda g: psum_mean(g, tcfg.reduce_axis), grads)
+                    lambda g: masked_psum_mean(g, tcfg.reduce_axis, shard_ok),
+                    grads)
+            # mesh-wide commit gate: every operand is a post-psum value,
+            # identical on all shards — replicated params and per-device EF
+            # state cannot reach different verdicts. n_ok == 0 (all shards
+            # bad) or a post-reduction non-finite (corrupted collective
+            # payload) skips the step everywhere.
+            finite = (n_ok > 0) & jnp.isfinite(l) & jnp.isfinite(
+                tree_gnorm(grads))
         elif tcfg.compress_grads:
             grads, opt_state_ef = compress_decompress(grads, opt_state["ef"])
+            finite = jnp.isfinite(l) & jnp.isfinite(tree_gnorm(grads))
+        else:
+            finite = jnp.isfinite(l) & jnp.isfinite(tree_gnorm(grads))
         # non-finite guard: with donated inputs a NaN update is
         # unrecoverable, so decide finiteness in-jit and select the old
         # state back when the step is poisoned (grads are zeroed first so
         # NaNs cannot reach the optimizer moments either)
-        gnorm = jnp.sqrt(sum(
-            jnp.sum(jnp.square(g.astype(jnp.float32)))
-            for g in jax.tree.leaves(grads)))
-        finite = jnp.isfinite(l) & jnp.isfinite(gnorm)
         grads = jax.tree.map(
             lambda g: jnp.where(finite, g, jnp.zeros_like(g)), grads)
         lr = warmup_cosine(step, peak_lr=tcfg.peak_lr, warmup_steps=tcfg.warmup_steps,
@@ -154,6 +232,7 @@ def build_train_step(loss_fn: Callable, tcfg: TrainConfig, grad_shardings=None):
         new_opt = keep(new_opt, opt_state)
         out_metrics = {"loss": l, "lr": lr,
                        "skipped_nonfinite": 1.0 - finite.astype(jnp.float32),
+                       "skipped_shards": skipped_shards,
                        **om, **metrics}
         return new_params, new_opt, out_metrics
 
@@ -174,16 +253,128 @@ def init_opt_state(params, tcfg: TrainConfig, ef_devices: int = 1):
     return state
 
 
+def elastic_ef(saved, like):
+    """Re-shard a restored error-feedback tree onto the current device
+    count; returns ``(ef, notes)``.
+
+    Leaves carry a leading per-device axis (``init_opt_state(ef_devices=)``).
+    When the saved extent N differs from the target extent M:
+
+    * shrink, N divisible by M — **sum-fold**: reshape ``(N, ...)`` to
+      ``(M, N//M, ...)`` and sum the fold axis. The mesh-wide residual mass
+      (what the int8 rounds have dropped so far) is exactly preserved, so
+      the accumulated compressed reduction stays unbiased across the
+      rescale.
+    * grow, M > N — **zero-pad**: the saved residuals land on the first N
+      devices, new devices start with a zero residual (total preserved).
+    * anything else (indivisible shrink, trailing-shape mismatch) — reset
+      to zeros with a warning note: a reset residual only costs one
+      quantization step of transient bias.
+
+    ``notes`` records one provenance line per re-sharded leaf class (empty
+    when every leaf matched)."""
+    notes: List[str] = []
+
+    def fit(s, lk):
+        s = jnp.asarray(s)
+        n, m = int(s.shape[0]) if s.ndim else 0, int(lk.shape[0])
+        if tuple(s.shape) == tuple(lk.shape):
+            return s.astype(lk.dtype)
+        if s.ndim == lk.ndim and tuple(s.shape[1:]) == tuple(lk.shape[1:]):
+            if n > m and n % m == 0:
+                out = s.reshape((m, n // m) + tuple(s.shape[1:])).sum(axis=1)
+                note = (f"ef re-shard: sum-folded {n} -> {m} device "
+                        f"residuals (mesh shrink; residual mass preserved)")
+                if note not in notes:
+                    notes.append(note)
+                return out.astype(lk.dtype)
+            if m > n:
+                pad = jnp.zeros((m - n,) + tuple(s.shape[1:]), lk.dtype)
+                out = jnp.concatenate([s.astype(lk.dtype), pad], axis=0)
+                note = (f"ef re-shard: zero-padded {n} -> {m} device "
+                        f"residuals (mesh grow; new devices start clean)")
+                if note not in notes:
+                    notes.append(note)
+                return out
+        note = (f"ef re-shard: saved shape {tuple(s.shape)} incompatible "
+                f"with target {tuple(lk.shape)}; residual RESET to zeros "
+                f"(one quantization step of transient bias)")
+        if note not in notes:
+            notes.append(note)
+        return jnp.zeros(lk.shape, lk.dtype)
+
+    return jax.tree.map(fit, saved, like), notes
+
+
+class _Watchdog:
+    """Per-step deadline heartbeat: ``arm(step, budget)`` before the step,
+    ``disarm()`` after. A daemon thread appends one event per overrun arm
+    to ``events`` and fires ``on_stall(event)`` (best-effort)."""
+
+    def __init__(self, on_stall: Optional[Callable] = None):
+        self.events: List[Dict[str, Any]] = []
+        self._on_stall = on_stall
+        self._cv = threading.Condition()
+        self._armed = None  # (step, deadline_monotonic, budget_s)
+        self._stop = False
+        self._thread = threading.Thread(
+            target=self._loop, daemon=True, name="train-watchdog")
+        self._thread.start()
+
+    def arm(self, step: int, budget_s: float):
+        with self._cv:
+            self._armed = (step, time.monotonic() + budget_s, budget_s)
+            self._cv.notify_all()
+
+    def disarm(self):
+        with self._cv:
+            self._armed = None
+            self._cv.notify_all()
+
+    def stop(self):
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        self._thread.join(timeout=2.0)
+
+    def _loop(self):
+        while True:
+            event = None
+            with self._cv:
+                if self._stop:
+                    return
+                if self._armed is None:
+                    self._cv.wait()
+                    continue
+                step, deadline, budget = self._armed
+                now = time.monotonic()
+                if now < deadline:
+                    self._cv.wait(timeout=min(deadline - now, 0.05))
+                    continue
+                event = {"step": step, "budget_s": budget,
+                         "overrun_s": now - deadline}
+                self.events.append(event)
+                self._armed = None  # one event per arm
+            if event is not None and self._on_stall is not None:
+                try:
+                    self._on_stall(event)
+                except Exception:  # a stall hook must never kill the loop
+                    pass
+
+
 class Trainer:
     """Single-controller fault-tolerant loop."""
 
     def __init__(self, loss_fn, params, tcfg: TrainConfig, mesh=None,
                  param_shardings=None, batch_fn: Callable[[int], Any] = None,
-                 step_transform: Callable = None):
+                 step_transform: Callable = None,
+                 on_stall: Callable = None):
         """``step_transform``: optional wrapper applied to the built train
         step before jit — e.g. ``mesh_offload.dp_step_transform`` to run the
         step under shard_map with compressed gradient collectives. When set,
-        the transform owns the sharding (plain jit, no in_shardings)."""
+        the transform owns the sharding (plain jit, no in_shardings).
+        ``on_stall``: optional callback fired (from the watchdog thread)
+        with the overrun event when a step blows its deadline."""
         self.tcfg = tcfg
         self.mesh = mesh
         self.batch_fn = batch_fn
@@ -195,34 +386,54 @@ class Trainer:
             for a in axes:
                 if a in mesh.axis_names:
                     ef_devices *= int(mesh.shape[a])
+        self._ef_devices = ef_devices
         self.opt_state = init_opt_state(params, tcfg, ef_devices=ef_devices)
         self.step = 0
         self._preempted = False
         self._step_ewma = None
         self.straggler_events = []
-        self.skipped_nonfinite = 0  # total skipped steps this run
+        self.watchdog_events: List[Dict[str, Any]] = []
+        self.failure_events = []  # (step, label, message) per classified failure
+        self.step_retries = 0  # classified-failure retries this run
+        self.skipped_nonfinite = 0  # total mesh-wide skipped steps this run
+        self.skipped_shard_steps = 0  # total per-shard quarantine events
+        self.provenance: List[str] = []  # elastic-restore notes, checkpointed
         self._consecutive_nonfinite = 0
+        self._on_stall = on_stall
+        self._watchdog: Optional[_Watchdog] = None
 
-        step_fn = build_train_step(loss_fn, tcfg)
-        donate = (0, 1)
-        if step_transform is not None:
-            self._jit_step = jax.jit(step_transform(step_fn),
-                                     donate_argnums=donate)
-        elif mesh is not None and param_shardings is not None:
-            self._jit_step = jax.jit(
-                step_fn,
-                donate_argnums=donate,
-                in_shardings=(param_shardings,
-                              jax.tree.map(lambda _: None, self.opt_state),
-                              None, None),
-            )
-        else:
-            self._jit_step = jax.jit(step_fn, donate_argnums=donate)
+        self._step_fn = build_train_step(loss_fn, tcfg)
+        self._step_transform = step_transform
+        self._param_shardings = param_shardings
+        self._jit_step = self._build_jit_step()
 
         try:  # preemption hook (not available in some embedded interpreters)
             signal.signal(signal.SIGTERM, self._on_sigterm)
         except ValueError:
             pass
+
+    def _build_jit_step(self):
+        donate = (0, 1)
+        if self._step_transform is not None:
+            return jax.jit(self._step_transform(self._step_fn),
+                           donate_argnums=donate)
+        if self.mesh is not None and self._param_shardings is not None:
+            return jax.jit(
+                self._step_fn,
+                donate_argnums=donate,
+                in_shardings=(self._param_shardings,
+                              jax.tree.map(lambda _: None, self.opt_state),
+                              None, None),
+            )
+        return jax.jit(self._step_fn, donate_argnums=donate)
+
+    def retrace(self):
+        """Drop the cached jit trace/executable and rebuild it. Use after a
+        fault-injection window closed (a patched collective is baked into
+        the old trace) or after a classified failure whose trace might pin
+        poisoned state — the training twin of the operator engine's
+        breaker-epoch re-trace."""
+        self._jit_step = self._build_jit_step()
 
     # --- fault tolerance ---------------------------------------------------
 
@@ -238,6 +449,13 @@ class Trainer:
         (manifest vs directory) before restore, and on a corrupt or
         structure-mismatched checkpoint the search walks back to the next
         older step.
+
+        **Elastic resume**: per-device error-feedback residuals saved on a
+        different device count re-shard through :func:`elastic_ef`
+        (sum-fold on shrink, zero-pad on grow, reset with a warning
+        otherwise); each re-shard is logged and recorded in
+        ``self.provenance`` (and checkpointed forward on the next save). A
+        non-EF shape mismatch is a genuine structure change and walks back.
         """
         d = self.tcfg.ckpt_dir
         if not d:
@@ -252,13 +470,32 @@ class Trainer:
                        f"walking back")
                 continue
             try:
-                restored, extra = ckpt_lib.restore(d, last, tree)
+                restored, extra = ckpt_lib.restore(d, last, tree,
+                                                   strict_shapes=False)
             except ckpt_lib.CheckpointError as e:
                 log_fn(f"checkpoint step {last} failed restore ({e}); "
                        f"walking back")
                 continue
+            # elastic fixup: EF residuals re-shard; anything else must match
+            if "ef" in restored["opt"] and "ef" in self.opt_state:
+                restored["opt"]["ef"], notes = elastic_ef(
+                    restored["opt"]["ef"], self.opt_state["ef"])
+                saved_dev = extra.get("ef_devices")
+                for note in notes:
+                    msg = (f"step {last}: {note}"
+                           + (f" [saved ef_devices={saved_dev}, "
+                              f"now {self._ef_devices}]" if saved_dev else ""))
+                    log_fn(msg)
+                    self.provenance.append(msg)
+            mismatch = _shape_mismatches(restored, tree)
+            if mismatch:
+                log_fn(f"checkpoint step {last} structure-mismatched "
+                       f"({mismatch[0]}); walking back")
+                continue
             self.params, self.opt_state = restored["params"], restored["opt"]
             self.step = int(extra.get("step", last))
+            self.provenance = (list(extra.get("provenance", []))
+                               + self.provenance)
             return True
         return False
 
@@ -267,8 +504,21 @@ class Trainer:
         if not d:
             return
         tree = {"params": self.params, "opt": self.opt_state}
-        extra = {"step": self.step}
+        extra = {"step": self.step, "ef_devices": self._ef_devices,
+                 "mesh_axes": ([[str(a), int(self.mesh.shape[a])]
+                                for a in self.mesh.axis_names]
+                               if self.mesh is not None else []),
+                 "provenance": list(self.provenance)}
         if synchronous:
+            # Drain the async writer FIRST (the pending-write counter):
+            # SIGTERM can land while an async save of this very step is in
+            # flight, and two writers racing one step_N.tmp dir corrupt the
+            # checkpoint the relaunch depends on. If the drained writer
+            # already landed this exact step, the sync save is a no-op.
+            ckpt_lib.wait_for_saves()
+            done, _ = ckpt_lib.verify(d, self.step)
+            if done and self.step in ckpt_lib.all_steps(d):
+                return
             ckpt_lib.save(d, self.step, tree, extra)
         else:
             ckpt_lib.save_async(d, self.step, tree, extra)
@@ -280,39 +530,135 @@ class Trainer:
             self.straggler_events.append((self.step, dt, self._step_ewma))
         self._step_ewma = 0.9 * self._step_ewma + 0.1 * dt
 
+    # --- guarded step execution ---------------------------------------------
+
+    def _execute_step(self, params, opt_state, batch, step):
+        """Invoke the jit'd step and wait for it. A dedicated seam so the
+        fault harness (:mod:`repro.testing.faults`) can wrap it —
+        slow-shard sleeps here, injected collective/device failures raise
+        here (BEFORE donation consumes the inputs, like a launch-time
+        failure; a post-donation runtime failure is generally
+        non-retryable and surfaces as unclassified)."""
+        out = self._jit_step(params, opt_state, batch, jnp.asarray(step))
+        jax.block_until_ready(out[2]["loss"])
+        return out
+
+    def _backoff(self, attempt: int) -> float:
+        """Exponential backoff with deterministic jitter (hash fraction of
+        the attempt — reproducible in tests; mirrors the operator engine)."""
+        base = min(self.tcfg.backoff_cap_s,
+                   self.tcfg.backoff_base_s * (2 ** attempt))
+        jitter = ((attempt * 2654435761) % 997) / 997.0  # [0, 1)
+        return base * (1.0 + jitter)
+
+    def _step_budget(self) -> float:
+        return max(self.tcfg.watchdog_min_s,
+                   self.tcfg.watchdog_factor * (self._step_ewma or 0.0))
+
+    def _guarded_step(self, batch):
+        """One step under the watchdog deadline with bounded classified
+        retries; raises :class:`TrainingInterrupted` (after a best-effort
+        synchronous save) when the failure family is classified but
+        unretryable or the retry budget is spent."""
+        last_exc, label = None, None
+        for attempt in range(self.tcfg.max_step_retries + 1):
+            if self._watchdog is not None:
+                self._watchdog.arm(self.step, self._step_budget())
+            try:
+                return self._execute_step(self.params, self.opt_state,
+                                          batch, self.step)
+            except Exception as e:  # noqa: BLE001 — classified below
+                last_exc, label = e, classify_failure(e)
+                if label is None:
+                    raise  # programming error: never swallow
+                self.failure_events.append((self.step, label, str(e)))
+                if is_retryable(label) and attempt < self.tcfg.max_step_retries:
+                    self.step_retries += 1
+                    time.sleep(self._backoff(attempt))
+                    continue
+                break
+            finally:
+                if self._watchdog is not None:
+                    self._watchdog.disarm()
+        # classified failure, retries exhausted (or unretryable family,
+        # e.g. a preemption notice): save-and-shrink instead of a stack
+        # trace — sync save what we have and hand the operator a runbook.
+        saved_step = None
+        if self.tcfg.ckpt_dir:
+            try:
+                self.save(synchronous=True)
+                saved_step = self.step
+            except Exception:  # params may be gone mid-donation
+                pass
+        where = (f"state saved to {self.tcfg.ckpt_dir} (step {saved_step}); "
+                 f"relaunch with --resume — a smaller mesh works, "
+                 f"error-feedback state re-shards on restore"
+                 if saved_step is not None else
+                 "no checkpoint could be written (configure ckpt_dir for "
+                 "preemption-safe runs)")
+        raise TrainingInterrupted(
+            f"classified '{label}' failure at step {self.step} after "
+            f"{self.step_retries} retr(ies): {last_exc}. {where}",
+            label=label, step=self.step, saved_step=saved_step) from last_exc
+
     # --- main loop ----------------------------------------------------------
 
     def run(self, num_steps: int, log_every: int = 50, log_fn=print):
         history = []
-        while self.step < num_steps and not self._preempted:
-            t0 = time.perf_counter()
-            batch = self.batch_fn(self.step)
-            self.params, self.opt_state, metrics = self._jit_step(
-                self.params, self.opt_state, batch, jnp.asarray(self.step)
-            )
-            jax.block_until_ready(metrics["loss"])
-            self._monitor(time.perf_counter() - t0)
-            self.step += 1
-            if float(metrics.get("skipped_nonfinite", 0.0)) > 0:
-                self.skipped_nonfinite += 1
-                self._consecutive_nonfinite += 1
-                if self._consecutive_nonfinite >= self.tcfg.nonfinite_budget:
-                    self.save(synchronous=True)  # params are still pre-NaN
-                    ckpt_lib.wait_for_saves()
-                    raise RuntimeError(
-                        f"aborting: {self._consecutive_nonfinite} "
-                        f"consecutive non-finite steps (budget "
-                        f"{self.tcfg.nonfinite_budget}) at step {self.step}")
-            else:
-                self._consecutive_nonfinite = 0
-            if self.step % log_every == 0 or self.step == num_steps:
-                m = {k: float(v) for k, v in metrics.items()}
-                history.append({"step": self.step, **m})
-                log_fn(f"step {self.step}: " +
-                       " ".join(f"{k}={v:.4g}" for k, v in m.items()))
-            if self.tcfg.ckpt_dir and self.step % self.tcfg.ckpt_every == 0:
-                self.save()
-        if self._preempted:
-            self.save(synchronous=True)  # graceful preemption save
-        ckpt_lib.wait_for_saves()
+        if self.tcfg.watchdog and self._watchdog is None:
+            self._watchdog = _Watchdog(on_stall=self._on_stall)
+            self.watchdog_events = self._watchdog.events
+        try:
+            while self.step < num_steps and not self._preempted:
+                t0 = time.perf_counter()
+                batch = self.batch_fn(self.step)
+                self.params, self.opt_state, metrics = self._guarded_step(
+                    batch)
+                self._monitor(time.perf_counter() - t0)
+                self.step += 1
+                self.skipped_shard_steps += int(
+                    float(metrics.get("skipped_shards", 0.0)))
+                if float(metrics.get("skipped_nonfinite", 0.0)) > 0:
+                    self.skipped_nonfinite += 1
+                    self._consecutive_nonfinite += 1
+                    if self._consecutive_nonfinite >= self.tcfg.nonfinite_budget:
+                        self.save(synchronous=True)  # params are still pre-NaN
+                        ckpt_lib.wait_for_saves()
+                        raise RuntimeError(
+                            f"aborting: {self._consecutive_nonfinite} "
+                            f"consecutive non-finite steps (budget "
+                            f"{self.tcfg.nonfinite_budget}) at step {self.step}")
+                else:
+                    self._consecutive_nonfinite = 0
+                if self.step % log_every == 0 or self.step == num_steps:
+                    m = {k: float(v) for k, v in metrics.items()}
+                    history.append({"step": self.step, **m})
+                    log_fn(f"step {self.step}: " +
+                           " ".join(f"{k}={v:.4g}" for k, v in m.items()))
+                if self.tcfg.ckpt_dir and self.step % self.tcfg.ckpt_every == 0:
+                    self.save()
+            if self._preempted:
+                self.save(synchronous=True)  # graceful preemption save
+            ckpt_lib.wait_for_saves()
+        finally:
+            if self._watchdog is not None:
+                self._watchdog.stop()
+                self._watchdog = None
         return history
+
+
+def _shape_mismatches(restored, like) -> List[str]:
+    """Leaf-shape differences between a restored tree and its target
+    (post-elastic-fixup this must be empty; non-empty means the checkpoint
+    genuinely belongs to a different model/config)."""
+    out = []
+    for (kp, a), (_, b) in zip(
+            jax.tree_util.tree_flatten_with_path(restored)[0],
+            jax.tree_util.tree_flatten_with_path(like)[0]):
+        sa = tuple(getattr(a, "shape", ()) or ())
+        sb = tuple(getattr(b, "shape", ()) or ())
+        if sa != sb:
+            key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                           for k in kp)
+            out.append(f"{key}: saved {sa} != expected {sb}")
+    return out

@@ -20,6 +20,7 @@ import pytest
     "benchmarks.table1_operators",
     "benchmarks.tableF2_theory",
     "benchmarks.cold_start",
+    "benchmarks.distributed_training_chaos",
     "benchmarks.run",
 ])
 def test_benchmark_module_imports(mod):
@@ -116,6 +117,32 @@ def test_cold_start_bench_worker_smoke(tmp_path):
     assert all(s == "cold" for s in cold["sources"].values())
     assert all(s == "warm" for s in warm["sources"].values())
     assert cold["result"] == warm["result"]
+
+
+@pytest.mark.distributed
+def test_distributed_training_chaos_drill():
+    """The full chaos drill on a forced-8-device host mesh, in a fresh
+    subprocess (the XLA device-count flag must precede jax init). Every
+    acceptance criterion is asserted inside ``run()``: exact per-shard
+    consensus quarantines with bit-identical replicated params, mesh-wide
+    skips for corrupted collectives, and kill-at-step-N + shrunk-mesh
+    resume landing within 1e-3 of the uninterrupted reference with zero
+    steps lost."""
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env.update({"PYTHONPATH": "src", "JAX_PLATFORMS": "cpu"})
+    env.pop("XLA_FLAGS", None)  # the script forces 8 host devices itself
+    out = subprocess.run(
+        [sys.executable, "benchmarks/distributed_training_chaos.py"],
+        capture_output=True, text=True, env=env, timeout=540,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert out.returncode == 0, out.stderr[-3000:]
+    rows = [l for l in out.stdout.splitlines() if l.startswith("BENCH ")]
+    modes = [__import__("json").loads(l[6:])["mode"] for l in rows]
+    assert modes == ["reference", "consensus", "kill_resume"], out.stdout
 
 
 def test_distributed_laplacian_bench_smoke():
