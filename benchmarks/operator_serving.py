@@ -86,13 +86,17 @@ def reference(f, F, req, pts):
     return np.asarray(collapsed_fan(f, x, dirs, req.K)[2])
 
 
-def _assert_parity(f, F, done, payloads, rtol=1e-4, atol=1e-5):
+def _assert_parity(f, F, done, payloads, scale=1.0):
+    """Every DONE result must match the CRULES reference under the
+    sentinel's shared float32 tolerance budget (repro.core.sentinel)."""
+    from repro.core import sentinel
+
     for rid, req in done.items():
         if req.status != "DONE":
             continue
         ref = reference(f, F, req, payloads[rid])
-        np.testing.assert_allclose(
-            req.result, ref, rtol=rtol, atol=atol,
+        sentinel.assert_close(
+            req.result, ref, dtype="float32", scale=scale,
             err_msg=f"request {rid} ({req.op}, K={req.K}) diverged from "
                     f"the CRULES reference")
 

@@ -1,0 +1,197 @@
+"""Silent-data-corruption drill for the serving sentinel.
+
+Three scenarios over the deterministic mixed-operator stream of
+:mod:`benchmarks.operator_serving`, each asserting its acceptance criteria
+*in-run* (a failed drill fails loudly, it does not emit a pretty row):
+
+* ``overhead``   — the same stream through a sentinel-off engine and an
+  ``audit_fraction=0.01`` engine, interleaved best-of passes: the sampling
+  machinery costs <= 5% wall-clock on un-audited traffic, at least one
+  audit actually ran, and a clean run records zero drift hits (the
+  zero-false-positive soak). The audited windows' own cost is reported
+  separately (``audit_p50_ms``) — in steady state it amortizes to
+  ``audit_fraction`` of one oracle recompute per window.
+* ``corruption`` — :func:`repro.testing.faults.corrupt_kernel_output`
+  perturbs the fused mlp kernel under ``audit_fraction=1.0``: the first
+  breach lands within 3 audited windows, the breached window is re-issued
+  down the degradation ladder instead of committed (every request still
+  DONE and matching the CRULES reference — zero corrupted commits), and
+  the tripped breakers are open with the ``numeric`` flag.
+* ``recovery``   — fault cleared, cooldown elapsed: ``poll_breakers``
+  re-admits the rungs half-open, the probe window passes its audit, and
+  every breaker closes with ``audits_passed >= 1`` and a clean audit epoch.
+
+Run:  PYTHONPATH=src python benchmarks/sdc_drill.py
+"""
+
+import os
+import sys
+import time
+
+import numpy as np
+
+# importable as benchmarks.sdc_drill (the test loop) AND runnable as a
+# script from anywhere (PYTHONPATH-free: repo root + src self-inserted)
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (os.path.join(_ROOT, "src"), _ROOT):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from benchmarks.common import emit_bench  # noqa: E402
+from benchmarks.operator_serving import (_assert_parity,  # noqa: E402
+                                         build_fields, request_mix)
+
+from repro.core import offload  # noqa: E402
+from repro.serve.operator_engine import OperatorEngine  # noqa: E402
+from repro.testing import faults  # noqa: E402
+
+
+def _serve_pass(engine, n, D, max_points, seed, rid_base):
+    """Submit one deterministic stream (rid-offset so replays stay unique
+    within the engine) and run it to completion; returns this pass's
+    terminal requests, their payloads, and the timed drain."""
+    reqs = request_mix(n, D, max_points, seed=seed)
+    payloads = {}
+    for r in reqs:
+        r.rid += rid_base
+        payloads[r.rid] = np.asarray(r.points, np.float32)
+        engine.submit(r)
+    t0 = time.perf_counter()
+    engine.run_until_done()
+    dt = time.perf_counter() - t0
+    done = {rid: engine.done[rid] for rid in payloads if rid in engine.done}
+    return done, payloads, dt
+
+
+def overhead_scenario(f, F, n=12, D=3, max_points=40, chunk=8, passes=5):
+    """<= 5% wall-clock at audit_fraction=0.01, zero false positives.
+
+    Best-of over interleaved passes isolates the *sampling* tax (the hash
+    check plus counters every un-audited window pays); the sampled windows'
+    oracle recomputes are surfaced as ``audit_p50_ms`` rather than folded
+    into the budget — on this CPU-scale workload one interpreter recompute
+    dwarfs a whole serving pass, which says nothing about the 1%-amortized
+    cost on an accelerator-sized deployment.
+    """
+    engines = {
+        "clean": OperatorEngine(f, vector_field=F, backend="pallas",
+                                max_slots=2, chunk=chunk, max_queue=8 * n),
+        "audited": OperatorEngine(f, vector_field=F, backend="pallas",
+                                  max_slots=2, chunk=chunk, max_queue=8 * n,
+                                  audit_fraction=0.01),
+    }
+    # warm pass: compile every bucket's step fn AND the audited engine's
+    # per-bucket CRULES oracles untimed, so timed passes measure serving
+    for eng in engines.values():
+        _serve_pass(eng, n, D, max_points, seed=0, rid_base=0)
+        eng.warmup_audits()
+    best = {name: float("inf") for name in engines}
+    final = {}
+    for p in range(passes):
+        # interleaved round-robin: shared-host speed drift hits both
+        # engines equally instead of biasing whichever ran last
+        for name, eng in engines.items():
+            done, payloads, dt = _serve_pass(eng, n, D, max_points, seed=0,
+                                             rid_base=(p + 1) * 10 * n)
+            best[name] = min(best[name], dt)
+            final[name] = (done, payloads)
+    aud = engines["audited"]
+    overhead = best["audited"] / best["clean"] - 1.0
+    s = aud.stats()
+    assert s["audits_run"] >= 1, "audit path never sampled - drill is vacuous"
+    assert s["audit_drift_hits"] == 0, s  # clean kernels: zero false alarms
+    assert s["audit_clean_epoch"], s
+    assert overhead <= 0.05, (
+        f"sampled audits cost {overhead:.1%} wall-clock (budget 5%)")
+    for name in engines:
+        done, payloads = final[name]
+        assert all(r.status == "DONE" for r in done.values())
+        _assert_parity(f, F, done, payloads)
+    return dict(bench="sdc_drill", mode="overhead", requests=n,
+                passes=passes, audit_fraction=0.01,
+                t_clean_s=best["clean"], t_audited_s=best["audited"],
+                overhead_frac=overhead, audits_run=s["audits_run"],
+                audit_p50_ms=s["audit_p50_ms"],
+                drift_hits=s["audit_drift_hits"])
+
+
+def corruption_and_recovery(f, F, n=8, D=3, max_points=24, chunk=8):
+    """Corrupted kernel caught and degraded in-run; audited re-admission."""
+    engine = OperatorEngine(f, vector_field=F, backend="pallas", max_slots=2,
+                            chunk=chunk, max_queue=8 * n, audit_fraction=1.0)
+    # --- corruption: every fused trace of the mlp kernel is perturbed -----
+    with faults.corrupt_kernel_output(kinds=("mlp",), scale=1e-2) as fs:
+        done, payloads, _ = _serve_pass(engine, n, D, max_points, seed=0,
+                                        rid_base=0)
+    s = engine.stats()
+    assert fs.injected >= 1, "injector never armed a trace"
+    assert s["audit_drift_hits"] >= 1, "corruption never detected"
+    assert s["audits_at_first_drift"] is not None \
+        and s["audits_at_first_drift"] <= 3, (
+        f"first breach took {s['audits_at_first_drift']} audited windows "
+        "(budget: 3)")
+    assert s["crashed_batches"] == 0, s
+    # zero corrupted commits: the breached windows were re-issued down the
+    # ladder, so every DONE result matches the CRULES reference
+    assert all(r.status == "DONE" for r in done.values()), s["statuses"]
+    _assert_parity(f, F, done, payloads)
+    tripped = [k for k, br in s["breakers"].items()
+               if br["state"] != "closed"]
+    assert tripped and all(s["breakers"][k]["numeric"] for k in tripped), (
+        "drift must trip breakers with the numeric flag", s["breakers"])
+    corruption_row = dict(
+        bench="sdc_drill", mode="corruption", requests=n,
+        audits_at_first_drift=s["audits_at_first_drift"],
+        drift_hits=s["audit_drift_hits"], audits_run=s["audits_run"],
+        batch_retries=s["batch_retries"], statuses=s["statuses"],
+        breakers_numeric_open=tripped)
+
+    # --- recovery: fault gone, cooldown elapsed -> audited re-admission ---
+    old_cooldown = offload.set_breaker_cooldown(0.0)
+    try:
+        done, payloads, _ = _serve_pass(engine, n, D, max_points, seed=1,
+                                        rid_base=10_000)
+    finally:
+        offload.set_breaker_cooldown(old_cooldown)
+    s = engine.stats()
+    health = s["breakers"]
+    assert all(br["state"] == "closed" for br in health.values()), health
+    assert all(health[k]["audits_passed"] >= 1 for k in tripped), (
+        "re-admission must be earned by a passing audit", health)
+    assert s["audit_clean_epoch"], s
+    assert all(r.status == "DONE" for r in done.values()), s["statuses"]
+    _assert_parity(f, F, done, payloads)
+    recovery_row = dict(
+        bench="sdc_drill", mode="recovery", requests=n,
+        readmitted=tripped,
+        audits_passed={k: health[k]["audits_passed"] for k in tripped},
+        audit_clean_epoch=s["audit_clean_epoch"],
+        drift_hits_total=s["audit_drift_hits"])
+    return [corruption_row, recovery_row]
+
+
+def run(n_requests=12, D=3, max_points=40, chunk=8):
+    """All three scenarios; returns the emitted BENCH rows."""
+    f, F = build_fields(D=D)
+    rows = []
+    offload.reset_kernel_health()
+    old_cooldown = offload.set_breaker_cooldown(300.0)
+    try:
+        rows.append(overhead_scenario(f, F, n=n_requests, D=D,
+                                      max_points=max_points, chunk=chunk))
+        offload.reset_kernel_health()
+        rows.extend(corruption_and_recovery(f, F, D=D, chunk=chunk))
+    finally:
+        offload.set_breaker_cooldown(old_cooldown)
+        offload.reset_kernel_health()
+    for row in rows:
+        emit_bench(**row)
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -205,6 +205,11 @@ def _is_literal(v) -> bool:
 #               until the cool-down elapses
 #   half-open — cool-down elapsed; ONE probe call is let through. Success
 #               closes the breaker, another classified failure re-opens it.
+#               Breakers tripped with the ``numeric`` label (silent data
+#               corruption caught by a sentinel audit) are stricter: a
+#               merely non-crashing probe does NOT close them — the probe's
+#               output must pass an audit, reported via
+#               :func:`record_audit_pass`, before the kind is re-admitted.
 #
 # Breaker state is consulted at *trace* time (try_fuse runs while the plan
 # interprets the jaxpr), so long-lived jit caches pin whichever rung they
@@ -213,7 +218,11 @@ def _is_literal(v) -> bool:
 # when it moves. Failures that only surface *after* tracing (inside a jit'd
 # call) are reported via :func:`record_kernel_failure`, which walks the
 # ladder qkv-superblock -> attention -> mlp when the failing kind is
-# unknown.
+# unknown; wrong *answers* (no exception at all) are reported via
+# :func:`record_numeric_drift`. Engines that never re-trace spontaneously
+# call :func:`poll_breakers` at step boundaries so cooled-down open
+# breakers reach half-open (and bump the epoch) without waiting for a
+# trace to happen to run through ``_breaker_allows``.
 
 BREAKER_KINDS = ("jet_attention_qkv", "jet_attention", "jet_mlp")
 
@@ -225,6 +234,9 @@ class _Breaker:
     probes: int = 0
     opened_at: float = 0.0
     last_error: str = ""
+    numeric: bool = False  # tripped by silent drift: close only via audit
+    audits_passed: int = 0
+    last_audit: str = ""  # "" | "pass" | "fail"
 
 
 _BREAKERS: Dict[str, _Breaker] = {k: _Breaker() for k in BREAKER_KINDS}
@@ -258,12 +270,16 @@ def reset_kernel_health():
     for br in _BREAKERS.values():
         br.state, br.failures, br.probes = "closed", 0, 0
         br.opened_at, br.last_error = 0.0, ""
+        br.numeric, br.audits_passed, br.last_audit = False, 0, ""
     _bump_epoch()
 
 
 def kernel_health() -> Dict[str, Dict[str, Any]]:
     """Snapshot of every breaker (state/failures/probes/last_error), plus
-    the remaining cool-down for open breakers."""
+    the remaining cool-down for open breakers and the *numeric* health
+    fields: ``numeric`` (tripped by silent drift, re-admission requires an
+    audited probe), ``audits_passed`` (probes verified against the CRULES
+    oracle), ``last_audit`` (``"pass"``/``"fail"``/``""``)."""
     now = _breaker_clock()
     out = {}
     for kind, br in _BREAKERS.items():
@@ -282,9 +298,36 @@ def breakers_closed() -> bool:
     return all(br.state == "closed" for br in _BREAKERS.values())
 
 
+_ORACLE_MODE = False
+
+
+@contextlib.contextmanager
+def oracle_mode():
+    """Force pure-CRULES interpretation for traces inside the block.
+
+    ``_breaker_allows`` returns ``False`` for every kind while active, so
+    any plan traced here skips every fused kernel — this is how the
+    sentinel audits build their ground-truth recomputation even through
+    user code that hard-codes ``backend='pallas'`` (the trainer's loss
+    function). Only the *trace* is affected; breaker state, probe counts,
+    and the epoch are untouched, and plans cached outside the block keep
+    their fused rungs (breaker gating is per-trace, never baked into
+    cached Plan objects).
+    """
+    global _ORACLE_MODE
+    old, _ORACLE_MODE = _ORACLE_MODE, True
+    try:
+        yield
+    finally:
+        _ORACLE_MODE = old
+
+
 def _breaker_allows(kind: str) -> bool:
     """Gate a kernel call: True when closed, or when an open breaker's
-    cool-down elapsed (transitions to half-open and admits one probe)."""
+    cool-down elapsed (transitions to half-open and admits one probe).
+    Always False under :func:`oracle_mode` (audit recomputation)."""
+    if _ORACLE_MODE:
+        return False
     br = _BREAKERS[kind]
     if br.state == "closed":
         return True
@@ -300,18 +343,23 @@ def _breaker_allows(kind: str) -> bool:
 
 def _breaker_success(kind: str):
     br = _BREAKERS[kind]
+    if br.state == "half-open" and br.numeric:
+        # Silent-drift trips don't heal on "didn't crash": the probe's
+        # output must pass a sentinel audit (record_audit_pass) first.
+        return
     if br.state != "closed":
         br.state = "closed"
         br.last_error = ""
         _bump_epoch()
 
 
-def _breaker_failure(kind: str, reason: str):
+def _breaker_failure(kind: str, reason: str, numeric: bool = False):
     br = _BREAKERS[kind]
     br.failures += 1
     br.last_error = reason[:300]
     br.state = "open"
     br.opened_at = _breaker_clock()
+    br.numeric = numeric or br.numeric
     _bump_epoch()
 
 
@@ -331,8 +379,73 @@ def record_kernel_failure(exc: Optional[BaseException] = None,
     if kind is None:
         kind = next((k for k in BREAKER_KINDS
                      if _BREAKERS[k].state != "open"), BREAKER_KINDS[-1])
-    _breaker_failure(kind, f"{label}: {exc}" if exc is not None else label)
+    _breaker_failure(kind, f"{label}: {exc}" if exc is not None else label,
+                     numeric=(label == "numeric"))
     return kind
+
+
+def record_numeric_drift(detail: str,
+                         kind: Optional[str] = None) -> Optional[str]:
+    """Report silent data corruption caught by a sentinel audit.
+
+    Audits compare committed window outputs, so they usually cannot name
+    the divergent kernel — with ``kind=None`` each report walks the ladder
+    one rung (superblock -> attention -> mlp -> CRULES), and the re-issued,
+    re-audited window converges on the corrupt kind within
+    ``len(BREAKER_KINDS)`` reports. The tripped breaker is marked
+    ``numeric``: it will NOT close on a merely successful probe; half-open
+    re-admission requires :func:`record_audit_pass`.
+    """
+    from repro.kernels.failures import NumericDriftError
+    tripped = record_kernel_failure(
+        NumericDriftError(f"NUMERIC_DRIFT: {detail}"), kind=kind)
+    if tripped is not None:
+        _BREAKERS[tripped].last_audit = "fail"
+    return tripped
+
+
+def record_audit_pass(kind: Optional[str] = None) -> List[str]:
+    """An audited recomputation matched the fused output: close half-open
+    breakers (``kind=None`` closes all half-open kinds — the audit vouches
+    for the whole traced plan). Open breakers still cooling down are left
+    untouched. Returns the kinds that closed."""
+    kinds = BREAKER_KINDS if kind is None else (kind,)
+    closed = []
+    for k in kinds:
+        br = _BREAKERS[k]
+        if br.state == "half-open":
+            br.state = "closed"
+            br.numeric = False
+            br.last_error = ""
+            br.audits_passed += 1
+            br.last_audit = "pass"
+            closed.append(k)
+        elif br.state == "closed" and br.last_audit != "pass":
+            br.last_audit = "pass"
+    if closed:
+        _bump_epoch()
+    return closed
+
+
+def poll_breakers() -> List[str]:
+    """Advance cooled-down open breakers to half-open outside a trace.
+
+    ``_breaker_allows`` performs this transition only when a trace
+    actually consults it — but engines key their compiled step functions
+    by :func:`breaker_epoch` and never re-trace while the epoch is still.
+    Calling this at step boundaries moves every cooled-down open breaker
+    to half-open (bumping the epoch, which forces the re-trace that runs
+    the probe). Returns the kinds currently half-open."""
+    now = _breaker_clock()
+    half_open = []
+    for kind, br in _BREAKERS.items():
+        if br.state == "open" and now - br.opened_at >= _BREAKER_COOLDOWN_S:
+            br.state = "half-open"
+            br.probes += 1
+            _bump_epoch()
+        if br.state == "half-open":
+            half_open.append(kind)
+    return half_open
 
 
 # ---------------------------------------------------------------------------
@@ -2554,8 +2667,10 @@ class PlanReport:
             if br.get("state", "closed") == "closed":
                 continue
             why = f" — {br['last_error']}" if br.get("last_error") else ""
+            numeric = " [numeric: audited re-admission required]" \
+                if br.get("numeric") else ""
             lines.append(
-                f"breaker {kind}: {br['state']} "
+                f"breaker {kind}: {br['state']}{numeric} "
                 f"({br['failures']} failure(s), {br['probes']} probe(s), "
                 f"{br['cooldown_remaining_s']:.1f}s cool-down left){why}")
         for e in self.jaxprs:
@@ -2630,6 +2745,13 @@ def explain(f, *args, K: int = 2, directions=None,
 
     ``backend``: 'pallas' (superblocks enabled) or 'pallas-per-segment'
     (today's per-segment plans only).
+
+    The report also snapshots :func:`kernel_health`: any non-closed
+    breaker is printed with its state and, for breakers tripped by a
+    sentinel audit (silent data corruption, the ``numeric`` label), a
+    ``[numeric: audited re-admission required]`` tag — those kinds only
+    return to the plan after a half-open probe *passes an audit*
+    (:func:`record_audit_pass`), not merely after one that doesn't crash.
 
     Mesh-aware: run under ``distributed.sharding.activate(mesh)`` to stamp
     the report with the mesh layout — segment counts are then *local*

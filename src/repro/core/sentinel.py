@@ -1,0 +1,296 @@
+"""Silent-data-corruption sentinel: shared numeric-audit primitives.
+
+A fused Pallas kernel that silently returns *wrong numbers* (miscompiled
+lowering, bad autotune candidate, bit-flip on a flaky accelerator) is
+invisible to the exception-classified circuit breakers in
+``core.offload``.  This module supplies the shared machinery that turns
+wrong answers into first-class failures:
+
+* **Per-dtype tolerance budgets** (`BUDGETS`, :func:`budget_for`): one
+  ulp/rel/abs budget table for f64/f32/bf16/f16, used by every
+  kernel-vs-CRULES parity comparison in the repo (tests, benchmarks,
+  autotune gating, online audits) instead of ad-hoc ``allclose``
+  tolerances.
+* **Structured comparison** (:func:`compare`, :func:`assert_close`):
+  elementwise pass iff ``|a-e| <= abs + rel*|e|`` *or* the error is
+  within the ulp budget at ``e``'s magnitude; non-finite values must
+  agree in kind (NaN↔NaN, same-signed inf).  Returns an
+  :class:`AuditVerdict` with the worst observed rel/abs/ulp error.
+* **Deterministic audit sampling** (:func:`should_audit`): a
+  hash-of-(tag, index) coin with no RNG state, so a replayed request
+  stream audits exactly the same windows — reproducible drills, no
+  sampling drift between runs.
+
+The serving engine (`serve.operator_engine`), the trainer
+(`train.trainer`), and the autotuner (`kernels.autotune`) consume these
+primitives; sustained drift is escalated through
+``offload.record_numeric_drift`` which trips the degradation ladder with
+the ``numeric`` failure label.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = [
+    "BUDGETS",
+    "ToleranceBudget",
+    "AuditVerdict",
+    "budget_for",
+    "tolerances",
+    "compare",
+    "assert_close",
+    "should_audit",
+    "audit_indices",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ToleranceBudget:
+    """Per-dtype numeric budget: elementwise pass iff
+    ``err <= abs + rel * |expected|`` OR ``err <= ulp * ulp_size(expected)``.
+    """
+
+    rel: float
+    abs: float
+    ulp: float
+
+    def scaled(self, scale: float) -> "ToleranceBudget":
+        if scale == 1.0:
+            return self
+        return ToleranceBudget(self.rel * scale, self.abs * scale, self.ulp * scale)
+
+
+# One budget per floating dtype the kernels run in.  The f32 numbers match
+# the widest tolerance the kernel parity tests historically needed
+# (rtol=2e-4 for deep K=4 towers); the half-precision rows scale with the
+# dtype's eps (bf16 has 8 mantissa bits, f16 has 11).
+BUDGETS: Dict[str, ToleranceBudget] = {
+    "float64": ToleranceBudget(rel=1e-9, abs=1e-12, ulp=4096.0),
+    "float32": ToleranceBudget(rel=2e-4, abs=2e-5, ulp=2048.0),
+    "bfloat16": ToleranceBudget(rel=4e-2, abs=4e-3, ulp=16.0),
+    "float16": ToleranceBudget(rel=5e-3, abs=5e-4, ulp=32.0),
+}
+
+# eps / smallest-normal per dtype, hardcoded so bf16 needs no ml_dtypes
+# finfo round-trip.
+_EPS = {
+    "float64": 2.220446049250313e-16,
+    "float32": 1.1920928955078125e-07,
+    "bfloat16": 7.8125e-03,
+    "float16": 9.765625e-04,
+}
+_TINY = {
+    "float64": 2.2250738585072014e-308,
+    "float32": 1.1754943508222875e-38,
+    "bfloat16": 1.1754943508222875e-38,
+    "float16": 6.103515625e-05,
+}
+
+
+def budget_for(dtype: Any, scale: float = 1.0) -> ToleranceBudget:
+    """Tolerance budget for ``dtype``, optionally scaled (e.g. deep
+    compositions accumulate error; pass ``scale>1``)."""
+    name = np.dtype(dtype).name if not isinstance(dtype, str) else dtype
+    if name not in BUDGETS:
+        raise KeyError(
+            f"no tolerance budget for dtype {name!r}; known: {sorted(BUDGETS)}"
+        )
+    return BUDGETS[name].scaled(scale)
+
+
+def tolerances(dtype: Any, scale: float = 1.0) -> Dict[str, float]:
+    """``{'rtol': ..., 'atol': ...}`` view of the budget — drop-in for
+    ``np.testing.assert_allclose(**sentinel.tolerances(dtype))`` call sites
+    that cannot use :func:`assert_close` directly."""
+    b = budget_for(dtype, scale)
+    return {"rtol": b.rel, "atol": b.abs}
+
+
+@dataclasses.dataclass
+class AuditVerdict:
+    """Outcome of one audit comparison (worst case over all leaves)."""
+
+    ok: bool
+    max_rel: float
+    max_abs: float
+    max_ulp: float
+    n: int
+    dtype: str
+    budget: ToleranceBudget
+    detail: str = ""
+
+    def summary(self) -> str:
+        state = "pass" if self.ok else "DRIFT"
+        return (
+            f"{state} dtype={self.dtype} n={self.n} "
+            f"max_rel={self.max_rel:.3g} max_abs={self.max_abs:.3g} "
+            f"max_ulp={self.max_ulp:.3g} "
+            f"(budget rel={self.budget.rel:.3g} abs={self.budget.abs:.3g} "
+            f"ulp={self.budget.ulp:.3g})"
+            + (f" {self.detail}" if self.detail else "")
+        )
+
+
+def _leaf_dtype_name(leaf: Any) -> Optional[str]:
+    try:
+        name = np.dtype(getattr(leaf, "dtype", type(leaf))).name
+    except TypeError:
+        return None
+    return name if name in BUDGETS else None
+
+
+def _infer_dtype(tree: Any) -> str:
+    for leaf in jax.tree_util.tree_leaves(tree):
+        name = _leaf_dtype_name(leaf)
+        if name is not None:
+            return name
+    return "float32"
+
+
+def _compare_arrays(
+    a: np.ndarray, e: np.ndarray, budget: ToleranceBudget, eps: float, tiny: float
+) -> Tuple[bool, float, float, float, int, str]:
+    if a.shape != e.shape:
+        return False, np.inf, np.inf, np.inf, a.size, f"shape {a.shape} != {e.shape}"
+    if a.size == 0:
+        return True, 0.0, 0.0, 0.0, 0, ""
+    fin_a = np.isfinite(a)
+    fin_e = np.isfinite(e)
+    detail = ""
+    ok = True
+    if not np.array_equal(fin_a, fin_e):
+        ok = False
+        detail = f"finite-mask mismatch at {int(np.sum(fin_a != fin_e))} elements"
+    both_nonfin = ~fin_a & ~fin_e
+    if ok and both_nonfin.any():
+        agree = (np.isnan(a) & np.isnan(e)) | (a[...] == e[...])
+        if not bool(agree[both_nonfin].all()):
+            ok = False
+            detail = "non-finite kind mismatch (nan vs inf / sign)"
+    m = fin_a & fin_e
+    if not m.any():
+        return ok, 0.0, 0.0, 0.0, int(a.size), detail
+    af = a[m]
+    ef = e[m]
+    err = np.abs(af - ef)
+    denom = np.abs(ef)
+    ulp_size = np.maximum(denom, tiny) * eps
+    rel = err / np.maximum(denom, tiny)
+    within = (err <= budget.abs + budget.rel * denom) | (err <= budget.ulp * ulp_size)
+    if not bool(within.all()):
+        ok = False
+        if not detail:
+            bad = int(np.sum(~within))
+            detail = f"{bad}/{af.size} elements over budget"
+    max_abs = float(err.max())
+    max_rel = float(rel.max())
+    max_ulp = float((err / ulp_size).max())
+    return ok, max_rel, max_abs, max_ulp, int(a.size), detail
+
+
+def compare(
+    actual: Any,
+    expected: Any,
+    dtype: Any = None,
+    scale: float = 1.0,
+) -> AuditVerdict:
+    """Compare ``actual`` against the oracle ``expected`` under the
+    per-dtype budget.  Accepts arrays or arbitrary pytrees (leaves are
+    compared pairwise; the verdict carries the worst case)."""
+    a_leaves = jax.tree_util.tree_leaves(actual)
+    e_leaves = jax.tree_util.tree_leaves(expected)
+    name = (
+        (np.dtype(dtype).name if not isinstance(dtype, str) else dtype)
+        if dtype is not None
+        else _infer_dtype(expected)
+    )
+    budget = budget_for(name, scale)
+    eps = _EPS[name]
+    tiny = _TINY[name]
+    if len(a_leaves) != len(e_leaves):
+        return AuditVerdict(
+            ok=False,
+            max_rel=np.inf,
+            max_abs=np.inf,
+            max_ulp=np.inf,
+            n=0,
+            dtype=name,
+            budget=budget,
+            detail=f"tree arity mismatch: {len(a_leaves)} vs {len(e_leaves)} leaves",
+        )
+    ok = True
+    max_rel = max_abs = max_ulp = 0.0
+    n = 0
+    detail = ""
+    for a, e in zip(a_leaves, e_leaves):
+        a_np = np.asarray(a, dtype=np.float64)
+        e_np = np.asarray(e, dtype=np.float64)
+        leaf_ok, r, ab, u, cnt, d = _compare_arrays(a_np, e_np, budget, eps, tiny)
+        ok = ok and leaf_ok
+        max_rel = max(max_rel, r)
+        max_abs = max(max_abs, ab)
+        max_ulp = max(max_ulp, u)
+        n += cnt
+        if d and not detail:
+            detail = d
+    return AuditVerdict(
+        ok=ok,
+        max_rel=max_rel,
+        max_abs=max_abs,
+        max_ulp=max_ulp,
+        n=n,
+        dtype=name,
+        budget=budget,
+        detail=detail,
+    )
+
+
+def assert_close(
+    actual: Any,
+    expected: Any,
+    dtype: Any = None,
+    scale: float = 1.0,
+    err_msg: str = "",
+) -> AuditVerdict:
+    """Budget-based replacement for ``np.testing.assert_allclose`` in
+    kernel-vs-oracle parity checks; raises ``AssertionError`` with the
+    verdict summary on breach."""
+    verdict = compare(actual, expected, dtype=dtype, scale=scale)
+    if not verdict.ok:
+        msg = verdict.summary()
+        if err_msg:
+            msg = f"{err_msg}: {msg}"
+        raise AssertionError(msg)
+    return verdict
+
+
+# ---------------------------------------------------------------------------
+# Deterministic audit sampling — hash of (tag, index), no RNG state.
+# ---------------------------------------------------------------------------
+
+
+def _hash01(tag: str, index: int) -> float:
+    h = zlib.crc32(f"{tag}#{index}".encode("utf-8")) & 0xFFFFFFFF
+    return h / 4294967296.0
+
+
+def should_audit(tag: str, index: int, fraction: float) -> bool:
+    """Deterministic sampling coin: audit iff
+    ``hash(tag, index) < fraction``.  The same (tag, index) pair always
+    gets the same answer, so replayed streams audit identical windows."""
+    if fraction <= 0.0:
+        return False
+    if fraction >= 1.0:
+        return True
+    return _hash01(tag, int(index)) < fraction
+
+
+def audit_indices(tag: str, fraction: float, n: int) -> list:
+    """The audit schedule for the first ``n`` windows of ``tag``."""
+    return [i for i in range(n) if should_audit(tag, i, fraction)]

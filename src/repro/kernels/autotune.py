@@ -26,7 +26,14 @@ Three kernels are tuned here:
 
 All share one mechanism: a deterministic MXU-aligned heuristic used on CPU /
 interpret mode (where timing Pallas is meaningless) and as the timing
-fallback, plus a cached timing sweep on accelerators. Results are memoized
+fallback, plus a cached timing sweep on accelerators. Candidates are
+*correctness-gated* before they may win a sweep: each one's output on
+low-discrepancy probe inputs is checked against the unfused reference
+lowering under the sentinel's per-dtype tolerance budget
+(:mod:`repro.core.sentinel`) — a miscompiled config that is merely fast
+must not win the persisted cache forever. Divergent configs are recorded
+under ``rejected|<key>`` entries in the same JSON cache so later sweeps
+never re-time them. Results are memoized
 in-process and persisted to a JSON cache file whose keys are *namespaced by
 kernel name* (``jet_mlp|…`` / ``jet_attention|…`` / ``jet_attention_qkv|…``)
 so the kernels' block configs can never collide; legacy un-namespaced
@@ -151,8 +158,12 @@ def _migrate_key(key: str) -> str:
     ``jet_attention_qkv`` keys gain both flags as 0); and kind-less keys
     written before the device kind was keyed (see :func:`_migrate_kind`).
     Keys already in the current form pass through; unrecognizable keys are
-    dropped by the caller.
+    dropped by the caller. ``rejected|``-namespaced correctness-gate entries
+    migrate by migrating the key they wrap.
     """
+    if key.startswith("rejected|"):
+        inner = _migrate_key(key[len("rejected|"):])
+        return f"rejected|{inner}" if inner else ""
     head, _, rest = key.partition("|")
     if head == "jet_attention":
         dims, sep, tail = rest.partition("|")
@@ -313,40 +324,123 @@ def _time_one(run, repeats: int = 3, warmup: int = 1) -> float:
     return best
 
 
-def autotune(B: int, Din: int, Dout: int, R: int, K: int, dtype,
-             candidates: Optional[Sequence[BlockConfig]] = None) -> BlockConfig:
-    """Time the real fused kernel over aligned candidates; return the argmin.
+# ---------------------------------------------------------------------------
+# candidate correctness gating
+# ---------------------------------------------------------------------------
 
-    Inputs are zeros of the padded shapes — the kernel is data-oblivious, so
-    timing is representative. Candidates that fail to compile are skipped.
+_GOLDEN = 0.6180339887498949
+
+# sentinel budget headroom for the gate: candidates reduce in different block
+# orders than the reference's one-shot contractions, so legitimate configs
+# accumulate more rounding than a same-graph recompute. A miscompiled config
+# is off by O(1), not O(10·eps) — 8x headroom cannot mask it.
+_GATE_SCALE = 8.0
+
+
+def _probe_array(shape, dtype, seed: int = 0, scale: float = 0.25):
+    """Deterministic low-discrepancy probe operand in ``[-scale, scale)``.
+
+    The sweeps used to probe with zeros — fine for timing (the kernels are
+    data-oblivious) but useless for catching a miscompiled candidate, whose
+    wrong answer on all-zero inputs is usually still zero. A golden-ratio
+    sequence gives dense sign-mixed values with no RNG state, so the
+    reference output for a padded shape can be cached and reused across
+    candidates.
     """
-    import jax
     import jax.numpy as jnp
 
+    n = max(int(np.prod(shape)), 1)
+    idx = np.arange(1, n + 1, dtype=np.float64) + 7919.0 * seed
+    vals = (idx * _GOLDEN) % 1.0 - 0.5
+    return jnp.asarray((2.0 * scale * vals).reshape(shape), dtype)
+
+
+def _gate_ok(out, ref, dtype) -> bool:
+    from repro.core import sentinel
+
+    return sentinel.compare(out, ref, dtype=np.dtype(dtype).name,
+                            scale=_GATE_SCALE).ok
+
+
+def _rejected_key(key: str) -> str:
+    return f"rejected|{key}"
+
+
+def _load_rejected(disk: Dict[str, list], key: Optional[str]) -> set:
+    """Configs that diverged from the reference on an earlier sweep."""
+    if not key:
+        return set()
+    return {tuple(int(x) for x in c)
+            for c in disk.get(_rejected_key(key), [])
+            if isinstance(c, (list, tuple))}
+
+
+def _persist_rejected(key: Optional[str], rejected: set,
+                      fresh: int) -> None:
+    if key and fresh:
+        save_cache({_rejected_key(key): sorted(list(c) for c in rejected)})
+
+
+def autotune(B: int, Din: int, Dout: int, R: int, K: int, dtype,
+             candidates: Optional[Sequence[BlockConfig]] = None,
+             cache_key: Optional[str] = None) -> BlockConfig:
+    """Time the real fused kernel over aligned candidates; return the argmin.
+
+    Inputs are low-discrepancy probes of the padded shapes: the kernel is
+    data-oblivious, so timing is representative, and non-zero data lets each
+    candidate be correctness-gated against the unfused reference lowering
+    before it may be timed — selection by ``_time_one`` alone would let a
+    miscompiled-but-fast config win the persisted cache forever. Divergent
+    configs are recorded under ``rejected|<cache_key>`` so later sweeps skip
+    them outright; candidates that fail to *compile* are skipped but not
+    recorded (compile failures can be transient).
+    """
+    import jax
+
     from repro.kernels.jet_mlp.jet_mlp import collapsed_jet_layer
+    from repro.kernels.jet_mlp.ref import collapsed_jet_layer_ref
 
     if candidates is None:
         candidates = candidate_configs(B, Din, Dout, R, K)
+    rejected = _load_rejected(load_cache(), cache_key)
+    fresh_rejects = 0
     best_cfg, best_t = None, float("inf")
     din_p = round_up(Din, _LANE)
+    ref_outs: Dict[tuple, tuple] = {}  # padded shape -> reference output
     for cfg in candidates:
+        if tuple(cfg) in rejected:
+            continue  # diverged on an earlier sweep: never re-timed
         bb, bd, br = cfg
         Bp, Dp, Rp = round_up(B, bb), round_up(Dout, bd), round_up(R, br)
-        h0 = jnp.zeros((Bp, din_p), dtype)
-        hl = jnp.zeros((K - 1, Rp, Bp, din_p), dtype)
-        ht = jnp.zeros((Bp, din_p), dtype)
-        w = jnp.zeros((din_p, Dp), dtype)
-        b = jnp.zeros((Dp,), dtype)
+        h0 = _probe_array((Bp, din_p), dtype, seed=1)
+        hl = _probe_array((K - 1, Rp, Bp, din_p), dtype, seed=2)
+        ht = _probe_array((Bp, din_p), dtype, seed=3)
+        # keep pre-activation magnitudes O(1): shrink the weight probe by √Din
+        w = _probe_array((din_p, Dp), dtype, seed=4,
+                         scale=0.25 / float(np.sqrt(din_p)))
+        b = _probe_array((Dp,), dtype, seed=5)
         try:
             fn = jax.jit(lambda h0, hl, ht, w, b, _cfg=cfg: collapsed_jet_layer(
                 h0, hl, ht, w, b, K=K, activation="tanh",
                 block_b=_cfg.block_b, block_d=_cfg.block_d,
                 block_r=_cfg.block_r))
-            t = _time_one(lambda: fn(h0, hl, ht, w, b))
+            out = jax.block_until_ready(fn(h0, hl, ht, w, b))
         except Exception:  # unsupported block combo on this backend
             continue
+        shape = (Bp, Dp, Rp)
+        if shape not in ref_outs:
+            ref_outs[shape] = jax.jit(
+                lambda h0, hl, ht, w, b: collapsed_jet_layer_ref(
+                    h0, hl, ht, w, b, K=K, activation="tanh"))(
+                h0, hl, ht, w, b)
+        if not _gate_ok(out, ref_outs[shape], dtype):
+            rejected.add(tuple(cfg))
+            fresh_rejects += 1
+            continue
+        t = _time_one(lambda: fn(h0, hl, ht, w, b))
         if t < best_t:
             best_cfg, best_t = cfg, t
+    _persist_rejected(cache_key, rejected, fresh_rejects)
     return best_cfg or default_config(B, Din, Dout, R, K)
 
 
@@ -373,7 +467,7 @@ def get_block_config(B: int, Din: int, Dout: int, R: int, K: int, dtype,
         cfg = default_config(B, Din, Dout, R, K)
         _MEM_CACHE[key] = cfg  # heuristic: memoize but don't persist
         return cfg
-    cfg = autotune(B, Din, Dout, R, K, dtype)
+    cfg = autotune(B, Din, Dout, R, K, dtype, cache_key=key)
     _MEM_CACHE[key] = cfg
     disk[key] = list(cfg)
     save_cache(disk)
@@ -444,39 +538,61 @@ def attention_default_config(Sq: int, Skv: int, dh: int, dv: int, R: int,
 def autotune_attention(N: int, Sq: int, Skv: int, dh: int, dv: int, R: int,
                        K: int, dtype,
                        candidates: Optional[Sequence[AttnBlockConfig]]
-                       = None) -> AttnBlockConfig:
-    """Time the real fused attention kernel over aligned candidates."""
+                       = None,
+                       cache_key: Optional[str] = None) -> AttnBlockConfig:
+    """Time the real fused attention kernel over aligned candidates, each
+    correctness-gated against the pure-jnp oracle first (see
+    :func:`autotune` — an all-ones mask over probe q/k/v is the oracle's
+    unmasked semantics)."""
     import jax
     import jax.numpy as jnp
 
     from repro.kernels.jet_attention.jet_attention import collapsed_jet_attention
+    from repro.kernels.jet_attention.ref import collapsed_jet_attention_ref
 
     if candidates is None:
         candidates = attention_candidate_configs(Sq, Skv, dh, dv, R, K)
+    rejected = _load_rejected(load_cache(), cache_key)
+    fresh_rejects = 0
     best_cfg, best_t = None, float("inf")
     dh_p = round_up(dh, _LANE)
     dv_p = round_up(dv, _LANE)
+    ref_outs: Dict[tuple, tuple] = {}  # padded (Sq, Skv) -> oracle output
     for cfg in candidates:
+        if tuple(cfg) in rejected:
+            continue  # diverged on an earlier sweep: never re-timed
         bq, bk = cfg
         Sqp, Skp = round_up(Sq, bq), round_up(Skv, bk)
         # ops.py always feeds a float32 mask; time the same specialization
         mask = jnp.ones((Sqp, Skp), jnp.float32)
-        q0 = jnp.zeros((N, Sqp, dh_p), dtype)
-        ql = jnp.zeros((K - 1, R, N, Sqp, dh_p), dtype)
-        k0 = jnp.zeros((N, Skp, dh_p), dtype)
-        kl = jnp.zeros((K - 1, R, N, Skp, dh_p), dtype)
-        v0 = jnp.zeros((N, Skp, dv_p), dtype)
-        vl = jnp.zeros((K - 1, R, N, Skp, dv_p), dtype)
+        q0 = _probe_array((N, Sqp, dh_p), dtype, seed=1)
+        ql = _probe_array((K - 1, R, N, Sqp, dh_p), dtype, seed=2)
+        k0 = _probe_array((N, Skp, dh_p), dtype, seed=3)
+        kl = _probe_array((K - 1, R, N, Skp, dh_p), dtype, seed=4)
+        v0 = _probe_array((N, Skp, dv_p), dtype, seed=5)
+        vl = _probe_array((K - 1, R, N, Skp, dv_p), dtype, seed=6)
         try:
             fn = jax.jit(lambda m, a, al, b, bl, c, cl, _cfg=cfg:
                          collapsed_jet_attention(
                              m, a, al, a, b, bl, b, c, cl, c, K=K,
                              block_q=_cfg.block_q, block_k=_cfg.block_k))
-            t = _time_one(lambda: fn(mask, q0, ql, k0, kl, v0, vl))
+            out = jax.block_until_ready(fn(mask, q0, ql, k0, kl, v0, vl))
         except Exception:  # unsupported block combo on this backend
             continue
+        shape = (Sqp, Skp)
+        if shape not in ref_outs:
+            ref_outs[shape] = jax.jit(
+                lambda a, al, b, bl, c, cl: collapsed_jet_attention_ref(
+                    a, al, a, b, bl, b, c, cl, c, K=K))(
+                q0, ql, k0, kl, v0, vl)
+        if not _gate_ok(out, ref_outs[shape], dtype):
+            rejected.add(tuple(cfg))
+            fresh_rejects += 1
+            continue
+        t = _time_one(lambda: fn(mask, q0, ql, k0, kl, v0, vl))
         if t < best_t:
             best_cfg, best_t = cfg, t
+    _persist_rejected(cache_key, rejected, fresh_rejects)
     return best_cfg or attention_default_config(Sq, Skv, dh, dv, R, K)
 
 
@@ -500,7 +616,7 @@ def get_attention_block_config(N: int, Sq: int, Skv: int, dh: int, dv: int,
         cfg = attention_default_config(Sq, Skv, dh, dv, R, K)
         _MEM_CACHE[key] = cfg  # heuristic: memoize but don't persist
         return cfg
-    cfg = autotune_attention(N, Sq, Skv, dh, dv, R, K, dtype)
+    cfg = autotune_attention(N, Sq, Skv, dh, dv, R, K, dtype, cache_key=key)
     _MEM_CACHE[key] = cfg
     disk[key] = list(cfg)
     save_cache(disk)
@@ -597,58 +713,115 @@ def autotune_qkv_attention(B: int, S: int, D: int, Hq: int, Hkv: int,
                            dh: int, dv: int, do_: int, R: int, rope: int,
                            qbias: int, K: int, dtype,
                            candidates: Optional[Sequence[AttnBlockConfig]]
-                           = None) -> AttnBlockConfig:
+                           = None,
+                           cache_key: Optional[str] = None) -> AttnBlockConfig:
     """Time the real fused superblock kernel over aligned candidates (with
     the rope / projection-bias operands instantiated when flagged — they
-    change the per-step FLOPs and VMEM traffic being timed)."""
+    change the per-step FLOPs and VMEM traffic being timed).
+
+    Correctness gate (see :func:`autotune`): the plain variant is checked
+    against the pure-jnp oracle with the kernel's grouped weight layout
+    transposed into the oracle's per-head layout. The rope / qbias variants
+    carry pre-rotated weight companions that have no oracle-layout
+    counterpart, so they audit against the *interpreter-mode* kernel instead
+    — the same program on the reference Pallas executor, which catches
+    backend miscompiles (the realistic source of a fast-but-wrong config).
+    """
     import jax
     import jax.numpy as jnp
     import math as _math
 
     from repro.kernels.jet_attention.jet_attention import (
         collapsed_jet_qkv_attention)
+    from repro.kernels.jet_attention.ref import (
+        collapsed_jet_qkv_attention_ref)
 
     if candidates is None:
         candidates = qkv_attention_candidate_configs(S, D, Hq, Hkv, dh, dv,
                                                      do_, R, rope, qbias, K)
+    rejected = _load_rejected(load_cache(), cache_key)
+    fresh_rejects = 0
     best_cfg, best_t = None, float("inf")
     G = max(Hq // max(Hkv, 1), 1)
     D_p = round_up(D, _LANE)
     dh_p = round_up(dh, _LANE)
     dv_p = round_up(dv, _LANE)
     do_p = round_up(do_, _LANE)
+    wscale = 0.25 / float(np.sqrt(D_p))
+    ref_outs: Dict[int, tuple] = {}  # padded S -> oracle output
     for cfg in candidates:
+        if tuple(cfg) in rejected:
+            continue  # diverged on an earlier sweep: never re-timed
         bq, bk = cfg
         Sp = round_up(S, _math.lcm(bq, bk))
         mask = jnp.ones((Sp, Sp), jnp.float32)
-        h0 = jnp.zeros((B, Sp, D_p), dtype)
-        hl = jnp.zeros((K - 1, R, B, Sp, D_p), dtype)
-        wq = jnp.zeros((Hkv, G, D_p, dh_p), dtype)
-        wk = jnp.zeros((Hkv, D_p, dh_p), dtype)
-        wv = jnp.zeros((Hkv, D_p, dv_p), dtype)
-        wo = jnp.zeros((Hkv, G, dv_p, do_p), dtype)
+        h0 = _probe_array((B, Sp, D_p), dtype, seed=1)
+        hl = _probe_array((K - 1, R, B, Sp, D_p), dtype, seed=2)
+        wq = _probe_array((Hkv, G, D_p, dh_p), dtype, seed=3, scale=wscale)
+        wk = _probe_array((Hkv, D_p, dh_p), dtype, seed=4, scale=wscale)
+        wv = _probe_array((Hkv, D_p, dv_p), dtype, seed=5, scale=wscale)
+        wo = _probe_array((Hkv, G, dv_p, do_p), dtype, seed=6, scale=wscale)
         kw = {}
         if rope:
-            tab = jnp.zeros((Sp, dh_p), dtype)
+            # arbitrary tables are fine for both timing and gating: rope is
+            # linear in the series, and the interpret-mode oracle sees the
+            # identical (tab, tab) / companion operands
+            tab = _probe_array((Sp, dh_p), dtype, seed=7, scale=1.0)
             kw.update(rope=(tab, tab), wq_rot=wq, wk_rot=wk)
         if qbias:
-            kw.update(qkv_bias=(jnp.zeros((Hkv, G, dh_p), dtype),
-                                jnp.zeros((Hkv, dh_p), dtype),
-                                jnp.zeros((Hkv, dv_p), dtype)))
+            kw.update(qkv_bias=(
+                _probe_array((Hkv, G, dh_p), dtype, seed=8, scale=wscale),
+                _probe_array((Hkv, dh_p), dtype, seed=9, scale=wscale),
+                _probe_array((Hkv, dv_p), dtype, seed=10, scale=wscale)))
             if rope:
-                kw.update(qkv_bias_rot=(jnp.zeros((Hkv, G, dh_p), dtype),
-                                        jnp.zeros((Hkv, dh_p), dtype)))
+                kw.update(qkv_bias_rot=(
+                    _probe_array((Hkv, G, dh_p), dtype, seed=11,
+                                 scale=wscale),
+                    _probe_array((Hkv, dh_p), dtype, seed=12,
+                                 scale=wscale)))
         try:
             fn = jax.jit(lambda m, a, al, q, k, v, o, _cfg=cfg, _kw=kw:
                          collapsed_jet_qkv_attention(
                              m, a, al, a, q, k, v, o, K=K,
                              block_q=_cfg.block_q, block_k=_cfg.block_k,
                              **_kw))
-            t = _time_one(lambda: fn(mask, h0, hl, wq, wk, wv, wo))
+            out = jax.block_until_ready(fn(mask, h0, hl, wq, wk, wv, wo))
         except Exception:  # unsupported block combo on this backend
             continue
+        if Sp not in ref_outs:
+            try:
+                if rope or qbias:
+                    ref_outs[Sp] = jax.block_until_ready(jax.jit(
+                        lambda m, a, al, q, k, v, o, _cfg=cfg, _kw=kw:
+                        collapsed_jet_qkv_attention(
+                            m, a, al, a, q, k, v, o, K=K,
+                            block_q=_cfg.block_q, block_k=_cfg.block_k,
+                            interpret=True, **_kw))(
+                        mask, h0, hl, wq, wk, wv, wo))
+                else:
+                    # kernel weights are grouped (Hkv, G, …); the oracle
+                    # wants per-head (D, Hq, …) with head = hkv*G + g
+                    rwq = jnp.transpose(wq, (2, 0, 1, 3)).reshape(
+                        D_p, Hkv * G, dh_p)
+                    rwk = jnp.transpose(wk, (1, 0, 2))
+                    rwv = jnp.transpose(wv, (1, 0, 2))
+                    rwo = wo.reshape(Hkv * G, dv_p, do_p)
+                    ref_outs[Sp] = jax.block_until_ready(jax.jit(
+                        lambda a, al, q, k, v, o:
+                        collapsed_jet_qkv_attention_ref(
+                            a, al, a, q, k, v, o, K=K))(
+                        h0, hl, rwq, rwk, rwv, rwo))
+            except Exception:  # oracle unavailable: time this shape ungated
+                ref_outs[Sp] = None
+        ref = ref_outs[Sp]
+        if ref is not None and not _gate_ok(out, ref, dtype):
+            rejected.add(tuple(cfg))
+            fresh_rejects += 1
+            continue
+        t = _time_one(lambda: fn(mask, h0, hl, wq, wk, wv, wo))
         if t < best_t:
             best_cfg, best_t = cfg, t
+    _persist_rejected(cache_key, rejected, fresh_rejects)
     return best_cfg or qkv_attention_default_config(S, D, Hq, Hkv, dh, dv,
                                                     do_, R, rope, qbias, K)
 
@@ -677,7 +850,7 @@ def get_qkv_attention_block_config(B: int, S: int, D: int, Hq: int, Hkv: int,
         _MEM_CACHE[key] = cfg  # heuristic: memoize but don't persist
         return cfg
     cfg = autotune_qkv_attention(B, S, D, Hq, Hkv, dh, dv, do_, R, rope,
-                                 qbias, K, dtype)
+                                 qbias, K, dtype, cache_key=key)
     _MEM_CACHE[key] = cfg
     disk[key] = list(cfg)
     save_cache(disk)

@@ -17,6 +17,13 @@ circuit breakers in :mod:`repro.core.offload` and the retry loop in
 fault-injection harness (:mod:`repro.testing.faults`) so chaos tests can
 exercise the exact same classification path as a real ``XlaRuntimeError``
 without needing to provoke one on CI hardware.
+
+:class:`NumericDriftError` is the *silent-data-corruption* leg: kernels
+that return wrong numbers raise nothing, so the sentinel audits
+(:mod:`repro.core.sentinel`) synthesize this exception when a fused
+result breaches its tolerance budget against the CRULES oracle. It
+classifies to the ``"numeric"`` label, which is retryable — the retry
+runs the degraded (re-traced) plan, not the same wrong kernel.
 """
 
 from __future__ import annotations
@@ -30,6 +37,11 @@ class InjectedKernelFault(RuntimeError):
     Carries a realistic status message (e.g. ``"RESOURCE_EXHAUSTED: ..."``)
     so message-pattern classification is exercised end-to-end.
     """
+
+
+class NumericDriftError(RuntimeError):
+    """A fused kernel produced numerically wrong output (caught by a
+    sentinel audit against the CRULES oracle, not by an exception)."""
 
 
 # Exception type names that mark a failure as coming from the XLA/Pallas
@@ -62,6 +74,7 @@ _MESSAGE_PATTERNS = (
     ("preempt", "preempted"),
     ("sigterm", "preempted"),
     # --- kernel/runtime families (serving: degradation ladder) ---
+    ("numeric_drift", "numeric"),
     ("resource_exhausted", "resource_exhausted"),
     ("out of memory", "resource_exhausted"),
     ("vmem", "resource_exhausted"),
@@ -78,9 +91,11 @@ _MESSAGE_PATTERNS = (
 #: (a transient link flap or a recovering device heals under backoff);
 #: ``preempted`` is NOT — the host is going away, retrying burns the grace
 #: period the SIGTERM save needs, so the trainer goes straight to
-#: save-and-interrupt.
+#: save-and-interrupt. ``numeric`` is retryable because the drift trips a
+#: breaker first: the retry re-traces onto the next rung of the ladder and
+#: the re-issued window is audited again before anything commits.
 RETRYABLE = frozenset({"resource_exhausted", "xla_runtime", "injected",
-                       "collective", "halted_device"})
+                       "collective", "halted_device", "numeric"})
 
 
 def _message_label(exc: BaseException) -> Optional[str]:
@@ -101,6 +116,8 @@ def classify_failure(exc: BaseException) -> Optional[str]:
     """
     if not isinstance(exc, Exception):
         return None
+    if isinstance(exc, NumericDriftError):
+        return "numeric"
     if isinstance(exc, InjectedKernelFault):
         return _message_label(exc) or "injected"
     mro_names = {c.__name__ for c in type(exc).__mro__}

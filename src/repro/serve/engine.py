@@ -173,7 +173,7 @@ class ServeEngine:
     # --- metrics -------------------------------------------------------------
 
     def stats(self):
-        from repro.serve.metrics import latency_summary
+        from repro.serve.metrics import audit_summary, latency_summary
 
         lat = [r.finished_at - r.submitted_at for r in self.done.values()
                if r.finished_at and r.status == "DONE"]
@@ -186,5 +186,8 @@ class ServeEngine:
             "queue_depth": len(self.queue),
             "active_slots": sum(s is not None for s in self.slots),
             "mean_latency_s": float(np.mean(lat)) if lat else None,
+            # schema parity with OperatorEngine.stats(): the decode engine
+            # has no fused kernel path, so its sentinel gauges stay zeroed
+            **audit_summary(0, 0, None, ()),
             **latency_summary(lat),
         }

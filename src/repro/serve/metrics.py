@@ -7,7 +7,12 @@ dashboard schema covers the fleet:
 * ``p50_ms`` / ``p99_ms`` / ``mean_ms`` — end-to-end request latency
   (submit -> terminal status) over completed requests;
 * ``queue_depth`` — requests admitted but not yet slotted;
-* ``active_slots`` — slots currently serving a request.
+* ``active_slots`` — slots currently serving a request;
+* audit gauges (:func:`audit_summary`) — the silent-data-corruption
+  sentinel's counters: ``audits_run`` / ``audit_drift_hits`` /
+  ``last_drift_step`` / ``audit_p50_ms``. Engines without a fused path
+  (no kernels to audit) export the gauge set zeroed so the dashboard
+  schema stays uniform.
 """
 
 from __future__ import annotations
@@ -29,4 +34,31 @@ def latency_summary(latencies_s: Sequence[float]) -> Dict[str, Optional[float]]:
         "p50_ms": float(np.percentile(ms, 50)),
         "p99_ms": float(np.percentile(ms, 99)),
         "mean_ms": float(ms.mean()),
+    }
+
+
+def audit_summary(
+    audits_run: int,
+    drift_hits: int,
+    last_drift_step: Optional[int],
+    audit_latencies_s: Sequence[float],
+) -> Dict[str, Optional[float]]:
+    """Sentinel audit gauges shared by both engines' ``stats()``.
+
+    ``audits_run`` counts oracle recomputations, ``audit_drift_hits``
+    counts tolerance-budget breaches, ``last_drift_step`` is the engine
+    step of the most recent breach (``None`` when clean), and
+    ``audit_p50_ms`` is the median cost of one audit (``None`` until one
+    has run).
+    """
+    if len(audit_latencies_s):
+        p50 = float(
+            np.percentile(np.asarray(audit_latencies_s, np.float64) * 1e3, 50))
+    else:
+        p50 = None
+    return {
+        "audits_run": int(audits_run),
+        "audit_drift_hits": int(drift_hits),
+        "last_drift_step": last_drift_step,
+        "audit_p50_ms": p50,
     }

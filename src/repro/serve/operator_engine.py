@@ -44,6 +44,18 @@ Robustness layer
   ``breaker_epoch``) so the retry runs the degraded plan
   (superblock -> per-segment -> CRULES). Unclassified errors terminate the
   batch's requests with ``ERROR`` instead of crashing the engine.
+* **Silent-data-corruption sentinel** — ``audit_fraction`` selects a
+  deterministic ~1% of bucket windows (hash of bucket tag + window index,
+  :func:`repro.core.sentinel.should_audit` — no RNG state) and recomputes
+  them through the CRULES interpreter before committing; a tolerance-budget
+  breach (:func:`repro.core.sentinel.compare`) is reported via
+  :func:`offload.record_numeric_drift` — tripping the same breakers as a
+  loud failure — and the window is *re-issued on the degraded path and
+  re-audited* instead of scattered, so wrong numbers are never committed
+  once detected. While drift is unresolved (or a numeric-tripped breaker
+  is half-open) every window is audited; half-open kernels are re-admitted
+  only by a passing audit (:func:`offload.record_audit_pass`), and
+  artifact export additionally requires a clean audit epoch.
 
 Request lifecycle::
 
@@ -78,6 +90,7 @@ import numpy as np
 
 from repro.core import offload
 from repro.core import operators as ops
+from repro.core import sentinel
 from repro.core.collapse import collapsed_fan
 from repro.kernels import compile_cache
 from repro.kernels import lowering as kernel_lowering
@@ -151,6 +164,15 @@ class OperatorEngine:
     keys — two engines serving different fields with identical bucket
     geometry must never share executables, and the engine cannot fingerprint
     a Python callable.
+
+    ``audit_fraction`` arms the silent-data-corruption sentinel: a float
+    (one fraction for every bucket) or a dict keyed by bucket key /
+    operator name / ``"default"``. Sampled windows are recomputed through
+    the CRULES interpreter (``backend=None``) and compared under the
+    per-dtype budgets of :mod:`repro.core.sentinel`, scaled by
+    ``audit_scale``. Audits are meaningful only when the engine has a
+    fused backend; with ``backend=None`` they are disabled (the fused
+    path *is* the oracle).
     """
 
     def __init__(self, f: Callable, *, vector_field: Optional[Callable] = None,
@@ -160,7 +182,9 @@ class OperatorEngine:
                  max_step_retries: int = 4, backoff_base_s: float = 0.02,
                  backoff_cap_s: float = 0.5,
                  artifact_dir: Optional[str] = None,
-                 field_tag: str = "default"):
+                 field_tag: str = "default",
+                 audit_fraction: Any = 0.0,
+                 audit_scale: float = 1.0):
         self.f = f
         self.vector_field = vector_field
         self.backend = backend
@@ -197,6 +221,24 @@ class OperatorEngine:
         self.load_shed = 0
         self._busy_s = 0.0
         self._step_ewma: Optional[float] = None
+
+        # --- silent-data-corruption sentinel state ---
+        self.audit_fraction = audit_fraction
+        self.audit_scale = audit_scale
+        self.audits_run = 0
+        self.audit_drift_hits = 0
+        self.last_drift_step: Optional[int] = None
+        self.audits_at_first_drift: Optional[int] = None
+        self._audit_lat: List[float] = []
+        # per-bucket committed-window index: the deterministic sampling
+        # coordinate (replaying a stream re-audits the same windows)
+        self._bucket_steps: Dict[Tuple[str, int, int], int] = {}
+        # CRULES oracle step per bucket (stable — never keyed by breaker
+        # epoch: the oracle plan has no fused rungs to invalidate)
+        self._oracle_fns: Dict[Tuple[str, int, int], Any] = {}
+        # False from first unresolved drift until an audit passes again;
+        # while False every window is audited and artifact export is gated
+        self._audit_clean = True
 
     # --- client API ---------------------------------------------------------
 
@@ -316,10 +358,11 @@ class OperatorEngine:
 
     # --- the jit'd bucket step ----------------------------------------------
 
-    def _build_compute(self, key: Tuple[str, int, int]):
+    def _build_compute(self, key: Tuple[str, int, int], backend: Any = ...):
         op, K, D = key
         f = self.vector_field if op == "divergence" else self.f
-        backend, slots = self.backend, self.max_slots
+        backend = self.backend if backend is ... else backend
+        slots = self.max_slots
 
         def compute(x):  # (max_slots * chunk, D)
             if op == "laplacian":
@@ -355,10 +398,12 @@ class OperatorEngine:
             self._compiled = {kk: v for kk, v in self._compiled.items()
                               if kk[0] != key}
             compute = self._build_compute(key)
-            # Persist/load the compiled step only with every breaker closed:
-            # a step traced mid-degradation bakes the degraded plan, which
-            # must never outlive the breaker that caused it.
-            if self.artifact_dir and offload.breakers_closed():
+            # Persist/load the compiled step only with every breaker closed
+            # AND a clean audit epoch: a step traced mid-degradation (or
+            # while a numeric drift is unresolved) bakes a plan that must
+            # never outlive the failure that caused it.
+            if (self.artifact_dir and offload.breakers_closed()
+                    and self._audit_clean):
                 spec = (jax.ShapeDtypeStruct(
                     (self.max_slots * self.chunk, key[2]), jnp.float32),)
                 fn, source = compile_cache.cached_jit(
@@ -369,6 +414,66 @@ class OperatorEngine:
                 self.artifact_sources[key] = "jit"
             self._compiled[(key, epoch)] = fn
         return fn
+
+    # --- the silent-data-corruption sentinel --------------------------------
+
+    def _audit_fraction_for(self, key: Tuple[str, int, int]) -> float:
+        af = self.audit_fraction
+        if isinstance(af, dict):
+            af = af.get(key, af.get(key[0], af.get("default", 0.0)))
+        return float(af or 0.0)
+
+    def _oracle_fn(self, key: Tuple[str, int, int]):
+        fn = self._oracle_fns.get(key)
+        if fn is None:
+            fn = self._oracle_fns[key] = jax.jit(
+                self._build_compute(key, backend=None))
+        return fn
+
+    @staticmethod
+    def _numeric_half_open() -> bool:
+        return any(br["state"] == "half-open" and br["numeric"]
+                   for br in offload.kernel_health().values())
+
+    def warmup_audits(self, buckets: Optional[
+            Sequence[Tuple[str, int, int]]] = None) -> None:
+        """Pre-compile the per-bucket CRULES oracle steps so the first
+        sampled audit doesn't pay a trace+compile on the serving path."""
+        keys = [tuple(b) for b in buckets] if buckets else list(self.buckets)
+        for key in keys:
+            fn = self._oracle_fn(key)
+            x = np.full((self.max_slots * self.chunk, key[2]), 0.5,
+                        np.float32)
+            out, _ = fn(x)
+            jax.block_until_ready(out)
+
+    def _maybe_audit(self, bucket: _Bucket, x: np.ndarray, out: np.ndarray,
+                     finite: np.ndarray):
+        """Recompute this window through the CRULES oracle when the
+        deterministic sampler (or drift escalation) selects it; returns the
+        sentinel verdict, or None when the window is not audited."""
+        if self.backend is None:
+            return None  # the fused path IS the oracle; nothing to audit
+        key = bucket.key
+        frac = self._audit_fraction_for(key)
+        if not self._audit_clean or self._numeric_half_open():
+            # unresolved drift / audited re-admission pending: verify every
+            # window until an audit passes again
+            frac = 1.0
+        idx = self._bucket_steps.get(key, 0)
+        tag = f"{self.field_tag}|{key[0]}|K{key[1]}|D{key[2]}"
+        if not sentinel.should_audit(tag, idx, frac):
+            return None
+        t0 = time.perf_counter()
+        ref_out, _ = self._oracle_fn(key)(x)
+        ref_out = np.asarray(ref_out)
+        # quarantined slots are judged by the NONFINITE path, not the audit
+        mask = np.repeat(np.asarray(finite, bool), self.chunk)
+        verdict = sentinel.compare(out[mask], ref_out[mask],
+                                   dtype=out.dtype, scale=self.audit_scale)
+        self._audit_lat.append(time.perf_counter() - t0)
+        self.audits_run += 1
+        return verdict
 
     # --- warm boot: AOT warmup + the shippable manifest ---------------------
 
@@ -511,13 +616,51 @@ class OperatorEngine:
                                            f"{attempt} retr(ies): {e}")
                         bucket.slots[i] = None
                 return
+            verdict = self._maybe_audit(bucket, x, out, finite)
+            if verdict is not None and not verdict.ok:
+                # silent corruption: NEVER scatter this window — trip the
+                # next rung of the ladder and re-issue it on the degraded,
+                # re-audited path
+                self.audit_drift_hits += 1
+                self.last_drift_step = self.steps
+                if self.audits_at_first_drift is None:
+                    self.audits_at_first_drift = self.audits_run
+                self._audit_clean = False
+                offload.record_numeric_drift(
+                    f"serving audit, bucket {bucket.key}: "
+                    f"{verdict.summary()}")
+                if attempt < self.max_step_retries:
+                    self.batch_retries += 1
+                    time.sleep(self._backoff(attempt))
+                    continue
+                self.crashed_batches += 1
+                for i, slot in enumerate(bucket.slots):
+                    if slot is not None:
+                        self._finish(
+                            slot.req, ERROR, now=now,
+                            error=f"numeric drift unresolved after "
+                                  f"{attempt} degraded re-issue(s): "
+                                  f"{verdict.summary()}")
+                        bucket.slots[i] = None
+                return
+            if verdict is not None:
+                # a passing audit clears the drift epoch and re-admits any
+                # half-open kernels it vouched for
+                self._audit_clean = True
+                offload.record_audit_pass()
             self._scatter(bucket, out, finite, now)
+            self._bucket_steps[bucket.key] = \
+                self._bucket_steps.get(bucket.key, 0) + 1
             return
 
     def step(self) -> bool:
         """One engine step: expire deadlines, admit from the queue, run every
         occupied bucket. Returns whether any bucket ran."""
         t0 = time.perf_counter()
+        # advance cooled-down breakers to half-open outside any trace: this
+        # bumps the epoch, so _step_fn re-traces and the probe actually runs
+        # (and, for numeric trips, gets audited before re-admission)
+        offload.poll_breakers()
         self._expire(t0)
         self._admit()
         ran = False
@@ -543,7 +686,7 @@ class OperatorEngine:
     # --- metrics -------------------------------------------------------------
 
     def stats(self):
-        from repro.serve.metrics import latency_summary
+        from repro.serve.metrics import audit_summary, latency_summary
 
         lat = [r.finished_at - r.submitted_at for r in self.done.values()
                if r.finished_at and r.status == DONE]
@@ -568,5 +711,9 @@ class OperatorEngine:
                                  for k, v in self.artifact_sources.items()},
             "artifact_cache": compile_cache.cache_stats(),
             "breakers": offload.kernel_health(),
+            "audit_clean_epoch": self._audit_clean,
+            "audits_at_first_drift": self.audits_at_first_drift,
+            **audit_summary(self.audits_run, self.audit_drift_hits,
+                            self.last_drift_step, self._audit_lat),
             **latency_summary(lat),
         }

@@ -18,6 +18,10 @@ Serving-side injectors (PR 7):
   With ``where="step"`` it happens at the operator engine's compiled-step
   seam — the runtime path, exercising ``record_kernel_failure`` + backoff +
   re-trace.
+* :func:`corrupt_kernel_output` — *silent* data corruption: the kernel
+  entry points return perturbed (finite, wrong) numbers instead of
+  raising, the fault class only the sentinel audits
+  (:mod:`repro.core.sentinel`) can catch. Trace-scoped.
 * :func:`nan_inject` — corrupt the payload of selected operator requests at
   submit time (first point -> NaN) so the in-jit ``isfinite`` quarantine is
   exercised end-to-end.
@@ -173,6 +177,54 @@ def kernel_raise(n: int = 1, kinds: Iterable[str] = ("mlp",),
             yield stats
     else:
         raise ValueError(f"where must be 'kernel' or 'step', got {where!r}")
+
+
+@contextlib.contextmanager
+def corrupt_kernel_output(kinds: Iterable[str] = ("mlp",),
+                          scale: float = 1e-2):
+    """Silently corrupt fused kernel outputs — no exception, wrong numbers.
+
+    The fault class nothing in the exception-classified chaos menu can
+    catch: every floating output ``y`` of the patched kernel entry points
+    becomes ``y * (1 + scale) + scale`` (finite, deterministic, well
+    outside the sentinel tolerance budgets at the default ``scale=1e-2``).
+    Only the sentinel audits (:mod:`repro.core.sentinel`) can detect it, by
+    recomputing sampled windows through the CRULES oracle.
+
+    Trace-scoped like :func:`corrupt_collective`: the kernel ops run at
+    *trace* time, so the perturbation is baked into whatever jit caches
+    trace inside the context, and exiting does not heal them — the serving
+    engine re-traces per ``breaker_epoch``, which is exactly the recovery
+    path under test. ``stats.injected`` counts corrupted trace sites, not
+    executions.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import offload
+
+    stats = FaultStats()
+
+    def wrap(orig):
+        def perturb(leaf):
+            if (hasattr(leaf, "dtype")
+                    and jnp.issubdtype(leaf.dtype, jnp.floating)):
+                return leaf * (1.0 + scale) + jnp.asarray(scale, leaf.dtype)
+            return leaf
+
+        def inner(*a, **k):
+            stats.calls += 1
+            stats.injected += 1
+            out = orig(*a, **k)
+            return jax.tree_util.tree_map(perturb, out)
+
+        return inner
+
+    patches = [(offload, _KERNEL_ATTRS[kd],
+                wrap(getattr(offload, _KERNEL_ATTRS[kd])))
+               for kd in kinds]
+    with _patch_all(patches):
+        yield stats
 
 
 @contextlib.contextmanager

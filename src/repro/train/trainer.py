@@ -24,6 +24,11 @@ Features (designed for 1000+ nodes, exercised here on host devices):
   the current mesh (scale up/down between runs). Per-device error-feedback
   residuals re-shard explicitly: sum-fold when the device count shrinks,
   zero-pad when it grows, with a recorded provenance note.
+* silent-data-corruption sentinel (``TrainConfig.audit_every``): sampled
+  oracle audits of loss/grads on a micro-batch against the CRULES
+  interpreter; a tolerance-budget breach trips the kernel degradation
+  ladder (``numeric`` label) and re-traces before the optimizer consumes
+  the step's gradients. See :mod:`repro.core.sentinel`.
 """
 
 from __future__ import annotations
@@ -114,6 +119,21 @@ class TrainConfig:
     max_step_retries: int = 2
     backoff_base_s: float = 0.05
     backoff_cap_s: float = 1.0
+    # Silent-data-corruption sentinel: every ``audit_every`` steps (0 = off)
+    # the loop recomputes loss + grads on the first ``audit_rows`` rows of
+    # the step's batch twice — once on the live (fused) path, once through
+    # the CRULES oracle (``offload.oracle_mode``) — and compares under the
+    # per-dtype budgets of :mod:`repro.core.sentinel` scaled by
+    # ``audit_scale``. A breach is reported via
+    # ``offload.record_numeric_drift`` (tripping the kernel degradation
+    # ladder) and the step fn is re-traced BEFORE the optimizer consumes
+    # this step's gradients; the audit then re-runs on the degraded plan
+    # until it passes or the ladder is exhausted, so an audited step never
+    # commits grads that failed their audit. Surfaced per audited step as
+    # ``metrics["audit_drift"]`` / ``metrics["audit_ok"]``.
+    audit_every: int = 0
+    audit_rows: int = 8
+    audit_scale: float = 4.0
     seed: int = 0
 
 
@@ -402,6 +422,18 @@ class Trainer:
         self._on_stall = on_stall
         self._watchdog: Optional[_Watchdog] = None
 
+        # silent-data-corruption sentinel state (tcfg.audit_every > 0)
+        self.audits_run = 0
+        self.audit_drift_hits = 0
+        self.last_drift_step: Optional[int] = None
+        self.audit_events: List[Dict[str, Any]] = []
+        self._audit_lat: List[float] = []
+        self._last_audit_worst = 0.0
+        self._loss_fn = loss_fn
+        self._audit_fused = None  # jit'd loss+grads on the live plan
+        self._audit_epoch = None  # breaker epoch the fused audit fn traced at
+        self._audit_oracle = None  # jit'd loss+grads under oracle_mode
+
         self._step_fn = build_train_step(loss_fn, tcfg)
         self._step_transform = step_transform
         self._param_shardings = param_shardings
@@ -523,6 +555,73 @@ class Trainer:
         else:
             ckpt_lib.save_async(d, self.step, tree, extra)
 
+    # --- silent-data-corruption sentinel ------------------------------------
+
+    def _build_audit_fn(self):
+        vg = jax.value_and_grad(self._loss_fn, has_aux=True)
+
+        def audit(params, mb):
+            (l, _), grads = vg(params, mb)
+            return l, grads
+
+        return audit
+
+    def _run_audit(self, batch):
+        """Oracle-audit loss/grads on a micro-batch of ``batch``.
+
+        On a tolerance breach the kernel ladder is tripped
+        (``record_numeric_drift``), the step fn re-traced, and the audit
+        re-run on the degraded plan — bounded by the ladder depth — so by
+        the time the caller runs the real step, the plan it executes has
+        passed its audit (or is pure CRULES). On a pass with half-open
+        breakers, the audit is the re-admission probe
+        (``record_audit_pass``)."""
+        from repro.core import offload, sentinel
+
+        t0 = time.perf_counter()
+        epoch0 = offload.breaker_epoch()
+        offload.poll_breakers()
+        if offload.breaker_epoch() != epoch0:
+            self.retrace()  # cooled-down breaker reached half-open: probe it
+        rows = max(1, self.tcfg.audit_rows)
+        mb = jax.tree.map(lambda x: x[:rows], batch)
+        if self._audit_oracle is None:
+            self._audit_oracle = jax.jit(self._build_audit_fn())
+        with offload.oracle_mode():
+            ref = self._audit_oracle(self.params, mb)
+            ref = jax.tree.map(jnp.asarray, ref)
+        verdict = None
+        self._last_audit_worst = 0.0
+        for _ in range(len(offload.BREAKER_KINDS) + 1):
+            epoch = offload.breaker_epoch()
+            if self._audit_fused is None or self._audit_epoch != epoch:
+                self._audit_fused = jax.jit(self._build_audit_fn())
+                self._audit_epoch = epoch
+            fused = self._audit_fused(self.params, mb)
+            verdict = sentinel.compare(fused, ref,
+                                       scale=self.tcfg.audit_scale)
+            self.audits_run += 1
+            self._last_audit_worst = max(self._last_audit_worst,
+                                         verdict.max_rel)
+            if verdict.ok:
+                break
+            self.audit_drift_hits += 1
+            self.last_drift_step = self.step
+            tripped = offload.record_numeric_drift(
+                f"training audit at step {self.step}: {verdict.summary()}")
+            self.audit_events.append({
+                "step": self.step, "tripped": tripped,
+                "verdict": verdict.summary()})
+            # degrade BEFORE the optimizer consumes this step's gradients
+            self.retrace()
+            if tripped is None:
+                break
+        if verdict is not None and verdict.ok:
+            if offload.record_audit_pass():
+                self.retrace()  # re-admitted kinds: fuse the next step again
+        self._audit_lat.append(time.perf_counter() - t0)
+        return verdict
+
     def _monitor(self, dt):
         if self._step_ewma is None:
             self._step_ewma = dt
@@ -612,8 +711,18 @@ class Trainer:
             while self.step < num_steps and not self._preempted:
                 t0 = time.perf_counter()
                 batch = self.batch_fn(self.step)
+                audit_verdict = None
+                if (self.tcfg.audit_every
+                        and self.step % self.tcfg.audit_every == 0):
+                    audit_verdict = self._run_audit(batch)
                 self.params, self.opt_state, metrics = self._guarded_step(
                     batch)
+                if audit_verdict is not None:
+                    metrics = dict(metrics)
+                    # worst drift seen across the audit loop's ladder walk
+                    # (the final verdict usually passes on the degraded plan)
+                    metrics["audit_drift"] = self._last_audit_worst
+                    metrics["audit_ok"] = 1.0 if audit_verdict.ok else 0.0
                 self._monitor(time.perf_counter() - t0)
                 self.step += 1
                 self.skipped_shard_steps += int(

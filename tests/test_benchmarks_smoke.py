@@ -15,6 +15,7 @@ import pytest
     "benchmarks.attention_laplacian",
     "benchmarks.distributed_laplacian",
     "benchmarks.operator_serving",
+    "benchmarks.sdc_drill",
     "benchmarks.rewrite_flops",
     "benchmarks.scan_depth",
     "benchmarks.table1_operators",

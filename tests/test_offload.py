@@ -10,12 +10,23 @@ import numpy as np
 import pytest
 
 from repro.core import operators as ops
+from repro.core.sentinel import tolerances
 from repro.kernels import autotune
 from repro.kernels.jet_mlp.jet_mlp import ACTIVATION_FNS, ACTIVATION_TOWERS
 from repro.kernels.jet_mlp.ops import collapsed_jet_layer_op
 from repro.kernels.jet_mlp.ref import collapsed_jet_layer_ref
 
 ACTS = sorted(ACTIVATION_TOWERS)
+
+# kernel-vs-CRULES parity runs under the sentinel's shared float32 budget —
+# the same table the serving/training audits enforce, so a tolerance change
+# is one edit, not a test-by-test hunt. Self-consistency checks (two input
+# forms of the SAME lowering) keep their tighter ad-hoc bounds.
+TOL32 = tolerances("float32")
+# the K=4 activation towers (logistic's 4th-order Faa di Bruno terms) carry
+# more rounding than one fused layer; the kernel-vs-oracle sweep gets 4x
+# headroom over the base budget
+TOL32_SWEEP = tolerances("float32", 4)
 
 
 # ---------------------------------------------------------------------------
@@ -39,9 +50,9 @@ def test_collapsed_jet_kernel_sweep(K, act, B, Din, Dout, R):
     ref = collapsed_jet_layer_ref(h0, hl, ht, w, b, K=K, activation=act)
     got = collapsed_jet_layer_op(h0, list(hl), ht, w, b, K=K, activation=act,
                                  interpret=True)
-    np.testing.assert_allclose(ref[0], got[0], rtol=2e-4, atol=2e-4)
-    np.testing.assert_allclose(ref[1], jnp.stack(got[1]), rtol=2e-4, atol=2e-4)
-    np.testing.assert_allclose(ref[2], got[2], rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(ref[0], got[0], **TOL32_SWEEP)
+    np.testing.assert_allclose(ref[1], jnp.stack(got[1]), **TOL32_SWEEP)
+    np.testing.assert_allclose(ref[2], got[2], **TOL32_SWEEP)
 
 
 def test_kernel_symbolic_zero_coefficients():
@@ -148,18 +159,19 @@ def _mlp3(act, D, key):
 @pytest.mark.parametrize("act", ACTS)
 def test_laplacian_pallas_matches_interpreter(act):
     """Acceptance: laplacian(f, x, method='collapsed', backend='pallas')
-    matches the interpreter path to 1e-5 for a 3-layer MLP per activation,
+    matches the interpreter path under the sentinel's shared float32
+    budget for a 3-layer MLP per activation,
     with no hand-written kernel calls in user code."""
     D = 5
     f = _mlp3(act, D, jax.random.PRNGKey(3))
     x = jax.random.uniform(jax.random.PRNGKey(7), (9, D)) * 2 - 1
     ref = ops.laplacian(f, x, method="collapsed")
     got = ops.laplacian(f, x, method="collapsed", backend="pallas")
-    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got, ref, **TOL32)
     # unbatched convention (D,) -> ()
     got1 = ops.laplacian(f, x[0], method="collapsed", backend="pallas")
     np.testing.assert_allclose(got1, ops.laplacian(f, x[0], method="collapsed"),
-                               rtol=1e-5, atol=1e-5)
+                               **TOL32)
 
 
 def test_laplacian_pallas_under_jit():
@@ -169,7 +181,7 @@ def test_laplacian_pallas_under_jit():
     jfn = jax.jit(lambda x: ops.laplacian(f, x, method="collapsed",
                                           backend="pallas"))
     np.testing.assert_allclose(jfn(x), ops.laplacian(f, x, method="collapsed"),
-                               rtol=1e-5, atol=1e-5)
+                               **TOL32)
 
 
 def test_biharmonic_pallas_matches_interpreter():
@@ -178,7 +190,7 @@ def test_biharmonic_pallas_matches_interpreter():
     x = jax.random.normal(jax.random.PRNGKey(12), (3,)) * 0.5
     ref = ops.biharmonic(f, x, method="collapsed")
     got = ops.biharmonic(f, x, method="collapsed", backend="pallas")
-    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(got, ref, **TOL32)
 
 
 def test_value_grad_laplacian_pallas():
@@ -186,9 +198,9 @@ def test_value_grad_laplacian_pallas():
     x = jax.random.normal(jax.random.PRNGKey(14), (6, 4))
     u, g, lap = ops.value_grad_laplacian(f, x, backend="pallas")
     u2, g2, lap2 = ops.value_grad_laplacian(f, x)
-    np.testing.assert_allclose(u, u2, rtol=1e-5, atol=1e-6)
-    np.testing.assert_allclose(g, g2, rtol=1e-5, atol=1e-6)
-    np.testing.assert_allclose(lap, lap2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(u, u2, **TOL32)
+    np.testing.assert_allclose(g, g2, **TOL32)
+    np.testing.assert_allclose(lap, lap2, **TOL32)
 
 
 def test_pallas_backend_requires_collapsed_method():
@@ -226,7 +238,7 @@ def test_offload_fuses_inside_remat_body():
     f = lambda x: jnp.sum(body(x), axis=-1)
     ref = ops.laplacian(f, x, method="collapsed")
     got = ops.laplacian(f, x, method="collapsed", backend="pallas")
-    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got, ref, **TOL32)
 
 
 def test_offload_falls_back_on_nonfusible_programs():
@@ -236,7 +248,7 @@ def test_offload_falls_back_on_nonfusible_programs():
     x = jax.random.normal(jax.random.PRNGKey(17), (5, 3))
     ref = ops.laplacian(f, x, method="collapsed")
     got = ops.laplacian(f, x, method="collapsed", backend="pallas")
-    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got, ref, **TOL32)
 
 
 def test_offload_weak_typed_and_computed_bias():
@@ -251,7 +263,7 @@ def test_offload_weak_typed_and_computed_bias():
               lambda x: jnp.sum(jnp.tanh(x @ W + (b + b2)), axis=-1)):
         ref = ops.laplacian(f, x, method="collapsed")
         got = ops.laplacian(f, x, method="collapsed", backend="pallas")
-        np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(got, ref, **TOL32)
 
 
 def test_offload_gated_activation_falls_back():
@@ -263,7 +275,7 @@ def test_offload_gated_activation_falls_back():
     f = lambda x: jnp.sum(jax.nn.silu(x @ W + b), axis=-1)
     ref = ops.laplacian(f, x, method="collapsed")
     got = ops.laplacian(f, x, method="collapsed", backend="pallas")
-    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got, ref, **TOL32)
 
 
 def test_offload_relu6_not_misclassified_as_relu():
@@ -276,7 +288,7 @@ def test_offload_relu6_not_misclassified_as_relu():
     f = lambda x: jnp.sum(jnp.minimum(jnp.maximum(x @ W + b, 0.0), 6.0), axis=-1)
     ref = ops.laplacian(f, x, method="collapsed")
     got = ops.laplacian(f, x, method="collapsed", backend="pallas")
-    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got, ref, **TOL32)
     u, g, lap = ops.value_grad_laplacian(f, x, backend="pallas")
     u2, g2, lap2 = ops.value_grad_laplacian(f, x)
     np.testing.assert_allclose(u, u2, rtol=1e-6)
@@ -302,4 +314,4 @@ def test_grad_through_pallas_backend():
     g_ref = jax.grad(loss)(p)
     g_pal = jax.grad(lambda p: loss(p, "pallas"))(p)
     for a, b in zip(g_ref, g_pal):
-        np.testing.assert_allclose(a, b, rtol=2e-4, atol=1e-6)
+        np.testing.assert_allclose(a, b, **TOL32)

@@ -1,0 +1,378 @@
+"""Silent-data-corruption sentinel: the shared per-dtype tolerance budgets,
+the deterministic (RNG-free) audit sampler, numeric breaker semantics (drift
+trips the ladder; a bare success does NOT re-close a numeric breaker — only
+a passing audit does), the autotuner's candidate correctness gate, and the
+end-to-end corrupt -> detect -> degrade -> recover drills through both hot
+paths (the serving engine and the trainer)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import offload
+from repro.core import operators as ops
+from repro.core import sentinel
+from repro.kernels.failures import NumericDriftError, classify_failure
+from repro.testing import faults
+
+pytestmark = pytest.mark.serve
+
+
+@pytest.fixture(autouse=True)
+def _clean_breakers():
+    """Every test starts and ends with closed breakers and a long cooldown
+    (no breaker heals mid-test by wall clock)."""
+    offload.reset_kernel_health()
+    old = offload.set_breaker_cooldown(300.0)
+    yield
+    offload.set_breaker_cooldown(old)
+    offload.reset_kernel_health()
+
+
+# ---------------------------------------------------------------------------
+# tolerance budgets
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", sorted(sentinel.BUDGETS))
+def test_budget_accepts_identity_and_in_budget_noise(dtype):
+    x = np.linspace(-2.0, 2.0, 64).astype(dtype)
+    assert sentinel.compare(x, x, dtype=dtype).ok
+    b = sentinel.budget_for(dtype)
+    noisy = x * np.asarray(1.0 + 0.25 * b.rel, np.float64).astype(dtype)
+    assert sentinel.compare(noisy, x, dtype=dtype).ok, dtype
+
+
+@pytest.mark.parametrize("dtype", sorted(sentinel.BUDGETS))
+def test_budget_rejects_out_of_budget_drift(dtype):
+    x = np.linspace(1.0, 3.0, 64).astype(dtype)
+    b = sentinel.budget_for(dtype)
+    bad = x * np.asarray(1.0 + 20.0 * b.rel, np.float64).astype(dtype)
+    v = sentinel.compare(bad, x, dtype=dtype)
+    assert not v.ok, (dtype, v.summary())
+    assert v.max_rel > b.rel, v.summary()
+
+
+def test_budget_scale_and_unknown_dtype():
+    assert sentinel.budget_for("float32", 4.0).rel == \
+        4.0 * sentinel.budget_for("float32").rel
+    t = sentinel.tolerances("float32", 2.0)
+    assert set(t) == {"rtol", "atol"}
+    with pytest.raises(KeyError):
+        sentinel.budget_for("int32")
+
+
+def test_nonfinite_kind_agreement():
+    x = np.array([1.0, np.nan, np.inf], np.float32)
+    assert sentinel.compare(x.copy(), x.copy(), dtype="float32").ok
+    assert not sentinel.compare(
+        np.array([1.0, 2.0, np.inf], np.float32), x, dtype="float32").ok
+    assert not sentinel.compare(
+        np.array([1.0, np.nan, -np.inf], np.float32), x, dtype="float32").ok
+
+
+def test_compare_is_pytree_aware_and_shape_safe():
+    a = {"u": np.ones(3, np.float32), "g": np.zeros((2, 2), np.float32)}
+    assert sentinel.compare(a, {k: v.copy() for k, v in a.items()}).ok
+    # shape mismatch and arity mismatch fail, never raise
+    assert not sentinel.compare(np.ones(3, np.float32),
+                                np.ones(4, np.float32)).ok
+    assert not sentinel.compare((np.ones(2, np.float32),),
+                                (np.ones(2, np.float32),) * 2).ok
+    with pytest.raises(AssertionError, match="DRIFT"):
+        sentinel.assert_close(np.float32(1.0), np.float32(2.0),
+                              dtype="float32")
+
+
+# ---------------------------------------------------------------------------
+# deterministic sampling
+# ---------------------------------------------------------------------------
+
+
+def test_sampler_is_deterministic_and_rate_accurate():
+    tag = "field|laplacian|K2|D3"
+    picks = sentinel.audit_indices(tag, 0.01, 20_000)
+    assert picks == sentinel.audit_indices(tag, 0.01, 20_000)  # no RNG state
+    assert 100 <= len(picks) <= 300, len(picks)  # ~1% of 20k
+    for i in picks[:10]:
+        assert sentinel.should_audit(tag, i, 0.01)
+    assert sentinel.audit_indices(tag, 0.0, 1000) == []
+    assert sentinel.audit_indices(tag, 1.0, 50) == list(range(50))
+    # different tags sample different windows (tag is in the hash)
+    assert picks != sentinel.audit_indices("other|tag", 0.01, 20_000)
+
+
+# ---------------------------------------------------------------------------
+# numeric failure label + breaker semantics
+# ---------------------------------------------------------------------------
+
+
+def test_numeric_drift_classifies_and_is_retryable():
+    from repro.kernels.failures import RETRYABLE
+
+    assert classify_failure(NumericDriftError("NUMERIC_DRIFT: x")) == "numeric"
+    assert "numeric" in RETRYABLE
+
+
+def test_numeric_breaker_needs_audited_readmission():
+    tripped = offload.record_numeric_drift("unit-test drift")
+    assert tripped == offload.BREAKER_KINDS[0]
+    br = offload.kernel_health()[tripped]
+    assert br["state"] == "open" and br["numeric"] and br["last_audit"] == "fail"
+
+    # cooldown elapsed -> poll re-admits it half-open (epoch bump re-traces)
+    offload.set_breaker_cooldown(0.0)
+    epoch = offload.breaker_epoch()
+    half_open = offload.poll_breakers()
+    assert tripped in half_open
+    assert offload.breaker_epoch() > epoch
+
+    # a bare success must NOT close a numeric half-open breaker...
+    offload._breaker_success(tripped)
+    assert offload.kernel_health()[tripped]["state"] == "half-open"
+    # ...only a passing audit does
+    closed = offload.record_audit_pass()
+    assert closed == [tripped]
+    br = offload.kernel_health()[tripped]
+    assert br["state"] == "closed" and not br["numeric"]
+    assert br["audits_passed"] == 1 and br["last_audit"] == "pass"
+
+
+def test_audit_pass_never_closes_cooling_open_breaker():
+    tripped = offload.record_numeric_drift("unit-test drift")
+    # cooldown is 300s: the breaker is open, not half-open — an audit pass
+    # elsewhere must not short-circuit the cooldown
+    assert offload.record_audit_pass() == []
+    assert offload.kernel_health()[tripped]["state"] == "open"
+
+
+def test_drift_walks_the_ladder_in_bounded_reports():
+    for i, kind in enumerate(offload.BREAKER_KINDS):
+        assert offload.record_numeric_drift(f"walk {i}") == kind
+    assert all(br["state"] == "open" and br["numeric"]
+               for br in offload.kernel_health().values())
+    # ladder exhausted: further drift re-registers on the bottom rung
+    # (already open) instead of raising or resurrecting a higher one
+    assert offload.record_numeric_drift("no rung left") == \
+        offload.BREAKER_KINDS[-1]
+
+
+def test_oracle_mode_disables_fusion_without_mutating_breakers():
+    before = offload.kernel_health()
+    with offload.oracle_mode():
+        assert not offload._breaker_allows("jet_mlp")
+    assert offload._breaker_allows("jet_mlp")
+    assert offload.kernel_health() == before
+
+
+# ---------------------------------------------------------------------------
+# autotuner candidate gate
+# ---------------------------------------------------------------------------
+
+
+def test_autotune_rejects_divergent_candidate(tmp_path, monkeypatch):
+    """A fast-but-wrong config must lose the sweep, be persisted under the
+    rejected| namespace, and never be re-timed on a later sweep."""
+    from repro.kernels import autotune
+    import repro.kernels.jet_mlp.jet_mlp as jm
+    from repro.kernels.jet_mlp.ref import collapsed_jet_layer_ref
+
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE",
+                       str(tmp_path / "autotune.json"))
+    autotune.clear_memory_cache()
+    bad = autotune.BlockConfig(8, 128, 1)
+    good = autotune.BlockConfig(16, 128, 2)
+    calls = []
+
+    def fake_kernel(h0, hl, ht, w, b, *, K=2, activation="tanh",
+                    block_b=128, block_d=128, block_r=8, interpret=False):
+        calls.append((block_b, block_d, block_r))
+        out = collapsed_jet_layer_ref(h0, hl, ht, w, b, K=K,
+                                      activation=activation)
+        if (block_b, block_d, block_r) == tuple(bad):
+            return (out[0] * 1.01, out[1], out[2])  # silent corruption
+        return out
+
+    monkeypatch.setattr(jm, "collapsed_jet_layer", fake_kernel)
+    key = autotune.shape_key(16, 64, 128, 3, 2, "float32", "cpu")
+    cfg = autotune.autotune(16, 64, 128, 3, 2, jnp.float32,
+                            candidates=[bad, good], cache_key=key)
+    assert cfg == good
+    disk = autotune.load_cache()
+    assert disk.get(autotune._rejected_key(key)) == [list(bad)], disk
+
+    calls.clear()
+    cfg2 = autotune.autotune(16, 64, 128, 3, 2, jnp.float32,
+                             candidates=[bad, good], cache_key=key)
+    assert cfg2 == good
+    assert tuple(bad) not in calls  # rejection persisted: never re-timed
+    # the rejected| namespace round-trips the key migrator
+    rk = autotune._rejected_key(key)
+    assert autotune._migrate_key(rk) == rk
+    assert autotune._migrate_key("rejected|garbage") == ""
+    autotune.clear_memory_cache()
+
+
+# ---------------------------------------------------------------------------
+# serving: corrupt -> detect -> degrade -> audited recovery
+# ---------------------------------------------------------------------------
+
+
+def _field(D=3):
+    W1 = jnp.linspace(-0.5, 0.5, D * 8).reshape(D, 8)
+    W2 = jnp.linspace(-0.3, 0.3, 8)
+    return lambda x: jnp.tanh(x @ W1) @ W2
+
+
+def _requests(n, D, rid_base=0):
+    from repro.serve.operator_engine import OperatorRequest
+
+    rng = np.random.default_rng(0)
+    return [OperatorRequest(rid=rid_base + i, op="laplacian",
+                            points=rng.normal(size=(6, D)).astype(np.float32),
+                            K=0)
+            for i in range(n)]
+
+
+def test_serving_corruption_detected_and_recovered():
+    from repro.serve.operator_engine import OperatorEngine
+
+    f = _field()
+    engine = OperatorEngine(f, backend="pallas", max_slots=2, chunk=4,
+                            max_queue=64, audit_fraction=1.0)
+    with faults.corrupt_kernel_output(kinds=("mlp",), scale=1e-2) as fs:
+        for r in _requests(4, 3):
+            engine.submit(r)
+        done = engine.run_until_done()
+    assert fs.injected >= 1
+    s = engine.stats()
+    assert s["audit_drift_hits"] >= 1
+    assert s["audits_at_first_drift"] <= 3  # detection within budget
+    # the breached windows were re-issued down the ladder, never committed:
+    # every survivor matches the CRULES oracle
+    assert all(r.status == "DONE" for r in done.values()), s["statuses"]
+    for r in done.values():
+        ref = ops.laplacian(f, jnp.asarray(r.points), method="collapsed")
+        sentinel.assert_close(r.result, ref, dtype="float32")
+    assert any(br["state"] != "closed" and br["numeric"]
+               for br in s["breakers"].values()), s["breakers"]
+
+    # fault cleared + cooldown elapsed: audited half-open re-admission
+    offload.set_breaker_cooldown(0.0)
+    for r in _requests(4, 3, rid_base=100):
+        engine.submit(r)
+    engine.run_until_done()
+    s = engine.stats()
+    health = s["breakers"]
+    assert all(br["state"] == "closed" for br in health.values()), health
+    assert any(br["audits_passed"] >= 1 for br in health.values()), health
+    assert s["audit_clean_epoch"]
+
+
+def test_serving_clean_run_zero_false_positives():
+    """Audit-every-window over a clean engine: zero drift, closed breakers
+    (the sentinel must not flag the fused path's legitimate rounding)."""
+    from repro.serve.operator_engine import OperatorEngine
+
+    engine = OperatorEngine(_field(), backend="pallas", max_slots=2, chunk=4,
+                            max_queue=64, audit_fraction=1.0)
+    for r in _requests(6, 3):
+        engine.submit(r)
+    done = engine.run_until_done()
+    s = engine.stats()
+    assert all(r.status == "DONE" for r in done.values()), s["statuses"]
+    assert s["audits_run"] >= 1
+    assert s["audit_drift_hits"] == 0, s
+    assert s["audit_clean_epoch"] and offload.breakers_closed()
+
+
+def test_interpreter_engine_has_no_audit_path():
+    """backend=None IS the oracle: the sentinel stays disarmed even at
+    audit_fraction=1.0 (nothing to compare against itself)."""
+    from repro.serve.operator_engine import OperatorEngine
+
+    engine = OperatorEngine(_field(), backend=None, max_slots=2, chunk=4,
+                            max_queue=64, audit_fraction=1.0)
+    for r in _requests(3, 3):
+        engine.submit(r)
+    engine.run_until_done()
+    assert engine.stats()["audits_run"] == 0
+
+
+def test_engines_export_the_same_audit_gauges():
+    """Dashboard schema parity: the decode engine exports the (zeroed)
+    sentinel gauge set the operator engine populates."""
+    from repro.serve.metrics import audit_summary
+
+    gauges = set(audit_summary(0, 0, None, ()))
+    assert gauges == {"audits_run", "audit_drift_hits", "last_drift_step",
+                      "audit_p50_ms"}
+    s = audit_summary(3, 1, 7, [0.01, 0.02])
+    assert s["audits_run"] == 3 and s["audit_drift_hits"] == 1
+    assert s["last_drift_step"] == 7 and s["audit_p50_ms"] is not None
+
+
+# ---------------------------------------------------------------------------
+# training: corrupt -> audit catches it before the optimizer consumes grads
+# ---------------------------------------------------------------------------
+
+
+def test_training_audit_detects_degrades_and_recovers():
+    from repro.train.trainer import Trainer, TrainConfig
+
+    D, H = 3, 8
+
+    def loss_fn(params, batch):
+        def f(x):
+            return jnp.tanh(x @ params["W1"] + params["b1"]) @ params["W2"]
+        lap = ops.laplacian(f, batch, method="collapsed", backend="pallas")
+        return jnp.mean(lap ** 2), {}
+
+    params = {"W1": jnp.linspace(-0.5, 0.5, D * H).reshape(D, H),
+              "b1": jnp.zeros(H), "W2": jnp.linspace(-0.3, 0.3, H)}
+    batch_fn = lambda s: jnp.linspace(-1, 1, 16 * D).reshape(16, D) \
+        .astype(jnp.float32)
+    tcfg = TrainConfig(total_steps=10, warmup_steps=2, watchdog=False,
+                       audit_every=1, audit_rows=4)
+    tr = Trainer(loss_fn, params, tcfg, batch_fn=batch_fn)
+    with faults.corrupt_kernel_output(kinds=("mlp",), scale=1e-2):
+        tr.retrace()  # the injector is trace-scoped: bake it into new traces
+        tr._audit_fused = None
+        hist = tr.run(3, log_every=1)
+    assert tr.audit_drift_hits >= 1
+    h = offload.kernel_health()
+    assert h["jet_mlp"]["state"] == "open" and h["jet_mlp"]["numeric"]
+    # the audit loop degrades and re-audits INSIDE the step, so the grads
+    # the optimizer consumed were produced by a plan that passed its audit
+    assert all(row["audit_ok"] == 1.0 for row in hist), hist
+    assert any(row["audit_drift"] > 0 for row in hist), hist  # drift visible
+
+    # recovery: fault cleared, cooldown elapsed -> audited re-admission
+    offload.set_breaker_cooldown(0.0)
+    tr.run(6, log_every=1)
+    h = offload.kernel_health()
+    assert offload.breakers_closed(), h
+    assert h["jet_mlp"]["audits_passed"] >= 1, h
+
+
+def test_training_clean_run_zero_false_positives():
+    from repro.train.trainer import Trainer, TrainConfig
+
+    def loss_fn(params, batch):
+        f = lambda x: jnp.tanh(x @ params["W"]) @ params["v"]
+        lap = ops.laplacian(f, batch, method="collapsed", backend="pallas")
+        return jnp.mean(lap ** 2), {}
+
+    params = {"W": jnp.linspace(-0.5, 0.5, 12).reshape(3, 4),
+              "v": jnp.linspace(-0.3, 0.3, 4)}
+    batch_fn = lambda s: jnp.linspace(-1, 1, 24).reshape(8, 3) \
+        .astype(jnp.float32)
+    tcfg = TrainConfig(total_steps=6, warmup_steps=2, watchdog=False,
+                       audit_every=2, audit_rows=4)
+    tr = Trainer(loss_fn, params, tcfg, batch_fn=batch_fn)
+    tr.run(6, log_every=1)
+    assert tr.audits_run >= 2
+    assert tr.audit_drift_hits == 0
+    assert offload.breakers_closed()

@@ -21,10 +21,19 @@ import pytest
 from repro.configs.base import ModelConfig
 from repro.core import offload
 from repro.core import operators as ops
+from repro.core.sentinel import tolerances
 from repro.kernels import autotune
 from repro.kernels.jet_attention.ops import collapsed_jet_qkv_attention_op
 from repro.kernels.jet_attention.ref import collapsed_jet_attention_ref
 from repro.models import transformer
+
+# fused-vs-reference parity under the sentinel's shared float32 budget (the
+# table the serving/training audits enforce). The K=4 superblock sweep gets
+# 2x headroom: four softmax derivative orders accumulate more rounding than
+# the single-layer budget anticipates. Self-consistency checks keep their
+# tighter ad-hoc bounds.
+TOL32 = tolerances("float32")
+TOL32_SWEEP = tolerances("float32", 2)
 
 
 def _alibi(S):
@@ -96,7 +105,7 @@ def test_superblock_sweep(lowering, K, mask_kind, Hq, Hkv, B, S, D, dh, dv,
         scale=scale, interpret=True, lowering=lowering)
     got = (o0, jnp.stack(ol), ot)
     for g, w in zip(got, want):
-        np.testing.assert_allclose(g, w, rtol=3e-4, atol=3e-4)
+        np.testing.assert_allclose(g, w, **TOL32_SWEEP)
 
 
 def test_superblock_symbolic_zero_channels():
@@ -156,7 +165,7 @@ def test_grad_through_superblock_op():
     gk = jax.grad(loss, argnums=(0, 1, 2))(h0, p0, bias, "kernel")
     gr = jax.grad(loss, argnums=(0, 1, 2))(h0, p0, bias, "reference")
     for a, b in zip(jax.tree.leaves(gk), jax.tree.leaves(gr)):
-        np.testing.assert_allclose(a, b, rtol=2e-4, atol=1e-6)
+        np.testing.assert_allclose(a, b, **TOL32)
 
 
 # ---------------------------------------------------------------------------
@@ -200,7 +209,7 @@ def test_gqa_backbone_superblock_acceptance():
     offload.clear_plan_cache()
     ref = ops.laplacian(f, x, method="collapsed")
     got = ops.laplacian(f, x, method="collapsed", backend="pallas")
-    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got, ref, **TOL32)
     info = offload.plan_cache_info()
     assert info["misses"] == 2, info  # top + scan body, planned once
     assert info["hits"] >= 2, info
@@ -224,7 +233,7 @@ def test_gqa_backbone_superblock_acceptance():
 
     got_ps = ops.laplacian(f, x, method="collapsed",
                            backend="pallas-per-segment")
-    np.testing.assert_allclose(got_ps, ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got_ps, ref, **TOL32)
 
 
 def test_mha_backbone_superblock():
@@ -238,7 +247,7 @@ def test_mha_backbone_superblock():
     assert len(supers) == 1 and "Hq2/Hkv2" in supers[0].detail, str(rep)
     ref = ops.laplacian(f, x, method="collapsed")
     got = ops.laplacian(f, x, method="collapsed", backend="pallas")
-    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got, ref, **TOL32)
 
 
 def test_superblock_executes_fused_kernel(monkeypatch):
@@ -258,7 +267,7 @@ def test_superblock_executes_fused_kernel(monkeypatch):
     # the scanned body traces once per (K, signature) fixed-point round;
     # at least one fused call must have happened, and numerics must hold
     assert calls, "superblock never executed"
-    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got, ref, **TOL32)
 
 
 def test_biharmonic_through_superblock():
@@ -268,7 +277,7 @@ def test_biharmonic_through_superblock():
     x = jax.random.normal(jax.random.PRNGKey(5), (3,)) * 0.3
     ref = ops.biharmonic(f, x, method="collapsed")
     got = ops.biharmonic(f, x, method="collapsed", backend="pallas")
-    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(got, ref, **TOL32)
 
 
 def test_grad_through_superblock_backend():
@@ -309,7 +318,7 @@ def test_grad_through_superblock_backend():
     g_ref = jax.grad(loss)(p0)
     g_pal = jax.grad(lambda p: loss(p, "pallas"))(p0)
     for a, b in zip(g_ref, g_pal):
-        np.testing.assert_allclose(a, b, rtol=2e-4, atol=1e-6)
+        np.testing.assert_allclose(a, b, **TOL32)
 
 
 # ---------------------------------------------------------------------------
@@ -373,7 +382,7 @@ def test_superblock_taint_rejection_falls_back_to_per_segment():
         plan.notes
     ref = ops.laplacian(f, x, method="collapsed")
     got = ops.laplacian(f, x, method="collapsed", backend="pallas")
-    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got, ref, **TOL32)
 
     rep = offload.explain(f, x, K=2)
     top = rep.jaxprs[0]
@@ -413,7 +422,7 @@ def test_superblock_rejects_mismatched_hidden():
     assert any("different activations" in n for n in plan.notes), plan.notes
     ref = ops.laplacian(f, x, method="collapsed")
     got = ops.laplacian(f, x, method="collapsed", backend="pallas")
-    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got, ref, **TOL32)
 
 
 def test_superblock_rejects_escaping_projections():
@@ -449,7 +458,7 @@ def test_superblock_rejects_escaping_projections():
     assert any("escape" in n for n in plan.notes), plan.notes
     ref = ops.laplacian(f, x, method="collapsed")
     got = ops.laplacian(f, x, method="collapsed", backend="pallas")
-    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got, ref, **TOL32)
 
 
 def test_superblock_runtime_rejection_degrades_to_per_segment():
@@ -575,7 +584,7 @@ def test_alibi_bias_fuses_per_segment():
     assert "bias" in segs[0].describe()
     ref = ops.laplacian(f, x, method="collapsed")
     got = ops.laplacian(f, x, method="collapsed", backend="pallas")
-    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got, ref, **TOL32)
 
 
 def test_alibi_bias_fuses_in_superblock():
@@ -602,7 +611,7 @@ def test_alibi_bias_fuses_in_superblock():
     assert "bias" in supers[0].describe()
     ref = ops.laplacian(f, x, method="collapsed")
     got = ops.laplacian(f, x, method="collapsed", backend="pallas")
-    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got, ref, **TOL32)
 
 
 def test_grad_through_per_segment_bias():
@@ -631,7 +640,7 @@ def test_grad_through_per_segment_bias():
 
     g_ref = jax.grad(loss)(_alibi(D))
     g_pal = jax.grad(lambda b: loss(b, "pallas"))(_alibi(D))
-    np.testing.assert_allclose(g_pal, g_ref, rtol=2e-4, atol=1e-6)
+    np.testing.assert_allclose(g_pal, g_ref, **TOL32)
 
 
 def test_propagated_bias_rejected():
@@ -660,7 +669,7 @@ def test_propagated_bias_rejected():
     assert all(s.bias_var is None for s in segs)
     ref = ops.laplacian(f, x, method="collapsed")
     got = ops.laplacian(f, x, method="collapsed", backend="pallas")
-    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got, ref, **TOL32)
 
 
 # ---------------------------------------------------------------------------
@@ -683,7 +692,7 @@ def test_rank3_projection_weight_fuses_as_jet_mlp():
                len(s.w_var.aval.shape) == 3 for s in plan.values())
     ref = ops.laplacian(f, x, method="collapsed")
     got = ops.laplacian(f, x, method="collapsed", backend="pallas")
-    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got, ref, **TOL32)
 
 
 # ---------------------------------------------------------------------------
